@@ -1,0 +1,134 @@
+//! Hot-path microbenchmarks (L3 + artifact execution).
+//!
+//!     cargo bench --bench bench_hot_paths
+//!
+//! Hand-rolled harness (no criterion in the offline vendor set): warmup,
+//! then timed repetitions with mean / min / p50 reported. These cover the
+//! per-step costs of the CGMQ loop in the order they occur:
+//! gate materialization -> literal marshalling + XLA step -> dir
+//! computation -> gate GD -> BOP accounting (epoch end).
+
+use std::time::Instant;
+
+use cgmq::cost::model_bops;
+use cgmq::data::{Batcher, Dataset};
+use cgmq::direction::{dir_tensor_w, DirConfig, DirKind, Sat};
+use cgmq::gates::{GateSet, Granularity};
+use cgmq::model::{lenet5, mlp};
+use cgmq::quant::gated_quantize_tensor;
+use cgmq::runtime::{Arg, ArtifactSet};
+use cgmq::tensor::{Tensor, TensorI32};
+use cgmq::util::rng::SplitMix64;
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+    // warmup
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let mean: f64 = times.iter().sum::<f64>() / times.len() as f64;
+    println!(
+        "{name:<44} {:>10.3} ms/iter (min {:>8.3}, p50 {:>8.3}, n={})",
+        1e3 * mean,
+        1e3 * times[0],
+        1e3 * times[times.len() / 2],
+        iters
+    );
+}
+
+fn main() {
+    println!("== cgmq hot-path microbenchmarks ==\n");
+    let arch = lenet5();
+    let mut rng = SplitMix64::new(0);
+
+    // --- host-side quantizer mirror (export/BOP path) ---
+    let w = Tensor::he_normal(&[800, 500], 800, &mut rng);
+    let g = {
+        let data: Vec<f32> = (0..800 * 500).map(|_| rng.uniform(0.5, 5.5) as f32).collect();
+        Tensor::new(vec![800, 500], data).unwrap()
+    };
+    bench("quant::gated_quantize_tensor (400k elems)", 20, || {
+        std::hint::black_box(gated_quantize_tensor(&w, &g, 1.0, true));
+    });
+
+    // --- gate materialization (every step, both granularities) ---
+    let gates_layer = GateSet::new(&arch, Granularity::Layer);
+    let gates_indiv = GateSet::new(&arch, Granularity::Individual);
+    bench("gates::materialize_all (lenet5, layer)", 50, || {
+        std::hint::black_box(gates_layer.materialize_all_w(&arch));
+        std::hint::black_box(gates_layer.materialize_all_a(&arch));
+    });
+    bench("gates::materialize_all (lenet5, indiv)", 50, || {
+        std::hint::black_box(gates_indiv.materialize_all_w(&arch));
+        std::hint::black_box(gates_indiv.materialize_all_a(&arch));
+    });
+
+    // --- dir computation (every step) ---
+    let cfg = DirConfig::new(DirKind::Dir3);
+    let grad = Tensor::he_normal(&[800, 500], 800, &mut rng);
+    let store = Tensor::full(&[800, 500], 3.0);
+    bench("direction::dir_tensor_w (400k, indiv)", 50, || {
+        std::hint::black_box(
+            dir_tensor_w(&cfg, Granularity::Individual, Sat::Unsatisfied, &grad, &w, &store)
+                .unwrap(),
+        );
+    });
+
+    // --- BOP accounting (every epoch end) ---
+    let gw = gates_indiv.materialize_all_w(&arch);
+    let ga = gates_indiv.materialize_all_a(&arch);
+    bench("cost::model_bops (lenet5, indiv)", 50, || {
+        std::hint::black_box(model_bops(&arch, &gw, &ga).unwrap());
+    });
+
+    // --- data pipeline ---
+    let data = Dataset::synth(0, 2_048);
+    let mut batcher = Batcher::new(2_048, 128, 7);
+    bench("data::Batcher::epoch (2048 samples, b=128)", 30, || {
+        std::hint::black_box(batcher.epoch(&data));
+    });
+    bench("data::synth::render_digit", 200, || {
+        std::hint::black_box(cgmq::data::synth::render_digit(1, 5));
+    });
+
+    // --- artifact execution (the XLA step itself) ---
+    let dir = cgmq::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("\n(artifacts missing — skipping XLA execution benches; run `make artifacts`)");
+        return;
+    }
+    let mut set = ArtifactSet::open(&dir).unwrap();
+    for arch in [mlp(), lenet5()] {
+        set.load(&format!("{}_qat_step", arch.name)).unwrap();
+        set.load(&format!("{}_eval", arch.name)).unwrap();
+        let params = arch.init_params(1);
+        let n = arch.train_batch;
+        let data = Dataset::synth(3, n);
+        let mut x_shape = vec![n];
+        x_shape.extend_from_slice(&arch.input_shape);
+        let x = Tensor::new(x_shape, data.images.clone()).unwrap();
+        let y = TensorI32::new(vec![n], data.labels.clone()).unwrap();
+        let bw = Tensor::full(&[arch.layers.len()], 1.0);
+        let ba = Tensor::full(&[arch.n_quant_act()], 6.0);
+        let gates = GateSet::new(&arch, Granularity::Individual);
+        let gw = gates.materialize_all_w(&arch);
+        let ga = gates.materialize_all_a(&arch);
+        let exe = set.get(&format!("{}_qat_step", arch.name)).unwrap();
+        bench(&format!("runtime: {}_qat_step (b=128)", arch.name), 12, || {
+            let mut args: Vec<Arg> = params.iter().map(Arg::F32).collect();
+            args.push(Arg::F32(&bw));
+            args.push(Arg::F32(&ba));
+            args.extend(gw.iter().map(Arg::F32));
+            args.extend(ga.iter().map(Arg::F32));
+            args.push(Arg::F32(&x));
+            args.push(Arg::I32(&y));
+            std::hint::black_box(exe.run(&args).unwrap());
+        });
+    }
+}

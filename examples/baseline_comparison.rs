@@ -1,0 +1,111 @@
+//! Baseline comparison (experiment A2): CGMQ vs the penalty method
+//! (DQ-style), the Bayesian-Bits-like decay proxy, uniform fixed-bit QAT
+//! and the myQASR heuristic — all on the same substrate, same data, same
+//! pretrained model.
+//!
+//!     cargo run --release --example baseline_comparison
+//!
+//! The point reproduced from the paper's Section 3: CGMQ hits the budget in
+//! ONE training run with NO hyperparameter; the penalty method's outcome
+//! swings with λ (too small -> budget violated; too large -> accuracy
+//! wasted), and the BB-style proxy needs an outer tuning loop of full
+//! trainings.
+
+use cgmq::baselines::{bb_proxy, fixed_qat, myqasr, penalty};
+use cgmq::bench_harness;
+use cgmq::config::Config;
+use cgmq::coordinator::Trainer;
+
+fn base_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.arch = "mlp".into();
+    cfg.train_size = 2_000;
+    cfg.test_size = 512;
+    cfg.pretrain_epochs = 3;
+    cfg.range_epochs = 1;
+    cfg.cgmq_epochs = 10;
+    cfg.bound_rbop_percent = 0.90;
+    cfg.gate_lr_scale = 10.0;
+    cfg.out_dir = "runs/baseline_comparison".into();
+    cfg
+}
+
+fn fresh(cfg: &Config, ckpt: &std::path::Path) -> anyhow::Result<Trainer> {
+    let mut t = Trainer::new(cfg.clone())?;
+    t.load_params(ckpt)?;
+    t.calibrate()?;
+    t.learn_ranges(cfg.range_epochs)?;
+    Ok(t)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = base_cfg();
+    let ckpt = bench_harness::ensure_pretrained(&cfg)?;
+    println!("bound: {:.2}% RBOP | method                      | acc    | RBOP   | sat | trainings", cfg.bound_rbop_percent);
+    println!("{}", "-".repeat(95));
+
+    // CGMQ — one run, no hyperparameter.
+    let r = bench_harness::run_row(&cfg, cfg.direction, cfg.granularity, cfg.bound_rbop_percent)?;
+    println!(
+        "                     CGMQ ({}, {})          | {:5.2}% | {:5.2}% | {}   | 1",
+        cfg.direction.label(),
+        cfg.granularity.label(),
+        100.0 * r.quant_acc,
+        r.rbop_percent,
+        r.satisfied as u8
+    );
+
+    // Penalty method at several λ — the tuning burden made visible.
+    for lambda in [0.01f32, 0.1, 1.0] {
+        let mut t = fresh(&cfg, &ckpt)?;
+        let p = penalty::run(&mut t, lambda, cfg.cgmq_epochs)?;
+        println!(
+            "                     penalty λ={lambda:<6}            | {:5.2}% | {:5.2}% | {}   | 1",
+            100.0 * p.test_acc,
+            p.rbop_percent,
+            p.satisfied as u8
+        );
+    }
+
+    // BB-style proxy — outer bisection of full trainings.
+    let cfg2 = cfg.clone();
+    let ckpt2 = ckpt.clone();
+    let bb = bb_proxy::tune_mu(
+        move || fresh(&cfg2, &ckpt2),
+        cfg.cgmq_epochs,
+        4, // practitioner patience
+    )?;
+    println!(
+        "                     bb_proxy μ={:<9.4}        | {:5.2}% | {:5.2}% | {}   | {}",
+        bb.mu,
+        100.0 * bb.test_acc,
+        bb.rbop_percent,
+        bb.satisfied as u8,
+        bb.trainings
+    );
+
+    // Uniform fixed-bit QAT — no budget targeting at all.
+    for bits in [2u32, 4] {
+        let mut t = fresh(&cfg, &ckpt)?;
+        let f = fixed_qat::run(&mut t, bits, cfg.cgmq_epochs)?;
+        let sat = f.rbop_percent <= cfg.bound_rbop_percent;
+        println!(
+            "                     fixed {bits}-bit QAT            | {:5.2}% | {:5.2}% | {}   | 1",
+            100.0 * f.test_acc,
+            f.rbop_percent,
+            sat as u8
+        );
+    }
+
+    // myQASR heuristic — search-free descent + finetune.
+    let mut t = fresh(&cfg, &ckpt)?;
+    let m = myqasr::run(&mut t, cfg.cgmq_epochs)?;
+    println!(
+        "                     myQASR                     | {:5.2}% | {:5.2}% | {}   | 1   {:?}",
+        100.0 * m.test_acc,
+        m.rbop_percent,
+        m.satisfied as u8,
+        m.assignment
+    );
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Edge-deployment walkthrough: train under a device budget, export the
+//! bit-width assignment, and report what actually ships.
+//!
+//!     cargo run --release --example edge_deployment
+//!
+//! This is the workflow the paper's introduction motivates: a practitioner
+//! has a device with a hard compute budget (here: 1.4% of fp32 bit-ops),
+//! runs CGMQ once, and gets a mixed-precision model that provably fits,
+//! plus the per-layer integer formats to provision.
+
+use cgmq::config::Config;
+use cgmq::coordinator::Trainer;
+use cgmq::quant;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::default();
+    cfg.arch = "mlp".into();
+    cfg.train_size = 2_000;
+    cfg.test_size = 512;
+    cfg.pretrain_epochs = 3;
+    cfg.range_epochs = 1;
+    cfg.cgmq_epochs = 10;
+    cfg.granularity = cgmq::gates::Granularity::Individual;
+    cfg.bound_rbop_percent = 1.40;
+    cfg.gate_lr_scale = 10.0;
+    cfg.out_dir = "runs/edge_deployment".into();
+
+    println!("device budget: {:.2}% of fp32 bit-operations\n", cfg.bound_rbop_percent);
+    let out_dir = cfg.out_dir.clone();
+    let mut t = Trainer::new(cfg.clone())?;
+    let result = t.run_full()?;
+    let model = t.final_model()?;
+    let ckpt = std::path::Path::new(&out_dir).join("deploy.ckpt");
+    model.save(&ckpt, t.arch.name)?;
+
+    // Export: per-layer bit histograms + memory (the deployment report).
+    let report = cgmq::baselines::export_report(&cfg, &ckpt)?;
+    std::fs::write(std::path::Path::new(&out_dir).join("deploy.json"), report.to_string())?;
+
+    println!("accuracy: {:.2}% (float was {:.2}%)", 100.0 * result.quant_acc,
+        100.0 * result.float_acc);
+    println!("RBOP: {:.3}% <= bound {:.2}%  [guaranteed]", result.rbop_percent,
+        result.bound_rbop_percent);
+    println!(
+        "weight memory: {:.1} KiB (fp32 was {:.1} KiB)",
+        report.get("total_weight_memory_bytes")?.as_f64()? / 1024.0,
+        report.get("fp32_weight_memory_bytes")?.as_f64()? / 1024.0
+    );
+    println!("\nper-layer shipped formats:");
+    for layer in report.get("layers")?.as_arr()? {
+        println!(
+            "  {:<6} histogram {:?}  ({:.1} KiB)",
+            layer.get("name")?.as_str()?,
+            layer.get("weight_bit_histogram")?,
+            layer.get("weight_memory_bytes")?.as_f64()? / 1024.0
+        );
+    }
+
+    // Show a few exported integer codes (what an int kernel would consume).
+    println!("\nsample integer codes (fc1, 4-bit grid if assigned):");
+    let w = &model.params[0];
+    let g = &model.gates.materialize_all_w(&t.arch)[0];
+    let beta = model.betas_w.data()[0];
+    for i in 0..5 {
+        let bits = quant::transform_t(g.data()[i]);
+        if bits < quant::IDENTITY_BITS && bits > 0 {
+            let (code, scale) = quant::integer_code(w.data()[i], bits, beta, true);
+            println!("  w[{i}] = {:+.5} -> int{bits} code {code:+} x scale {scale:.5}",
+                w.data()[i]);
+        } else {
+            println!("  w[{i}] = {:+.5} -> kept at {bits} bits", w.data()[i]);
+        }
+    }
+    println!("\nwrote {}/deploy.json and deploy.ckpt", out_dir);
+    Ok(())
+}

@@ -1,0 +1,88 @@
+//! End-to-end driver (DESIGN.md deliverable): the paper's headline
+//! experiment on the paper's model — LeNet-5, quantized under a 0.40% BOP
+//! bound, full four-phase pipeline, loss curve logged per epoch.
+//!
+//!     cargo run --release --example mnist_cgmq [-- <train_size> <cgmq_epochs>]
+//!
+//! Uses SynthMNIST (DESIGN.md §2 substitution); drop the four MNIST IDX
+//! files into ./mnist and switch `cfg.data` to run the genuine dataset.
+//! The run is recorded in EXPERIMENTS.md.
+
+use cgmq::config::{Config, DataSource};
+use cgmq::coordinator::Trainer;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let train_size: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(4_000);
+    let cgmq_epochs: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(12);
+
+    let mut cfg = Config::default();
+    cfg.arch = "lenet5".into();
+    cfg.train_size = train_size;
+    cfg.test_size = 1_000;
+    cfg.pretrain_epochs = 6;
+    cfg.range_epochs = 1;
+    cfg.cgmq_epochs = cgmq_epochs;
+    cfg.bound_rbop_percent = 0.40; // the paper's tightest bound
+    cfg.gate_lr_scale = 10.0; // schedule-compensated (see Config docs)
+    cfg.lr_gates = Config::paper_gate_lr(cfg.direction) * cfg.gate_lr_scale;
+    cfg.out_dir = "runs/mnist_cgmq".into();
+    if cgmq::data::idx::mnist_available(std::path::Path::new("mnist")) {
+        println!("found real MNIST in ./mnist — using it");
+        cfg.data = DataSource::Mnist("mnist".into());
+        cfg.train_size = 60_000;
+        cfg.test_size = 10_000;
+    }
+
+    println!(
+        "LeNet-5 ({} params) | {} train / {} test | bound {:.2}% RBOP",
+        cgmq::model::lenet5().n_params(),
+        cfg.train_size,
+        cfg.test_size,
+        cfg.bound_rbop_percent
+    );
+
+    let out_dir = cfg.out_dir.clone();
+    let mut t = Trainer::new(cfg)?;
+    let result = t.run_full()?;
+
+    println!("\nphase      epoch   loss      acc      RBOP%    sat");
+    for r in &t.log.records {
+        println!(
+            "{:<10} {:>5}  {:>7.4}  {:>6.2}%  {:>7.3}  {}",
+            r.phase, r.epoch, r.train_loss, 100.0 * r.test_acc, r.rbop_percent, r.sat
+        );
+    }
+
+    println!("\n=== paper-format row (Table 1 analogue) ===");
+    println!("| FP32 | -           | {:.2} | 100  | 100  |", 100.0 * result.float_acc);
+    println!(
+        "| CGMQ | {}, {} | {:.2} | {:.2} | {:.2} |",
+        t.cfg.direction.label(),
+        t.cfg.granularity.label(),
+        100.0 * result.quant_acc,
+        result.rbop_percent,
+        result.bound_rbop_percent
+    );
+    assert!(result.satisfied);
+
+    let dir = std::path::Path::new(&out_dir);
+    t.log.write_csv(&dir.join("epochs.csv"))?;
+    std::fs::write(dir.join("result.json"), result.to_json().to_string())?;
+    t.final_model()?.save(&dir.join("model.ckpt"), t.arch.name)?;
+    println!("\nwrote {}/epochs.csv, result.json, model.ckpt", out_dir);
+
+    // Runtime execution statistics (per artifact).
+    println!("\nartifact execution stats:");
+    for (name, s) in t.artifacts.all_stats() {
+        if s.calls > 0 {
+            println!(
+                "  {:<22} {:>6} calls  {:>8.1} ms/call",
+                name,
+                s.calls,
+                1e3 * s.total_secs / s.calls as f64
+            );
+        }
+    }
+    Ok(())
+}

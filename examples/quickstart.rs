@@ -1,0 +1,51 @@
+//! Quickstart: the smallest end-to-end CGMQ run (MLP on SynthMNIST).
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Demonstrates the public API surface: config -> trainer -> phases ->
+//! constraint-satisfying model, plus a layer-by-layer fake-quantization
+//! trace (the code form of the paper's Fig. 1).
+
+use cgmq::config::Config;
+use cgmq::coordinator::Trainer;
+use cgmq::quant;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure a small run. Everything here also lives in configs/*.toml.
+    let mut cfg = Config::default();
+    cfg.arch = "mlp".into();
+    cfg.train_size = 2_000;
+    cfg.test_size = 512;
+    cfg.pretrain_epochs = 3;
+    cfg.range_epochs = 1;
+    cfg.cgmq_epochs = 8;
+    cfg.bound_rbop_percent = 0.90; // deploy budget: 0.9% of fp32 bit-ops
+    cfg.out_dir = "runs/quickstart".into();
+
+    // 2. Fig. 1 as code: what one layer's fake quantization does.
+    println!("== Fake quantization (paper Eq. 1/3/4) ==");
+    let beta = 1.0;
+    for (g, what) in [(0.7, "2-bit"), (2.5, "8-bit"), (5.5, "32-bit")] {
+        let x = 0.337f32;
+        let q = quant::gated_quantize(x, g, beta, true);
+        println!("  gate {g:>3}: T(g) = {:>2} bits, Q({x}) = {q}", quant::transform_t(g));
+    }
+
+    // 3. Train: pretrain -> calibrate -> learn ranges -> CGMQ.
+    println!("\n== Training (4 phases) ==");
+    let mut trainer = Trainer::new(cfg)?;
+    let result = trainer.run_full()?;
+
+    // 4. The guarantee: the delivered model satisfies the bound.
+    println!("\n== Result ==");
+    println!("float accuracy      : {:.2}%", 100.0 * result.float_acc);
+    println!("quantized accuracy  : {:.2}%", 100.0 * result.quant_acc);
+    println!("relative BOPs       : {:.3}% (bound {:.2}%)", result.rbop_percent,
+        result.bound_rbop_percent);
+    println!("constraint satisfied: {}", result.satisfied);
+    println!("mean weight bits    : {:.2}", result.mean_weight_bits);
+    println!("\nRBOP trace per epoch: {:?}",
+        result.rbop_trace.iter().map(|r| format!("{r:.2}")).collect::<Vec<_>>());
+    assert!(result.satisfied, "CGMQ must deliver a constraint-satisfying model");
+    Ok(())
+}

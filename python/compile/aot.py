@@ -1,0 +1,272 @@
+"""AOT compile path: lower every L2 step function to HLO *text* artifacts.
+
+Run once by ``make artifacts``:
+
+    cd python && python -m compile.aot --out-dir ../artifacts
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (what the
+published ``xla`` 0.1.6 Rust crate links) rejects (``proto.id() <= INT_MAX``).
+The text parser reassigns ids, so text round-trips cleanly — see
+/opt/xla-example/README.md.
+
+Alongside the .hlo.txt files a ``manifest.json`` records, for every
+artifact, the exact input/output order, names, shapes and dtypes. The Rust
+``model`` registry asserts its own expectations against the manifest at
+startup, so a drift between the two layers fails fast instead of silently
+feeding tensors in the wrong slot.
+
+Also emits ``goldens.json``: quantizer/dir test vectors and SynthMNIST
+sample hashes that the Rust unit tests replay (cross-language oracle).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data_synth, model
+from .arch import ARCHS, ArchSpec
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# --------------------------------------------------------------------------
+# Artifact argument builders (shapes only — lowering is shape-polymorphic-free)
+# --------------------------------------------------------------------------
+
+
+def _f32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+
+
+def _i32(shape) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.int32)
+
+
+def _param_specs(arch: ArchSpec) -> List[Tuple[str, jax.ShapeDtypeStruct]]:
+    out = []
+    for layer in arch.layers:
+        out.append((f"{layer.name}.w", _f32(layer.w_shape)))
+        out.append((f"{layer.name}.b", _f32(layer.b_shape)))
+    return out
+
+
+def _gate_specs(arch: ArchSpec) -> List[Tuple[str, jax.ShapeDtypeStruct]]:
+    out = [(f"{l.name}.gw", _f32(l.w_shape)) for l in arch.layers]
+    out += [(f"{l.name}.ga", _f32(l.act_shape)) for l in arch.quant_act_layers]
+    return out
+
+
+def _range_specs(arch: ArchSpec) -> List[Tuple[str, jax.ShapeDtypeStruct]]:
+    return [
+        ("betas_w", _f32((len(arch.layers),))),
+        ("betas_a", _f32((len(arch.quant_act_layers),))),
+    ]
+
+
+def artifact_plan(arch: ArchSpec):
+    """(name, fn, inputs, output_names) for every artifact of one arch."""
+    x_train = (f"x", _f32((arch.train_batch,) + arch.input_shape))
+    y_train = (f"y", _i32((arch.train_batch,)))
+    x_eval = (f"x", _f32((arch.eval_batch,) + arch.input_shape))
+    params = _param_specs(arch)
+    ranges = _range_specs(arch)
+    gates = _gate_specs(arch)
+    pg = [f"grad.{n}" for n, _ in params]
+    act_layers = arch.quant_act_layers
+
+    plans = []
+    plans.append((
+        f"{arch.name}_float_step",
+        model.make_float_step(arch),
+        params + [x_train, y_train],
+        ["loss"] + pg,
+    ))
+    plans.append((
+        f"{arch.name}_qat_step",
+        model.make_qat_step(arch),
+        params + ranges + gates + [x_train, y_train],
+        ["loss"] + pg + ["grad.betas_w", "grad.betas_a"]
+        + [f"act_grad.{l.name}" for l in act_layers]
+        + [f"act_mean.{l.name}" for l in act_layers],
+    ))
+    plans.append((
+        f"{arch.name}_eval",
+        model.make_eval(arch),
+        params + ranges + gates + [x_eval],
+        ["logits"],
+    ))
+    plans.append((
+        f"{arch.name}_eval_float",
+        model.make_eval_float(arch),
+        params + [x_eval],
+        ["logits"],
+    ))
+    plans.append((
+        f"{arch.name}_calibrate",
+        model.make_calibrate(arch),
+        params + [x_train],
+        ["w_maxes", "act_maxes", "logit_mean"],
+    ))
+    return plans
+
+
+def lower_artifact(fn: Callable, inputs: Sequence[Tuple[str, jax.ShapeDtypeStruct]]) -> str:
+    lowered = jax.jit(fn).lower(*[s for _, s in inputs])
+    return to_hlo_text(lowered)
+
+
+# --------------------------------------------------------------------------
+# Goldens for the Rust-side oracle tests
+# --------------------------------------------------------------------------
+
+
+def _quantizer_goldens() -> dict:
+    rng = np.random.default_rng(7)
+    x = rng.normal(0.0, 0.6, size=(64,)).astype(np.float32)
+    g = rng.uniform(-0.5, 5.5, size=(64,)).astype(np.float32)
+    beta = 1.3
+    cases = {}
+    for bits in ref.BIT_LEVELS:
+        for signed in (True, False):
+            q = np.asarray(ref.quantize(jnp.asarray(x), bits, beta, signed))
+            cases[f"q_b{bits}_{'s' if signed else 'u'}"] = q.tolist()
+    gated_s = np.asarray(ref.gated_quantize(jnp.asarray(x), jnp.asarray(g), beta, True))
+    gated_u = np.asarray(ref.gated_quantize(jnp.asarray(x), jnp.asarray(g), beta, False))
+    return {
+        "x": x.tolist(),
+        "g": g.tolist(),
+        "beta": beta,
+        "bit_levels": list(ref.BIT_LEVELS),
+        "T": np.asarray(ref.transform_T(jnp.asarray(g))).tolist(),
+        "cases": cases,
+        "gated_signed": gated_s.tolist(),
+        "gated_unsigned": gated_u.tolist(),
+    }
+
+
+def _synth_goldens(seed: int = 42, n: int = 6) -> dict:
+    samples = []
+    for i in range(n):
+        img, lab = data_synth.render_digit(seed, i)
+        samples.append({
+            "index": i,
+            "label": lab,
+            "sum": float(np.sum(img)),
+            "pixels": img.reshape(-1)[:64].astype(float).tolist(),
+        })
+    return {"seed": seed, "samples": samples}
+
+
+def _bop_goldens() -> dict:
+    """Per-arch MAC counts + the all-2-bit RBOP floor (paper: 0.392% for LeNet-5)."""
+    out = {}
+    for name, arch in ARCHS.items():
+        layers = []
+        for l in arch.layers:
+            layers.append({"name": l.name, "macs": l.macs, "fan_in": l.fan_in})
+        # BOP model (DESIGN.md §7): output-activation bit-widths, output layer
+        # excluded from both numerator and denominator.
+        counted = arch.layers[:-1]
+        fp32 = sum(l.macs * 32 * 32 for l in counted)
+        floor = sum(l.macs * 2 * 2 for l in counted)
+        out[name] = {
+            "layers": layers,
+            "fp32_bops": fp32,
+            "floor_bops": floor,
+            "floor_rbop_percent": 100.0 * floor / fp32,
+        }
+    return out
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--archs", nargs="*", default=list(ARCHS))
+    ap.add_argument("--skip-goldens", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {"format": "hlo-text-v1", "artifacts": {}}
+    for arch_name in args.archs:
+        arch = ARCHS[arch_name]
+        for name, fn, inputs, out_names in artifact_plan(arch):
+            print(f"[aot] lowering {name} ...", flush=True)
+            text = lower_artifact(fn, inputs)
+            path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"][name] = {
+                "arch": arch_name,
+                "file": f"{name}.hlo.txt",
+                "inputs": [
+                    {"name": n, "shape": list(s.shape), "dtype": str(s.dtype)}
+                    for n, s in inputs
+                ],
+                "outputs": out_names,
+            }
+            print(f"[aot]   wrote {path} ({len(text)} chars)")
+
+    manifest["archs"] = {
+        name: {
+            "input_shape": list(a.input_shape),
+            "train_batch": a.train_batch,
+            "eval_batch": a.eval_batch,
+            "input_bits": a.input_bits,
+            "layers": [
+                {
+                    "name": l.name,
+                    "kind": l.kind,
+                    "w_shape": list(l.w_shape),
+                    "b_shape": list(l.b_shape),
+                    "act_shape": list(l.act_shape),
+                    "pool": l.pool or 0,
+                    "quant_act": l.quant_act,
+                    "macs": l.macs,
+                    "fan_in": l.fan_in,
+                }
+                for l in a.layers
+            ],
+        }
+        for name, a in ARCHS.items()
+        if name in args.archs
+    }
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+    if not args.skip_goldens:
+        goldens = {
+            "quantizer": _quantizer_goldens(),
+            "synth": _synth_goldens(),
+            "bop": _bop_goldens(),
+        }
+        with open(os.path.join(args.out_dir, "goldens.json"), "w") as f:
+            json.dump(goldens, f)
+        print("[aot] wrote goldens.json")
+
+
+if __name__ == "__main__":
+    main()

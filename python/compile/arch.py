@@ -1,0 +1,109 @@
+"""Canonical architecture specs shared by model.py, aot.py and (via
+artifacts/manifest.json) the Rust ``model/`` registry.
+
+Two architectures:
+
+* ``lenet5`` — the paper's evaluation model (LeNet-5, Caffe variant, as used
+  by Bayesian Bits): conv(20@5x5) -> pool -> conv(50@5x5) -> pool ->
+  fc(500) -> fc(10). 431,080 parameters.
+* ``mlp``    — a small 784-128-64-10 MLP used for CI-scale tests, examples
+  and the quickstart.
+
+Conventions (mirrored exactly in Rust):
+
+* Layer order per layer: weight tensor then bias tensor.
+* Conv weights are OIHW; dense weights are (in, out); activations NCHW.
+* Every layer's weights are fake-quantized (gated); biases are never
+  quantized (paper quantizes activations instead of biases).
+* Every layer except the last has its (ReLU) activation fake-quantized,
+  *before* pooling; the network output stays float (paper Section 4.2).
+* The network input is quantized at a fixed 8 bits with range [-1, 1].
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    name: str
+    kind: str  # "conv" | "dense"
+    w_shape: Tuple[int, ...]  # OIHW for conv, (in, out) for dense
+    b_shape: Tuple[int, ...]
+    act_shape: Tuple[int, ...]  # feature dims of the (pre-pool) activation
+    pool: Optional[int] = None  # square max-pool window/stride after the act
+    quant_act: bool = True  # last layer: False (output kept float)
+
+    @property
+    def macs(self) -> int:
+        """Multiply-accumulates for one sample (BOP building block)."""
+        if self.kind == "conv":
+            o, i, kh, kw = self.w_shape
+            _, oh, ow = self.act_shape
+            return o * oh * ow * i * kh * kw
+        fan_in, fan_out = self.w_shape
+        return fan_in * fan_out
+
+    @property
+    def fan_in(self) -> int:
+        if self.kind == "conv":
+            _, i, kh, kw = self.w_shape
+            return i * kh * kw
+        return self.w_shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    input_shape: Tuple[int, ...]  # per-sample, no batch dim
+    layers: Tuple[LayerSpec, ...]
+    train_batch: int = 128
+    eval_batch: int = 256
+    input_bits: int = 8
+
+    @property
+    def quant_act_layers(self) -> List[LayerSpec]:
+        return [l for l in self.layers if l.quant_act]
+
+    def param_names(self) -> List[str]:
+        out = []
+        for l in self.layers:
+            out += [f"{l.name}.w", f"{l.name}.b"]
+        return out
+
+    def param_shapes(self) -> List[Tuple[int, ...]]:
+        out = []
+        for l in self.layers:
+            out += [l.w_shape, l.b_shape]
+        return out
+
+    def n_params(self) -> int:
+        return sum(
+            int(__import__("math").prod(s)) if s else 1 for s in self.param_shapes()
+        )
+
+
+LENET5 = ArchSpec(
+    name="lenet5",
+    input_shape=(1, 28, 28),
+    layers=(
+        LayerSpec("conv1", "conv", (20, 1, 5, 5), (20,), (20, 24, 24), pool=2),
+        LayerSpec("conv2", "conv", (50, 20, 5, 5), (50,), (50, 8, 8), pool=2),
+        LayerSpec("fc1", "dense", (800, 500), (500,), (500,)),
+        LayerSpec("fc2", "dense", (500, 10), (10,), (10,), quant_act=False),
+    ),
+)
+
+MLP = ArchSpec(
+    name="mlp",
+    input_shape=(784,),
+    layers=(
+        LayerSpec("fc1", "dense", (784, 128), (128,), (128,)),
+        LayerSpec("fc2", "dense", (128, 64), (64,), (64,)),
+        LayerSpec("fc3", "dense", (64, 10), (10,), (10,), quant_act=False),
+    ),
+)
+
+ARCHS = {"lenet5": LENET5, "mlp": MLP}

@@ -1,0 +1,112 @@
+"""L2 perf audit: op-count + redundancy analysis of the lowered artifacts.
+
+    cd python && python -m compile.audit [--artifacts ../artifacts]
+
+Reads each artifact's HLO text and reports, per module:
+
+* total instruction count and counts of the expensive op classes
+  (convolution, dot, reduce-window, rng, while);
+* fake-quantization cost: `round-nearest-*` instruction count. The Eq. 3
+  decomposition needs exactly 4 rounds per quantized tensor (b = 2,4,8,16;
+  b=32 is a clip) — more would mean XLA failed to CSE the shared
+  clip/scale subexpressions or the graph recomputes a quantization;
+* transcendental count (exp/log) — should be confined to the one softmax
+  cross-entropy.
+
+This is the audit the EXPERIMENTS.md §Perf L2 row quotes. Exits non-zero if
+a redundancy invariant fails, so it can run as a build gate.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import sys
+from collections import Counter
+
+from .arch import ARCHS
+
+EXPENSIVE = ("convolution", "dot", "reduce-window", "rng", "while", "sort")
+
+
+def op_counts(hlo_text: str) -> Counter:
+    counts: Counter = Counter()
+    #   %name = type op-name(args), ...
+    for m in re.finditer(r"=\s+[^=\s]+\s+([a-z0-9-]+)\(", hlo_text):
+        counts[m.group(1)] += 1
+    return counts
+
+
+def round_call_sites(hlo_text: str) -> int:
+    """Rounding cost = call sites of outlined round computations + inline ops.
+
+    XLA outlines the repeated `round-nearest-even` into a shared called
+    computation (CSE), so the raw instruction count under-reports; the true
+    per-execution cost is the number of `to_apply=round.*` call sites plus
+    any round instructions in the entry computation.
+    """
+    calls = len(re.findall(r"to_apply=%?round", hlo_text))
+    inline = len(re.findall(r"round-nearest-(?:even|afz)\(", hlo_text))
+    # the outlined body itself contains one instruction; don't double count
+    bodies = len(re.findall(r"^%?round[0-9.]* \{|^round[0-9.]* \{", hlo_text, re.M))
+    return calls + max(0, inline - bodies)
+
+
+def expected_rounds(arch_name: str, artifact: str) -> int | None:
+    """Expected round-nearest count for qat/eval artifacts of an arch.
+
+    Quantized tensors: every layer's weights (L) + every quantized
+    activation (La) + the 8-bit input (1 round). Weights/activations use the
+    Eq. 3 decomposition (4 rounds: b=2,4,8,16); the input is a single Q at
+    8 bit (1 round).
+    """
+    arch = ARCHS[arch_name]
+    n_gated = len(arch.layers) + len(arch.quant_act_layers)
+    if artifact.endswith("_qat_step") or artifact.endswith("_eval"):
+        return 4 * n_gated + 1
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    failures = []
+    names = sorted(
+        f[: -len(".hlo.txt")]
+        for f in os.listdir(args.artifacts)
+        if f.endswith(".hlo.txt")
+    )
+    for name in names:
+        text = open(os.path.join(args.artifacts, f"{name}.hlo.txt")).read()
+        counts = op_counts(text)
+        total = sum(counts.values())
+        rounds = round_call_sites(text)
+        exp_logs = counts.get("exponential", 0) + counts.get("log", 0)
+        expensive = {op: counts[op] for op in EXPENSIVE if counts.get(op)}
+        print(f"{name}: {total} instrs, rounds={rounds}, exp/log={exp_logs}, {expensive}")
+
+        arch_name = name.split("_")[0]
+        expect = expected_rounds(arch_name, name)
+        if expect is not None and rounds != expect:
+            failures.append(
+                f"{name}: {rounds} round call-sites != expected {expect} — "
+                "quantizer recomputation or a dropped FQ block"
+            )
+        # cross-entropy is the only transcendental user in step artifacts
+        if name.endswith("_step") and exp_logs > 6:
+            failures.append(f"{name}: {exp_logs} exp/log ops — more than softmax CE needs")
+
+    if failures:
+        print("\nAUDIT FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("\naudit OK: no quantizer recomputation, transcendentals confined to CE")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

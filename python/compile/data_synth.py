@@ -1,0 +1,204 @@
+"""SynthMNIST: deterministic procedural 28x28 digit renderer.
+
+This is the repo's substitution for MNIST (no network access in the build
+environment — see DESIGN.md §2). The *identical* algorithm, constants and
+RNG are implemented in Rust (``rust/src/data/synth.rs``); cross-language
+equality is asserted by goldens emitted from here (tolerance 1e-4 — the
+only libm calls are sin/cos/log/sqrt).
+
+Algorithm, per sample ``index`` with dataset ``seed``:
+
+1. RNG = SplitMix64 stream seeded with ``mix(seed, index)``.
+2. label = index % 10 (balanced classes; the batcher shuffles).
+3. The digit's stroke skeleton (hand-designed polylines in the unit square)
+   is warped by a random affine map: rotation, anisotropic scale, shear,
+   translation around the glyph centre (0.5, 0.5).
+4. Each pixel's intensity is a soft distance field to the nearest stroke
+   segment: v = clip((tau - d) / (0.35 * tau), 0, 1) with random stroke
+   thickness tau.
+5. Additive Gaussian noise (sigma = 0.04, Box-Muller), clip to [0, 1].
+
+Images are emitted in [0, 1]; the training pipeline normalises to mean 0.5
+/ std 0.5 -> [-1, 1] exactly as the paper preprocesses MNIST.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import List, Tuple
+
+import numpy as np
+
+GRID = 28
+NOISE_SIGMA = 0.04
+SOFTNESS = 0.35
+
+# ---------------------------------------------------------------------------
+# SplitMix64 — bit-exact mirror of rust/src/data/rng.rs
+# ---------------------------------------------------------------------------
+
+_MASK = (1 << 64) - 1
+
+
+def _splitmix64_next(state: int) -> Tuple[int, int]:
+    state = (state + 0x9E3779B97F4A7C15) & _MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _MASK
+    z = z ^ (z >> 31)
+    return state, z
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & _MASK
+
+    def next_u64(self) -> int:
+        self.state, z = _splitmix64_next(self.state)
+        return z
+
+    def next_f64(self) -> float:
+        """Uniform in [0, 1): top 53 bits."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def uniform(self, lo: float, hi: float) -> float:
+        return lo + (hi - lo) * self.next_f64()
+
+    def gauss(self) -> float:
+        """Box-Muller (cos branch), identical call order to Rust."""
+        u1 = self.next_f64()
+        u2 = self.next_f64()
+        u1 = max(u1, 1e-12)
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+
+def sample_seed(seed: int, index: int) -> int:
+    """Per-sample stream seed: one extra SplitMix64 scramble of (seed ^ f(index))."""
+    _, z = _splitmix64_next((seed ^ ((index + 1) * 0xD1B54A32D192ED03)) & _MASK)
+    return z
+
+
+# ---------------------------------------------------------------------------
+# Stroke skeletons (polylines in the unit square, y axis pointing down)
+# ---------------------------------------------------------------------------
+
+
+def _circle(cx: float, cy: float, rx: float, ry: float, n: int = 12) -> List[Tuple[float, float]]:
+    pts = []
+    for k in range(n + 1):
+        t = 2.0 * math.pi * k / n
+        pts.append((cx + rx * math.cos(t), cy + ry * math.sin(t)))
+    return pts
+
+
+SKELETONS: dict[int, List[List[Tuple[float, float]]]] = {
+    0: [_circle(0.5, 0.5, 0.24, 0.34)],
+    1: [[(0.36, 0.28), (0.52, 0.14)], [(0.52, 0.14), (0.52, 0.86)]],
+    2: [
+        [(0.28, 0.30), (0.32, 0.17), (0.50, 0.12), (0.68, 0.18), (0.72, 0.33),
+         (0.58, 0.52), (0.30, 0.84)],
+        [(0.30, 0.84), (0.74, 0.84)],
+    ],
+    3: [
+        [(0.30, 0.16), (0.55, 0.12), (0.70, 0.28), (0.52, 0.46)],
+        [(0.52, 0.46), (0.72, 0.62), (0.58, 0.84), (0.30, 0.80)],
+    ],
+    4: [[(0.62, 0.12), (0.28, 0.62)], [(0.28, 0.62), (0.76, 0.62)], [(0.62, 0.30), (0.62, 0.88)]],
+    5: [
+        [(0.70, 0.13), (0.33, 0.13)],
+        [(0.33, 0.13), (0.31, 0.45)],
+        [(0.31, 0.45), (0.55, 0.41), (0.71, 0.56), (0.66, 0.78), (0.44, 0.87), (0.28, 0.79)],
+    ],
+    6: [
+        [(0.64, 0.13), (0.42, 0.33), (0.32, 0.58)],
+        _circle(0.48, 0.67, 0.19, 0.20),
+    ],
+    7: [[(0.26, 0.15), (0.74, 0.15)], [(0.74, 0.15), (0.44, 0.86)]],
+    8: [_circle(0.5, 0.31, 0.17, 0.17), _circle(0.5, 0.67, 0.21, 0.20)],
+    9: [
+        _circle(0.5, 0.33, 0.19, 0.20),
+        [(0.69, 0.37), (0.64, 0.62), (0.54, 0.86)],
+    ],
+}
+
+
+# ---------------------------------------------------------------------------
+# Rendering
+# ---------------------------------------------------------------------------
+
+
+def _affine(rng: SplitMix64):
+    """Random warp around the glyph centre. Draw order mirrors Rust exactly."""
+    theta = rng.uniform(-0.25, 0.25)
+    sx = rng.uniform(0.85, 1.15)
+    sy = rng.uniform(0.85, 1.15)
+    shear = rng.uniform(-0.15, 0.15)
+    tx = rng.uniform(-0.08, 0.08)
+    ty = rng.uniform(-0.08, 0.08)
+    ct, st = math.cos(theta), math.sin(theta)
+    # A = R(theta) @ Shear(shear) @ Scale(sx, sy)
+    a00 = ct * sx + (-st) * 0.0
+    a01 = ct * (shear * sy) - st * sy
+    a10 = st * sx
+    a11 = st * (shear * sy) + ct * sy
+    return (a00, a01, a10, a11, tx, ty)
+
+
+def _warp(pts, aff):
+    a00, a01, a10, a11, tx, ty = aff
+    out = []
+    for (x, y) in pts:
+        dx, dy = x - 0.5, y - 0.5
+        out.append((0.5 + a00 * dx + a01 * dy + tx, 0.5 + a10 * dx + a11 * dy + ty))
+    return out
+
+
+def _seg_dist(px, py, ax, ay, bx, by) -> float:
+    vx, vy = bx - ax, by - ay
+    wx, wy = px - ax, py - ay
+    vv = vx * vx + vy * vy
+    t = 0.0 if vv <= 1e-18 else max(0.0, min(1.0, (wx * vx + wy * vy) / vv))
+    dx, dy = px - (ax + t * vx), py - (ay + t * vy)
+    return math.sqrt(dx * dx + dy * dy)
+
+
+def render_digit(seed: int, index: int) -> Tuple[np.ndarray, int]:
+    """Render sample ``index`` -> (28x28 f32 image in [0,1], label)."""
+    label = index % 10
+    rng = SplitMix64(sample_seed(seed, index))
+    aff = _affine(rng)
+    tau = rng.uniform(0.035, 0.060)
+    strokes = [_warp(poly, aff) for poly in SKELETONS[label]]
+
+    img = np.zeros((GRID, GRID), dtype=np.float64)
+    for r in range(GRID):
+        py = (r + 0.5) / GRID
+        for c in range(GRID):
+            px = (c + 0.5) / GRID
+            d = math.inf
+            for poly in strokes:
+                for k in range(len(poly) - 1):
+                    ax, ay = poly[k]
+                    bx, by = poly[k + 1]
+                    d = min(d, _seg_dist(px, py, ax, ay, bx, by))
+            v = (tau - d) / (SOFTNESS * tau)
+            img[r, c] = min(max(v, 0.0), 1.0)
+    # Noise pass in the same raster order as Rust.
+    for r in range(GRID):
+        for c in range(GRID):
+            img[r, c] = min(max(img[r, c] + NOISE_SIGMA * rng.gauss(), 0.0), 1.0)
+    return img.astype(np.float32), label
+
+
+def dataset(seed: int, n: int, flat: bool = False):
+    """Generate n samples -> (images [n,1,28,28] or [n,784] in [-1,1], labels)."""
+    xs = np.zeros((n, GRID, GRID), dtype=np.float32)
+    ys = np.zeros((n,), dtype=np.int32)
+    for i in range(n):
+        img, lab = render_digit(seed, i)
+        xs[i] = img
+        ys[i] = lab
+    xs = (xs - 0.5) / 0.5  # paper's MNIST normalisation
+    if flat:
+        return xs.reshape(n, -1), ys
+    return xs[:, None, :, :], ys

@@ -1,0 +1,3 @@
+"""L1: Pallas kernels for the CGMQ fake-quantization hot-spot + jnp oracle."""
+
+from . import fake_quant, ref  # noqa: F401

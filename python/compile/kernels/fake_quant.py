@@ -1,0 +1,160 @@
+"""L1 Pallas kernels: the CGMQ fake-quantization hot-spot.
+
+Two kernels:
+
+* ``quantize_pallas``       — Eq. 1 fixed-bit-width fake quantizer.
+* ``gated_quantize_pallas`` — Eq. 3 gated residual-decomposition quantizer
+                              (the per-element mixed-precision hot path).
+
+TPU-shaped design (see DESIGN.md §Hardware-Adaptation): the operation is
+elementwise, so the kernel is tiled for VMEM with (BLOCK_ROWS, LANES) =
+(256, 128) f32 blocks (128 KiB per operand block, lane-aligned). All five
+residual levels are computed in-register per block, so HBM traffic is two
+reads (x, g) and one write (out) per element. On this image Pallas runs
+with ``interpret=True`` (the CPU PJRT plugin cannot execute Mosaic
+custom-calls); the structure is what we optimise, the TPU numbers are
+estimated in EXPERIMENTS.md §Perf.
+
+The kernels carry no gradient rules: ``quantizer.py`` wraps them in
+``jax.custom_vjp`` (STE for values, LSQ-style for ranges), so the backward
+pass never re-enters Pallas.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# VMEM tile: 256 rows x 128 lanes of f32 = 128 KiB per operand block.
+BLOCK_ROWS = 256
+LANES = 128
+
+
+def _staircase(g):
+    """Eq. 4 transform written with jnp.where (identical to ref.transform_T)."""
+    return jnp.where(
+        g <= 0.0,
+        0.0,
+        jnp.where(
+            g <= 1.0,
+            2.0,
+            jnp.where(g <= 2.0, 4.0, jnp.where(g <= 3.0, 8.0, jnp.where(g <= 4.0, 16.0, 32.0))),
+        ),
+    )
+
+
+def _quantize_block(x, bits: int, alpha, beta, signed: bool):
+    """Eq. 1 on an in-register block (static bit-width, saturated grid)."""
+    v = jnp.minimum(jnp.maximum(x, alpha), beta)
+    if bits >= ref.IDENTITY_BITS:
+        return v
+    levels = float(2**bits - 1)
+    scale = jnp.maximum((beta - alpha) / levels, ref.EPS_SCALE)
+    n_max = float(2 ** (bits - 1) - 1) if signed else levels
+    n_min = -n_max if signed else 0.0
+    n = jnp.minimum(jnp.maximum(jnp.round(v / scale), n_min), n_max)
+    return scale * n
+
+
+def _quantize_kernel(x_ref, beta_ref, o_ref, *, bits: int, signed: bool):
+    x = x_ref[...]
+    beta = beta_ref[0, 0]
+    alpha = -beta if signed else jnp.float32(0.0)
+    o_ref[...] = _quantize_block(x, bits, alpha, beta, signed)
+
+
+def _gated_quantize_kernel(x_ref, g_ref, beta_ref, o_ref, *, signed: bool):
+    """Eq. 3: all residual levels computed in-register on one VMEM block."""
+    x = x_ref[...]
+    g = g_ref[...]
+    beta = beta_ref[0, 0]
+    alpha = -beta if signed else jnp.float32(0.0)
+
+    q2 = _quantize_block(x, 2, alpha, beta, signed)
+    q4 = _quantize_block(x, 4, alpha, beta, signed)
+    q8 = _quantize_block(x, 8, alpha, beta, signed)
+    q16 = _quantize_block(x, 16, alpha, beta, signed)
+    q32 = _quantize_block(x, 32, alpha, beta, signed)  # == clip(x)
+
+    t = _staircase(g)
+    m2 = (t >= 2.0).astype(jnp.float32)
+    m4 = (t >= 4.0).astype(jnp.float32)
+    m8 = (t >= 8.0).astype(jnp.float32)
+    m16 = (t >= 16.0).astype(jnp.float32)
+    m32 = (t >= 32.0).astype(jnp.float32)
+
+    # Nested residual sum, Eq. 3.
+    o_ref[...] = m2 * (
+        q2 + m4 * ((q4 - q2) + m8 * ((q8 - q4) + m16 * ((q16 - q8) + m32 * (q32 - q16))))
+    )
+
+
+def _as_tiles(arr):
+    """Flatten + zero-pad an arbitrary tensor to (rows, LANES) tiles.
+
+    Returns (tiled, total_elements). Rows are padded to a multiple of
+    BLOCK_ROWS so the BlockSpec grid divides evenly (the TPU constraint the
+    structure is written against).
+    """
+    flat = arr.reshape(-1)
+    n = flat.shape[0]
+    tile = BLOCK_ROWS * LANES
+    padded = ((n + tile - 1) // tile) * tile
+    flat = jnp.pad(flat, (0, padded - n))
+    return flat.reshape(-1, LANES), n
+
+
+def _from_tiles(tiled, n, shape):
+    return tiled.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "signed"))
+def quantize_pallas(x, beta, *, bits: int, signed: bool):
+    """Eq. 1 fake quantizer as a tiled Pallas call (forward values only)."""
+    xt, n = _as_tiles(x)
+    rows = xt.shape[0]
+    beta2 = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_quantize_kernel, bits=bits, signed=signed),
+        out_shape=jax.ShapeDtypeStruct(xt.shape, jnp.float32),
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xt, beta2)
+    return _from_tiles(out, n, x.shape)
+
+
+@functools.partial(jax.jit, static_argnames=("signed",))
+def gated_quantize_pallas(x, g, beta, *, signed: bool):
+    """Eq. 3 gated quantizer as a tiled Pallas call (forward values only).
+
+    ``g`` must already be broadcast to ``x.shape`` (L2 does the broadcast so
+    the kernel stays a pure same-shape elementwise map).
+    """
+    assert x.shape == g.shape, f"gate shape {g.shape} != value shape {x.shape}"
+    xt, n = _as_tiles(x)
+    gt, _ = _as_tiles(g)
+    rows = xt.shape[0]
+    beta2 = jnp.asarray(beta, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        functools.partial(_gated_quantize_kernel, signed=signed),
+        out_shape=jax.ShapeDtypeStruct(xt.shape, jnp.float32),
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xt, gt, beta2)
+    return _from_tiles(out, n, x.shape)

@@ -1,0 +1,121 @@
+"""Pure-jnp reference oracle for the CGMQ quantization kernels.
+
+Everything in this module is straight-line jax.numpy with no Pallas and no
+custom gradients: it is the ground truth that ``fake_quant.py`` (the Pallas
+L1 kernels) and the Rust ``quant/`` module are tested against.
+
+Math follows the paper exactly:
+
+* Eq. 1 — ``quantize``: power-of-2-range uniform quantizer
+      Q(x, b, alpha, beta) = (beta-alpha)/(2^b-1)
+                             * round( clip(x, alpha, beta) * (2^b-1)/(beta-alpha) )
+  with alpha = -beta for signed tensors and alpha = 0 for unsigned ones.
+
+* Eq. 2/3 — ``gated_quantize``: residual decomposition over
+  B = {2, 4, 8, 16, 32} with binary gate functions
+      G_b(g) = 1  iff  T(g) >= b
+  nested as
+      x_q = G2 * [x_2 + G4 * [e4 + G8 * [e8 + G16 * [e16 + G32 * e32]]]]
+  where e_j = x_j - x_{j/2} is the residual quantization error.
+
+* Eq. 4 — ``transform_T``: the staircase mapping gate value -> bit-width
+      g <= 0 -> 0,  (0,1] -> 2,  (1,2] -> 4,  (2,3] -> 8,  (3,4] -> 16,  g > 4 -> 32.
+
+Numerical conventions (mirrored bit-for-bit by the Pallas kernel and Rust):
+
+* For b >= 24 the f32 grid has more levels than the mantissa can represent
+  and the quantizer degenerates to ``clip`` — we implement that case
+  explicitly instead of relying on float behaviour.
+* The step size is floored at ``EPS_SCALE`` to keep beta == 0 finite.
+* The rounded integer is saturated to the standard symmetric grid
+  [-(2^(b-1)-1), 2^(b-1)-1] for signed ranges ([0, 2^b-1] unsigned). The
+  raw Eq. 1 puts every clipped value exactly on a round-half tie
+  (clip(x)=beta -> v/s = (2^b-1)/2), whose resolution is backend-dependent
+  (round-half-even vs 1-ulp drift under fusion); saturation makes the
+  quantizer bit-deterministic across eager jnp, Pallas, lowered HLO and
+  Rust without changing any interior level.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Bit-widths of the residual decomposition (paper: B = {4,8,16,32} on top of
+# the base 2-bit level).
+BIT_LEVELS = (2, 4, 8, 16, 32)
+
+# Step-size floor: keeps Q well-defined when a range collapses (beta == 0).
+EPS_SCALE = 1e-12
+
+# At and above this bit-width, f32 cannot represent the integer grid, and
+# fake quantization is numerically the identity (after clipping).
+IDENTITY_BITS = 24
+
+
+def clip(x, alpha, beta):
+    """clip_{[alpha, beta]}(x) from the paper."""
+    return jnp.minimum(jnp.maximum(x, alpha), beta)
+
+
+def quantize(x, bits: int, beta, signed: bool):
+    """Eq. 1: fake-quantize ``x`` to ``bits`` bits on the range implied by beta.
+
+    alpha = -beta when ``signed`` (tensor contains negative values), else 0,
+    matching the paper's range convention (Section 2.1).
+    """
+    beta = jnp.asarray(beta, dtype=jnp.float32)
+    alpha = -beta if signed else jnp.zeros_like(beta)
+    v = clip(x, alpha, beta)
+    if bits >= IDENTITY_BITS:
+        return v
+    levels = float(2**bits - 1)
+    scale = jnp.maximum((beta - alpha) / levels, EPS_SCALE)
+    n_max = float(2 ** (bits - 1) - 1) if signed else levels
+    n_min = -n_max if signed else 0.0
+    n = jnp.minimum(jnp.maximum(jnp.round(v / scale), n_min), n_max)
+    return scale * n
+
+
+def transform_T(g):
+    """Eq. 4: staircase transform from gate value to bit-width."""
+    g = jnp.asarray(g, dtype=jnp.float32)
+    return jnp.where(
+        g <= 0.0,
+        0.0,
+        jnp.where(
+            g <= 1.0,
+            2.0,
+            jnp.where(g <= 2.0, 4.0, jnp.where(g <= 3.0, 8.0, jnp.where(g <= 4.0, 16.0, 32.0))),
+        ),
+    )
+
+
+def gate_masks(g):
+    """G_b(g) for b in BIT_LEVELS as f32 {0,1} masks (Section 2.1)."""
+    t = transform_T(g)
+    return tuple(jnp.asarray(t >= float(b), dtype=jnp.float32) for b in BIT_LEVELS)
+
+
+def gated_quantize(x, g, beta, signed: bool):
+    """Eq. 3: gated residual-decomposition quantizer.
+
+    ``x`` and ``g`` must have the same shape; ``beta`` is a scalar
+    (per-tensor range). Returns the fake-quantized tensor whose effective
+    bit-width at each element is T(g) at that element.
+    """
+    q = {b: quantize(x, b, beta, signed) for b in BIT_LEVELS}
+    m2, m4, m8, m16, m32 = gate_masks(g)
+    e4 = q[4] - q[2]
+    e8 = q[8] - q[4]
+    e16 = q[16] - q[8]
+    e32 = q[32] - q[16]
+    return m2 * (q[2] + m4 * (e4 + m8 * (e8 + m16 * (e16 + m32 * e32))))
+
+
+def quantize_input(x, bits: int = 8, beta: float = 1.0):
+    """Fixed-precision input quantizer (paper Section 4.2: input held at 8 bit).
+
+    The normalised input lives in [-1, 1], so the range is fixed and signed
+    and carries no gradient (it models the sensor ADC).
+    """
+    return quantize(x, bits, jnp.float32(beta), signed=True)

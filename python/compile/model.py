@@ -1,0 +1,225 @@
+"""L2: the paper's models (LeNet-5 / MLP) fwd+bwd with CGMQ fake quantization.
+
+Every function here is a pure jax function over explicit flat argument
+lists (no pytrees at the boundary) so that aot.py can lower them to HLO
+text with a stable, manifest-recorded argument order for the Rust runtime.
+
+Step functions exported as artifacts:
+
+* ``float_step``  — float pretraining: (params..., x, y) -> (loss, grads...)
+* ``qat_step``    — the CGMQ inner step: quantized fwd/bwd returning the
+  weight/range gradients for Adam *plus* the dir statistics the Rust
+  coordinator needs (paper Section 2.3): batch-mean loss gradients w.r.t.
+  each quantized activation (via zero "probes") and batch-mean activation
+  values. Gates enter as tensors; T(g) is applied inside the graph, so the
+  same compiled artifact serves per-layer and per-weight granularity.
+* ``eval_logits`` / ``eval_logits_float`` — inference.
+* ``calibrate``   — float forward returning per-layer max|activation| for
+  range calibration (paper Section 2.4).
+
+The per-weight loss gradients the dirs need are exactly the Adam weight
+gradients (the loss is a batch mean), so they are not duplicated.
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .arch import ArchSpec
+from .quantizer import gated_quantize_ste, quantize_input
+
+
+# --------------------------------------------------------------------------
+# Building blocks
+# --------------------------------------------------------------------------
+
+
+def _apply_layer(layer, h, wq, b):
+    """Linear part of a layer with already-quantized weights."""
+    if layer.kind == "conv":
+        z = jax.lax.conv_general_dilated(
+            h, wq, window_strides=(1, 1), padding="VALID",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        return z + b[None, :, None, None]
+    if h.ndim > 2:
+        h = h.reshape(h.shape[0], -1)
+    return h @ wq + b[None, :]
+
+
+def _maxpool(a, k: int):
+    return jax.lax.reduce_window(
+        a, -jnp.inf, jax.lax.max, (1, 1, k, k), (1, 1, k, k), "VALID"
+    )
+
+
+def _cross_entropy(logits, y):
+    """Mean cross-entropy over the batch; y is int32 class labels."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, y[:, None].astype(jnp.int32), axis=-1)[:, 0]
+    return jnp.mean(logz - gold)
+
+
+def forward_quantized(
+    arch: ArchSpec,
+    params: Sequence[jnp.ndarray],
+    betas_w: jnp.ndarray,  # (L,)   per-layer weight range
+    betas_a: jnp.ndarray,  # (La,)  per-quantized-activation-layer range
+    gates_w: Sequence[jnp.ndarray],  # per layer, shaped like the weights
+    gates_a: Sequence[jnp.ndarray],  # per act layer, shaped like act feature dims
+    x: jnp.ndarray,
+    probes: Sequence[jnp.ndarray] | None = None,
+):
+    """Fake-quantized forward pass (paper Fig. 1 applied at every layer).
+
+    Returns (logits, act_means) where act_means[i] is the batch mean of the
+    i-th quantized activation tensor (feature-dim shaped) — the dir2/dir3
+    statistic.
+    """
+    h = quantize_input(x, bits=arch.input_bits)
+    act_means: List[jnp.ndarray] = []
+    ai = 0
+    n_layers = len(arch.layers)
+    for li, layer in enumerate(arch.layers):
+        w, b = params[2 * li], params[2 * li + 1]
+        wq = gated_quantize_ste(w, gates_w[li], betas_w[li], True)
+        z = _apply_layer(layer, h, wq, b)
+        if li == n_layers - 1:
+            return z, act_means  # output layer: float logits, no activation FQ
+        a = jax.nn.relu(z)
+        # ReLU output is non-negative -> unsigned range [0, beta].
+        ga_full = jnp.broadcast_to(gates_a[ai][None, ...], a.shape)
+        aq = gated_quantize_ste(a, ga_full, betas_a[ai], False)
+        if probes is not None:
+            aq = aq + probes[ai][None, ...]
+        act_means.append(jnp.mean(aq, axis=0))
+        if layer.pool:
+            aq = _maxpool(aq, layer.pool)
+        h = aq
+        ai += 1
+    raise AssertionError("unreachable")
+
+
+def forward_float(arch: ArchSpec, params: Sequence[jnp.ndarray], x: jnp.ndarray):
+    """Plain float forward; also returns per-layer activations for calibration."""
+    h = x
+    acts: List[jnp.ndarray] = []
+    n_layers = len(arch.layers)
+    for li, layer in enumerate(arch.layers):
+        w, b = params[2 * li], params[2 * li + 1]
+        z = _apply_layer(layer, h, w, b)
+        if li == n_layers - 1:
+            return z, acts
+        a = jax.nn.relu(z)
+        acts.append(a)
+        h = _maxpool(a, layer.pool) if layer.pool else a
+    raise AssertionError("unreachable")
+
+
+# --------------------------------------------------------------------------
+# Exported step functions (flat-arg, lowered by aot.py)
+# --------------------------------------------------------------------------
+
+
+def make_float_step(arch: ArchSpec):
+    n_p = 2 * len(arch.layers)
+
+    def float_step(*args):
+        params, (x, y) = list(args[:n_p]), args[n_p:]
+
+        def loss_fn(params):
+            logits, _ = forward_float(arch, params, x)
+            return _cross_entropy(logits, y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        return tuple([loss] + list(grads))
+
+    return float_step
+
+
+def make_qat_step(arch: ArchSpec):
+    n_p = 2 * len(arch.layers)
+    n_l = len(arch.layers)
+    n_a = len(arch.quant_act_layers)
+
+    def qat_step(*args):
+        i = 0
+        params = list(args[i : i + n_p]); i += n_p
+        betas_w = args[i]; i += 1
+        betas_a = args[i]; i += 1
+        gates_w = list(args[i : i + n_l]); i += n_l
+        gates_a = list(args[i : i + n_a]); i += n_a
+        x, y = args[i], args[i + 1]
+
+        probes = [jnp.zeros(l.act_shape, jnp.float32) for l in arch.quant_act_layers]
+
+        def loss_fn(params, betas_w, betas_a, probes):
+            logits, act_means = forward_quantized(
+                arch, params, betas_w, betas_a, gates_w, gates_a, x, probes
+            )
+            return _cross_entropy(logits, y), act_means
+
+        (loss, act_means), grads = jax.value_and_grad(
+            loss_fn, argnums=(0, 1, 2, 3), has_aux=True
+        )(params, betas_w, betas_a, probes)
+        g_params, g_bw, g_ba, g_probes = grads
+        # Output order (manifest-recorded): loss, param grads, range grads,
+        # per-activation batch-mean loss grads (dir statistic), act means.
+        return tuple([loss] + list(g_params) + [g_bw, g_ba] + list(g_probes) + list(act_means))
+
+    return qat_step
+
+
+def make_eval(arch: ArchSpec):
+    n_p = 2 * len(arch.layers)
+    n_l = len(arch.layers)
+    n_a = len(arch.quant_act_layers)
+
+    def eval_logits(*args):
+        i = 0
+        params = list(args[i : i + n_p]); i += n_p
+        betas_w = args[i]; i += 1
+        betas_a = args[i]; i += 1
+        gates_w = list(args[i : i + n_l]); i += n_l
+        gates_a = list(args[i : i + n_a]); i += n_a
+        x = args[i]
+        logits, _ = forward_quantized(arch, params, betas_w, betas_a, gates_w, gates_a, x)
+        return (logits,)
+
+    return eval_logits
+
+
+def make_eval_float(arch: ArchSpec):
+    n_p = 2 * len(arch.layers)
+
+    def eval_logits_float(*args):
+        params, x = list(args[:n_p]), args[n_p]
+        logits, _ = forward_float(arch, params, x)
+        return (logits,)
+
+    return eval_logits_float
+
+
+def make_calibrate(arch: ArchSpec):
+    """Float forward -> (w_maxes, act_maxes, logit_mean).
+
+    logit_mean is a diagnostics scalar that also keeps every parameter
+    (notably the last layer's bias, which the max statistics don't touch)
+    alive in the lowered HLO — XLA prunes unused entry parameters, which
+    would silently change the artifact's arity (see runtime::Executable).
+    """
+    n_p = 2 * len(arch.layers)
+
+    def calibrate(*args):
+        params, x = list(args[:n_p]), args[n_p]
+        logits, acts = forward_float(arch, params, x)
+        w_maxes = jnp.stack(
+            [jnp.max(jnp.abs(params[2 * li])) for li in range(len(arch.layers))]
+        )
+        act_maxes = jnp.stack([jnp.max(jnp.abs(a)) for a in acts])
+        return (w_maxes, act_maxes, jnp.mean(logits))
+
+    return calibrate

@@ -1,0 +1,106 @@
+"""STE / range-gradient wrappers around the L1 Pallas kernels.
+
+CGMQ's gradient conventions (paper Sections 2.2-2.3):
+
+* **Values** flow through the round-to-nearest with the Straight-Through
+  Estimator: identity inside the clipping range, zero outside.
+* **Ranges** (the learnable beta of each tensor) get the LSQ/TQT-style
+  gradient: for clipped elements d q / d beta = sign(boundary); for interior
+  elements the scale-error term (q - v) / beta.
+* **Gates** get NO gradient at all — the paper's whole point is that the
+  staircase T(g) is non-differentiable and the gate update is driven by the
+  Rust coordinator's `dir` rules instead. The gate argument is therefore a
+  `jax.custom_vjp` non-diff argument in spirit: its cotangent is zero.
+
+Forward primal values come from the Pallas kernels (fake_quant.py); the
+backward rules are closed-form jnp and never re-enter Pallas.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fake_quant, ref
+
+
+# --------------------------------------------------------------------------
+# Fixed-bit quantizer with STE (used for the 8-bit network input).
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def quantize_ste(x, beta, bits: int, signed: bool):
+    return fake_quant.quantize_pallas(x, beta, bits=bits, signed=signed)
+
+
+def _quantize_fwd(x, beta, bits, signed):
+    q = fake_quant.quantize_pallas(x, beta, bits=bits, signed=signed)
+    return q, (x, beta, q)
+
+
+def _quantize_bwd(bits, signed, res, ct):
+    x, beta, q = res
+    beta = jnp.asarray(beta, jnp.float32)
+    alpha = -beta if signed else jnp.zeros_like(beta)
+    inside = jnp.logical_and(x >= alpha, x <= beta)
+    gx = jnp.where(inside, ct, 0.0)
+    # d q / d beta: +-1 on the clipped tails, scale-error term inside.
+    v = ref.clip(x, alpha, beta)
+    dq_dbeta = jnp.where(
+        x > beta,
+        1.0,
+        jnp.where(x < alpha, -1.0 if signed else 0.0, (q - v) / jnp.maximum(beta, 1e-6)),
+    )
+    gbeta = jnp.sum(ct * dq_dbeta).reshape(jnp.shape(beta))
+    return gx, gbeta
+
+
+quantize_ste.defvjp(_quantize_fwd, _quantize_bwd)
+
+
+# --------------------------------------------------------------------------
+# Gated residual-decomposition quantizer (Eq. 3) with STE.
+# --------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def gated_quantize_ste(x, g, beta, signed: bool):
+    """Fake-quantize ``x`` at the per-element bit-width T(g).
+
+    Gradients: STE to ``x`` (masked to the clip range), LSQ-style to
+    ``beta``, exactly zero to ``g`` (paper: gate updates use dir, not grad).
+    """
+    return fake_quant.gated_quantize_pallas(x, g, beta, signed=signed)
+
+
+def _gated_fwd(x, g, beta, signed):
+    q = fake_quant.gated_quantize_pallas(x, g, beta, signed=signed)
+    return q, (x, g, beta, q)
+
+
+def _gated_bwd(signed, res, ct):
+    x, g, beta, q = res
+    beta = jnp.asarray(beta, jnp.float32)
+    alpha = -beta if signed else jnp.zeros_like(beta)
+    inside = jnp.logical_and(x >= alpha, x <= beta)
+    gx = jnp.where(inside, ct, 0.0)
+    v = ref.clip(x, alpha, beta)
+    dq_dbeta = jnp.where(
+        x > beta,
+        1.0,
+        jnp.where(x < alpha, -1.0 if signed else 0.0, (q - v) / jnp.maximum(beta, 1e-6)),
+    )
+    gbeta = jnp.sum(ct * dq_dbeta).reshape(jnp.shape(beta))
+    gg = jnp.zeros_like(g)  # gates carry no gradient by construction
+    return gx, gg, gbeta
+
+
+gated_quantize_ste.defvjp(_gated_fwd, _gated_bwd)
+
+
+def quantize_input(x, bits: int = 8, beta: float = 1.0):
+    """Fixed 8-bit input quantization (no learnable range, no gradient to beta)."""
+    return quantize_ste(x, jax.lax.stop_gradient(jnp.float32(beta)), bits, True)

@@ -1,0 +1,84 @@
+"""AOT lowering smoke tests + BOP oracle (fast: MLP only is lowered here)."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.arch import ARCHS, LENET5, MLP
+
+
+def test_artifact_plan_io_contract():
+    """Manifest I/O ordering is the Rust runtime's ABI — pin it."""
+    plans = {name: (ins, outs) for name, _, ins, outs in aot.artifact_plan(MLP)}
+    ins, outs = plans["mlp_qat_step"]
+    names = [n for n, _ in ins]
+    assert names == [
+        "fc1.w", "fc1.b", "fc2.w", "fc2.b", "fc3.w", "fc3.b",
+        "betas_w", "betas_a",
+        "fc1.gw", "fc2.gw", "fc3.gw", "fc1.ga", "fc2.ga",
+        "x", "y",
+    ]
+    assert outs == [
+        "loss",
+        "grad.fc1.w", "grad.fc1.b", "grad.fc2.w", "grad.fc2.b",
+        "grad.fc3.w", "grad.fc3.b",
+        "grad.betas_w", "grad.betas_a",
+        "act_grad.fc1", "act_grad.fc2",
+        "act_mean.fc1", "act_mean.fc2",
+    ]
+
+
+def test_lower_mlp_qat_step_produces_hlo_text():
+    plans = {name: (fn, ins) for name, fn, ins, _ in aot.artifact_plan(MLP)}
+    fn, ins = plans["mlp_qat_step"]
+    text = aot.lower_artifact(fn, ins)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # fake quantization must actually be in the graph
+    assert "round-nearest" in text or "round_nearest" in text.replace("-", "_")
+
+
+def test_lower_float_step_small():
+    plans = {name: (fn, ins) for name, fn, ins, _ in aot.artifact_plan(MLP)}
+    fn, ins = plans["mlp_float_step"]
+    text = aot.lower_artifact(fn, ins)
+    assert text.startswith("HloModule")
+
+
+def test_bop_goldens_floor_matches_paper():
+    """Paper Section 4.2: the all-2-bit RBOP floor for LeNet-5 is ~0.392%.
+
+    Our BOP model (DESIGN.md §7: output-activation bit-widths, output layer
+    excluded) gives exactly (2*2)/(32*32) = 0.390625%.
+    """
+    g = aot._bop_goldens()
+    assert g["lenet5"]["floor_rbop_percent"] == pytest.approx(0.390625, abs=1e-9)
+    assert g["mlp"]["floor_rbop_percent"] == pytest.approx(0.390625, abs=1e-9)
+
+
+def test_lenet5_macs():
+    macs = {l.name: l.macs for l in LENET5.layers}
+    assert macs == {
+        "conv1": 20 * 24 * 24 * 25,
+        "conv2": 50 * 8 * 8 * 25 * 20,
+        "fc1": 800 * 500,
+        "fc2": 500 * 10,
+    }
+
+
+def test_manifest_if_built():
+    """If `make artifacts` has run, the manifest must cover both archs."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    m = json.load(open(path))
+    for arch in ARCHS:
+        for kind in ("float_step", "qat_step", "eval", "eval_float", "calibrate"):
+            name = f"{arch}_{kind}"
+            assert name in m["artifacts"], name
+            assert os.path.exists(
+                os.path.join(os.path.dirname(path), m["artifacts"][name]["file"])
+            )
+    assert "archs" in m and set(m["archs"]) >= set(ARCHS)

@@ -1,0 +1,45 @@
+"""HLO audit invariants (L2 perf gate) — runs when artifacts are built."""
+
+import os
+
+import pytest
+
+from compile import audit
+from compile.arch import ARCHS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def _text(name):
+    path = os.path.join(ART, f"{name}.hlo.txt")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    return open(path).read()
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_qat_step_round_count_is_minimal(arch):
+    """Eq. 3 needs exactly 4 rounds per gated tensor + 1 for the input —
+    the lowered graph must hit that minimum (no recomputation, no dropped
+    FQ block)."""
+    text = _text(f"{arch}_qat_step")
+    got = audit.round_call_sites(text)
+    assert got == audit.expected_rounds(arch, f"{arch}_qat_step")
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_eval_round_count_is_minimal(arch):
+    text = _text(f"{arch}_eval")
+    got = audit.round_call_sites(text)
+    assert got == audit.expected_rounds(arch, f"{arch}_eval")
+
+
+@pytest.mark.parametrize("arch", list(ARCHS))
+def test_float_artifacts_have_no_quantization(arch):
+    for kind in ("float_step", "eval_float", "calibrate"):
+        assert audit.round_call_sites(_text(f"{arch}_{kind}")) == 0, kind
+
+
+def test_transcendentals_confined_to_cross_entropy():
+    counts = audit.op_counts(_text("lenet5_qat_step"))
+    assert counts.get("exponential", 0) + counts.get("log", 0) <= 6

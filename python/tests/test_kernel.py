@@ -1,0 +1,185 @@
+"""Pallas kernel vs pure-jnp oracle — the core L1 correctness signal.
+
+Includes hypothesis sweeps over shapes, ranges and gate values: the Pallas
+tiling (flatten + pad to 256x128 blocks) must be invisible for any tensor
+shape, and the gated decomposition must equal a direct Eq.-1 quantization
+at the bit-width selected by T(g).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fake_quant, ref
+
+ATOL = 1e-6  # one f32 ulp of scale*n re-association
+BITS = list(ref.BIT_LEVELS)
+
+
+def _rand(shape, seed=0, scale=0.8):
+    return np.random.default_rng(seed).normal(0.0, scale, shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Fixed-bit quantizer (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("signed", [True, False])
+def test_quantize_matches_ref(bits, signed):
+    x = jnp.asarray(_rand((97, 33)))
+    r = ref.quantize(x, bits, 1.1, signed)
+    p = fake_quant.quantize_pallas(x, 1.1, bits=bits, signed=signed)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p), atol=ATOL)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_quantize_level_count(bits):
+    """A b-bit quantization admits at most 2^b distinct values."""
+    x = jnp.asarray(np.linspace(-2, 2, 4001, dtype=np.float32))
+    q = np.asarray(ref.quantize(x, bits, 1.0, True))
+    assert len(np.unique(q)) <= 2**bits
+    # signed grid is symmetric and contains exact zero
+    assert 0.0 in np.unique(q)
+    np.testing.assert_allclose(np.unique(q), -np.unique(q)[::-1], atol=ATOL)
+
+
+def test_quantize_respects_range():
+    x = jnp.asarray(_rand((512,), scale=3.0))
+    for bits in BITS:
+        q = np.asarray(ref.quantize(x, bits, 0.7, True))
+        assert np.all(np.abs(q) <= 0.7 + ATOL)
+        qu = np.asarray(ref.quantize(x, bits, 0.7, False))
+        assert np.all(qu >= -ATOL) and np.all(qu <= 0.7 + ATOL)
+
+
+def test_quantize_identity_at_32_bits():
+    """32-bit fake quantization == clip (f32 grid denser than mantissa)."""
+    x = jnp.asarray(_rand((256,)))
+    q = np.asarray(ref.quantize(x, 32, 1.5, True))
+    np.testing.assert_array_equal(q, np.clip(np.asarray(x), -1.5, 1.5))
+
+
+def test_quantize_zero_beta_finite():
+    x = jnp.asarray(_rand((64,)))
+    q = np.asarray(ref.quantize(x, 4, 0.0, True))
+    assert np.all(np.isfinite(q))
+    np.testing.assert_allclose(q, 0.0, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Staircase T and gate masks (Eq. 4)
+# ---------------------------------------------------------------------------
+
+
+def test_transform_T_staircase():
+    g = jnp.asarray([-1.0, 0.0, 0.25, 0.5, 1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0, 4.5, 5.5])
+    expect = [0, 0, 2, 2, 2, 4, 4, 8, 8, 16, 16, 32, 32]
+    np.testing.assert_array_equal(np.asarray(ref.transform_T(g)), expect)
+
+
+def test_gate_masks_are_nested():
+    """G_2 >= G_4 >= G_8 >= G_16 >= G_32 pointwise (monotone staircase)."""
+    g = jnp.asarray(np.random.default_rng(3).uniform(-1, 6, (512,)).astype(np.float32))
+    masks = ref.gate_masks(g)
+    for lo, hi in zip(masks[:-1], masks[1:]):
+        assert np.all(np.asarray(lo) >= np.asarray(hi))
+
+
+# ---------------------------------------------------------------------------
+# Gated residual decomposition (Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("signed", [True, False])
+def test_gated_matches_ref(signed):
+    x = jnp.asarray(_rand((300, 77)))
+    g = jnp.asarray(np.random.default_rng(1).uniform(-0.5, 5.5, (300, 77)).astype(np.float32))
+    r = ref.gated_quantize(x, g, 1.2, signed)
+    p = fake_quant.gated_quantize_pallas(x, g, 1.2, signed=signed)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p), atol=ATOL)
+
+
+@pytest.mark.parametrize("gval,bits", [(0.7, 2), (1.5, 4), (2.5, 8), (3.5, 16), (5.0, 32)])
+def test_gated_equals_direct_quantization(gval, bits):
+    """With a uniform gate, Eq. 3 telescopes to a direct Eq. 1 quantization."""
+    x = jnp.asarray(_rand((4096,), seed=9))
+    g = jnp.full_like(x, gval)
+    gated = ref.gated_quantize(x, g, 1.0, True)
+    direct = ref.quantize(x, bits, 1.0, True)
+    np.testing.assert_allclose(np.asarray(gated), np.asarray(direct), atol=ATOL)
+
+
+def test_gated_zero_gate_prunes():
+    """T(g<=0) = 0 -> all masks zero -> output exactly zero (pruning limit)."""
+    x = jnp.asarray(_rand((128,)))
+    g = jnp.full_like(x, -0.3)
+    np.testing.assert_array_equal(np.asarray(ref.gated_quantize(x, g, 1.0, True)), 0.0)
+
+
+def test_gated_mixed_gates_elementwise():
+    """Each element is quantized at its own T(g) — mixed precision in one tensor."""
+    x = jnp.asarray(_rand((1000,), seed=5))
+    g = jnp.asarray(np.random.default_rng(6).uniform(0.1, 5.5, (1000,)).astype(np.float32))
+    gated = np.asarray(ref.gated_quantize(x, g, 1.0, True))
+    t = np.asarray(ref.transform_T(g))
+    for bits in BITS:
+        m = t == bits
+        if m.any():
+            direct = np.asarray(ref.quantize(x, bits, 1.0, True))
+            np.testing.assert_allclose(gated[m], direct[m], atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps: tiling must be shape/value independent
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(1, 70000),
+    beta=st.floats(0.05, 4.0),
+    signed=st.booleans(),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_gated_any_size(n, beta, signed, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 1.0, (n,)).astype(np.float32))
+    g = jnp.asarray(rng.uniform(-0.5, 5.5, (n,)).astype(np.float32))
+    r = ref.gated_quantize(x, g, beta, signed)
+    p = fake_quant.gated_quantize_pallas(x, g, beta, signed=signed)
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p), atol=max(ATOL, 1e-6 * beta))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    shape=st.tuples(st.integers(1, 40), st.integers(1, 40), st.integers(1, 12)),
+    bits=st.sampled_from(BITS),
+    signed=st.booleans(),
+)
+def test_hypothesis_quantize_nd_shapes(shape, bits, signed):
+    x = jnp.asarray(np.random.default_rng(11).normal(0, 1, shape).astype(np.float32))
+    r = ref.quantize(x, bits, 1.0, signed)
+    p = fake_quant.quantize_pallas(x, 1.0, bits=bits, signed=signed)
+    assert p.shape == x.shape
+    np.testing.assert_allclose(np.asarray(r), np.asarray(p), atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(g=st.floats(-2.0, 8.0))
+def test_hypothesis_T_in_levels(g):
+    t = float(ref.transform_T(jnp.float32(g)))
+    assert t in (0.0, 2.0, 4.0, 8.0, 16.0, 32.0)
+
+
+def test_quantization_error_decreases_with_bits():
+    """Residual decomposition sanity: error shrinks monotonically in b."""
+    x = jnp.asarray(_rand((8192,), seed=2))
+    errs = []
+    for bits in BITS:
+        q = ref.quantize(x, bits, 2.0, True)
+        errs.append(float(jnp.mean((q - jnp.clip(x, -2, 2)) ** 2)))
+    assert errs == sorted(errs, reverse=True)
+    assert errs[-1] < 1e-10

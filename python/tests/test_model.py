@@ -1,0 +1,190 @@
+"""L2 model correctness: shapes, statistics semantics, trainability.
+
+These tests exercise exactly the functions aot.py lowers, so green here
+means the artifacts encode the intended math.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data_synth, model
+from compile.arch import ARCHS, LENET5, MLP
+
+
+def _init_params(arch, seed=0):
+    rng = np.random.default_rng(seed)
+    params = []
+    for l in arch.layers:
+        std = (2.0 / l.fan_in) ** 0.5
+        params.append(jnp.asarray(rng.normal(0, std, l.w_shape).astype(np.float32)))
+        params.append(jnp.zeros(l.b_shape, jnp.float32))
+    return params
+
+
+def _quant_state(arch, params, gate=5.5):
+    betas_w = jnp.asarray(
+        [float(jnp.max(jnp.abs(params[2 * i]))) for i in range(len(arch.layers))]
+    )
+    betas_a = jnp.asarray([3.0] * len(arch.quant_act_layers))
+    gates_w = [jnp.full(l.w_shape, gate, jnp.float32) for l in arch.layers]
+    gates_a = [jnp.full(l.act_shape, gate, jnp.float32) for l in arch.quant_act_layers]
+    return betas_w, betas_a, gates_w, gates_a
+
+
+def _batch(arch, n, seed=42):
+    flat = arch.name == "mlp"
+    x, y = data_synth.dataset(seed, n, flat=flat)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("arch", [MLP, LENET5], ids=lambda a: a.name)
+def test_param_counts(arch):
+    expected = {"mlp": 784 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10,
+                "lenet5": 431080}
+    assert arch.n_params() == expected[arch.name]
+
+
+@pytest.mark.parametrize("arch", [MLP, LENET5], ids=lambda a: a.name)
+def test_float_forward_shapes(arch):
+    params = _init_params(arch)
+    x, _ = _batch(arch, 8)
+    logits, acts = model.forward_float(arch, params, x)
+    assert logits.shape == (8, 10)
+    assert len(acts) == len(arch.quant_act_layers)
+    for a, l in zip(acts, arch.quant_act_layers):
+        assert a.shape == (8,) + l.act_shape
+
+
+@pytest.mark.parametrize("arch", [MLP, LENET5], ids=lambda a: a.name)
+def test_qat_step_output_shapes(arch):
+    params = _init_params(arch)
+    bw, ba, gw, ga = _quant_state(arch, params)
+    x, y = _batch(arch, arch.train_batch)
+    out = jax.jit(model.make_qat_step(arch))(*params, bw, ba, *gw, *ga, x, y)
+    n_p = 2 * len(arch.layers)
+    n_a = len(arch.quant_act_layers)
+    assert len(out) == 1 + n_p + 2 + 2 * n_a
+    assert out[0].shape == ()  # loss
+    for i in range(n_p):  # param grads mirror param shapes
+        assert out[1 + i].shape == params[i].shape
+    assert out[1 + n_p].shape == (len(arch.layers),)  # grad betas_w
+    assert out[2 + n_p].shape == (n_a,)  # grad betas_a
+    for k, l in enumerate(arch.quant_act_layers):  # act grads + act means
+        assert out[3 + n_p + k].shape == l.act_shape
+        assert out[3 + n_p + n_a + k].shape == l.act_shape
+
+
+def test_qat_at_32bit_gates_close_to_float():
+    """With all gates at 32 bit and generous ranges, QAT logits ~ float logits."""
+    arch = MLP
+    params = _init_params(arch)
+    x, _ = _batch(arch, 32)
+    bw = jnp.asarray([float(jnp.max(jnp.abs(params[2 * i]))) * 4 for i in range(3)])
+    ba = jnp.asarray([50.0, 50.0])
+    gw = [jnp.full(l.w_shape, 5.5, jnp.float32) for l in arch.layers]
+    ga = [jnp.full(l.act_shape, 5.5, jnp.float32) for l in arch.quant_act_layers]
+    ql, _ = model.forward_quantized(arch, params, bw, ba, gw, ga, x)
+    fl, _ = model.forward_float(arch, params, x)
+    # only the fixed 8-bit input quantization separates them
+    assert float(jnp.max(jnp.abs(ql - fl))) < 0.15
+
+
+def test_lower_bits_increase_distortion():
+    arch = MLP
+    params = _init_params(arch)
+    x, _ = _batch(arch, 32)
+    bw, ba, _, _ = _quant_state(arch, params)
+    fl, _ = model.forward_float(arch, params, x)
+    dist = []
+    for gate in (5.5, 2.5, 0.7):  # 32 -> 8 -> 2 bits
+        gw = [jnp.full(l.w_shape, gate, jnp.float32) for l in arch.layers]
+        ga = [jnp.full(l.act_shape, gate, jnp.float32) for l in arch.quant_act_layers]
+        ql, _ = model.forward_quantized(arch, params, bw, ba, gw, ga, x)
+        dist.append(float(jnp.mean((ql - fl) ** 2)))
+    assert dist[0] < dist[1] < dist[2]
+
+
+def test_act_mean_statistic_semantics():
+    """act_mean output == batch mean of the quantized activation tensor."""
+    arch = MLP
+    params = _init_params(arch)
+    bw, ba, gw, ga = _quant_state(arch, params)
+    x, y = _batch(arch, arch.train_batch)
+    out = jax.jit(model.make_qat_step(arch))(*params, bw, ba, *gw, *ga, x, y)
+    act_mean_fc1 = out[-2]
+    # recompute directly from the forward pass
+    _, act_means = model.forward_quantized(arch, params, bw, ba, gw, ga, x)
+    np.testing.assert_allclose(np.asarray(act_mean_fc1), np.asarray(act_means[0]), atol=1e-5)
+    assert float(jnp.max(act_means[0])) > 0  # ReLU output, some units active
+
+
+def test_act_grad_statistic_is_probe_gradient():
+    """act_grad == d(mean loss)/d(activation), batch-summed via broadcast probe."""
+    arch = MLP
+    params = _init_params(arch)
+    bw, ba, gw, ga = _quant_state(arch, params)
+    x, y = _batch(arch, arch.train_batch)
+    out = jax.jit(model.make_qat_step(arch))(*params, bw, ba, *gw, *ga, x, y)
+    n_p = 2 * len(arch.layers)
+    act_grad_fc1 = np.asarray(out[3 + n_p])
+    assert act_grad_fc1.shape == (128,)
+    assert np.isfinite(act_grad_fc1).all()
+    assert np.abs(act_grad_fc1).max() > 0
+
+
+def test_float_step_trains():
+    """A few float steps reduce the loss (sanity of loss/grads)."""
+    arch = MLP
+    params = _init_params(arch)
+    x, y = _batch(arch, arch.train_batch)
+    step = jax.jit(model.make_float_step(arch))
+    losses = []
+    for _ in range(15):
+        out = step(*params, x, y)
+        losses.append(float(out[0]))
+        grads = out[1:]
+        params = [p - 0.05 * g for p, g in zip(params, grads)]
+    assert losses[-1] < losses[0] * 0.7
+
+
+def test_qat_step_trains_at_8bit():
+    """QAT fwd/bwd with 8-bit gates still learns (STE works through Eq. 3)."""
+    arch = MLP
+    params = _init_params(arch)
+    bw, ba, gw, ga = _quant_state(arch, params, gate=2.5)  # 8 bit everywhere
+    x, y = _batch(arch, arch.train_batch)
+    step = jax.jit(model.make_qat_step(arch))
+    losses = []
+    for _ in range(15):
+        out = step(*params, bw, ba, *gw, *ga, x, y)
+        losses.append(float(out[0]))
+        grads = out[1 : 1 + 6]
+        params = [p - 0.05 * g for p, g in zip(params, grads)]
+    assert losses[-1] < losses[0] * 0.8
+
+
+def test_calibrate_outputs():
+    arch = MLP
+    params = _init_params(arch)
+    x, _ = _batch(arch, arch.train_batch)
+    w_maxes, act_maxes, logit_mean = jax.jit(model.make_calibrate(arch))(*params, x)
+    assert w_maxes.shape == (3,)
+    assert act_maxes.shape == (2,)
+    for i in range(3):
+        assert float(w_maxes[i]) == pytest.approx(
+            float(jnp.max(jnp.abs(params[2 * i]))), rel=1e-6
+        )
+    assert np.all(np.asarray(act_maxes) > 0)
+    assert np.isfinite(float(logit_mean))
+
+
+def test_cross_entropy_reference():
+    logits = jnp.asarray([[2.0, 0.0, -1.0], [0.0, 3.0, 0.0]], jnp.float32)
+    y = jnp.asarray([0, 1], jnp.int32)
+    got = float(model._cross_entropy(logits, y))
+    p0 = np.exp(2.0) / (np.exp(2.0) + 1 + np.exp(-1.0))
+    p1 = np.exp(3.0) / (np.exp(3.0) + 2)
+    expect = -(np.log(p0) + np.log(p1)) / 2
+    assert got == pytest.approx(expect, rel=1e-5)

@@ -1,0 +1,94 @@
+"""Gradient rules of the STE quantizer wrappers (L2 <- L1 boundary).
+
+The paper's training relies on three gradient conventions:
+  1. STE for values (identity inside [alpha, beta], zero outside),
+  2. an LSQ-style range gradient for the learnable beta,
+  3. *exactly zero* gradient for the gates (dir replaces it — Section 2.2).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.quantizer import gated_quantize_ste, quantize_ste
+from compile.kernels import ref
+
+
+def test_ste_value_gradient_inside_range():
+    x = jnp.asarray([-0.9, -0.3, 0.0, 0.4, 0.8], jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(quantize_ste(x, jnp.float32(1.0), 4, True)))(x)
+    np.testing.assert_array_equal(np.asarray(g), 1.0)
+
+
+def test_ste_value_gradient_clipped_is_zero():
+    x = jnp.asarray([-3.0, -1.5, 1.5, 3.0], jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(quantize_ste(x, jnp.float32(1.0), 4, True)))(x)
+    np.testing.assert_array_equal(np.asarray(g), 0.0)
+
+
+def test_range_gradient_sign_on_tails():
+    """d q / d beta = +1 above beta, -1 below -beta (signed)."""
+    beta = jnp.float32(1.0)
+    for xv, expect in [(2.0, 1.0), (-2.0, -1.0)]:
+        gb = jax.grad(
+            lambda b: jnp.sum(quantize_ste(jnp.asarray([xv], jnp.float32), b, 4, True)),
+        )(beta)
+        assert float(gb) == pytest.approx(expect)
+
+
+def test_range_gradient_unsigned_no_negative_tail():
+    beta = jnp.float32(1.0)
+    gb = jax.grad(
+        lambda b: jnp.sum(quantize_ste(jnp.asarray([-2.0], jnp.float32), b, 4, False)),
+    )(beta)
+    assert float(gb) == 0.0
+
+
+def test_range_gradient_interior_is_scale_error():
+    """Interior elements contribute (q - v)/beta."""
+    beta = jnp.float32(1.0)
+    x = jnp.asarray([0.37], jnp.float32)
+    q = float(ref.quantize(x, 2, 1.0, True)[0])
+    gb = jax.grad(lambda b: jnp.sum(quantize_ste(x, b, 2, True)))(beta)
+    assert float(gb) == pytest.approx(q - 0.37, abs=1e-6)
+
+
+def test_gate_gradient_is_exactly_zero():
+    """The paper's core premise: loss gradient w.r.t. gates is zero."""
+    x = jnp.asarray(np.random.default_rng(0).normal(0, 1, (64,)).astype(np.float32))
+    g = jnp.asarray(np.random.default_rng(1).uniform(0.5, 5.5, (64,)).astype(np.float32))
+
+    def loss(g):
+        return jnp.sum(gated_quantize_ste(x, g, jnp.float32(1.0), True) ** 2)
+
+    grad_g = jax.grad(loss)(g)
+    np.testing.assert_array_equal(np.asarray(grad_g), 0.0)
+
+
+def test_gated_ste_value_gradient_masks_clip():
+    x = jnp.asarray([-2.0, -0.5, 0.5, 2.0], jnp.float32)
+    g = jnp.full_like(x, 2.5)  # 8-bit
+
+    def s(x):
+        return jnp.sum(gated_quantize_ste(x, g, jnp.float32(1.0), True))
+
+    gx = np.asarray(jax.grad(s)(x))
+    np.testing.assert_array_equal(gx, [0.0, 1.0, 1.0, 0.0])
+
+
+def test_gated_primal_matches_ref():
+    x = jnp.asarray(np.random.default_rng(2).normal(0, 1, (513,)).astype(np.float32))
+    g = jnp.asarray(np.random.default_rng(3).uniform(-0.5, 5.5, (513,)).astype(np.float32))
+    p = gated_quantize_ste(x, g, jnp.float32(1.3), True)
+    r = ref.gated_quantize(x, g, 1.3, True)
+    np.testing.assert_allclose(np.asarray(p), np.asarray(r), atol=1e-6)
+
+
+def test_range_gradient_flows_through_gated():
+    """beta receives a finite, generally nonzero gradient through Eq. 3."""
+    x = jnp.asarray(np.random.default_rng(4).normal(0, 2, (256,)).astype(np.float32))
+    g = jnp.full_like(x, 1.5)  # 4-bit
+    gb = jax.grad(lambda b: jnp.sum(gated_quantize_ste(x, g, b, True)))(jnp.float32(1.0))
+    assert np.isfinite(float(gb))
+    assert abs(float(gb)) > 0.0

@@ -1,0 +1,143 @@
+//! Bayesian-Bits-like baseline (van Baalen et al. 2020), deterministic
+//! mean-field proxy + the paper's quoted numbers.
+//!
+//! True BB learns stochastic gates by variational inference with a prior
+//! that penalizes higher bit-widths; at convergence the gate posterior is
+//! driven by a *constant* regularization pressure whose strength μ the
+//! practitioner must re-tune until the compressed model lands on the wanted
+//! budget (the paper's §3 criticism: "a hyperparameter ... can be
+//! iteratively modified to meet finally the predefined cost constraint").
+//!
+//! The proxy keeps exactly that control structure and drops the sampling
+//! machinery (which this substrate cannot reproduce faithfully and whose
+//! variance is irrelevant to the comparison): gates feel a constant
+//! downward pressure `μ · |g|` (higher bit-widths pay more, mirroring the
+//! BB prior), with **no constraint feedback**. `tune_mu` then performs the
+//! outer bisection loop a BB practitioner runs by hand — several complete
+//! trainings — to hit a target budget. The contrast measured in experiment
+//! A2/T1 is: CGMQ = 1 training, BB-style = `iterations` trainings.
+//!
+//! Table 1 also quotes BB's published MNIST numbers (99.30 ± 0.03 @ 0.36%)
+//! directly, as the paper itself does.
+
+use anyhow::Result;
+
+use crate::coordinator::{GatePolicy, PolicyInputs, Trainer};
+use crate::cost::{model_bops, rbop_percent};
+use crate::tensor::Tensor;
+
+/// BB's published LeNet-5/MNIST row (van Baalen et al. 2020, Table;
+/// pruning active, which is why its RBOP undercuts the no-pruning floor).
+pub const BB_PAPER_ACC: f64 = 99.30;
+pub const BB_PAPER_ACC_STD: f64 = 0.03;
+pub const BB_PAPER_RBOP: f64 = 0.36;
+pub const BB_PAPER_RBOP_STD: f64 = 0.01;
+
+/// Constant prior-pressure policy (no constraint feedback).
+pub struct BbProxyPolicy {
+    pub mu: f32,
+}
+
+impl GatePolicy for BbProxyPolicy {
+    fn dirs(&self, t: &PolicyInputs) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let mu = self.mu;
+        let dirs_w = t.gates.gates_w.iter().map(|g| g.map(|v| mu * v.abs())).collect();
+        let dirs_a = t.gates.gates_a.iter().map(|g| g.map(|v| mu * v.abs())).collect();
+        Ok((dirs_w, dirs_a))
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BbProxyResult {
+    pub mu: f32,
+    pub test_acc: f64,
+    pub rbop_percent: f64,
+    pub satisfied: bool,
+    /// Number of complete trainings the tuning loop consumed.
+    pub trainings: usize,
+}
+
+/// One full proxy training at fixed μ (trainer must be pretrained+calibrated).
+pub fn run(trainer: &mut Trainer, mu: f32, epochs: usize) -> Result<BbProxyResult> {
+    let policy = BbProxyPolicy { mu };
+    for _ in 0..epochs {
+        trainer.qat_epoch_with(Some(&policy))?;
+    }
+    let bops = model_bops(
+        &trainer.arch,
+        &trainer.gates.materialize_all_w(&trainer.arch),
+        &trainer.gates.materialize_all_a(&trainer.arch),
+    )?;
+    Ok(BbProxyResult {
+        mu,
+        test_acc: trainer.evaluate()?,
+        rbop_percent: rbop_percent(&trainer.arch, bops),
+        satisfied: trainer.constraint.is_satisfied(&trainer.arch, bops),
+        trainings: 1,
+    })
+}
+
+/// The practitioner's outer loop: bisect μ over full trainings until the
+/// budget holds (or the iteration cap runs out). `make_trainer` must return
+/// a freshly pretrained+calibrated trainer each call.
+pub fn tune_mu(
+    mut make_trainer: impl FnMut() -> Result<Trainer>,
+    epochs: usize,
+    max_iters: usize,
+) -> Result<BbProxyResult> {
+    let (mut lo, mut hi) = (1e-4f32, 1.0f32);
+    let mut best: Option<BbProxyResult> = None;
+    let mut trainings = 0;
+    for _ in 0..max_iters {
+        let mu = (lo * hi).sqrt(); // geometric bisection
+        let mut t = make_trainer()?;
+        let mut r = run(&mut t, mu, epochs)?;
+        trainings += 1;
+        r.trainings = trainings;
+        if r.satisfied {
+            // budget holds — try weaker pressure for better accuracy
+            hi = mu;
+            if best.as_ref().map(|b| r.test_acc > b.test_acc).unwrap_or(true) {
+                best = Some(r);
+            }
+        } else {
+            lo = mu;
+        }
+    }
+    best.ok_or_else(|| {
+        anyhow::anyhow!("bb_proxy: no μ in [1e-4, 1] satisfied the budget in {max_iters} trainings")
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::direction::{DirConfig, DirKind, Sat};
+    use crate::gates::{GateSet, Granularity};
+    use crate::model::mlp;
+
+    #[test]
+    fn pressure_scales_with_gate_value() {
+        let arch = mlp();
+        let mut gates = GateSet::new(&arch, Granularity::Layer);
+        gates.gates_w[0] = Tensor::scalar(4.0);
+        gates.gates_w[1] = Tensor::scalar(1.0);
+        let params = arch.init_params(0);
+        let grads: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let act = vec![Tensor::zeros(&[128]), Tensor::zeros(&[64])];
+        let cfg = DirConfig::new(DirKind::Dir1);
+        let inputs = PolicyInputs {
+            arch: &arch,
+            sat: Sat::Unsatisfied,
+            grads: &grads,
+            params: &params,
+            act_grads: &act,
+            act_means: &act,
+            gates: &gates,
+            dir_cfg: &cfg,
+        };
+        let (dw, _) = BbProxyPolicy { mu: 0.5 }.dirs(&inputs).unwrap();
+        assert_eq!(dw[0].data()[0], 2.0); // 0.5 * 4.0 — 32-bit layer pays most
+        assert_eq!(dw[1].data()[0], 0.5);
+    }
+}

@@ -1,0 +1,70 @@
+//! Uniform fixed-bit-width QAT baseline.
+//!
+//! All weight and activation gates are pinned at one bit-width b; training
+//! proceeds exactly like CGMQ's phase 4 but without gate updates. This is
+//! the classical QAT recipe (Jacob et al. 2017 / Verhoef et al. 2019): the
+//! practitioner picks b by hand and has no budget knob other than trying
+//! different b values.
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+use crate::cost::rbop_percent;
+use crate::quant::gate_for_bits;
+use crate::tensor::Tensor;
+
+/// Result of one fixed-bit run.
+#[derive(Debug, Clone)]
+pub struct FixedQatResult {
+    pub bits: u32,
+    pub test_acc: f64,
+    pub rbop_percent: f64,
+}
+
+/// Pin every gate to `bits` and finetune for `epochs`.
+///
+/// Assumes the trainer is already pretrained + calibrated (phases 1-3).
+pub fn run(trainer: &mut Trainer, bits: u32, epochs: usize) -> Result<FixedQatResult> {
+    let g = gate_for_bits(bits);
+    for t in trainer.gates.gates_w.iter_mut().chain(trainer.gates.gates_a.iter_mut()) {
+        *t = Tensor::full(&t.shape().to_vec(), g);
+    }
+    for _ in 0..epochs {
+        trainer.qat_epoch(false)?;
+    }
+    let bops = crate::cost::model_bops(
+        &trainer.arch,
+        &trainer.gates.materialize_all_w(&trainer.arch),
+        &trainer.gates.materialize_all_a(&trainer.arch),
+    )?;
+    Ok(FixedQatResult {
+        bits,
+        test_acc: trainer.evaluate()?,
+        rbop_percent: rbop_percent(&trainer.arch, bops),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rbop_of_uniform_bits_is_square_ratio() {
+        // (b*b)/(32*32) in percent — pure math, no artifacts needed.
+        for bits in [2u32, 4, 8] {
+            let expect = 100.0 * (bits * bits) as f64 / 1024.0;
+            let arch = crate::model::lenet5();
+            let g = gate_for_bits(bits);
+            let gw: Vec<Tensor> =
+                arch.layers.iter().map(|l| Tensor::full(&l.w_shape, g)).collect();
+            let ga: Vec<Tensor> = arch
+                .layers
+                .iter()
+                .filter(|l| l.quant_act)
+                .map(|l| Tensor::full(&l.act_shape, g))
+                .collect();
+            let bops = crate::cost::model_bops(&arch, &gw, &ga).unwrap();
+            assert!((rbop_percent(&arch, bops) - expect).abs() < 1e-9);
+        }
+    }
+}

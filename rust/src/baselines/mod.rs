@@ -1,0 +1,79 @@
+//! Baseline quantization methods the paper compares against (or that its
+//! qualitative discussion references), re-implemented on the same substrate
+//! so every comparison runs on identical data/model/training code:
+//!
+//! * `fixed_qat`  — uniform b-bit quantization-aware training (Verhoef et
+//!   al. 2019 style, single bit-width, no search);
+//! * `penalty`    — DQ-style penalty method (Uhlich et al. 2020): the cost
+//!   constraint enters as a soft regularizer whose weight λ must be tuned —
+//!   *no satisfaction guarantee* (the paper's §3 criticism, experiment A2);
+//! * `bb_proxy`   — a deterministic Bayesian-Bits-like proxy (van Baalen et
+//!   al. 2020): a constant prior pressure toward lower bit-widths whose
+//!   strength must be iteratively re-tuned to land on a target budget;
+//! * `myqasr`     — the myQASR heuristic (Fish et al. 2023): rank layers by
+//!   activation statistics, lower the most quantization-tolerant layer one
+//!   step at a time until the budget holds, then finetune at fixed bits.
+
+pub mod bb_proxy;
+pub mod fixed_qat;
+pub mod myqasr;
+pub mod penalty;
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Deployment report for a trained snapshot: per-layer bit histograms,
+/// weight memory, RBOP — what an edge integrator needs to provision the
+/// device the bound was derived from.
+pub fn export_report(cfg: &crate::config::Config, ckpt: &Path) -> Result<Json> {
+    let arch = crate::model::arch_by_name(&cfg.arch)?;
+    let c = crate::checkpoint::Checkpoint::load(ckpt)?;
+    let gran = match c.meta.get("granularity").map(|s| s.as_str()) {
+        Some("layer") => crate::gates::Granularity::Layer,
+        _ => crate::gates::Granularity::Individual,
+    };
+    let mut gates = crate::gates::GateSet::new(&arch, gran);
+    gates.gates_w = c.get_all("gates_w")?;
+    gates.gates_a = c.get_all("gates_a")?;
+
+    let gw = gates.materialize_all_w(&arch);
+    let ga = gates.materialize_all_a(&arch);
+    let bops = crate::cost::model_bops(&arch, &gw, &ga)?;
+    let mut layers = Vec::new();
+    for (li, layer) in arch.layers.iter().enumerate() {
+        let bits = crate::quant::bitwidths(&gw[li]);
+        let mut hist = std::collections::BTreeMap::new();
+        for b in bits {
+            *hist.entry(b).or_insert(0u64) += 1;
+        }
+        let mem_bits: u64 = hist.iter().map(|(&b, &c)| b as u64 * c).sum();
+        layers.push(Json::obj(vec![
+            ("name", Json::str(layer.name)),
+            (
+                "weight_bit_histogram",
+                Json::Obj(
+                    hist.iter().map(|(b, c)| (b.to_string(), Json::num(*c as f64))).collect(),
+                ),
+            ),
+            ("weight_memory_bytes", Json::num(mem_bits as f64 / 8.0)),
+        ]));
+    }
+    Ok(Json::obj(vec![
+        ("arch", Json::str(arch.name)),
+        ("granularity", Json::str(gran.label())),
+        ("rbop_percent", Json::num(crate::cost::rbop_percent(&arch, bops))),
+        (
+            "total_weight_memory_bytes",
+            Json::num(crate::cost::weight_memory_bits(&gw) as f64 / 8.0),
+        ),
+        (
+            "fp32_weight_memory_bytes",
+            Json::num(arch.layers.iter().map(|l| l.w_len() as f64 * 4.0).sum()),
+        ),
+        ("mean_weight_bits", Json::num(gates.mean_weight_bits(&arch))),
+        ("layers", Json::Arr(layers)),
+    ]))
+}

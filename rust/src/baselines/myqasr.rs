@@ -1,0 +1,155 @@
+//! myQASR-style heuristic baseline (Fish et al. 2023).
+//!
+//! Label-free mixed-precision search: using a small calibration set, rank
+//! layers by the magnitude of their activation statistics (myQASR uses the
+//! median of activations; on this substrate we use the batch-mean absolute
+//! activation the qat_step artifact already reports — same monotone role:
+//! smaller statistic ⇒ more quantization-tolerant). Then repeatedly lower
+//! by one power-of-2 step the bit-width of the *most tolerant layer among
+//! those at the current maximum bit-width*, until the budget holds.
+//! Finally the bit-widths are frozen and the network finetunes.
+//!
+//! Properties mirrored from the paper's discussion: layer granularity only,
+//! at most two distinct bit-widths in flight during the descent, no
+//! training signal in the search itself.
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::Trainer;
+use crate::cost::{model_bops, rbop_percent};
+use crate::gates::Granularity;
+use crate::quant::{gate_for_bits, transform_t};
+use crate::tensor::Tensor;
+use crate::BIT_LEVELS;
+
+#[derive(Debug, Clone)]
+pub struct MyQasrResult {
+    pub test_acc: f64,
+    pub rbop_percent: f64,
+    pub satisfied: bool,
+    /// (layer name, weight bits) after the descent.
+    pub assignment: Vec<(String, u32)>,
+}
+
+fn next_lower(bits: u32) -> Option<u32> {
+    let i = BIT_LEVELS.iter().position(|&b| b == bits)?;
+    if i == 0 {
+        None
+    } else {
+        Some(BIT_LEVELS[i - 1])
+    }
+}
+
+/// Per-layer activation statistic from one calibration epoch (mean |act|).
+fn activation_stats(trainer: &mut Trainer) -> Result<Vec<f64>> {
+    // One no-update epoch purely to pull the act_mean outputs: we reuse the
+    // calibrate artifact instead (cheaper: float forward, act maxes) — the
+    // ranking only needs a monotone per-layer magnitude.
+    let name = format!("{}_calibrate", trainer.arch.name);
+    let batch = crate::data::Batcher::sequential(&trainer.train_data, trainer.arch.train_batch)
+        .into_iter()
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("empty dataset"))?;
+    let mut x_shape = vec![trainer.arch.train_batch];
+    x_shape.extend_from_slice(&trainer.arch.input_shape);
+    let x = Tensor::new(x_shape, batch.images.clone())?;
+    let mut args: Vec<crate::runtime::Arg> =
+        trainer.params.iter().map(crate::runtime::Arg::F32).collect();
+    args.push(crate::runtime::Arg::F32(&x));
+    let out = trainer.artifacts.get(&name)?.run(&args)?;
+    Ok(out[1].data().iter().map(|&v| v as f64).collect())
+}
+
+/// Run the heuristic: descend bit-widths until the budget holds, then
+/// finetune for `epochs`. Trainer must be pretrained + calibrated and use
+/// layer granularity.
+pub fn run(trainer: &mut Trainer, epochs: usize) -> Result<MyQasrResult> {
+    if trainer.gates.granularity != Granularity::Layer {
+        bail!("myqasr baseline requires layer granularity");
+    }
+    let stats = activation_stats(trainer)?;
+    let n_act = stats.len(); // quantized-activation layers
+
+    // Joint per-layer bit-width (weights + activations move together, as in
+    // myQASR's per-layer setting). Output layer (no quantized activation)
+    // keeps its weight bits at the running level of the *preceding* rank.
+    let mut bits: Vec<u32> = vec![32; n_act];
+    loop {
+        let assigned: Vec<(usize, u32)> = bits.iter().cloned().enumerate().collect();
+        apply_assignment(trainer, &assigned)?;
+        let bops = model_bops(
+            &trainer.arch,
+            &trainer.gates.materialize_all_w(&trainer.arch),
+            &trainer.gates.materialize_all_a(&trainer.arch),
+        )?;
+        if trainer.constraint.is_satisfied(&trainer.arch, bops) {
+            break;
+        }
+        // candidate: among layers at the current max bit-width, the one
+        // with the smallest activation statistic.
+        let max_bits = *bits.iter().max().unwrap();
+        let candidate = (0..n_act)
+            .filter(|&i| bits[i] == max_bits)
+            .min_by(|&a, &b| stats[a].partial_cmp(&stats[b]).unwrap())
+            .unwrap();
+        match next_lower(bits[candidate]) {
+            Some(b) => bits[candidate] = b,
+            None => bail!("myqasr: budget unreachable even at all-2-bit"),
+        }
+    }
+
+    for _ in 0..epochs {
+        trainer.qat_epoch(false)?;
+    }
+    let bops = model_bops(
+        &trainer.arch,
+        &trainer.gates.materialize_all_w(&trainer.arch),
+        &trainer.gates.materialize_all_a(&trainer.arch),
+    )?;
+    let assignment = trainer
+        .arch
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| (l.name.to_string(), transform_t(trainer.gates.gates_w[li].data()[0])))
+        .collect();
+    Ok(MyQasrResult {
+        test_acc: trainer.evaluate()?,
+        rbop_percent: rbop_percent(&trainer.arch, bops),
+        satisfied: trainer.constraint.is_satisfied(&trainer.arch, bops),
+        assignment,
+    })
+}
+
+/// Write a per-quant-act-layer bit assignment into the gate set (weights of
+/// the final, non-quant-act layer follow the last assigned level).
+fn apply_assignment(trainer: &mut Trainer, bits: &[(usize, u32)]) -> Result<()> {
+    let mut last = 32;
+    let mut ai = 0;
+    for (li, layer) in trainer.arch.layers.iter().enumerate() {
+        if layer.quant_act {
+            let (_, b) = bits[ai];
+            trainer.gates.gates_w[li] = Tensor::scalar(gate_for_bits(b));
+            trainer.gates.gates_a[ai] = Tensor::scalar(gate_for_bits(b));
+            last = b;
+            ai += 1;
+        } else {
+            trainer.gates.gates_w[li] = Tensor::scalar(gate_for_bits(last));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn next_lower_walks_the_ladder() {
+        assert_eq!(next_lower(32), Some(16));
+        assert_eq!(next_lower(16), Some(8));
+        assert_eq!(next_lower(8), Some(4));
+        assert_eq!(next_lower(4), Some(2));
+        assert_eq!(next_lower(2), None);
+    }
+}

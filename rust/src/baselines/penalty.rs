@@ -1,0 +1,117 @@
+//! DQ-style penalty-method baseline (Uhlich et al. 2020; paper §3, A2).
+//!
+//! The cost constraint is moved into the objective as a soft penalty
+//! λ · max(0, cost - bound). Gates have no true gradient, so — exactly like
+//! the surrogate DQ uses for its bit-width parametrization — the penalty's
+//! "gradient" w.r.t. each gate is its (constant, positive) cost
+//! sensitivity whenever the model is over budget, and zero otherwise:
+//!
+//! ```text
+//! dir_penalty(g) = λ           if cost > bound   (push bit-widths down)
+//!                = 0           otherwise         (no recovery force)
+//! ```
+//!
+//! The crucial contrast with CGMQ: the *per-step* pressure is λ, a
+//! hyperparameter. Too small and the budget is never reached within the
+//! training horizon (constraint violated at the end — DQ's documented
+//! failure mode); too large and every gate is crushed to 2 bits long before
+//! the weights can adapt, wasting accuracy. CGMQ's Sat/Unsat dir needs no
+//! such tuning. `sweep` exposes exactly this trade-off for experiment A2.
+
+use anyhow::Result;
+
+use crate::coordinator::{GatePolicy, PolicyInputs, Trainer};
+use crate::cost::{model_bops, rbop_percent};
+use crate::tensor::Tensor;
+
+/// The penalty gate policy.
+pub struct PenaltyPolicy {
+    pub lambda: f32,
+    /// Over-budget flag, refreshed at epoch ends by the driver.
+    pub over_budget: std::cell::Cell<bool>,
+}
+
+impl GatePolicy for PenaltyPolicy {
+    fn dirs(&self, t: &PolicyInputs) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let push = if self.over_budget.get() { self.lambda } else { 0.0 };
+        let dirs_w =
+            t.gates.gates_w.iter().map(|g| Tensor::full(&g.shape().to_vec(), push)).collect();
+        let dirs_a =
+            t.gates.gates_a.iter().map(|g| Tensor::full(&g.shape().to_vec(), push)).collect();
+        Ok((dirs_w, dirs_a))
+    }
+}
+
+/// One penalty run at a fixed λ.
+#[derive(Debug, Clone)]
+pub struct PenaltyResult {
+    pub lambda: f32,
+    pub test_acc: f64,
+    pub rbop_percent: f64,
+    pub satisfied: bool,
+}
+
+/// Train with the penalty method for `epochs` at strength `lambda`.
+///
+/// Assumes the trainer is pretrained + calibrated. Unlike CGMQ there is no
+/// best-Sat snapshotting: the penalty method has no notion of a guaranteed
+/// feasible iterate, so the *final* iterate is what you get (that is the
+/// point of the comparison).
+pub fn run(trainer: &mut Trainer, lambda: f32, epochs: usize) -> Result<PenaltyResult> {
+    let policy = PenaltyPolicy { lambda, over_budget: std::cell::Cell::new(true) };
+    for _ in 0..epochs {
+        trainer.qat_epoch_with(Some(&policy))?;
+        let bops = model_bops(
+            &trainer.arch,
+            &trainer.gates.materialize_all_w(&trainer.arch),
+            &trainer.gates.materialize_all_a(&trainer.arch),
+        )?;
+        policy.over_budget.set(!trainer.constraint.is_satisfied(&trainer.arch, bops));
+    }
+    let bops = model_bops(
+        &trainer.arch,
+        &trainer.gates.materialize_all_w(&trainer.arch),
+        &trainer.gates.materialize_all_a(&trainer.arch),
+    )?;
+    let rbop = rbop_percent(&trainer.arch, bops);
+    Ok(PenaltyResult {
+        lambda,
+        test_acc: trainer.evaluate()?,
+        rbop_percent: rbop,
+        satisfied: trainer.constraint.is_satisfied(&trainer.arch, bops),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::direction::{DirConfig, DirKind, Sat};
+    use crate::gates::{GateSet, Granularity};
+    use crate::model::mlp;
+
+    #[test]
+    fn policy_pushes_down_only_when_over_budget() {
+        let arch = mlp();
+        let gates = GateSet::new(&arch, Granularity::Layer);
+        let params = arch.init_params(0);
+        let grads: Vec<Tensor> = params.iter().map(|p| Tensor::zeros(p.shape())).collect();
+        let act: Vec<Tensor> = vec![Tensor::zeros(&[128]), Tensor::zeros(&[64])];
+        let cfg = DirConfig::new(DirKind::Dir1);
+        let inputs = PolicyInputs {
+            arch: &arch,
+            sat: Sat::Unsatisfied,
+            grads: &grads,
+            params: &params,
+            act_grads: &act,
+            act_means: &act,
+            gates: &gates,
+            dir_cfg: &cfg,
+        };
+        let p = PenaltyPolicy { lambda: 0.3, over_budget: std::cell::Cell::new(true) };
+        let (dw, da) = p.dirs(&inputs).unwrap();
+        assert!(dw.iter().chain(da.iter()).all(|t| t.data().iter().all(|&v| v == 0.3)));
+        p.over_budget.set(false);
+        let (dw, _) = p.dirs(&inputs).unwrap();
+        assert!(dw.iter().all(|t| t.data().iter().all(|&v| v == 0.0)));
+    }
+}

@@ -1,0 +1,263 @@
+//! Benchmark harness: regenerates every table of the paper's evaluation
+//! (Tables 1-3), the constraint-satisfaction trace (G1), the granularity
+//! ablation (A1) and the penalty-tuning comparison (A2), printing rows in
+//! the paper's format and writing machine-readable JSON next to them.
+//!
+//! The float pretraining (phases 1-3 input state) is shared across all rows
+//! of a table through a cached checkpoint — exactly how the paper runs it
+//! ("all different choices of CGMQ start with the same pre-trained model").
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::baselines::{bb_proxy, penalty};
+use crate::config::Config;
+use crate::coordinator::{RunResult, Trainer};
+use crate::direction::DirKind;
+use crate::gates::Granularity;
+use crate::util::json::Json;
+
+pub const PAPER_BOUNDS: [f64; 5] = [0.40, 0.90, 1.40, 2.00, 5.00];
+pub const DIRS: [DirKind; 3] = [DirKind::Dir1, DirKind::Dir2, DirKind::Dir3];
+
+/// Ensure a float-pretrained checkpoint exists for this config; returns its
+/// path. All table rows resume from it.
+pub fn ensure_pretrained(cfg: &Config) -> Result<PathBuf> {
+    let path = Path::new(&cfg.out_dir)
+        .join(format!("pretrained-{}-s{}-n{}.ckpt", cfg.arch, cfg.seed, cfg.train_size));
+    if path.exists() {
+        return Ok(path);
+    }
+    eprintln!(
+        "[bench] pretraining {} for {} epochs (cached at {}) ...",
+        cfg.arch,
+        cfg.pretrain_epochs,
+        path.display()
+    );
+    let mut t = Trainer::new(cfg.clone())?;
+    t.pretrain(cfg.pretrain_epochs)?;
+    t.save_params(&path)?;
+    Ok(path)
+}
+
+/// Run one CGMQ row from the shared pretrained checkpoint.
+pub fn run_row(base: &Config, dir: DirKind, gran: Granularity, bound: f64) -> Result<RunResult> {
+    let mut cfg = base.clone();
+    cfg.direction = dir;
+    cfg.granularity = gran;
+    cfg.bound_rbop_percent = bound;
+    cfg.lr_gates = Config::paper_gate_lr(dir) * base.gate_lr_scale;
+    cfg.validate()?;
+    let ckpt = ensure_pretrained(base)?;
+    let mut t = Trainer::new(cfg.clone())?;
+    t.load_params(&ckpt)?;
+    let float_acc = t.evaluate_float()?;
+    t.calibrate()?;
+    t.learn_ranges(cfg.range_epochs)?;
+    t.cgmq(cfg.cgmq_epochs)?;
+    // The paper's guarantee is "satisfied after sufficiently many
+    // iterations" (§3); dir2/dir3's descent speed scales with 1/(lr_g *
+    // steps), so short CI schedules may need extra epochs at tight bounds.
+    // Extend in chunks (capped at 6x) until a satisfying model exists.
+    let mut extra = 0;
+    while t.final_model().is_err() && extra < 8 * cfg.cgmq_epochs {
+        t.cgmq(cfg.cgmq_epochs.max(1))?;
+        extra += cfg.cgmq_epochs.max(1);
+    }
+    if extra > 0 {
+        eprintln!("[bench]   (extended {} by {extra} epochs to reach the bound)", cfg.run_id());
+    }
+    // If even the extended horizon did not reach the bound (a slow dir on a
+    // CI schedule), report the row honestly as unsatisfied instead of
+    // aborting the table; the paper-scale schedule always converges
+    // (property-tested guarantee in tests/trainer_invariants.rs).
+    let r = match t.final_model() {
+        Ok(_) => t.result_with_float_acc(float_acc)?,
+        Err(_) => {
+            let last = t.log.last().expect("at least one epoch ran").clone();
+            RunResult {
+                run_id: cfg.run_id(),
+                float_acc,
+                quant_acc: last.test_acc,
+                rbop_percent: last.rbop_percent,
+                bound_rbop_percent: cfg.bound_rbop_percent,
+                satisfied: false,
+                mean_weight_bits: last.mean_weight_bits,
+                rbop_trace: t.rbop_trace.clone(),
+            }
+        }
+    };
+    eprintln!(
+        "[bench] {}: acc {:.2}% rbop {:.3}% (bound {:.2}%) sat={}",
+        r.run_id,
+        100.0 * r.quant_acc,
+        r.rbop_percent,
+        r.bound_rbop_percent,
+        r.satisfied
+    );
+    Ok(r)
+}
+
+fn write_json(path: &Path, v: &Json) -> Result<()> {
+    if let Some(d) = path.parent() {
+        std::fs::create_dir_all(d)?;
+    }
+    std::fs::write(path, v.to_string()).with_context(|| format!("writing {}", path.display()))
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 — method comparison at bound 0.40%
+// ---------------------------------------------------------------------------
+
+pub fn table1(base: &Config) -> Result<String> {
+    let ckpt = ensure_pretrained(base)?;
+    // FP32 row
+    let mut t = Trainer::new(base.clone())?;
+    t.load_params(&ckpt)?;
+    let fp32_acc = t.evaluate_float()?;
+    drop(t);
+
+    let mut rows: Vec<Json> = Vec::new();
+    let mut out = String::new();
+    out.push_str(&format!("Table 1: Results on {} ({}).\n", base.arch, data_label(base)));
+    out.push_str(
+        "| Method | Hyperpar.       | Acc (%) | Rel. GBOPs (%) | Bound rel. GBOPs (%) |\n",
+    );
+    out.push_str(
+        "|--------|-----------------|---------|----------------|----------------------|\n",
+    );
+    out.push_str(&format!(
+        "| FP32   | -               | {:6.2}  | 100            | 100                  |\n",
+        100.0 * fp32_acc
+    ));
+    out.push_str(&format!(
+        "| BB*    | mu = 0.01       | {:.2} ± {:.2} | {:.2} ± {:.2} | -          |\n",
+        bb_proxy::BB_PAPER_ACC,
+        bb_proxy::BB_PAPER_ACC_STD,
+        bb_proxy::BB_PAPER_RBOP,
+        bb_proxy::BB_PAPER_RBOP_STD,
+    ));
+    rows.push(Json::obj(vec![
+        ("method", Json::str("fp32")),
+        ("acc", Json::num(100.0 * fp32_acc)),
+        ("rbop", Json::num(100.0)),
+    ]));
+
+    let bound = 0.40;
+    for gran in [Granularity::Layer, Granularity::Individual] {
+        for dir in DIRS {
+            let r = run_row(base, dir, gran, bound)?;
+            out.push_str(&format!(
+                "| CGMQ   | {}, {:<6} | {:6.2}  | {:14.2} | {:20.2} |\n",
+                dir.label(),
+                gran.label(),
+                100.0 * r.quant_acc,
+                r.rbop_percent,
+                bound
+            ));
+            rows.push(result_json("cgmq", &r));
+        }
+    }
+    out.push_str("(* BB row quotes van Baalen et al. 2020, pruning active.)\n");
+    write_json(&Path::new(&base.out_dir).join("table1.json"), &Json::Arr(rows))?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Tables 2 & 3 — bound sweeps (layer / individual granularity)
+// ---------------------------------------------------------------------------
+
+pub fn table_sweep(base: &Config, gran: Granularity) -> Result<String> {
+    let table_no = match gran {
+        Granularity::Layer => 2,
+        Granularity::Individual => 3,
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Table {}: Acc (%) and RGBOP (%) vs bound (BGBOP), {} gates, {} ({}).\n",
+        table_no,
+        gran.label(),
+        base.arch,
+        data_label(base)
+    ));
+    out.push_str("| BGBOP (%) | dir1 Acc | dir1 RGBOP | dir2 Acc | dir2 RGBOP | dir3 Acc | dir3 RGBOP |\n");
+    out.push_str("|-----------|----------|------------|----------|------------|----------|------------|\n");
+    for bound in PAPER_BOUNDS {
+        let mut cells = Vec::new();
+        for dir in DIRS {
+            let r = run_row(base, dir, gran, bound)?;
+            cells.push(format!("{:8.2} | {:10.2}", 100.0 * r.quant_acc, r.rbop_percent));
+            rows.push(result_json("cgmq", &r));
+        }
+        out.push_str(&format!("| {:9.2} | {} |\n", bound, cells.join(" | ")));
+    }
+    write_json(&Path::new(&base.out_dir).join(format!("table{table_no}.json")), &Json::Arr(rows))?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// A2 — penalty method needs tuning, CGMQ doesn't
+// ---------------------------------------------------------------------------
+
+pub fn penalty_comparison(base: &Config, lambdas: &[f32]) -> Result<String> {
+    let ckpt = ensure_pretrained(base)?;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "A2: penalty method (DQ-style) vs CGMQ at bound {:.2}% ({}, {} epochs).\n",
+        base.bound_rbop_percent, base.arch, base.cgmq_epochs
+    ));
+    out.push_str("| method        | lambda | Acc (%) | RGBOP (%) | satisfied |\n");
+    out.push_str("|---------------|--------|---------|-----------|-----------|\n");
+    let mut rows = Vec::new();
+    for &lambda in lambdas {
+        let mut t = Trainer::new(base.clone())?;
+        t.load_params(&ckpt)?;
+        t.calibrate()?;
+        t.learn_ranges(base.range_epochs)?;
+        let r = penalty::run(&mut t, lambda, base.cgmq_epochs)?;
+        out.push_str(&format!(
+            "| penalty       | {:6} | {:7.2} | {:9.2} | {:9} |\n",
+            lambda,
+            100.0 * r.test_acc,
+            r.rbop_percent,
+            r.satisfied
+        ));
+        rows.push(Json::obj(vec![
+            ("method", Json::str("penalty")),
+            ("lambda", Json::num(lambda as f64)),
+            ("acc", Json::num(100.0 * r.test_acc)),
+            ("rbop", Json::num(r.rbop_percent)),
+            ("satisfied", Json::Bool(r.satisfied)),
+        ]));
+    }
+    // CGMQ reference row — no hyperparameter, guaranteed satisfaction.
+    let r = run_row(base, base.direction, base.granularity, base.bound_rbop_percent)?;
+    out.push_str(&format!(
+        "| CGMQ ({})   | {:6} | {:7.2} | {:9.2} | {:9} |\n",
+        base.direction.label(),
+        "-",
+        100.0 * r.quant_acc,
+        r.rbop_percent,
+        r.satisfied
+    ));
+    rows.push(result_json("cgmq", &r));
+    write_json(&Path::new(&base.out_dir).join("a2_penalty.json"), &Json::Arr(rows))?;
+    Ok(out)
+}
+
+fn result_json(method: &str, r: &RunResult) -> Json {
+    let mut j = r.to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("method".into(), Json::str(method));
+    }
+    j
+}
+
+fn data_label(cfg: &Config) -> &'static str {
+    match cfg.data {
+        crate::config::DataSource::Synth => "SynthMNIST substitution — see DESIGN.md §2",
+        crate::config::DataSource::Mnist(_) => "MNIST",
+    }
+}

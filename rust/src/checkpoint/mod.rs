@@ -1,0 +1,224 @@
+//! Checkpointing: binary tensor blobs + JSON metadata.
+//!
+//! Format (little-endian, version-tagged):
+//!
+//! ```text
+//! magic  "CGMQCKPT"            8 bytes
+//! version u32                  currently 1
+//! n_tensors u32
+//! per tensor:
+//!   name_len u32, name utf-8
+//!   rank u32, dims u64 x rank
+//!   data f32 x prod(dims)
+//! ```
+//!
+//! A sidecar `<file>.meta.json` records the arch, phase and config id so a
+//! checkpoint can't silently be loaded into the wrong model.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+const MAGIC: &[u8; 8] = b"CGMQCKPT";
+const VERSION: u32 = 1;
+
+/// Named tensor collection + metadata.
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    pub tensors: BTreeMap<String, Tensor>,
+    pub meta: BTreeMap<String, String>,
+}
+
+impl Checkpoint {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    pub fn insert_all(&mut self, prefix: &str, ts: &[Tensor]) {
+        for (i, t) in ts.iter().enumerate() {
+            self.insert(format!("{prefix}.{i}"), t.clone());
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors.get(name).with_context(|| format!("checkpoint missing tensor '{name}'"))
+    }
+
+    /// Collect `prefix.0, prefix.1, ...` back into a vector.
+    pub fn get_all(&self, prefix: &str) -> Result<Vec<Tensor>> {
+        let mut out = Vec::new();
+        loop {
+            match self.tensors.get(&format!("{prefix}.{}", out.len())) {
+                Some(t) => out.push(t.clone()),
+                None => break,
+            }
+        }
+        if out.is_empty() {
+            bail!("checkpoint has no tensors under prefix '{prefix}'");
+        }
+        Ok(out)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+            for &d in t.shape() {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            for &v in t.data() {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        f.flush()?;
+        // metadata sidecar
+        let meta = Json::Obj(
+            self.meta.iter().map(|(k, v)| (k.clone(), Json::str(v.clone()))).collect(),
+        );
+        std::fs::write(meta_path(path), meta.to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{}: not a CGMQ checkpoint", path.display());
+        }
+        let version = read_u32(&mut f)?;
+        if version != VERSION {
+            bail!("{}: unsupported checkpoint version {version}", path.display());
+        }
+        let n = read_u32(&mut f)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut f)? as usize;
+            if name_len > 4096 {
+                bail!("corrupt checkpoint: name length {name_len}");
+            }
+            let mut name_bytes = vec![0u8; name_len];
+            f.read_exact(&mut name_bytes)?;
+            let name = String::from_utf8(name_bytes).context("non-utf8 tensor name")?;
+            let rank = read_u32(&mut f)? as usize;
+            if rank > 16 {
+                bail!("corrupt checkpoint: rank {rank}");
+            }
+            let mut dims = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                let mut b = [0u8; 8];
+                f.read_exact(&mut b)?;
+                dims.push(u64::from_le_bytes(b) as usize);
+            }
+            let count: usize = dims.iter().product();
+            let mut data = vec![0f32; count];
+            let mut buf = vec![0u8; count * 4];
+            f.read_exact(&mut buf).context("truncated tensor payload")?;
+            for (i, chunk) in buf.chunks_exact(4).enumerate() {
+                data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+            tensors.insert(name, Tensor::new(dims, data)?);
+        }
+        // optional metadata sidecar
+        let mut meta = BTreeMap::new();
+        let mp = meta_path(path);
+        if mp.exists() {
+            if let Ok(j) = crate::util::json::parse_file(&mp) {
+                if let Ok(obj) = j.as_obj() {
+                    for (k, v) in obj {
+                        if let Ok(s) = v.as_str() {
+                            meta.insert(k.clone(), s.to_string());
+                        }
+                    }
+                }
+            }
+        }
+        Ok(Self { tensors, meta })
+    }
+}
+
+fn meta_path(path: &Path) -> std::path::PathBuf {
+    let mut p = path.as_os_str().to_owned();
+    p.push(".meta.json");
+    std::path::PathBuf::from(p)
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("cgmq_ckpt_tests");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut c = Checkpoint::new();
+        c.insert("w", Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+        c.insert("scalar", Tensor::scalar(7.5));
+        c.meta.insert("arch".into(), "mlp".into());
+        let p = tmp("roundtrip.ckpt");
+        c.save(&p).unwrap();
+        let l = Checkpoint::load(&p).unwrap();
+        assert_eq!(l.tensors.len(), 2);
+        assert_eq!(l.get("w").unwrap(), c.get("w").unwrap());
+        assert_eq!(l.get("scalar").unwrap().item().unwrap(), 7.5);
+        assert_eq!(l.meta.get("arch").unwrap(), "mlp");
+    }
+
+    #[test]
+    fn vector_prefix_roundtrip() {
+        let mut c = Checkpoint::new();
+        let ts = vec![Tensor::zeros(&[2]), Tensor::full(&[3], 1.0)];
+        c.insert_all("params", &ts);
+        let p = tmp("prefix.ckpt");
+        c.save(&p).unwrap();
+        let l = Checkpoint::load(&p).unwrap();
+        let back = l.get_all("params").unwrap();
+        assert_eq!(back, ts);
+        assert!(l.get_all("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmp("garbage.ckpt");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn missing_tensor_error_names_it() {
+        let c = Checkpoint::new();
+        let err = c.get("gates.w.0").unwrap_err().to_string();
+        assert!(err.contains("gates.w.0"));
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny CLI argument parser (the offline environment vendors no clap).
+//!
+//! Grammar: `cgmq <command> [--flag value]... [--switch]...`. Flags may be
+//! given as `--flag value` or `--flag=value`. Unknown flags are rejected by
+//! the command handlers via `finish()`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub command: String,
+    flags: BTreeMap<String, String>,
+    consumed: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Self> {
+        let mut it = argv.iter().peekable();
+        let command = it.next().cloned().unwrap_or_default();
+        let mut flags = BTreeMap::new();
+        while let Some(a) = it.next() {
+            let Some(name) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            if let Some((k, v)) = name.split_once('=') {
+                flags.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                flags.insert(name.to_string(), it.next().unwrap().clone());
+            } else {
+                flags.insert(name.to_string(), "true".to_string()); // boolean switch
+            }
+        }
+        Ok(Self { command, flags, consumed: Default::default() })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.consumed.borrow_mut().insert(name.to_string());
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{name}: bad number '{v}'"))?)),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => Ok(Some(v.parse().map_err(|_| anyhow::anyhow!("--{name}: bad integer '{v}'"))?)),
+        }
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Reject any flag no handler asked about (typo guard).
+    pub fn finish(&self) -> Result<()> {
+        let consumed = self.consumed.borrow();
+        for k in self.flags.keys() {
+            if !consumed.contains(k) {
+                bail!("unknown flag --{k} for command '{}'", self.command);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags_and_switches() {
+        let a = Args::parse(&argv(&["train", "--arch", "mlp", "--bound=0.9", "--quick"])).unwrap();
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("arch"), Some("mlp"));
+        assert_eq!(a.get_f64("bound").unwrap(), Some(0.9));
+        assert!(a.get_bool("quick"));
+        assert_eq!(a.get("missing"), None);
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn rejects_unconsumed() {
+        let a = Args::parse(&argv(&["train", "--tpyo", "1"])).unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn rejects_positional() {
+        assert!(Args::parse(&argv(&["train", "stray"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = Args::parse(&argv(&["x", "--bound", "abc"])).unwrap();
+        assert!(a.get_f64("bound").is_err());
+    }
+}

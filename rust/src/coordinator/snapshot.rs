@@ -1,0 +1,38 @@
+//! Model-state snapshots (the constraint-satisfying candidates the trainer
+//! keeps while the CGMQ loop explores).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::checkpoint::Checkpoint;
+use crate::gates::GateSet;
+use crate::tensor::Tensor;
+
+/// A full model state captured at an epoch end.
+#[derive(Debug, Clone)]
+pub struct Snapshot {
+    pub params: Vec<Tensor>,
+    pub betas_w: Tensor,
+    pub betas_a: Tensor,
+    pub gates: GateSet,
+    pub test_acc: f64,
+    pub rbop_percent: f64,
+}
+
+impl Snapshot {
+    /// Persist the snapshot (params + ranges + gates) as a checkpoint.
+    pub fn save(&self, path: &Path, arch_name: &str) -> Result<()> {
+        let mut c = Checkpoint::new();
+        c.insert_all("params", &self.params);
+        c.insert("betas_w", self.betas_w.clone());
+        c.insert("betas_a", self.betas_a.clone());
+        c.insert_all("gates_w", &self.gates.gates_w);
+        c.insert_all("gates_a", &self.gates.gates_a);
+        c.meta.insert("arch".into(), arch_name.to_string());
+        c.meta.insert("granularity".into(), self.gates.granularity.label().to_string());
+        c.meta.insert("test_acc".into(), format!("{:.6}", self.test_acc));
+        c.meta.insert("rbop_percent".into(), format!("{:.6}", self.rbop_percent));
+        c.save(path)
+    }
+}

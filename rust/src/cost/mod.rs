@@ -1,0 +1,249 @@
+//! BOP (Bit-Operations) cost accounting — paper Section 2.5.
+//!
+//! For a layer, the BOP count is the sum over output activations of
+//! (bit-width of the activation) x (sum of bit-widths of the weights that
+//! determine it):
+//!
+//!   dense (in, out):  BOP = sum_j b_a(j) * sum_i b_W(i, j)
+//!   conv  (OIHW):     BOP = sum_{c,h,w} b_a(c,h,w) * sum_{i in filter c} b_W(i)
+//!
+//! Conventions (DESIGN.md §7, anchored on the paper's quoted 0.392% floor):
+//! biases are excluded (the paper quantizes activations instead of biases),
+//! and the *output layer* is excluded from both the quantized count and the
+//! fp32 reference (its activation is kept float and "cannot be altered",
+//! Section 4.2). With those rules the all-2-bit floor is exactly
+//! (2*2)/(32*32) = 0.390625% for every architecture, matching the paper's
+//! 0.392% for LeNet-5 up to their rounding.
+
+use anyhow::{bail, Result};
+
+use crate::model::{ArchSpec, LayerKind, LayerSpec};
+use crate::quant::transform_t;
+use crate::tensor::Tensor;
+
+/// BOPs of one layer given per-weight and per-activation bit-width tensors.
+///
+/// `w_bits` is laid out like the weight tensor (row-major); `a_bits` like
+/// the activation feature dims. Lengths are checked against the spec.
+pub fn layer_bops(layer: &LayerSpec, w_bits: &[u32], a_bits: &[u32]) -> Result<u64> {
+    if w_bits.len() != layer.w_len() {
+        bail!("{}: w_bits len {} != {}", layer.name, w_bits.len(), layer.w_len());
+    }
+    if a_bits.len() != layer.n_units() {
+        bail!("{}: a_bits len {} != {}", layer.name, a_bits.len(), layer.n_units());
+    }
+    match layer.kind {
+        LayerKind::Dense => {
+            // w is (in, out) row-major: index i*out + j. Per-column sums.
+            let (n_in, n_out) = (layer.w_shape[0], layer.w_shape[1]);
+            let mut col_sums = vec![0u64; n_out];
+            for i in 0..n_in {
+                let row = &w_bits[i * n_out..(i + 1) * n_out];
+                for (j, &b) in row.iter().enumerate() {
+                    col_sums[j] += b as u64;
+                }
+            }
+            Ok(col_sums.iter().zip(a_bits.iter()).map(|(&ws, &ab)| ws * ab as u64).sum())
+        }
+        LayerKind::Conv => {
+            // OIHW: filter c = w_bits[c*f..(c+1)*f]; every spatial position
+            // (h, w) of channel c reuses the same filter.
+            let o = layer.w_shape[0];
+            let f = layer.fan_in();
+            let spatial = layer.act_shape[1] * layer.act_shape[2];
+            let mut total = 0u64;
+            for c in 0..o {
+                let wsum: u64 = w_bits[c * f..(c + 1) * f].iter().map(|&b| b as u64).sum();
+                let asum: u64 =
+                    a_bits[c * spatial..(c + 1) * spatial].iter().map(|&b| b as u64).sum();
+                total += wsum * asum;
+            }
+            Ok(total)
+        }
+    }
+}
+
+/// Total model BOPs from gate tensors (T applied here), output layer excluded.
+pub fn model_bops(arch: &ArchSpec, gates_w: &[Tensor], gates_a: &[Tensor]) -> Result<u64> {
+    if gates_w.len() != arch.layers.len() {
+        bail!("gates_w: {} tensors for {} layers", gates_w.len(), arch.layers.len());
+    }
+    if gates_a.len() != arch.n_quant_act() {
+        bail!("gates_a: {} tensors for {} act layers", gates_a.len(), arch.n_quant_act());
+    }
+    let mut total = 0u64;
+    let mut ai = 0;
+    for (li, layer) in arch.layers.iter().enumerate() {
+        if !layer.quant_act {
+            continue; // output layer: excluded from the BOP count
+        }
+        let w_bits: Vec<u32> = gates_w[li].data().iter().map(|&g| transform_t(g)).collect();
+        let a_bits: Vec<u32> = gates_a[ai].data().iter().map(|&g| transform_t(g)).collect();
+        total += layer_bops(layer, &w_bits, &a_bits)?;
+        ai += 1;
+    }
+    Ok(total)
+}
+
+/// fp32 reference BOPs (everything at 32 bit, same exclusions).
+pub fn fp32_bops(arch: &ArchSpec) -> u64 {
+    arch.layers.iter().filter(|l| l.quant_act).map(|l| l.macs() * 32 * 32).sum()
+}
+
+/// All-2-bit floor (the theoretical minimum without pruning).
+pub fn floor_bops(arch: &ArchSpec) -> u64 {
+    arch.layers.iter().filter(|l| l.quant_act).map(|l| l.macs() * 2 * 2).sum()
+}
+
+/// Relative BOPs in percent of the fp32 reference (the paper's RBOP).
+pub fn rbop_percent(arch: &ArchSpec, bops: u64) -> f64 {
+    100.0 * bops as f64 / fp32_bops(arch) as f64
+}
+
+/// Weight memory of the quantized model in bits (for reporting; all layers).
+pub fn weight_memory_bits(gates_w: &[Tensor]) -> u64 {
+    gates_w
+        .iter()
+        .flat_map(|g| g.data().iter())
+        .map(|&g| transform_t(g) as u64)
+        .sum()
+}
+
+/// The cost constraint: an upper bound expressed as RBOP percent
+/// (paper's BGBOP column). Checked only at the end of each epoch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CostConstraint {
+    /// Bound as a percentage of fp32 BOPs, e.g. 0.40.
+    pub bound_rbop_percent: f64,
+}
+
+impl CostConstraint {
+    pub fn new(bound_rbop_percent: f64) -> Self {
+        Self { bound_rbop_percent }
+    }
+
+    /// Absolute BOP bound for an architecture.
+    pub fn bound_bops(&self, arch: &ArchSpec) -> u64 {
+        (self.bound_rbop_percent / 100.0 * fp32_bops(arch) as f64).floor() as u64
+    }
+
+    pub fn is_satisfied(&self, arch: &ArchSpec, bops: u64) -> bool {
+        bops <= self.bound_bops(arch)
+    }
+
+    /// Whether a non-pruned model can satisfy this bound at all.
+    pub fn is_feasible(&self, arch: &ArchSpec) -> bool {
+        floor_bops(arch) <= self.bound_bops(arch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{lenet5, mlp};
+    use crate::quant::gate_for_bits;
+
+    fn uniform_gates(arch: &ArchSpec, bits: u32) -> (Vec<Tensor>, Vec<Tensor>) {
+        let g = gate_for_bits(bits);
+        let gw = arch.layers.iter().map(|l| Tensor::full(&l.w_shape, g)).collect();
+        let ga = arch
+            .layers
+            .iter()
+            .filter(|l| l.quant_act)
+            .map(|l| Tensor::full(&l.act_shape, g))
+            .collect();
+        (gw, ga)
+    }
+
+    #[test]
+    fn fp32_reference_is_macs_1024() {
+        let a = lenet5();
+        // counted layers: conv1, conv2, fc1 (fc2 excluded)
+        let macs = 288_000u64 + 1_600_000 + 400_000;
+        assert_eq!(fp32_bops(&a), macs * 1024);
+    }
+
+    #[test]
+    fn uniform_bits_equal_macs_product() {
+        let a = lenet5();
+        for bits in [2u32, 4, 8, 16, 32] {
+            let (gw, ga) = uniform_gates(&a, bits);
+            let bops = model_bops(&a, &gw, &ga).unwrap();
+            let macs = 288_000u64 + 1_600_000 + 400_000;
+            assert_eq!(bops, macs * (bits as u64) * (bits as u64), "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn floor_rbop_matches_paper_0392() {
+        // Paper Section 4.2: "the RBOP for LeNet-5 is 0.392%"; our model
+        // gives exactly (2*2)/(32*32) = 0.390625%.
+        for arch in [lenet5(), mlp()] {
+            let r = rbop_percent(&arch, floor_bops(&arch));
+            assert!((r - 0.390625).abs() < 1e-12, "{}: {r}", arch.name);
+        }
+    }
+
+    #[test]
+    fn mixed_precision_dense_by_hand() {
+        // 2x3 dense layer: w_bits = [[2,4,8],[2,2,32]], a_bits = [4,2,8]
+        let layer = LayerSpec {
+            name: "t",
+            kind: LayerKind::Dense,
+            w_shape: vec![2, 3],
+            b_shape: vec![3],
+            act_shape: vec![3],
+            pool: 0,
+            quant_act: true,
+        };
+        let w_bits = vec![2, 4, 8, 2, 2, 32];
+        let a_bits = vec![4, 2, 8];
+        // column sums: [4, 6, 40]; dot with a_bits: 16 + 12 + 320 = 348
+        assert_eq!(layer_bops(&layer, &w_bits, &a_bits).unwrap(), 348);
+    }
+
+    #[test]
+    fn mixed_precision_conv_by_hand() {
+        // 2 filters of fan-in 2, act 2x1x2 (c,h,w): per-channel wsum x asum.
+        let layer = LayerSpec {
+            name: "t",
+            kind: LayerKind::Conv,
+            w_shape: vec![2, 2, 1, 1],
+            b_shape: vec![2],
+            act_shape: vec![2, 1, 2],
+            pool: 0,
+            quant_act: true,
+        };
+        let w_bits = vec![2, 4, 8, 8]; // filter0 sum 6, filter1 sum 16
+        let a_bits = vec![2, 4, 32, 2]; // ch0 sum 6, ch1 sum 34
+        assert_eq!(layer_bops(&layer, &w_bits, &a_bits).unwrap(), 6 * 6 + 16 * 34);
+    }
+
+    #[test]
+    fn constraint_bound_and_feasibility() {
+        let a = lenet5();
+        let c = CostConstraint::new(0.40);
+        assert!(c.is_feasible(&a)); // floor 0.3906 <= 0.40
+        let (gw, ga) = uniform_gates(&a, 2);
+        assert!(c.is_satisfied(&a, model_bops(&a, &gw, &ga).unwrap()));
+        let (gw32, ga32) = uniform_gates(&a, 32);
+        assert!(!c.is_satisfied(&a, model_bops(&a, &gw32, &ga32).unwrap()));
+        assert!(!CostConstraint::new(0.38).is_feasible(&a)); // below floor
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let a = mlp();
+        let (mut gw, ga) = uniform_gates(&a, 8);
+        gw[0] = Tensor::zeros(&[3, 3]);
+        assert!(model_bops(&a, &gw, &ga).is_err());
+    }
+
+    #[test]
+    fn weight_memory_counts_all_layers() {
+        let a = mlp();
+        let (gw, _) = uniform_gates(&a, 8);
+        let n_w: u64 = a.layers.iter().map(|l| l.w_len() as u64).sum();
+        assert_eq!(weight_memory_bits(&gw), n_w * 8);
+    }
+}

@@ -1,0 +1,202 @@
+//! Dataset container + seeded shuffling batcher.
+//!
+//! The compiled artifacts have static batch shapes (train 128 / eval 256),
+//! so the batcher always emits full batches: the tail of an epoch is padded
+//! by wrapping around to the epoch's start (standard practice; the wrap
+//! samples are counted once for accuracy by `Batch::valid`).
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::SplitMix64;
+
+/// In-memory dataset: flattened images + labels.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    /// Elements per sample (e.g. 784).
+    pub sample_len: usize,
+}
+
+impl Dataset {
+    pub fn new(images: Vec<f32>, labels: Vec<i32>, sample_len: usize) -> Result<Self> {
+        if images.len() != labels.len() * sample_len {
+            bail!(
+                "images len {} != {} labels x {} sample_len",
+                images.len(),
+                labels.len(),
+                sample_len
+            );
+        }
+        Ok(Self { images, labels, sample_len })
+    }
+
+    /// SynthMNIST dataset of n samples (DESIGN.md §2 substitution).
+    pub fn synth(seed: u64, n: usize) -> Self {
+        let (images, labels) = super::synth::dataset(seed, n);
+        Self { images, labels, sample_len: super::synth::GRID * super::synth::GRID }
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Split off the last `n` samples as a held-out set.
+    pub fn split_tail(mut self, n: usize) -> Result<(Dataset, Dataset)> {
+        if n >= self.len() {
+            bail!("cannot split {} from {}", n, self.len());
+        }
+        let keep = self.len() - n;
+        let tail_images = self.images.split_off(keep * self.sample_len);
+        let tail_labels = self.labels.split_off(keep);
+        let tail = Dataset::new(tail_images, tail_labels, self.sample_len)?;
+        Ok((self, tail))
+    }
+}
+
+/// One fixed-size batch. `valid` <= batch size: number of non-wrapped
+/// samples (the rest are epoch-wrap padding, excluded from metrics).
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub valid: usize,
+}
+
+/// Seeded shuffling batcher producing fixed-size batches.
+#[derive(Debug)]
+pub struct Batcher {
+    order: Vec<usize>,
+    batch: usize,
+    rng: SplitMix64,
+}
+
+impl Batcher {
+    pub fn new(n: usize, batch: usize, seed: u64) -> Self {
+        Self { order: (0..n).collect(), batch, rng: SplitMix64::new(seed) }
+    }
+
+    /// Shuffle and yield every batch of one epoch.
+    pub fn epoch<'d>(&mut self, data: &'d Dataset) -> Vec<Batch> {
+        self.rng.shuffle(&mut self.order);
+        let n = data.len();
+        let nb = n.div_ceil(self.batch);
+        let mut out = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let start = b * self.batch;
+            let valid = self.batch.min(n - start);
+            let mut images = Vec::with_capacity(self.batch * data.sample_len);
+            let mut labels = Vec::with_capacity(self.batch);
+            for k in 0..self.batch {
+                // wrap into the already-shuffled order for the tail padding
+                let idx = self.order[(start + k) % n];
+                let s = idx * data.sample_len;
+                images.extend_from_slice(&data.images[s..s + data.sample_len]);
+                labels.push(data.labels[idx]);
+            }
+            out.push(Batch { images, labels, valid });
+        }
+        out
+    }
+
+    /// Sequential (unshuffled) batches — evaluation order.
+    pub fn sequential(data: &Dataset, batch: usize) -> Vec<Batch> {
+        let n = data.len();
+        let nb = n.div_ceil(batch);
+        let mut out = Vec::with_capacity(nb);
+        for b in 0..nb {
+            let start = b * batch;
+            let valid = batch.min(n - start);
+            let mut images = Vec::with_capacity(batch * data.sample_len);
+            let mut labels = Vec::with_capacity(batch);
+            for k in 0..batch {
+                let idx = (start + k) % n;
+                let s = idx * data.sample_len;
+                images.extend_from_slice(&data.images[s..s + data.sample_len]);
+                labels.push(data.labels[idx]);
+            }
+            out.push(Batch { images, labels, valid });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(n: usize) -> Dataset {
+        let images = (0..n * 4).map(|i| i as f32).collect();
+        let labels = (0..n as i32).collect();
+        Dataset::new(images, labels, 4).unwrap()
+    }
+
+    #[test]
+    fn batches_cover_dataset_once() {
+        let data = tiny(10);
+        let mut b = Batcher::new(10, 4, 1);
+        let batches = b.epoch(&data);
+        assert_eq!(batches.len(), 3);
+        let valid_total: usize = batches.iter().map(|b| b.valid).sum();
+        assert_eq!(valid_total, 10);
+        // every batch is full-size
+        assert!(batches.iter().all(|b| b.labels.len() == 4 && b.images.len() == 16));
+        // all 10 samples appear among the valid slots exactly once
+        let mut seen: Vec<i32> =
+            batches.iter().flat_map(|b| b.labels[..b.valid].to_vec()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn shuffling_changes_order_but_is_seeded() {
+        let data = tiny(32);
+        let mut b1 = Batcher::new(32, 8, 7);
+        let mut b2 = Batcher::new(32, 8, 7);
+        let e1 = b1.epoch(&data);
+        let e2 = b2.epoch(&data);
+        assert_eq!(e1[0].labels, e2[0].labels); // same seed, same order
+        let mut b3 = Batcher::new(32, 8, 8);
+        let e3 = b3.epoch(&data);
+        assert_ne!(e1[0].labels, e3[0].labels); // different seed
+        assert_ne!(e1[0].labels, (0..8).collect::<Vec<i32>>()); // actually shuffled
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let data = tiny(64);
+        let mut b = Batcher::new(64, 16, 3);
+        let e1 = b.epoch(&data);
+        let e2 = b.epoch(&data);
+        assert_ne!(e1[0].labels, e2[0].labels);
+    }
+
+    #[test]
+    fn sequential_is_ordered() {
+        let data = tiny(9);
+        let batches = Batcher::sequential(&data, 4);
+        assert_eq!(batches.len(), 3);
+        assert_eq!(batches[0].labels, vec![0, 1, 2, 3]);
+        assert_eq!(batches[2].valid, 1);
+        assert_eq!(batches[2].labels[0], 8);
+    }
+
+    #[test]
+    fn split_tail() {
+        let data = tiny(10);
+        let (train, test) = data.split_tail(3).unwrap();
+        assert_eq!(train.len(), 7);
+        assert_eq!(test.len(), 3);
+        assert_eq!(test.labels, vec![7, 8, 9]);
+        assert!(tiny(5).split_tail(5).is_err());
+    }
+
+    #[test]
+    fn dataset_shape_checked() {
+        assert!(Dataset::new(vec![0.0; 7], vec![0, 1], 4).is_err());
+    }
+}

@@ -1,0 +1,146 @@
+//! IDX (real MNIST) file loader.
+//!
+//! When the paper's actual dataset is available on disk (the four standard
+//! `train-images-idx3-ubyte` / `t10k-…` files, optionally gzipped is NOT
+//! supported — decompress first), this loader replaces SynthMNIST with the
+//! genuine article; the rest of the pipeline is unchanged. Format per
+//! Yann LeCun's spec: big-endian magic (0x801 labels / 0x803 images),
+//! dimension sizes, then raw u8 payload.
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Images normalised to [-1, 1] (mean 0.5 / std 0.5, paper §4.1), flattened
+/// row-major, plus labels.
+pub struct IdxDataset {
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub n: usize,
+    pub rows: usize,
+    pub cols: usize,
+}
+
+fn read_u32_be(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_be_bytes(b))
+}
+
+/// Load an images file (magic 0x00000803).
+pub fn load_images(path: &Path) -> Result<(Vec<u8>, usize, usize, usize)> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let magic = read_u32_be(&mut f)?;
+    if magic != 0x0000_0803 {
+        bail!("{}: bad image magic {magic:#x}", path.display());
+    }
+    let n = read_u32_be(&mut f)? as usize;
+    let rows = read_u32_be(&mut f)? as usize;
+    let cols = read_u32_be(&mut f)? as usize;
+    let mut data = vec![0u8; n * rows * cols];
+    f.read_exact(&mut data).context("truncated image payload")?;
+    Ok((data, n, rows, cols))
+}
+
+/// Load a labels file (magic 0x00000801).
+pub fn load_labels(path: &Path) -> Result<Vec<u8>> {
+    let mut f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let magic = read_u32_be(&mut f)?;
+    if magic != 0x0000_0801 {
+        bail!("{}: bad label magic {magic:#x}", path.display());
+    }
+    let n = read_u32_be(&mut f)? as usize;
+    let mut data = vec![0u8; n];
+    f.read_exact(&mut data).context("truncated label payload")?;
+    Ok(data)
+}
+
+/// Load an (images, labels) pair and normalise like the paper.
+pub fn load_pair(images_path: &Path, labels_path: &Path) -> Result<IdxDataset> {
+    let (raw, n, rows, cols) = load_images(images_path)?;
+    let labels_u8 = load_labels(labels_path)?;
+    if labels_u8.len() != n {
+        bail!("{} images but {} labels", n, labels_u8.len());
+    }
+    let images = raw.iter().map(|&p| ((p as f32 / 255.0) - 0.5) / 0.5).collect();
+    let labels = labels_u8.iter().map(|&l| l as i32).collect();
+    Ok(IdxDataset { images, labels, n, rows, cols })
+}
+
+/// Look for the standard MNIST file names under `dir`.
+pub fn mnist_available(dir: &Path) -> bool {
+    dir.join("train-images-idx3-ubyte").exists()
+        && dir.join("train-labels-idx1-ubyte").exists()
+        && dir.join("t10k-images-idx3-ubyte").exists()
+        && dir.join("t10k-labels-idx1-ubyte").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_images(path: &Path, n: u32, rows: u32, cols: u32, payload: &[u8]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&0x0000_0803u32.to_be_bytes()).unwrap();
+        f.write_all(&n.to_be_bytes()).unwrap();
+        f.write_all(&rows.to_be_bytes()).unwrap();
+        f.write_all(&cols.to_be_bytes()).unwrap();
+        f.write_all(payload).unwrap();
+    }
+
+    fn write_labels(path: &Path, n: u32, payload: &[u8]) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(&0x0000_0801u32.to_be_bytes()).unwrap();
+        f.write_all(&n.to_be_bytes()).unwrap();
+        f.write_all(payload).unwrap();
+    }
+
+    #[test]
+    fn roundtrip_synthetic_idx() {
+        let dir = std::env::temp_dir().join("cgmq_idx_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ip = dir.join("imgs");
+        let lp = dir.join("labs");
+        // 2 images of 2x2: [0, 255, 128, 0] and [255; 4]
+        write_images(&ip, 2, 2, 2, &[0, 255, 128, 0, 255, 255, 255, 255]);
+        write_labels(&lp, 2, &[7, 3]);
+        let ds = load_pair(&ip, &lp).unwrap();
+        assert_eq!((ds.n, ds.rows, ds.cols), (2, 2, 2));
+        assert_eq!(ds.labels, vec![7, 3]);
+        assert!((ds.images[0] + 1.0).abs() < 1e-6); // 0 -> -1
+        assert!((ds.images[1] - 1.0).abs() < 1e-6); // 255 -> 1
+        assert!(ds.images[2].abs() < 0.01); // 128 -> ~0
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("cgmq_idx_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad");
+        std::fs::write(&p, [0u8; 16]).unwrap();
+        assert!(load_images(&p).is_err());
+        assert!(load_labels(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_payload_rejected() {
+        let dir = std::env::temp_dir().join("cgmq_idx_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ip = dir.join("trunc");
+        write_images(&ip, 10, 28, 28, &[0u8; 100]); // far too short
+        assert!(load_images(&ip).is_err());
+    }
+
+    #[test]
+    fn label_count_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("cgmq_idx_test4");
+        std::fs::create_dir_all(&dir).unwrap();
+        let ip = dir.join("i");
+        let lp = dir.join("l");
+        write_images(&ip, 1, 2, 2, &[0; 4]);
+        write_labels(&lp, 2, &[1, 2]);
+        assert!(load_pair(&ip, &lp).is_err());
+    }
+}

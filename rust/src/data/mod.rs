@@ -1,0 +1,13 @@
+//! Data pipeline: SynthMNIST generation, real-MNIST IDX loading, batching.
+//!
+//! SynthMNIST (`synth`) is the repo's substitution for MNIST in the
+//! offline build environment (DESIGN.md §2); `idx` loads the real MNIST
+//! IDX files when they are present so the paper's exact dataset drops in
+//! unchanged; `batcher` shuffles and serves fixed-size normalised batches
+//! matching the compiled artifact shapes.
+
+pub mod batcher;
+pub mod idx;
+pub mod synth;
+
+pub use batcher::{Batch, Batcher, Dataset};

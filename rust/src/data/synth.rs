@@ -1,0 +1,252 @@
+//! SynthMNIST renderer — bit-for-bit mirror of `python/compile/data_synth.py`.
+//!
+//! Deterministic procedural 28x28 digits: per-class stroke skeletons warped
+//! by a random affine map, rendered as a soft distance field, plus Gaussian
+//! noise. Identical constants, RNG (SplitMix64) and call order as the
+//! Python side; `artifacts/goldens.json` pins a handful of samples and the
+//! integration tests compare against them with 1e-4 tolerance (libm ulp).
+
+use crate::util::rng::{sample_seed, SplitMix64};
+
+pub const GRID: usize = 28;
+const NOISE_SIGMA: f64 = 0.04;
+const SOFTNESS: f64 = 0.35;
+
+type Point = (f64, f64);
+
+fn circle(cx: f64, cy: f64, rx: f64, ry: f64, n: usize) -> Vec<Point> {
+    (0..=n)
+        .map(|k| {
+            let t = 2.0 * std::f64::consts::PI * k as f64 / n as f64;
+            (cx + rx * t.cos(), cy + ry * t.sin())
+        })
+        .collect()
+}
+
+/// Stroke skeletons per digit class (unit square, y down) — mirror of
+/// `data_synth.SKELETONS`.
+fn skeleton(label: usize) -> Vec<Vec<Point>> {
+    match label {
+        0 => vec![circle(0.5, 0.5, 0.24, 0.34, 12)],
+        1 => vec![vec![(0.36, 0.28), (0.52, 0.14)], vec![(0.52, 0.14), (0.52, 0.86)]],
+        2 => vec![
+            vec![
+                (0.28, 0.30),
+                (0.32, 0.17),
+                (0.50, 0.12),
+                (0.68, 0.18),
+                (0.72, 0.33),
+                (0.58, 0.52),
+                (0.30, 0.84),
+            ],
+            vec![(0.30, 0.84), (0.74, 0.84)],
+        ],
+        3 => vec![
+            vec![(0.30, 0.16), (0.55, 0.12), (0.70, 0.28), (0.52, 0.46)],
+            vec![(0.52, 0.46), (0.72, 0.62), (0.58, 0.84), (0.30, 0.80)],
+        ],
+        4 => vec![
+            vec![(0.62, 0.12), (0.28, 0.62)],
+            vec![(0.28, 0.62), (0.76, 0.62)],
+            vec![(0.62, 0.30), (0.62, 0.88)],
+        ],
+        5 => vec![
+            vec![(0.70, 0.13), (0.33, 0.13)],
+            vec![(0.33, 0.13), (0.31, 0.45)],
+            vec![
+                (0.31, 0.45),
+                (0.55, 0.41),
+                (0.71, 0.56),
+                (0.66, 0.78),
+                (0.44, 0.87),
+                (0.28, 0.79),
+            ],
+        ],
+        6 => vec![
+            vec![(0.64, 0.13), (0.42, 0.33), (0.32, 0.58)],
+            circle(0.48, 0.67, 0.19, 0.20, 12),
+        ],
+        7 => vec![vec![(0.26, 0.15), (0.74, 0.15)], vec![(0.74, 0.15), (0.44, 0.86)]],
+        8 => vec![circle(0.5, 0.31, 0.17, 0.17, 12), circle(0.5, 0.67, 0.21, 0.20, 12)],
+        9 => vec![
+            circle(0.5, 0.33, 0.19, 0.20, 12),
+            vec![(0.69, 0.37), (0.64, 0.62), (0.54, 0.86)],
+        ],
+        _ => unreachable!("label must be 0..9"),
+    }
+}
+
+/// Random affine warp around the glyph centre — mirror of `data_synth._affine`
+/// (same RNG draw order: theta, sx, sy, shear, tx, ty).
+fn affine(rng: &mut SplitMix64) -> (f64, f64, f64, f64, f64, f64) {
+    let theta = rng.uniform(-0.25, 0.25);
+    let sx = rng.uniform(0.85, 1.15);
+    let sy = rng.uniform(0.85, 1.15);
+    let shear = rng.uniform(-0.15, 0.15);
+    let tx = rng.uniform(-0.08, 0.08);
+    let ty = rng.uniform(-0.08, 0.08);
+    let (ct, st) = (theta.cos(), theta.sin());
+    let a00 = ct * sx;
+    let a01 = ct * (shear * sy) - st * sy;
+    let a10 = st * sx;
+    let a11 = st * (shear * sy) + ct * sy;
+    (a00, a01, a10, a11, tx, ty)
+}
+
+fn warp(pts: &[Point], aff: (f64, f64, f64, f64, f64, f64)) -> Vec<Point> {
+    let (a00, a01, a10, a11, tx, ty) = aff;
+    pts.iter()
+        .map(|&(x, y)| {
+            let (dx, dy) = (x - 0.5, y - 0.5);
+            (0.5 + a00 * dx + a01 * dy + tx, 0.5 + a10 * dx + a11 * dy + ty)
+        })
+        .collect()
+}
+
+#[inline]
+fn seg_dist(px: f64, py: f64, a: Point, b: Point) -> f64 {
+    let (vx, vy) = (b.0 - a.0, b.1 - a.1);
+    let (wx, wy) = (px - a.0, py - a.1);
+    let vv = vx * vx + vy * vy;
+    let t = if vv <= 1e-18 { 0.0 } else { ((wx * vx + wy * vy) / vv).clamp(0.0, 1.0) };
+    let (dx, dy) = (px - (a.0 + t * vx), py - (a.1 + t * vy));
+    (dx * dx + dy * dy).sqrt()
+}
+
+/// Render sample `index` -> (28x28 image in [0,1] row-major, label).
+pub fn render_digit(seed: u64, index: u64) -> ([f32; GRID * GRID], usize) {
+    let label = (index % 10) as usize;
+    let mut rng = SplitMix64::new(sample_seed(seed, index));
+    let aff = affine(&mut rng);
+    let tau = rng.uniform(0.035, 0.060);
+    let strokes: Vec<Vec<Point>> =
+        skeleton(label).iter().map(|poly| warp(poly, aff)).collect();
+
+    let mut img = [0f64; GRID * GRID];
+    for r in 0..GRID {
+        let py = (r as f64 + 0.5) / GRID as f64;
+        for c in 0..GRID {
+            let px = (c as f64 + 0.5) / GRID as f64;
+            let mut d = f64::INFINITY;
+            for poly in &strokes {
+                for k in 0..poly.len() - 1 {
+                    d = d.min(seg_dist(px, py, poly[k], poly[k + 1]));
+                }
+            }
+            let v = (tau - d) / (SOFTNESS * tau);
+            img[r * GRID + c] = v.clamp(0.0, 1.0);
+        }
+    }
+    // Noise pass in the same raster order as Python.
+    let mut out = [0f32; GRID * GRID];
+    for (i, v) in img.iter().enumerate() {
+        out[i] = (v + NOISE_SIGMA * rng.gauss()).clamp(0.0, 1.0) as f32;
+    }
+    (out, label)
+}
+
+/// Generate a normalised dataset: images in [-1, 1] (paper preprocessing:
+/// mean 0.5 / std 0.5), labels balanced by `index % 10`.
+pub fn dataset(seed: u64, n: usize) -> (Vec<f32>, Vec<i32>) {
+    let mut xs = Vec::with_capacity(n * GRID * GRID);
+    let mut ys = Vec::with_capacity(n);
+    for i in 0..n {
+        let (img, label) = render_digit(seed, i as u64);
+        xs.extend(img.iter().map(|&v| (v - 0.5) / 0.5));
+        ys.push(label as i32);
+    }
+    (xs, ys)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let (a, la) = render_digit(7, 3);
+        let (b, lb) = render_digit(7, 3);
+        assert_eq!(a[..], b[..]);
+        assert_eq!(la, lb);
+    }
+
+    #[test]
+    fn labels_balanced() {
+        let (_, ys) = dataset(0, 100);
+        let mut counts = [0u32; 10];
+        for &y in &ys {
+            counts[y as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn normalised_range() {
+        let (xs, _) = dataset(3, 10);
+        assert!(xs.iter().all(|&v| (-1.0..=1.0).contains(&v)));
+        assert_eq!(xs.len(), 10 * GRID * GRID);
+    }
+
+    #[test]
+    fn digits_have_ink() {
+        for i in 0..20 {
+            let (img, _) = render_digit(5, i);
+            let max = img.iter().cloned().fold(0.0f32, f32::max);
+            assert!(max > 0.8, "sample {i} has no stroke");
+            let ink = img.iter().filter(|&&v| v > 0.5).count();
+            assert!((10..350).contains(&ink), "sample {i} ink mass {ink}");
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (a, _) = render_digit(1, 3);
+        let (b, _) = render_digit(2, 3);
+        let max_diff =
+            a.iter().zip(b.iter()).map(|(x, y)| (x - y).abs()).fold(0.0f32, f32::max);
+        assert!(max_diff > 0.05);
+    }
+
+    /// Nearest-class-mean classifier beats chance by a wide margin —
+    /// mirrors python test_data.py::test_classes_are_distinguishable.
+    #[test]
+    fn classes_distinguishable() {
+        let (xs, ys) = dataset(11, 400);
+        let (xt, yt) = dataset(12, 200);
+        let d = GRID * GRID;
+        let mut means = vec![[0f64; GRID * GRID]; 10];
+        let mut counts = [0usize; 10];
+        for i in 0..400 {
+            let c = ys[i] as usize;
+            counts[c] += 1;
+            for j in 0..d {
+                means[c][j] += xs[i * d + j] as f64;
+            }
+        }
+        for c in 0..10 {
+            for j in 0..d {
+                means[c][j] /= counts[c] as f64;
+            }
+        }
+        let mut correct = 0;
+        for i in 0..200 {
+            let mut best = (f64::INFINITY, 0);
+            for c in 0..10 {
+                let dist: f64 = (0..d)
+                    .map(|j| {
+                        let e = xt[i * d + j] as f64 - means[c][j];
+                        e * e
+                    })
+                    .sum();
+                if dist < best.0 {
+                    best = (dist, c);
+                }
+            }
+            if best.1 == yt[i] as usize {
+                correct += 1;
+            }
+        }
+        let acc = correct as f64 / 200.0;
+        assert!(acc > 0.6, "nearest-mean acc {acc}");
+    }
+}

@@ -1,0 +1,316 @@
+//! The `dir` rules — the heart of CGMQ (paper Sections 2.2-2.3).
+//!
+//! The gate staircase T(g) has zero gradient, so gates are updated with a
+//! constructed *direction* used in place of a gradient by plain gradient
+//! descent: `g <- g - eta_g * dir`. The two required properties:
+//!
+//! 1. constraint **Unsat** -> dir strictly positive (gates shrink,
+//!    bit-widths fall, cost falls);
+//! 2. constraint **Sat**   -> dir <= 0 (gates may grow back selectively).
+//!
+//! Which statistic modulates the magnitude is the dir variant:
+//!
+//! * `dir1`: Unsat 1/|grad|;            Sat -|g|
+//! * `dir2`: Unsat 1/(|grad| + |w|);    Sat -(|g| + |w|)
+//! * `dir3`: Unsat 1/(|grad| + |w|);    Sat -(|grad| + |w|)   (1st-order Taylor)
+//!
+//! with the batch-mean absolute loss gradient for |grad|, and for
+//! activations |w| replaced by the batch-mean absolute activation value.
+//! The statistics arrive straight from the `qat_step` artifact outputs.
+//!
+//! The paper notes the directions should be bounded ([K1,K2] / [K3,K4]);
+//! we clip the Unsat reciprocal into [clip_min, clip_max] (the reciprocal
+//! of a vanishing gradient is otherwise unbounded).
+
+use anyhow::{bail, Result};
+
+use crate::gates::Granularity;
+use crate::tensor::Tensor;
+
+/// Which dir variant (paper Section 2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DirKind {
+    Dir1,
+    Dir2,
+    Dir3,
+}
+
+impl DirKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "dir1" => Ok(DirKind::Dir1),
+            "dir2" => Ok(DirKind::Dir2),
+            "dir3" => Ok(DirKind::Dir3),
+            other => bail!("unknown direction '{other}' (dir1 | dir2 | dir3)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            DirKind::Dir1 => "dir1",
+            DirKind::Dir2 => "dir2",
+            DirKind::Dir3 => "dir3",
+        }
+    }
+}
+
+/// Constraint state decided at the end of the previous epoch (Section 2.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sat {
+    Satisfied,
+    Unsatisfied,
+}
+
+/// Direction computation config.
+#[derive(Debug, Clone, Copy)]
+pub struct DirConfig {
+    pub kind: DirKind,
+    /// Clip bounds for the Unsat reciprocal (paper's [K1, K2]).
+    pub clip_min: f32,
+    pub clip_max: f32,
+    /// Denominator floor (avoids division by exactly zero).
+    pub eps: f32,
+}
+
+impl DirConfig {
+    pub fn new(kind: DirKind) -> Self {
+        Self { kind, clip_min: 1e-6, clip_max: 1e3, eps: 1e-12 }
+    }
+}
+
+#[inline]
+fn unsat_clip(v: f32, cfg: &DirConfig) -> f32 {
+    v.max(cfg.clip_min).min(cfg.clip_max)
+}
+
+/// Elementwise dir for one *weight* gate element.
+///
+/// `grad` = batch-mean loss gradient for the weight, `w` = weight value,
+/// `g` = current gate value.
+#[inline]
+pub fn dir_w(cfg: &DirConfig, sat: Sat, grad: f32, w: f32, g: f32) -> f32 {
+    let ag = grad.abs();
+    let aw = w.abs();
+    match (cfg.kind, sat) {
+        (DirKind::Dir1, Sat::Unsatisfied) => unsat_clip(1.0 / (ag + cfg.eps), cfg),
+        (DirKind::Dir1, Sat::Satisfied) => -g.abs(),
+        (DirKind::Dir2, Sat::Unsatisfied) => unsat_clip(1.0 / (ag + aw + cfg.eps), cfg),
+        (DirKind::Dir2, Sat::Satisfied) => -(g.abs() + aw),
+        (DirKind::Dir3, Sat::Unsatisfied) => unsat_clip(1.0 / (ag + aw + cfg.eps), cfg),
+        (DirKind::Dir3, Sat::Satisfied) => -(ag + aw),
+    }
+}
+
+/// Elementwise dir for one *activation* gate element.
+///
+/// `grad` = batch-mean loss gradient w.r.t. the activation (probe output of
+/// the qat_step artifact), `act` = batch-mean activation value, `g` = gate.
+#[inline]
+pub fn dir_a(cfg: &DirConfig, sat: Sat, grad: f32, act: f32, g: f32) -> f32 {
+    let ag = grad.abs();
+    let aa = act.abs();
+    match (cfg.kind, sat) {
+        (DirKind::Dir1, Sat::Unsatisfied) => unsat_clip(1.0 / (ag + cfg.eps), cfg),
+        (DirKind::Dir1, Sat::Satisfied) => -g.abs(),
+        (DirKind::Dir2, Sat::Unsatisfied) => unsat_clip(1.0 / (ag + aa + cfg.eps), cfg),
+        (DirKind::Dir2, Sat::Satisfied) => -(g.abs() + aa),
+        (DirKind::Dir3, Sat::Unsatisfied) => unsat_clip(1.0 / (ag + aa + cfg.eps), cfg),
+        (DirKind::Dir3, Sat::Satisfied) => -(ag + aa),
+    }
+}
+
+/// Direction tensor for a weight-gate store.
+///
+/// For `Individual` granularity this is elementwise over the weight tensor;
+/// for `Layer` granularity the per-weight statistics are mean-aggregated
+/// over the layer first (the paper leaves the aggregation unspecified; the
+/// mean keeps the magnitude scale identical to the individual case).
+pub fn dir_tensor_w(
+    cfg: &DirConfig,
+    gran: Granularity,
+    sat: Sat,
+    grad: &Tensor,
+    w: &Tensor,
+    gate_store: &Tensor,
+) -> Result<Tensor> {
+    match gran {
+        Granularity::Individual => {
+            if grad.shape() != w.shape() || gate_store.shape() != w.shape() {
+                bail!(
+                    "dir_w shape mismatch: grad {:?} w {:?} gate {:?}",
+                    grad.shape(),
+                    w.shape(),
+                    gate_store.shape()
+                );
+            }
+            let data = grad
+                .data()
+                .iter()
+                .zip(w.data())
+                .zip(gate_store.data())
+                .map(|((&gr, &wv), &gv)| dir_w(cfg, sat, gr, wv, gv))
+                .collect();
+            Tensor::new(w.shape().to_vec(), data)
+        }
+        Granularity::Layer => {
+            let mean_abs = |t: &Tensor| (t.map(f32::abs).mean()) as f32;
+            let d = dir_w(cfg, sat, mean_abs(grad), mean_abs(w), gate_store.data()[0]);
+            Ok(Tensor::scalar(d))
+        }
+    }
+}
+
+/// Direction tensor for an activation-gate store (same aggregation rules).
+pub fn dir_tensor_a(
+    cfg: &DirConfig,
+    gran: Granularity,
+    sat: Sat,
+    act_grad: &Tensor,
+    act_mean: &Tensor,
+    gate_store: &Tensor,
+) -> Result<Tensor> {
+    match gran {
+        Granularity::Individual => {
+            if act_grad.shape() != act_mean.shape() || gate_store.shape() != act_grad.shape() {
+                bail!(
+                    "dir_a shape mismatch: grad {:?} act {:?} gate {:?}",
+                    act_grad.shape(),
+                    act_mean.shape(),
+                    gate_store.shape()
+                );
+            }
+            let data = act_grad
+                .data()
+                .iter()
+                .zip(act_mean.data())
+                .zip(gate_store.data())
+                .map(|((&gr, &av), &gv)| dir_a(cfg, sat, gr, av, gv))
+                .collect();
+            Tensor::new(act_grad.shape().to_vec(), data)
+        }
+        Granularity::Layer => {
+            let mean_abs = |t: &Tensor| (t.map(f32::abs).mean()) as f32;
+            let d = dir_a(cfg, sat, mean_abs(act_grad), mean_abs(act_mean), gate_store.data()[0]);
+            Ok(Tensor::scalar(d))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(kind: DirKind) -> DirConfig {
+        DirConfig::new(kind)
+    }
+
+    /// Paper property (i): Unsat -> dir strictly positive, for all variants.
+    #[test]
+    fn unsat_is_strictly_positive() {
+        let mut rng = crate::util::rng::SplitMix64::new(0);
+        for kind in [DirKind::Dir1, DirKind::Dir2, DirKind::Dir3] {
+            let c = cfg(kind);
+            for _ in 0..2000 {
+                let grad = rng.uniform(-5.0, 5.0) as f32;
+                let w = rng.uniform(-5.0, 5.0) as f32;
+                let g = rng.uniform(0.5, 5.5) as f32;
+                assert!(dir_w(&c, Sat::Unsatisfied, grad, w, g) > 0.0);
+                assert!(dir_a(&c, Sat::Unsatisfied, grad, w, g) > 0.0);
+            }
+        }
+    }
+
+    /// Paper property (ii): Sat -> dir <= 0, for all variants.
+    #[test]
+    fn sat_is_nonpositive() {
+        let mut rng = crate::util::rng::SplitMix64::new(1);
+        for kind in [DirKind::Dir1, DirKind::Dir2, DirKind::Dir3] {
+            let c = cfg(kind);
+            for _ in 0..2000 {
+                let grad = rng.uniform(-5.0, 5.0) as f32;
+                let w = rng.uniform(-5.0, 5.0) as f32;
+                let g = rng.uniform(0.5, 5.5) as f32;
+                assert!(dir_w(&c, Sat::Satisfied, grad, w, g) <= 0.0);
+                assert!(dir_a(&c, Sat::Satisfied, grad, w, g) <= 0.0);
+            }
+        }
+    }
+
+    /// dir1 Unsat: small |grad| -> big positive step (bit-width drops fast).
+    #[test]
+    fn dir1_prefers_shrinking_small_gradients() {
+        let c = cfg(DirKind::Dir1);
+        let small = dir_w(&c, Sat::Unsatisfied, 1e-4, 0.0, 1.0);
+        let large = dir_w(&c, Sat::Unsatisfied, 10.0, 0.0, 1.0);
+        assert!(small > large);
+    }
+
+    /// dir2 Sat: large weights grow their gates back faster.
+    #[test]
+    fn dir2_sat_prefers_large_weights() {
+        let c = cfg(DirKind::Dir2);
+        let big_w = dir_w(&c, Sat::Satisfied, 0.0, 3.0, 1.0);
+        let small_w = dir_w(&c, Sat::Satisfied, 0.0, 0.01, 1.0);
+        assert!(big_w < small_w); // more negative = faster growth
+    }
+
+    /// dir3 uses the Taylor magnitude |grad| + |w| in both phases.
+    #[test]
+    fn dir3_sat_depends_on_grad() {
+        let c = cfg(DirKind::Dir3);
+        let a = dir_w(&c, Sat::Satisfied, 2.0, 1.0, 1.0);
+        let b = dir_w(&c, Sat::Satisfied, 0.0, 1.0, 1.0);
+        assert!(a < b);
+        // dir1's Sat by contrast ignores grad
+        let c1 = cfg(DirKind::Dir1);
+        assert_eq!(
+            dir_w(&c1, Sat::Satisfied, 2.0, 1.0, 1.0),
+            dir_w(&c1, Sat::Satisfied, 0.0, 1.0, 1.0)
+        );
+    }
+
+    /// Unsat reciprocal is clipped into [K1, K2] (bounded, paper Section 2.3).
+    #[test]
+    fn unsat_clipped() {
+        for kind in [DirKind::Dir1, DirKind::Dir2, DirKind::Dir3] {
+            let c = cfg(kind);
+            assert_eq!(dir_w(&c, Sat::Unsatisfied, 0.0, 0.0, 1.0), c.clip_max);
+            assert_eq!(dir_w(&c, Sat::Unsatisfied, 1e12, 0.0, 1.0), c.clip_min);
+        }
+    }
+
+    #[test]
+    fn layer_granularity_aggregates_mean() {
+        let c = cfg(DirKind::Dir1);
+        let grad = Tensor::new(vec![4], vec![1.0, -1.0, 3.0, -3.0]).unwrap();
+        let w = Tensor::zeros(&[4]);
+        let store = Tensor::scalar(1.0);
+        let d =
+            dir_tensor_w(&c, Granularity::Layer, Sat::Unsatisfied, &grad, &w, &store).unwrap();
+        // mean |grad| = 2 -> dir = 1/2
+        assert_eq!(d.len(), 1);
+        assert!((d.data()[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn individual_granularity_elementwise() {
+        let c = cfg(DirKind::Dir1);
+        let grad = Tensor::new(vec![2], vec![0.5, 2.0]).unwrap();
+        let w = Tensor::zeros(&[2]);
+        let store = Tensor::new(vec![2], vec![1.0, 1.0]).unwrap();
+        let d = dir_tensor_w(&c, Granularity::Individual, Sat::Unsatisfied, &grad, &w, &store)
+            .unwrap();
+        assert!((d.data()[0] - 2.0).abs() < 1e-6);
+        assert!((d.data()[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        let c = cfg(DirKind::Dir1);
+        let grad = Tensor::zeros(&[3]);
+        let w = Tensor::zeros(&[4]);
+        let store = Tensor::zeros(&[4]);
+        assert!(dir_tensor_w(&c, Granularity::Individual, Sat::Satisfied, &grad, &w, &store)
+            .is_err());
+    }
+}

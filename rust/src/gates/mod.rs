@@ -1,0 +1,225 @@
+//! Gate-variable store (paper Section 2.1).
+//!
+//! A gate g controls the bit-width of a weight or activation via the
+//! staircase T(g) (Eq. 4). Two granularities, as in the paper's
+//! experiments:
+//!
+//! * `Individual` — one gate per weight and per activation unit (the
+//!   *indiv.* rows of Tables 1/3);
+//! * `Layer` — one gate for all weights of a layer plus one for all
+//!   activations of a layer (the *layer* rows of Tables 1/2).
+//!
+//! Storage is shape-faithful: individual gates are full tensors, layer
+//! gates are scalars. `materialize_*` broadcasts to the artifact-shaped
+//! tensors the XLA step function expects, so the compiled graph is
+//! identical for both granularities (the coordinator just feeds different
+//! tensors).
+//!
+//! Pruning is future work in the paper, so gates are clamped to
+//! `GATE_FLOOR` (= 0.5, bit-width 2) from below; the cap keeps Sat-phase
+//! growth bounded (any g > 4 already means 32 bit).
+
+use anyhow::{bail, Result};
+
+use crate::model::ArchSpec;
+use crate::quant::transform_t;
+use crate::tensor::Tensor;
+use crate::{BIT_LEVELS, GATE_FLOOR, GATE_INIT};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Granularity {
+    /// One gate per layer for weights + one per layer for activations.
+    Layer,
+    /// One gate per individual weight / activation unit.
+    Individual,
+}
+
+impl Granularity {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "layer" => Ok(Granularity::Layer),
+            "individual" | "indiv" => Ok(Granularity::Individual),
+            other => bail!("unknown granularity '{other}' (layer | individual)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Granularity::Layer => "layer",
+            Granularity::Individual => "indiv",
+        }
+    }
+}
+
+/// All gate variables of a model.
+#[derive(Debug, Clone)]
+pub struct GateSet {
+    pub granularity: Granularity,
+    /// One entry per layer; scalar tensor for `Layer`, w-shaped for `Individual`.
+    pub gates_w: Vec<Tensor>,
+    /// One entry per quantized-activation layer.
+    pub gates_a: Vec<Tensor>,
+    /// Upper clamp for gate values (>= 4 keeps 32-bit reachable).
+    pub cap: f32,
+}
+
+impl GateSet {
+    /// Fresh gate set at the paper's init (5.5 -> everything 32 bit).
+    pub fn new(arch: &ArchSpec, granularity: Granularity) -> Self {
+        Self::with_init(arch, granularity, GATE_INIT)
+    }
+
+    pub fn with_init(arch: &ArchSpec, granularity: Granularity, init: f32) -> Self {
+        let shape = |full: &[usize]| -> Vec<usize> {
+            match granularity {
+                Granularity::Layer => vec![],
+                Granularity::Individual => full.to_vec(),
+            }
+        };
+        let gates_w =
+            arch.layers.iter().map(|l| Tensor::full(&shape(&l.w_shape), init)).collect();
+        let gates_a = arch
+            .layers
+            .iter()
+            .filter(|l| l.quant_act)
+            .map(|l| Tensor::full(&shape(&l.act_shape), init))
+            .collect();
+        Self { granularity, gates_w, gates_a, cap: GATE_INIT }
+    }
+
+    /// Clamp every gate into [GATE_FLOOR, cap] (paper: g < 0.5 -> 0.5).
+    pub fn clamp(&mut self) {
+        let cap = self.cap;
+        for t in self.gates_w.iter_mut().chain(self.gates_a.iter_mut()) {
+            t.map_inplace(|g| g.max(GATE_FLOOR).min(cap));
+        }
+    }
+
+    /// Broadcast the weight gate of layer `li` to the full weight shape.
+    pub fn materialize_w(&self, arch: &ArchSpec, li: usize) -> Tensor {
+        match self.granularity {
+            Granularity::Individual => self.gates_w[li].clone(),
+            Granularity::Layer => {
+                Tensor::full(&arch.layers[li].w_shape, self.gates_w[li].data()[0])
+            }
+        }
+    }
+
+    /// Broadcast the activation gate of quant-act layer index `ai`.
+    pub fn materialize_a(&self, arch: &ArchSpec, ai: usize) -> Tensor {
+        match self.granularity {
+            Granularity::Individual => self.gates_a[ai].clone(),
+            Granularity::Layer => {
+                let l = arch.layers.iter().filter(|l| l.quant_act).nth(ai).expect("act layer");
+                Tensor::full(&l.act_shape, self.gates_a[ai].data()[0])
+            }
+        }
+    }
+
+    /// All materialized weight gates in layer order.
+    pub fn materialize_all_w(&self, arch: &ArchSpec) -> Vec<Tensor> {
+        (0..arch.layers.len()).map(|li| self.materialize_w(arch, li)).collect()
+    }
+
+    /// All materialized activation gates in quant-act-layer order.
+    pub fn materialize_all_a(&self, arch: &ArchSpec) -> Vec<Tensor> {
+        (0..self.gates_a.len()).map(|ai| self.materialize_a(arch, ai)).collect()
+    }
+
+    /// Histogram of weight bit-widths {2,4,8,16,32} -> count (reporting).
+    pub fn weight_bit_histogram(&self, arch: &ArchSpec) -> Vec<(u32, u64)> {
+        let mut counts = std::collections::BTreeMap::new();
+        for b in BIT_LEVELS {
+            counts.insert(b, 0u64);
+        }
+        for (li, g) in self.gates_w.iter().enumerate() {
+            match self.granularity {
+                Granularity::Individual => {
+                    for &v in g.data() {
+                        *counts.entry(transform_t(v)).or_insert(0) += 1;
+                    }
+                }
+                Granularity::Layer => {
+                    let n = arch.layers[li].w_len() as u64;
+                    *counts.entry(transform_t(g.data()[0])).or_insert(0) += n;
+                }
+            }
+        }
+        counts.into_iter().collect()
+    }
+
+    /// Mean weight bit-width (reporting).
+    pub fn mean_weight_bits(&self, arch: &ArchSpec) -> f64 {
+        let hist = self.weight_bit_histogram(arch);
+        let total: u64 = hist.iter().map(|(_, c)| c).sum();
+        if total == 0 {
+            return 0.0;
+        }
+        hist.iter().map(|&(b, c)| b as f64 * c as f64).sum::<f64>() / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{lenet5, mlp};
+
+    #[test]
+    fn init_all_32_bit() {
+        let a = mlp();
+        for gran in [Granularity::Layer, Granularity::Individual] {
+            let gs = GateSet::new(&a, gran);
+            assert_eq!(gs.gates_w.len(), 3);
+            assert_eq!(gs.gates_a.len(), 2);
+            let hist = gs.weight_bit_histogram(&a);
+            let total: u64 = a.layers.iter().map(|l| l.w_len() as u64).sum();
+            assert_eq!(hist, vec![(2, 0), (4, 0), (8, 0), (16, 0), (32, total)]);
+        }
+    }
+
+    #[test]
+    fn storage_shapes_by_granularity() {
+        let a = lenet5();
+        let layer = GateSet::new(&a, Granularity::Layer);
+        assert_eq!(layer.gates_w[0].len(), 1);
+        let indiv = GateSet::new(&a, Granularity::Individual);
+        assert_eq!(indiv.gates_w[0].shape(), &[20, 1, 5, 5]);
+        assert_eq!(indiv.gates_a[0].shape(), &[20, 24, 24]);
+    }
+
+    #[test]
+    fn materialize_broadcasts() {
+        let a = mlp();
+        let mut gs = GateSet::new(&a, Granularity::Layer);
+        gs.gates_w[1] = Tensor::scalar(1.5);
+        let m = gs.materialize_w(&a, 1);
+        assert_eq!(m.shape(), &[128, 64]);
+        assert!(m.data().iter().all(|&v| v == 1.5));
+    }
+
+    #[test]
+    fn clamp_applies_floor_and_cap() {
+        let a = mlp();
+        let mut gs = GateSet::new(&a, Granularity::Layer);
+        gs.gates_w[0] = Tensor::scalar(-3.0);
+        gs.gates_a[0] = Tensor::scalar(99.0);
+        gs.clamp();
+        assert_eq!(gs.gates_w[0].data()[0], GATE_FLOOR);
+        assert_eq!(gs.gates_a[0].data()[0], gs.cap);
+    }
+
+    #[test]
+    fn mean_bits_mixed() {
+        let a = mlp();
+        let mut gs = GateSet::new(&a, Granularity::Layer);
+        // fc1 -> 2 bit, fc2 -> 8 bit, fc3 -> 32 bit
+        gs.gates_w[0] = Tensor::scalar(0.5);
+        gs.gates_w[1] = Tensor::scalar(2.5);
+        gs.gates_w[2] = Tensor::scalar(5.5);
+        let n1 = (784 * 128) as f64;
+        let n2 = (128 * 64) as f64;
+        let n3 = (64 * 10) as f64;
+        let expect = (2.0 * n1 + 8.0 * n2 + 32.0 * n3) / (n1 + n2 + n3);
+        assert!((gs.mean_weight_bits(&a) - expect).abs() < 1e-9);
+    }
+}

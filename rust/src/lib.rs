@@ -1,0 +1,53 @@
+//! # CGMQ — Constraint Guided Model Quantization
+//!
+//! Production-grade reproduction of *"Constraint Guided Model Quantization
+//! of Neural Networks"* (Van Baelen & Karsmakers, 2024) as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (Pallas, build time) — the gated residual-decomposition
+//!   fake quantizer (paper Eq. 1/3) as a Pallas kernel.
+//! * **Layer 2** (JAX, build time) — LeNet-5/MLP forward+backward with fake
+//!   quantization, lowered once to HLO-text artifacts (`make artifacts`).
+//! * **Layer 3** (this crate, run time) — the paper's contribution: the
+//!   constraint-guided training coordinator. It owns the epoch loop, the
+//!   end-of-epoch BOP constraint check (Sat/Unsat state machine), the gate
+//!   store and its `dir`-driven update (paper Section 2.2-2.3), optimizers,
+//!   the data pipeline, checkpoints, metrics, baselines and the benchmark
+//!   harness that regenerates the paper's tables.
+//!
+//! Python never runs on the training path: the Rust binary loads the HLO
+//! artifacts through PJRT (the `xla` crate) and drives everything itself.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
+//! paper-vs-measured results.
+
+pub mod baselines;
+pub mod bench_harness;
+pub mod checkpoint;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod cost;
+pub mod data;
+pub mod direction;
+pub mod gates;
+pub mod metrics;
+pub mod model;
+pub mod optim;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Bit-widths of the residual decomposition (paper: B = {2,4,8,16,32}).
+pub const BIT_LEVELS: [u32; 5] = [2, 4, 8, 16, 32];
+
+/// Gate floor — pruning is future work in the paper, so gates are clamped
+/// to 0.5 (bit-width 2) as soon as they drop below it (Section 2.1).
+pub const GATE_FLOOR: f32 = 0.5;
+
+/// Default gate initial value: T(5.5) = 32 bit (paper Section 4.2).
+pub const GATE_INIT: f32 = 5.5;

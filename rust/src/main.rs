@@ -1,0 +1,301 @@
+//! `cgmq` — CLI entrypoint for the CGMQ reproduction.
+//!
+//! Commands:
+//!   train      full pipeline (pretrain -> calibrate -> ranges -> CGMQ)
+//!   pretrain   float pretraining only; caches a checkpoint
+//!   eval       evaluate a snapshot checkpoint
+//!   export     export a snapshot's bit-width assignment + memory report
+//!   table1/2/3 regenerate the paper's tables
+//!   a2         penalty-method (DQ-style) tuning comparison
+//!   info       show artifact manifest + runtime info
+//!
+//! Every command takes `--config <toml>` plus targeted overrides; run with
+//! no command for usage.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use cgmq::baselines::{fixed_qat, myqasr};
+use cgmq::bench_harness;
+use cgmq::cli::Args;
+use cgmq::config::Config;
+use cgmq::coordinator::Trainer;
+use cgmq::direction::DirKind;
+use cgmq::gates::Granularity;
+
+const USAGE: &str = "\
+cgmq — Constraint Guided Model Quantization (paper reproduction)
+
+USAGE: cgmq <command> [--flag value]...
+
+COMMANDS
+  train      --config <toml> | overrides: --arch --direction --granularity
+             --bound --cgmq-epochs --pretrain-epochs --train-size --seed
+             [--save <ckpt>] [--from-pretrained <ckpt>]
+  pretrain   same config flags; --save <ckpt> (default runs/pretrained.ckpt)
+  eval       --ckpt <snapshot> [--config <toml>]
+  export     --ckpt <snapshot> [--config <toml>] [--out <json>]
+  fixed-qat  --bits <b> + config flags (uniform-bit QAT baseline)
+  myqasr     config flags (heuristic baseline; layer granularity)
+  table1     --config <toml>   (method comparison @ bound 0.40%)
+  table2     --config <toml>   (bound sweep, layer gates)
+  table3     --config <toml>   (bound sweep, individual gates)
+  a2         --config <toml> [--lambdas 0.001,0.01,...]
+  info       [--config <toml>]
+";
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprint!("{USAGE}");
+        std::process::exit(2);
+    }
+    match run(&argv) {
+        Ok(()) => {}
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "pretrain" => cmd_pretrain(&args),
+        "eval" => cmd_eval(&args),
+        "export" => cmd_export(&args),
+        "fixed-qat" => cmd_fixed_qat(&args),
+        "myqasr" => cmd_myqasr(&args),
+        "table1" => cmd_table(&args, 1),
+        "table2" => cmd_table(&args, 2),
+        "table3" => cmd_table(&args, 3),
+        "a2" => cmd_a2(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+/// Build a Config from --config plus CLI overrides.
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(Path::new(path))?,
+        None => Config::default(),
+    };
+    if let Some(v) = args.get("arch") {
+        cfg.arch = v.to_string();
+    }
+    if let Some(v) = args.get("direction") {
+        cfg.direction = DirKind::parse(v)?;
+        cfg.lr_gates = Config::paper_gate_lr(cfg.direction);
+    }
+    if let Some(v) = args.get("granularity") {
+        cfg.granularity = Granularity::parse(v)?;
+    }
+    if let Some(v) = args.get_f64("bound")? {
+        cfg.bound_rbop_percent = v;
+    }
+    if let Some(v) = args.get_usize("cgmq-epochs")? {
+        cfg.cgmq_epochs = v;
+    }
+    if let Some(v) = args.get_usize("pretrain-epochs")? {
+        cfg.pretrain_epochs = v;
+    }
+    if let Some(v) = args.get_usize("train-size")? {
+        cfg.train_size = v;
+    }
+    if let Some(v) = args.get_usize("test-size")? {
+        cfg.test_size = v;
+    }
+    if let Some(v) = args.get_usize("seed")? {
+        cfg.seed = v as u64;
+    }
+    if let Some(v) = args.get("out-dir") {
+        cfg.out_dir = v.to_string();
+    }
+    if let Some(v) = args.get("artifacts") {
+        cfg.artifacts_dir = v.to_string();
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let save = args.get("save").map(str::to_string);
+    let from = args.get("from-pretrained").map(str::to_string);
+    args.finish()?;
+    let out_dir = cfg.out_dir.clone();
+    let run_id = cfg.run_id();
+    let mut t = Trainer::new(cfg)?;
+    let result = match from {
+        Some(ckpt) => t.run_from_pretrained(Path::new(&ckpt))?,
+        None => t.run_full()?,
+    };
+    println!(
+        "{}: float acc {:.2}% | quantized acc {:.2}% @ RBOP {:.3}% (bound {:.2}%) sat={} mean bits {:.2}",
+        result.run_id,
+        100.0 * result.float_acc,
+        100.0 * result.quant_acc,
+        result.rbop_percent,
+        result.bound_rbop_percent,
+        result.satisfied,
+        result.mean_weight_bits
+    );
+    let dir = Path::new(&out_dir);
+    t.log.write_csv(&dir.join(format!("{run_id}.epochs.csv")))?;
+    std::fs::write(dir.join(format!("{run_id}.result.json")), result.to_json().to_string())?;
+    if let Some(save) = save {
+        t.final_model()?.save(Path::new(&save), t.arch.name)?;
+        println!("saved best constraint-satisfying snapshot to {save}");
+    }
+    println!("epoch log: {}", dir.join(format!("{run_id}.epochs.csv")).display());
+    Ok(())
+}
+
+fn cmd_pretrain(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let save = args.get("save").unwrap_or("runs/pretrained.ckpt").to_string();
+    args.finish()?;
+    let epochs = cfg.pretrain_epochs;
+    let mut t = Trainer::new(cfg)?;
+    t.pretrain(epochs)?;
+    let acc = t.evaluate_float()?;
+    t.save_params(Path::new(&save))?;
+    println!("pretrained {} epochs, float acc {:.2}%, saved {}", epochs, 100.0 * acc, save);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ckpt = args.get("ckpt").map(str::to_string);
+    args.finish()?;
+    let Some(ckpt) = ckpt else { bail!("eval needs --ckpt <snapshot>") };
+    let c = cgmq::checkpoint::Checkpoint::load(Path::new(&ckpt))?;
+    let mut t = Trainer::new(cfg)?;
+    t.params = c.get_all("params")?;
+    t.betas_w = c.get("betas_w")?.clone();
+    t.betas_a = c.get("betas_a")?.clone();
+    if let Ok(gw) = c.get_all("gates_w") {
+        t.gates.gates_w = gw;
+        t.gates.gates_a = c.get_all("gates_a")?;
+        let acc = t.evaluate()?;
+        let rbop = t.current_rbop()?;
+        println!("quantized acc {:.2}% @ RBOP {:.3}%", 100.0 * acc, rbop);
+    } else {
+        let acc = t.evaluate_float()?;
+        println!("float acc {:.2}%", 100.0 * acc);
+    }
+    Ok(())
+}
+
+fn cmd_export(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let ckpt = args.get("ckpt").map(str::to_string);
+    let out = args.get("out").unwrap_or("export.json").to_string();
+    args.finish()?;
+    let Some(ckpt) = ckpt else { bail!("export needs --ckpt <snapshot>") };
+    let report = cgmq::baselines::export_report(&cfg, Path::new(&ckpt))?;
+    std::fs::write(&out, report.to_string())?;
+    println!("wrote deployment report to {out}");
+    Ok(())
+}
+
+fn cmd_fixed_qat(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let bits = args.get_usize("bits")?.unwrap_or(8) as u32;
+    args.finish()?;
+    if !cgmq::BIT_LEVELS.contains(&bits) {
+        bail!("--bits must be one of {:?}", cgmq::BIT_LEVELS);
+    }
+    let epochs = cfg.cgmq_epochs;
+    let mut t = Trainer::new(cfg.clone())?;
+    t.pretrain(cfg.pretrain_epochs)?;
+    t.calibrate()?;
+    let r = fixed_qat::run(&mut t, bits, epochs)?;
+    println!(
+        "fixed {} bit QAT: acc {:.2}% @ RBOP {:.3}%",
+        r.bits,
+        100.0 * r.test_acc,
+        r.rbop_percent
+    );
+    Ok(())
+}
+
+fn cmd_myqasr(args: &Args) -> Result<()> {
+    let mut cfg = load_config(args)?;
+    args.finish()?;
+    cfg.granularity = Granularity::Layer;
+    let epochs = cfg.cgmq_epochs;
+    let mut t = Trainer::new(cfg.clone())?;
+    t.pretrain(cfg.pretrain_epochs)?;
+    t.calibrate()?;
+    t.learn_ranges(cfg.range_epochs)?;
+    let r = myqasr::run(&mut t, epochs)?;
+    println!(
+        "myQASR: acc {:.2}% @ RBOP {:.3}% sat={} assignment {:?}",
+        100.0 * r.test_acc,
+        r.rbop_percent,
+        r.satisfied,
+        r.assignment
+    );
+    Ok(())
+}
+
+fn cmd_table(args: &Args, which: usize) -> Result<()> {
+    let cfg = load_config(args)?;
+    args.finish()?;
+    let out = match which {
+        1 => bench_harness::table1(&cfg)?,
+        2 => bench_harness::table_sweep(&cfg, Granularity::Layer)?,
+        3 => bench_harness::table_sweep(&cfg, Granularity::Individual)?,
+        _ => unreachable!(),
+    };
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_a2(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let lambdas: Vec<f32> = match args.get("lambdas") {
+        Some(s) => s
+            .split(',')
+            .map(|p| p.trim().parse::<f32>().map_err(|_| anyhow::anyhow!("bad lambda '{p}'")))
+            .collect::<Result<_>>()?,
+        None => vec![1e-3, 1e-2, 1e-1, 1.0],
+    };
+    args.finish()?;
+    let out = bench_harness::penalty_comparison(&cfg, &lambdas)?;
+    println!("{out}");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    args.finish()?;
+    let artifacts = cgmq::runtime::ArtifactSet::open(Path::new(&cfg.artifacts_dir))?;
+    let m = artifacts.manifest();
+    println!("artifact dir: {}", cfg.artifacts_dir);
+    for (name, entry) in m.get("artifacts")?.as_obj()? {
+        let n_in = entry.get("inputs")?.as_arr()?.len();
+        let n_out = entry.get("outputs")?.as_arr()?.len();
+        println!("  {name}: {n_in} inputs -> {n_out} outputs ({})",
+            entry.get("file")?.as_str()?);
+    }
+    for arch_name in ["lenet5", "mlp"] {
+        let arch = cgmq::model::arch_by_name(arch_name)?;
+        println!(
+            "{arch_name}: {} params, fp32 {} GBOPs, floor RBOP {:.4}%",
+            arch.n_params(),
+            cgmq::cost::fp32_bops(&arch) as f64 / 1e9,
+            cgmq::cost::rbop_percent(&arch, cgmq::cost::floor_bops(&arch)),
+        );
+    }
+    Ok(())
+}

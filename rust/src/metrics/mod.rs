@@ -1,0 +1,167 @@
+//! Metrics: epoch records, accuracy computation, CSV/JSON logging.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One training-epoch record (any phase).
+#[derive(Debug, Clone)]
+pub struct EpochRecord {
+    pub phase: String,
+    pub epoch: usize,
+    pub train_loss: f64,
+    pub test_acc: f64,
+    /// Relative BOPs in percent (0 for float phases).
+    pub rbop_percent: f64,
+    /// Constraint satisfied at epoch end (float phases: true).
+    pub sat: bool,
+    pub mean_weight_bits: f64,
+    pub secs: f64,
+}
+
+impl EpochRecord {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("phase", Json::str(self.phase.clone())),
+            ("epoch", Json::num(self.epoch as f64)),
+            ("train_loss", Json::num(self.train_loss)),
+            ("test_acc", Json::num(self.test_acc)),
+            ("rbop_percent", Json::num(self.rbop_percent)),
+            ("sat", Json::Bool(self.sat)),
+            ("mean_weight_bits", Json::num(self.mean_weight_bits)),
+            ("secs", Json::num(self.secs)),
+        ])
+    }
+}
+
+/// Collects epoch records; writes CSV and JSON.
+#[derive(Debug, Default)]
+pub struct MetricsLog {
+    pub records: Vec<EpochRecord>,
+}
+
+impl MetricsLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn push(&mut self, r: EpochRecord) {
+        self.records.push(r);
+    }
+
+    pub fn last(&self) -> Option<&EpochRecord> {
+        self.records.last()
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::from(
+            "phase,epoch,train_loss,test_acc,rbop_percent,sat,mean_weight_bits,secs\n",
+        );
+        for r in &self.records {
+            s.push_str(&format!(
+                "{},{},{:.6},{:.4},{:.6},{},{:.3},{:.3}\n",
+                r.phase, r.epoch, r.train_loss, r.test_acc, r.rbop_percent, r.sat,
+                r.mean_weight_bits, r.secs
+            ));
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.records.iter().map(|r| r.to_json()).collect())
+    }
+
+    pub fn write_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(self.to_csv().as_bytes())?;
+        Ok(())
+    }
+
+    pub fn write_json(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, self.to_json().to_string())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+}
+
+/// Classification accuracy from logits rows vs labels, counting only the
+/// first `valid` rows (epoch-wrap padding excluded).
+pub fn accuracy(preds: &[usize], labels: &[i32], valid: usize) -> (u64, u64) {
+    let n = valid.min(preds.len()).min(labels.len());
+    let correct =
+        preds[..n].iter().zip(&labels[..n]).filter(|&(&p, &l)| p as i32 == l).count() as u64;
+    (correct, n as u64)
+}
+
+/// Simple wall-clock stopwatch for phase timing.
+pub struct Stopwatch(std::time::Instant);
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Self(std::time::Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(epoch: usize) -> EpochRecord {
+        EpochRecord {
+            phase: "cgmq".into(),
+            epoch,
+            train_loss: 0.5,
+            test_acc: 0.9,
+            rbop_percent: 1.5,
+            sat: true,
+            mean_weight_bits: 8.0,
+            secs: 1.0,
+        }
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let mut log = MetricsLog::new();
+        log.push(rec(0));
+        log.push(rec(1));
+        let csv = log.to_csv();
+        assert_eq!(csv.lines().count(), 3);
+        assert!(csv.starts_with("phase,epoch"));
+        assert!(csv.contains("cgmq,1,"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let mut log = MetricsLog::new();
+        log.push(rec(3));
+        let j = crate::util::json::parse(&log.to_json().to_string()).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("epoch").unwrap().as_usize().unwrap(), 3);
+        assert!(arr[0].get("sat").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn accuracy_respects_valid() {
+        let preds = vec![1, 2, 3, 0];
+        let labels = vec![1, 2, 9, 0];
+        let (c, n) = accuracy(&preds, &labels, 4);
+        assert_eq!((c, n), (3, 4));
+        // last sample is padding
+        let (c, n) = accuracy(&preds, &labels, 2);
+        assert_eq!((c, n), (2, 2));
+    }
+}

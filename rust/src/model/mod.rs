@@ -1,0 +1,274 @@
+//! Model metadata registry: layer specs, parameter/gate shapes, artifact
+//! binding.
+//!
+//! The specs are the single Rust-side source of truth for tensor shapes and
+//! orderings. They are hard-coded to mirror `python/compile/arch.py` and
+//! *verified against* `artifacts/manifest.json` at load time
+//! (`runtime::ArtifactSet::verify_arch`), so any drift between the compile
+//! path and the run path fails fast at startup instead of silently feeding
+//! tensors into the wrong executable slot.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use crate::util::rng::SplitMix64;
+
+/// One layer of a feed-forward architecture.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerSpec {
+    pub name: &'static str,
+    pub kind: LayerKind,
+    /// OIHW for conv, (in, out) for dense.
+    pub w_shape: Vec<usize>,
+    pub b_shape: Vec<usize>,
+    /// Feature dims of the (pre-pool) activation, no batch dim.
+    pub act_shape: Vec<usize>,
+    /// Square max-pool window/stride applied after the activation (0 = none).
+    pub pool: usize,
+    /// Whether this layer's activation is fake-quantized (last layer: false).
+    pub quant_act: bool,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Dense,
+}
+
+impl LayerSpec {
+    /// Multiply-accumulates per sample (BOP building block, paper §2.5).
+    pub fn macs(&self) -> u64 {
+        match self.kind {
+            LayerKind::Conv => {
+                let (o, i, kh, kw) =
+                    (self.w_shape[0], self.w_shape[1], self.w_shape[2], self.w_shape[3]);
+                let (oh, ow) = (self.act_shape[1], self.act_shape[2]);
+                (o * oh * ow * i * kh * kw) as u64
+            }
+            LayerKind::Dense => (self.w_shape[0] * self.w_shape[1]) as u64,
+        }
+    }
+
+    /// Fan-in of one output unit (weights feeding one activation).
+    pub fn fan_in(&self) -> usize {
+        match self.kind {
+            LayerKind::Conv => self.w_shape[1] * self.w_shape[2] * self.w_shape[3],
+            LayerKind::Dense => self.w_shape[0],
+        }
+    }
+
+    /// Number of output units (activations) of this layer.
+    pub fn n_units(&self) -> usize {
+        self.act_shape.iter().product()
+    }
+
+    pub fn w_len(&self) -> usize {
+        self.w_shape.iter().product()
+    }
+}
+
+/// A full architecture (mirror of python ArchSpec).
+#[derive(Debug, Clone)]
+pub struct ArchSpec {
+    pub name: &'static str,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<LayerSpec>,
+    pub train_batch: usize,
+    pub eval_batch: usize,
+    pub input_bits: u32,
+}
+
+impl ArchSpec {
+    pub fn quant_act_layers(&self) -> impl Iterator<Item = (usize, &LayerSpec)> {
+        self.layers.iter().enumerate().filter(|(_, l)| l.quant_act)
+    }
+
+    pub fn n_quant_act(&self) -> usize {
+        self.layers.iter().filter(|l| l.quant_act).count()
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.layers.iter().map(|l| l.w_len() + l.b_shape.iter().product::<usize>()).sum()
+    }
+
+    /// Parameter tensor names in artifact order: w, b per layer.
+    pub fn param_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            out.push(format!("{}.w", l.name));
+            out.push(format!("{}.b", l.name));
+        }
+        out
+    }
+
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        for l in &self.layers {
+            out.push(l.w_shape.clone());
+            out.push(l.b_shape.clone());
+        }
+        out
+    }
+
+    /// He-normal initial parameters (weights) + zero biases, deterministic.
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = SplitMix64::new(seed);
+        let mut out = Vec::new();
+        for l in &self.layers {
+            out.push(Tensor::he_normal(&l.w_shape, l.fan_in(), &mut rng));
+            out.push(Tensor::zeros(&l.b_shape));
+        }
+        out
+    }
+
+    /// Per-sample input element count.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// The paper's evaluation model: LeNet-5 (Caffe variant, as in Bayesian Bits).
+pub fn lenet5() -> ArchSpec {
+    ArchSpec {
+        name: "lenet5",
+        input_shape: vec![1, 28, 28],
+        layers: vec![
+            LayerSpec {
+                name: "conv1",
+                kind: LayerKind::Conv,
+                w_shape: vec![20, 1, 5, 5],
+                b_shape: vec![20],
+                act_shape: vec![20, 24, 24],
+                pool: 2,
+                quant_act: true,
+            },
+            LayerSpec {
+                name: "conv2",
+                kind: LayerKind::Conv,
+                w_shape: vec![50, 20, 5, 5],
+                b_shape: vec![50],
+                act_shape: vec![50, 8, 8],
+                pool: 2,
+                quant_act: true,
+            },
+            LayerSpec {
+                name: "fc1",
+                kind: LayerKind::Dense,
+                w_shape: vec![800, 500],
+                b_shape: vec![500],
+                act_shape: vec![500],
+                pool: 0,
+                quant_act: true,
+            },
+            LayerSpec {
+                name: "fc2",
+                kind: LayerKind::Dense,
+                w_shape: vec![500, 10],
+                b_shape: vec![10],
+                act_shape: vec![10],
+                pool: 0,
+                quant_act: false,
+            },
+        ],
+        train_batch: 128,
+        eval_batch: 256,
+        input_bits: 8,
+    }
+}
+
+/// CI-scale model for tests/examples: 784-128-64-10 MLP.
+pub fn mlp() -> ArchSpec {
+    ArchSpec {
+        name: "mlp",
+        input_shape: vec![784],
+        layers: vec![
+            LayerSpec {
+                name: "fc1",
+                kind: LayerKind::Dense,
+                w_shape: vec![784, 128],
+                b_shape: vec![128],
+                act_shape: vec![128],
+                pool: 0,
+                quant_act: true,
+            },
+            LayerSpec {
+                name: "fc2",
+                kind: LayerKind::Dense,
+                w_shape: vec![128, 64],
+                b_shape: vec![64],
+                act_shape: vec![64],
+                pool: 0,
+                quant_act: true,
+            },
+            LayerSpec {
+                name: "fc3",
+                kind: LayerKind::Dense,
+                w_shape: vec![64, 10],
+                b_shape: vec![10],
+                act_shape: vec![10],
+                pool: 0,
+                quant_act: false,
+            },
+        ],
+        train_batch: 128,
+        eval_batch: 256,
+        input_bits: 8,
+    }
+}
+
+/// Look up an architecture by name.
+pub fn arch_by_name(name: &str) -> Result<ArchSpec> {
+    match name {
+        "lenet5" => Ok(lenet5()),
+        "mlp" => Ok(mlp()),
+        other => bail!("unknown architecture '{other}' (known: lenet5, mlp)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lenet5_param_count_matches_paper_model() {
+        assert_eq!(lenet5().n_params(), 431_080);
+    }
+
+    #[test]
+    fn mlp_param_count() {
+        assert_eq!(mlp().n_params(), 784 * 128 + 128 + 128 * 64 + 64 + 64 * 10 + 10);
+    }
+
+    #[test]
+    fn lenet5_macs() {
+        let a = lenet5();
+        let macs: Vec<u64> = a.layers.iter().map(|l| l.macs()).collect();
+        assert_eq!(macs, vec![288_000, 1_600_000, 400_000, 5_000]);
+    }
+
+    #[test]
+    fn fan_in() {
+        let a = lenet5();
+        assert_eq!(a.layers[0].fan_in(), 25);
+        assert_eq!(a.layers[1].fan_in(), 500);
+        assert_eq!(a.layers[2].fan_in(), 800);
+    }
+
+    #[test]
+    fn init_params_deterministic_and_shaped() {
+        let a = mlp();
+        let p1 = a.init_params(9);
+        let p2 = a.init_params(9);
+        assert_eq!(p1, p2);
+        assert_eq!(p1.len(), 6);
+        assert_eq!(p1[0].shape(), &[784, 128]);
+        assert_eq!(p1[1].data().iter().map(|x| x.abs()).sum::<f32>(), 0.0); // zero bias
+        let p3 = a.init_params(10);
+        assert_ne!(p1, p3);
+    }
+
+    #[test]
+    fn unknown_arch_rejected() {
+        assert!(arch_by_name("resnet18").is_err());
+    }
+}

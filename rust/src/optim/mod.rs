@@ -1,0 +1,177 @@
+//! Optimizers (paper Section 4.2): Adam for weights and quantization
+//! ranges, plain gradient descent (no momentum) for the gate variables.
+//!
+//! All state lives on the host; updates are elementwise over the parameter
+//! tensors returned by the XLA step artifacts.
+
+use anyhow::Result;
+
+use crate::tensor::Tensor;
+
+/// Adam (Kingma & Ba, 2015) with the standard bias correction.
+#[derive(Debug, Clone)]
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    t: u64,
+}
+
+impl Adam {
+    pub fn new(lr: f32, shapes: &[Vec<usize>]) -> Self {
+        Self {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            v: shapes.iter().map(|s| Tensor::zeros(s)).collect(),
+            t: 0,
+        }
+    }
+
+    /// One update step; `params[i] -= lr * mhat / (sqrt(vhat) + eps)`.
+    pub fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(params.len() == grads.len(), "params/grads length mismatch");
+        anyhow::ensure!(params.len() == self.m.len(), "optimizer built for different params");
+        self.t += 1;
+        let b1t = 1.0 - self.beta1.powi(self.t as i32);
+        let b2t = 1.0 - self.beta2.powi(self.t as i32);
+        for ((p, g), (m, v)) in
+            params.iter_mut().zip(grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
+        {
+            anyhow::ensure!(p.shape() == g.shape(), "param/grad shape mismatch");
+            let (b1, b2, eps, lr) = (self.beta1, self.beta2, self.eps, self.lr);
+            m.zip_inplace(g, |m, g| b1 * m + (1.0 - b1) * g)?;
+            v.zip_inplace(g, |v, g| b2 * v + (1.0 - b2) * g * g)?;
+            let pd = p.data_mut();
+            let md = m.data();
+            let vd = v.data();
+            for i in 0..pd.len() {
+                let mhat = md[i] / b1t;
+                let vhat = vd[i] / b2t;
+                pd[i] -= lr * mhat / (vhat.sqrt() + eps);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn reset(&mut self) {
+        self.t = 0;
+        for t in self.m.iter_mut().chain(self.v.iter_mut()) {
+            t.map_inplace(|_| 0.0);
+        }
+    }
+}
+
+/// Plain SGD (used by the float-pretraining fallback and tests).
+#[derive(Debug, Clone)]
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Sgd {
+    pub fn new(lr: f32) -> Self {
+        Self { lr }
+    }
+
+    pub fn step(&self, params: &mut [Tensor], grads: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(params.len() == grads.len(), "params/grads length mismatch");
+        for (p, g) in params.iter_mut().zip(grads) {
+            let lr = self.lr;
+            p.zip_inplace(g, move |p, g| p - lr * g)?;
+        }
+        Ok(())
+    }
+}
+
+/// Gate update: plain GD over the constructed direction, `g -= eta_g * dir`
+/// (paper Section 2.2 — explicitly *without* momentum, since dir is not a
+/// gradient and momentum would mix Sat and Unsat phases).
+#[derive(Debug, Clone)]
+pub struct GateGd {
+    pub lr: f32,
+}
+
+impl GateGd {
+    pub fn new(lr: f32) -> Self {
+        Self { lr }
+    }
+
+    pub fn step(&self, gates: &mut [Tensor], dirs: &[Tensor]) -> Result<()> {
+        anyhow::ensure!(gates.len() == dirs.len(), "gates/dirs length mismatch");
+        for (g, d) in gates.iter_mut().zip(dirs) {
+            let lr = self.lr;
+            g.zip_inplace(d, move |g, d| g - lr * d)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Adam on a convex quadratic converges to the minimum.
+    #[test]
+    fn adam_minimizes_quadratic() {
+        let mut p = vec![Tensor::new(vec![2], vec![5.0, -3.0]).unwrap()];
+        let mut adam = Adam::new(0.1, &[vec![2]]);
+        for _ in 0..500 {
+            let g = p[0].map(|x| 2.0 * x); // d/dx x^2
+            adam.step(&mut p, &[g]).unwrap();
+        }
+        assert!(p[0].abs_max() < 1e-3, "{:?}", p[0].data());
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // Bias correction makes the first step ~= lr * sign(grad).
+        let mut p = vec![Tensor::scalar(0.0)];
+        let mut adam = Adam::new(0.01, &[vec![]]);
+        adam.step(&mut p, &[Tensor::scalar(3.7)]).unwrap();
+        assert!((p[0].data()[0] + 0.01).abs() < 1e-4);
+    }
+
+    #[test]
+    fn sgd_step() {
+        let mut p = vec![Tensor::new(vec![2], vec![1.0, 2.0]).unwrap()];
+        Sgd::new(0.5).step(&mut p, &[Tensor::new(vec![2], vec![2.0, -2.0]).unwrap()]).unwrap();
+        assert_eq!(p[0].data(), &[0.0, 3.0]);
+    }
+
+    #[test]
+    fn gate_gd_descends_direction() {
+        let mut g = vec![Tensor::scalar(5.5)];
+        GateGd::new(0.01).step(&mut g, &[Tensor::scalar(100.0)]).unwrap();
+        assert!((g[0].data()[0] - 4.5).abs() < 1e-6);
+        // negative dir grows the gate
+        GateGd::new(0.01).step(&mut g, &[Tensor::scalar(-50.0)]).unwrap();
+        assert!((g[0].data()[0] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn mismatched_shapes_rejected() {
+        let mut p = vec![Tensor::zeros(&[2])];
+        let mut adam = Adam::new(0.1, &[vec![2]]);
+        assert!(adam.step(&mut p, &[Tensor::zeros(&[3])]).is_err());
+        assert!(Sgd::new(0.1).step(&mut p, &[]).is_err());
+    }
+
+    #[test]
+    fn adam_reset_clears_state() {
+        let mut p = vec![Tensor::scalar(1.0)];
+        let mut adam = Adam::new(0.1, &[vec![]]);
+        adam.step(&mut p, &[Tensor::scalar(1.0)]).unwrap();
+        adam.reset();
+        let mut q = vec![Tensor::scalar(1.0)];
+        let mut fresh = Adam::new(0.1, &[vec![]]);
+        fresh.step(&mut q, &[Tensor::scalar(1.0)]).unwrap();
+        let mut p2 = vec![Tensor::scalar(1.0)];
+        adam.step(&mut p2, &[Tensor::scalar(1.0)]).unwrap();
+        assert_eq!(p2[0].data()[0], q[0].data()[0]);
+    }
+}

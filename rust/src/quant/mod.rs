@@ -1,0 +1,290 @@
+//! Rust mirror of the paper's quantization math (Eq. 1, 3, 4).
+//!
+//! The *training-path* quantization happens inside the AOT-compiled XLA
+//! artifacts (L1 Pallas kernel); this module re-implements the same math on
+//! the host for (a) BOP cost accounting, (b) the export path (deployable
+//! integer weights), (c) the penalty/myQASR baselines, and (d) the
+//! cross-language golden tests against `python/compile/kernels/ref.py`.
+//!
+//! Every numerical convention matches ref.py bit-for-bit: f32 arithmetic,
+//! identity-clip at >= 24 bits, step-size floor 1e-12, and the saturated
+//! integer grid (signed: [-(2^(b-1)-1), 2^(b-1)-1]; unsigned: [0, 2^b-1]).
+
+use crate::tensor::Tensor;
+
+/// Step-size floor (mirror of ref.EPS_SCALE).
+pub const EPS_SCALE: f32 = 1e-12;
+
+/// Bit-widths at/above which fake quantization degenerates to clip.
+pub const IDENTITY_BITS: u32 = 24;
+
+/// clip_{[alpha, beta]} from the paper.
+#[inline]
+pub fn clip(x: f32, alpha: f32, beta: f32) -> f32 {
+    x.max(alpha).min(beta)
+}
+
+/// Eq. 1: fake-quantize one value to `bits` bits on the range implied by
+/// `beta` (alpha = -beta if signed else 0), saturated integer grid.
+#[inline]
+pub fn quantize(x: f32, bits: u32, beta: f32, signed: bool) -> f32 {
+    let alpha = if signed { -beta } else { 0.0 };
+    let v = clip(x, alpha, beta);
+    if bits >= IDENTITY_BITS {
+        return v;
+    }
+    let levels = ((1u64 << bits) - 1) as f32;
+    let scale = ((beta - alpha) / levels).max(EPS_SCALE);
+    let n_max = if signed { ((1u64 << (bits - 1)) - 1) as f32 } else { levels };
+    let n_min = if signed { -n_max } else { 0.0 };
+    let n = (v / scale).round_ties_even().max(n_min).min(n_max);
+    scale * n
+}
+
+/// Eq. 4: staircase transform gate value -> bit-width (0 = pruned).
+#[inline]
+pub fn transform_t(g: f32) -> u32 {
+    if g <= 0.0 {
+        0
+    } else if g <= 1.0 {
+        2
+    } else if g <= 2.0 {
+        4
+    } else if g <= 3.0 {
+        8
+    } else if g <= 4.0 {
+        16
+    } else {
+        32
+    }
+}
+
+/// Inverse-ish of T: the smallest gate value whose T() equals `bits`
+/// (midpoint of the step, so small perturbations don't change the level).
+pub fn gate_for_bits(bits: u32) -> f32 {
+    match bits {
+        0 => -0.5,
+        2 => 0.5,
+        4 => 1.5,
+        8 => 2.5,
+        16 => 3.5,
+        _ => 5.5,
+    }
+}
+
+/// Eq. 3: gated residual-decomposition quantizer for one element.
+///
+/// Uses the telescoping identity of the nested residual sum: with masks
+/// G_b = [T(g) >= b], Eq. 3 collapses exactly to Q(x, T(g), ...) (0 when
+/// T(g) = 0). `gated_quantize_reference` keeps the literal five-level form;
+/// the unit tests assert both agree on the full gate range (§Perf L3
+/// iteration 1: 5 quantizations -> 1, ~5x on the export/BOP path).
+#[inline]
+pub fn gated_quantize(x: f32, g: f32, beta: f32, signed: bool) -> f32 {
+    match transform_t(g) {
+        0 => 0.0,
+        bits => quantize(x, bits, beta, signed),
+    }
+}
+
+/// Literal Eq. 3 (all five residual levels), kept as the structural
+/// reference the Pallas kernel mirrors; used by tests to pin the telescoped
+/// fast path above.
+#[inline]
+pub fn gated_quantize_reference(x: f32, g: f32, beta: f32, signed: bool) -> f32 {
+    let t = transform_t(g);
+    let m = |b: u32| -> f32 {
+        if t >= b {
+            1.0
+        } else {
+            0.0
+        }
+    };
+    let q2 = quantize(x, 2, beta, signed);
+    let q4 = quantize(x, 4, beta, signed);
+    let q8 = quantize(x, 8, beta, signed);
+    let q16 = quantize(x, 16, beta, signed);
+    let q32 = quantize(x, 32, beta, signed);
+    m(2) * (q2
+        + m(4) * ((q4 - q2) + m(8) * ((q8 - q4) + m(16) * ((q16 - q8) + m(32) * (q32 - q16)))))
+}
+
+/// Tensor version of Eq. 3 (same-shape gate tensor).
+pub fn gated_quantize_tensor(x: &Tensor, g: &Tensor, beta: f32, signed: bool) -> Tensor {
+    debug_assert_eq!(x.shape(), g.shape());
+    let data: Vec<f32> = x
+        .data()
+        .iter()
+        .zip(g.data().iter())
+        .map(|(&xv, &gv)| gated_quantize(xv, gv, beta, signed))
+        .collect();
+    Tensor::new(x.shape().to_vec(), data).expect("same shape")
+}
+
+/// Materialize per-element bit-widths T(g) for a gate tensor.
+pub fn bitwidths(g: &Tensor) -> Vec<u32> {
+    g.data().iter().map(|&v| transform_t(v)).collect()
+}
+
+/// Integer code of a quantized value (export path): the grid index n such
+/// that q = scale * n. Returns (n, scale).
+pub fn integer_code(x: f32, bits: u32, beta: f32, signed: bool) -> (i64, f32) {
+    assert!(bits < IDENTITY_BITS, "integer export only for real bit-widths");
+    let alpha = if signed { -beta } else { 0.0 };
+    let v = clip(x, alpha, beta);
+    let levels = ((1u64 << bits) - 1) as f32;
+    let scale = ((beta - alpha) / levels).max(EPS_SCALE);
+    let n_max = if signed { ((1i64 << (bits - 1)) - 1) as f32 } else { levels };
+    let n_min = if signed { -n_max } else { 0.0 };
+    let n = (v / scale).round_ties_even().max(n_min).min(n_max);
+    (n as i64, scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::BIT_LEVELS;
+
+    #[test]
+    fn staircase_matches_paper_table() {
+        // Eq. 4 boundary semantics: intervals are left-open.
+        let cases = [
+            (-1.0, 0),
+            (0.0, 0),
+            (0.25, 2),
+            (0.5, 2),
+            (1.0, 2),
+            (1.5, 4),
+            (2.0, 4),
+            (2.5, 8),
+            (3.0, 8),
+            (3.5, 16),
+            (4.0, 16),
+            (4.5, 32),
+            (5.5, 32),
+        ];
+        for (g, b) in cases {
+            assert_eq!(transform_t(g), b, "T({g})");
+        }
+    }
+
+    #[test]
+    fn gate_for_bits_roundtrips() {
+        for b in BIT_LEVELS {
+            assert_eq!(transform_t(gate_for_bits(b)), b);
+        }
+        assert_eq!(transform_t(gate_for_bits(0)), 0);
+    }
+
+    #[test]
+    fn quantize_respects_range_and_levels() {
+        let mut rng = crate::util::rng::SplitMix64::new(0);
+        for bits in [2u32, 4, 8] {
+            let mut values = std::collections::BTreeSet::new();
+            for _ in 0..4000 {
+                let x = rng.uniform(-3.0, 3.0) as f32;
+                let q = quantize(x, bits, 1.0, true);
+                assert!(q.abs() <= 1.0 + 1e-6);
+                values.insert((q * 1e6).round() as i64);
+            }
+            assert!(values.len() <= (1usize << bits), "bits={bits}");
+            assert!(values.contains(&0), "grid contains zero");
+        }
+    }
+
+    #[test]
+    fn quantize_32_is_clip() {
+        for x in [-5.0f32, -0.3, 0.0, 0.7, 9.0] {
+            assert_eq!(quantize(x, 32, 1.5, true), clip(x, -1.5, 1.5));
+        }
+    }
+
+    #[test]
+    fn unsigned_grid_nonnegative() {
+        let mut rng = crate::util::rng::SplitMix64::new(1);
+        for _ in 0..1000 {
+            let x = rng.uniform(-2.0, 2.0) as f32;
+            let q = quantize(x, 4, 1.0, false);
+            assert!((0.0..=1.0 + 1e-6).contains(&q));
+        }
+    }
+
+    #[test]
+    fn gated_telescopes_to_direct() {
+        // With a uniform gate, Eq. 3 == Eq. 1 at T(g) bits.
+        let mut rng = crate::util::rng::SplitMix64::new(2);
+        for (g, bits) in [(0.7f32, 2u32), (1.5, 4), (2.5, 8), (3.5, 16), (5.0, 32)] {
+            for _ in 0..500 {
+                let x = rng.uniform(-2.0, 2.0) as f32;
+                let a = gated_quantize(x, g, 1.0, true);
+                let b = quantize(x, bits, 1.0, true);
+                assert!((a - b).abs() < 1e-6, "g={g} x={x}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn fast_path_matches_reference_decomposition() {
+        // The telescoped gated_quantize must equal the literal Eq. 3 for
+        // every gate level, both signednesses, clipped and interior values.
+        let mut rng = crate::util::rng::SplitMix64::new(9);
+        for _ in 0..5000 {
+            let x = rng.uniform(-3.0, 3.0) as f32;
+            let g = rng.uniform(-1.0, 6.0) as f32;
+            for signed in [true, false] {
+                let fast = gated_quantize(x, g, 1.1, signed);
+                let slow = gated_quantize_reference(x, g, 1.1, signed);
+                assert!((fast - slow).abs() < 1e-7, "x={x} g={g} signed={signed}");
+            }
+        }
+    }
+
+    #[test]
+    fn gated_zero_gate_prunes() {
+        assert_eq!(gated_quantize(0.8, -0.1, 1.0, true), 0.0);
+        assert_eq!(gated_quantize(-0.8, 0.0, 1.0, true), 0.0);
+    }
+
+    #[test]
+    fn error_decreases_with_bits() {
+        let mut rng = crate::util::rng::SplitMix64::new(3);
+        let xs: Vec<f32> = (0..8192).map(|_| rng.uniform(-1.5, 1.5) as f32).collect();
+        let mut last = f64::INFINITY;
+        for bits in BIT_LEVELS {
+            let mse: f64 = xs
+                .iter()
+                .map(|&x| {
+                    let e = (quantize(x, bits, 1.5, true) - x) as f64;
+                    e * e
+                })
+                .sum::<f64>()
+                / xs.len() as f64;
+            assert!(mse <= last + 1e-12, "bits={bits}");
+            last = mse;
+        }
+        assert!(last < 1e-10);
+    }
+
+    #[test]
+    fn integer_code_consistent() {
+        for x in [-0.9f32, -0.2, 0.0, 0.4, 1.3] {
+            let (n, scale) = integer_code(x, 4, 1.0, true);
+            let q = quantize(x, 4, 1.0, true);
+            assert!(((n as f32) * scale - q).abs() < 1e-7);
+            assert!(n.abs() <= 7);
+        }
+    }
+
+    #[test]
+    fn tensor_version_matches_scalar() {
+        let mut rng = crate::util::rng::SplitMix64::new(4);
+        let x: Vec<f32> = (0..257).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        let g: Vec<f32> = (0..257).map(|_| rng.uniform(-0.5, 5.5) as f32).collect();
+        let xt = Tensor::new(vec![257], x.clone()).unwrap();
+        let gt = Tensor::new(vec![257], g.clone()).unwrap();
+        let out = gated_quantize_tensor(&xt, &gt, 1.0, true);
+        for i in 0..257 {
+            assert_eq!(out.data()[i], gated_quantize(x[i], g[i], 1.0, true));
+        }
+    }
+}

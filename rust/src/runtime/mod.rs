@@ -1,0 +1,311 @@
+//! PJRT runtime: load + execute the AOT-compiled HLO-text artifacts.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`. The
+//! interchange format is HLO *text* (see `python/compile/aot.py` — jax
+//! ≥ 0.5 serialized protos are rejected by xla_extension 0.5.1).
+//!
+//! `ArtifactSet` is manifest-driven: `artifacts/manifest.json` records the
+//! exact input/output order, shapes and dtypes of every artifact, and every
+//! `Executable::run` call validates its inputs against that record, so a
+//! compile-path/run-path drift fails loudly with tensor names instead of
+//! producing garbage.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ArchSpec;
+use crate::tensor::{Tensor, TensorI32};
+use crate::util::json::{self, Json};
+
+/// Input/output tensor spec from the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" => Ok(Dtype::F32),
+            "int32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype '{other}'"),
+        }
+    }
+}
+
+/// A typed argument for an artifact call.
+#[derive(Debug, Clone, Copy)]
+pub enum Arg<'a> {
+    F32(&'a Tensor),
+    I32(&'a TensorI32),
+}
+
+impl<'a> Arg<'a> {
+    fn shape(&self) -> &[usize] {
+        match self {
+            Arg::F32(t) => t.shape(),
+            Arg::I32(t) => &t.shape,
+        }
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            Arg::F32(_) => Dtype::F32,
+            Arg::I32(_) => Dtype::I32,
+        }
+    }
+}
+
+/// Cumulative execution statistics for one artifact (perf reporting).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+/// One compiled artifact + its manifest contract.
+pub struct Executable {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<String>,
+    exe: xla::PjRtLoadedExecutable,
+    stats: std::cell::Cell<ExecStats>,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns output tensors in manifest order.
+    ///
+    /// The lowered modules return a tuple (aot.py lowers with
+    /// `return_tuple=True`), which is decomposed here.
+    pub fn run(&self, args: &[Arg]) -> Result<Vec<Tensor>> {
+        self.validate(args)?;
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(|a| -> Result<xla::Literal> {
+                match a {
+                    Arg::F32(t) => {
+                        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+                        Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+                    }
+                    Arg::I32(t) => {
+                        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+                        Ok(xla::Literal::vec1(&t.data).reshape(&dims)?)
+                    }
+                }
+            })
+            .collect::<Result<_>>()?;
+
+        let t0 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?;
+        let tuple = result[0][0].to_literal_sync()?.to_tuple()?;
+        let mut s = self.stats.get();
+        s.calls += 1;
+        s.total_secs += t0.elapsed().as_secs_f64();
+        self.stats.set(s);
+
+        if tuple.len() != self.outputs.len() {
+            bail!(
+                "{}: artifact returned {} outputs, manifest says {}",
+                self.name,
+                tuple.len(),
+                self.outputs.len()
+            );
+        }
+        tuple
+            .into_iter()
+            .enumerate()
+            .map(|(i, lit)| {
+                let shape = lit.array_shape().with_context(|| {
+                    format!("{}: output '{}' shape", self.name, self.outputs[i])
+                })?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<f32>().with_context(|| {
+                    format!("{}: output '{}' to f32", self.name, self.outputs[i])
+                })?;
+                Tensor::new(dims, data)
+            })
+            .collect()
+    }
+
+    fn validate(&self, args: &[Arg]) -> Result<()> {
+        if args.len() != self.inputs.len() {
+            bail!("{}: got {} args, manifest wants {}", self.name, args.len(), self.inputs.len());
+        }
+        for (arg, spec) in args.iter().zip(&self.inputs) {
+            if arg.shape() != spec.shape.as_slice() {
+                bail!(
+                    "{}: input '{}' shape {:?} != manifest {:?}",
+                    self.name,
+                    spec.name,
+                    arg.shape(),
+                    spec.shape
+                );
+            }
+            if arg.dtype() != spec.dtype {
+                bail!(
+                    "{}: input '{}' dtype {:?} != manifest {:?}",
+                    self.name,
+                    spec.name,
+                    arg.dtype(),
+                    spec.dtype
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        self.stats.get()
+    }
+}
+
+/// All compiled artifacts of one run + the parsed manifest.
+pub struct ArtifactSet {
+    pub dir: PathBuf,
+    manifest: Json,
+    executables: HashMap<String, Executable>,
+    client: xla::PjRtClient,
+}
+
+impl ArtifactSet {
+    /// Open the artifact directory and start a PJRT CPU client. No
+    /// executables are compiled yet — `load` compiles on demand.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        if !manifest_path.exists() {
+            bail!(
+                "{} not found — run `make artifacts` first (python AOT compile path)",
+                manifest_path.display()
+            );
+        }
+        let manifest = json::parse_file(&manifest_path)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { dir: dir.to_path_buf(), manifest, executables: HashMap::new(), client })
+    }
+
+    /// Compile one artifact by name (idempotent).
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.executables.contains_key(name) {
+            let entry = self
+                .manifest
+                .get("artifacts")?
+                .opt(name)
+                .with_context(|| format!("artifact '{name}' not in manifest"))?;
+            let file = self.dir.join(entry.get("file")?.as_str()?);
+            let inputs = entry
+                .get("inputs")?
+                .as_arr()?
+                .iter()
+                .map(|io| -> Result<IoSpec> {
+                    Ok(IoSpec {
+                        name: io.get("name")?.as_str()?.to_string(),
+                        shape: io.get("shape")?.as_usize_vec()?,
+                        dtype: Dtype::parse(io.get("dtype")?.as_str()?)?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = entry
+                .get("outputs")?
+                .as_arr()?
+                .iter()
+                .map(|o| Ok(o.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?;
+
+            let proto = xla::HloModuleProto::from_text_file(
+                file.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", file.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("PJRT compile of {name}"))?;
+            self.executables.insert(
+                name.to_string(),
+                Executable {
+                    name: name.to_string(),
+                    inputs,
+                    outputs,
+                    exe,
+                    stats: std::cell::Cell::new(ExecStats::default()),
+                },
+            );
+        }
+        Ok(&self.executables[name])
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Executable> {
+        self.executables.get(name).with_context(|| format!("artifact '{name}' not loaded"))
+    }
+
+    /// Verify that the Rust-side ArchSpec matches the manifest's record of
+    /// the Python-side arch (names, kinds, shapes, MACs). Startup guard.
+    pub fn verify_arch(&self, arch: &ArchSpec) -> Result<()> {
+        let rec = self
+            .manifest
+            .get("archs")?
+            .opt(arch.name)
+            .with_context(|| format!("arch '{}' not in manifest", arch.name))?;
+        let in_shape = rec.get("input_shape")?.as_usize_vec()?;
+        if in_shape != arch.input_shape {
+            bail!("{}: input_shape {:?} != manifest {:?}", arch.name, arch.input_shape, in_shape);
+        }
+        if rec.get("train_batch")?.as_usize()? != arch.train_batch
+            || rec.get("eval_batch")?.as_usize()? != arch.eval_batch
+        {
+            bail!("{}: batch sizes drifted from manifest", arch.name);
+        }
+        let layers = rec.get("layers")?.as_arr()?;
+        if layers.len() != arch.layers.len() {
+            bail!("{}: {} layers != manifest {}", arch.name, arch.layers.len(), layers.len());
+        }
+        for (l, lr) in arch.layers.iter().zip(layers) {
+            if lr.get("name")?.as_str()? != l.name {
+                bail!("{}: layer name mismatch {}", arch.name, l.name);
+            }
+            if lr.get("w_shape")?.as_usize_vec()? != l.w_shape
+                || lr.get("act_shape")?.as_usize_vec()? != l.act_shape
+            {
+                bail!("{}: layer {} shape drifted", arch.name, l.name);
+            }
+            if lr.get("macs")?.as_usize()? as u64 != l.macs() {
+                bail!("{}: layer {} MACs drifted", arch.name, l.name);
+            }
+            if lr.get("quant_act")?.as_bool()? != l.quant_act {
+                bail!("{}: layer {} quant_act drifted", arch.name, l.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-artifact cumulative execution stats.
+    pub fn all_stats(&self) -> Vec<(String, ExecStats)> {
+        let mut v: Vec<_> =
+            self.executables.iter().map(|(k, e)| (k.clone(), e.stats())).collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    }
+
+    pub fn manifest(&self) -> &Json {
+        &self.manifest
+    }
+}
+
+/// Default artifact directory: `$CGMQ_ARTIFACTS` or `./artifacts`.
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("CGMQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}

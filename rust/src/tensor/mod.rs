@@ -1,0 +1,226 @@
+//! Minimal host tensor used by the L3 coordinator.
+//!
+//! The heavy math (fwd/bwd) runs inside the AOT-compiled XLA artifacts; the
+//! coordinator only needs dense f32 host tensors for parameters, gates,
+//! gradients and the elementwise dir/optimizer updates, plus i32 label
+//! batches. Row-major (C) layout, matching XLA literal layout for the
+//! shapes we exchange.
+
+use anyhow::{bail, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape, data })
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    /// He-normal init (std = sqrt(2 / fan_in)) from the deterministic RNG.
+    pub fn he_normal(shape: &[usize], fan_in: usize, rng: &mut crate::util::rng::SplitMix64) -> Self {
+        let std = (2.0 / fan_in as f64).sqrt();
+        let n: usize = shape.iter().product();
+        let data = (0..n).map(|_| (rng.gauss() * std) as f32).collect();
+        Self { shape: shape.to_vec(), data }
+    }
+
+    // -------------------------------------------------------------- access
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elements", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {} elements to {:?}", self.data.len(), shape);
+        }
+        self.shape = shape;
+        Ok(self)
+    }
+
+    // ---------------------------------------------------------- elementwise
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Self {
+        Self { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// self[i] = f(self[i], other[i]) — shapes must match.
+    pub fn zip_inplace(&mut self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a = f(*a, b);
+        }
+        Ok(())
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Result<Self> {
+        if self.shape != other.shape {
+            bail!("shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let data = self.data.iter().zip(other.data.iter()).map(|(&a, &b)| f(a, b)).collect();
+        Ok(Self { shape: self.shape.clone(), data })
+    }
+
+    // -------------------------------------------------------------- reduce
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.sum() / self.data.len() as f64
+        }
+    }
+
+    pub fn sq_l2(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    /// argmax over the last axis for a 2-D tensor (logits -> predictions).
+    pub fn argmax_rows(&self) -> Result<Vec<usize>> {
+        if self.shape.len() != 2 {
+            bail!("argmax_rows wants 2-D, got {:?}", self.shape);
+        }
+        let (n, c) = (self.shape[0], self.shape[1]);
+        let mut out = Vec::with_capacity(n);
+        for r in 0..n {
+            let row = &self.data[r * c..(r + 1) * c];
+            let mut best = 0;
+            for j in 1..c {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            out.push(best);
+        }
+        Ok(out)
+    }
+}
+
+/// Dense i32 tensor (labels).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorI32 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i32>,
+}
+
+impl TensorI32 {
+    pub fn new(shape: Vec<usize>, data: Vec<i32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} wants {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Self { shape, data })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.len(), 6);
+        let r = t.clone().reshaped(vec![3, 2]).unwrap();
+        assert_eq!(r.shape(), &[3, 2]);
+        assert!(t.clone().reshaped(vec![4]).is_err());
+        assert!(Tensor::new(vec![2, 2], vec![0.0]).is_err());
+    }
+
+    #[test]
+    fn elementwise_and_reduce() {
+        let a = Tensor::new(vec![4], vec![1., -2., 3., -4.]).unwrap();
+        let b = a.map(f32::abs);
+        assert_eq!(b.data(), &[1., 2., 3., 4.]);
+        assert_eq!(a.sum(), -2.0);
+        assert_eq!(a.abs_max(), 4.0);
+        let c = a.zip(&b, |x, y| x + y).unwrap();
+        assert_eq!(c.data(), &[2., 0., 6., 0.]);
+        assert!(a.zip(&Tensor::zeros(&[3]), |x, _| x).is_err());
+    }
+
+    #[test]
+    fn argmax_rows() {
+        let t = Tensor::new(vec![2, 3], vec![0.1, 0.9, 0.0, 5.0, -1.0, 2.0]).unwrap();
+        assert_eq!(t.argmax_rows().unwrap(), vec![1, 0]);
+    }
+
+    #[test]
+    fn he_init_moments() {
+        let mut rng = crate::util::rng::SplitMix64::new(1);
+        let t = Tensor::he_normal(&[1000, 50], 50, &mut rng);
+        let mean = t.mean();
+        let var = t.sq_l2() / t.len() as f64 - mean * mean;
+        assert!(mean.abs() < 0.01);
+        assert!((var - 2.0 / 50.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn scalar_item() {
+        assert_eq!(Tensor::scalar(2.5).item().unwrap(), 2.5);
+        assert!(Tensor::zeros(&[2]).item().is_err());
+    }
+}

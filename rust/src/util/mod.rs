@@ -1,0 +1,8 @@
+//! Substrate utilities built from scratch for the offline environment:
+//! a JSON parser/serializer (manifest, goldens, metrics), a TOML-subset
+//! parser (config files), and the deterministic RNG shared bit-for-bit
+//! with the Python data generator.
+
+pub mod json;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,130 @@
+//! SplitMix64 — the crate's deterministic RNG.
+//!
+//! Bit-exact mirror of `python/compile/data_synth.py::SplitMix64`; the
+//! cross-language goldens in `artifacts/goldens.json` pin the stream. Used
+//! by the data pipeline, weight init, shufflers and the property-test
+//! helpers, so every run of the system is reproducible from a single seed.
+
+/// SplitMix64 PRNG (Steele et al., "Fast splittable pseudorandom number
+/// generators", OOPSLA 2014). Tiny state, passes BigCrush, splittable.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+#[inline]
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        mix(self.state)
+    }
+
+    /// Uniform in [0, 1): top 53 bits (identical to the Python mirror).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Standard normal via Box-Muller (cosine branch) — same call order as
+    /// the Python mirror so noise streams match.
+    #[inline]
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Uniform integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+/// Per-sample stream seed: mirrors `data_synth.sample_seed` exactly.
+#[inline]
+pub fn sample_seed(seed: u64, index: u64) -> u64 {
+    let s = seed ^ (index.wrapping_add(1)).wrapping_mul(0xD1B5_4A32_D192_ED03);
+    mix(s.wrapping_add(0x9E37_79B9_7F4A_7C15))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_vector_matches_python() {
+        // Pinned in python/tests/test_data.py::test_splitmix64_reference_vector
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 0xE220_A839_7B1D_CDAF);
+        assert_eq!(r.next_u64(), 0x6E78_9E6A_A1B9_65F4);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = SplitMix64::new(42);
+        for _ in 0..10_000 {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn gauss_moments() {
+        let mut r = SplitMix64::new(7);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let g = r.gauss();
+            s += g;
+            s2 += g * g;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = SplitMix64::new(3);
+        let mut v: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(v, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_seed_decorrelates_indices() {
+        let a = sample_seed(1, 0);
+        let b = sample_seed(1, 1);
+        assert_ne!(a, b);
+        assert_ne!(sample_seed(1, 0), sample_seed(2, 0));
+    }
+}

@@ -1,0 +1,221 @@
+//! Minimal TOML-subset parser for the config system.
+//!
+//! Supports the subset the `configs/*.toml` files use: `[section]` and
+//! `[section.sub]` headers, `key = value` with string / bool / integer /
+//! float / homogeneous-array values, `#` comments. Values land in a flat
+//! `section.key -> Value` map that `config::Config` consumes. Unknown keys
+//! are preserved so the config layer can reject typos explicitly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        match self {
+            Value::Arr(v) => v.iter().map(|x| x.as_f64()).collect(),
+            _ => bail!("expected array, got {self:?}"),
+        }
+    }
+}
+
+/// Flat `section.key -> Value` document.
+#[derive(Debug, Default, Clone)]
+pub struct Doc {
+    pub entries: BTreeMap<String, Value>,
+}
+
+impl Doc {
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.entries.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &String> {
+        self.entries.keys()
+    }
+}
+
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: malformed section header", lineno + 1))?
+                .trim();
+            if name.is_empty() {
+                bail!("line {}: empty section name", lineno + 1);
+            }
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let val = parse_value(line[eq + 1..].trim())
+            .with_context(|| format!("line {}: bad value", lineno + 1))?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if doc.entries.insert(full.clone(), val).is_some() {
+            bail!("line {}: duplicate key '{full}'", lineno + 1);
+        }
+    }
+    Ok(doc)
+}
+
+pub fn parse_file(path: &std::path::Path) -> Result<Doc> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading {}", path.display()))?;
+    parse(&text).with_context(|| format!("parsing {}", path.display()))
+}
+
+/// Strip a trailing `#` comment, respecting string literals.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest.strip_suffix('"').context("unterminated string")?;
+        if inner.contains('"') {
+            bail!("embedded quote in string");
+        }
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').context("unterminated array")?.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>> =
+            inner.split(',').map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    // TOML floats always contain '.' or an exponent; else integer.
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    bail!("cannot parse value '{s}'")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = parse(
+            r#"
+# comment
+top = 1
+[train]
+epochs = 250           # paper schedule
+lr = 0.001
+name = "lenet5"
+verbose = true
+bounds = [0.4, 0.9, 1.4]
+[train.gates]
+init = 5.5
+"#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("top").unwrap().as_i64().unwrap(), 1);
+        assert_eq!(doc.get("train.epochs").unwrap().as_i64().unwrap(), 250);
+        assert_eq!(doc.get("train.lr").unwrap().as_f64().unwrap(), 0.001);
+        assert_eq!(doc.get("train.name").unwrap().as_str().unwrap(), "lenet5");
+        assert!(doc.get("train.verbose").unwrap().as_bool().unwrap());
+        assert_eq!(
+            doc.get("train.bounds").unwrap().as_f64_vec().unwrap(),
+            vec![0.4, 0.9, 1.4]
+        );
+        assert_eq!(doc.get("train.gates.init").unwrap().as_f64().unwrap(), 5.5);
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = parse("a = 3\nb = 3.0\n").unwrap();
+        assert!(matches!(doc.get("a").unwrap(), Value::Int(3)));
+        assert!(matches!(doc.get("b").unwrap(), Value::Float(_)));
+        // ints coerce to f64 on demand
+        assert_eq!(doc.get("a").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_garbage() {
+        assert!(parse("a = 1\na = 2\n").is_err());
+        assert!(parse("[unclosed\n").is_err());
+        assert!(parse("novalue\n").is_err());
+        assert!(parse("x = \"unterminated\n").is_err());
+    }
+
+    #[test]
+    fn comment_inside_string_kept() {
+        let doc = parse("x = \"a # b\"\n").unwrap();
+        assert_eq!(doc.get("x").unwrap().as_str().unwrap(), "a # b");
+    }
+}

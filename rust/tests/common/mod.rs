@@ -1,0 +1,31 @@
+//! Shared helpers for the integration tests.
+//!
+//! All integration tests need the AOT artifacts (`make artifacts`); when
+//! they are absent (plain `cargo test` on a fresh checkout) the tests skip
+//! with a notice instead of failing — the Makefile's `test` target always
+//! builds artifacts first.
+
+use std::path::PathBuf;
+
+pub fn artifacts_dir() -> Option<PathBuf> {
+    let dir = cgmq::runtime::default_artifact_dir();
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing — run `make artifacts`");
+        None
+    }
+}
+
+/// A fast CI-scale config on the MLP arch.
+pub fn quick_cfg() -> cgmq::config::Config {
+    let mut cfg = cgmq::config::Config::default();
+    cfg.arch = "mlp".into();
+    cfg.train_size = 768;
+    cfg.test_size = 256;
+    cfg.pretrain_epochs = 2;
+    cfg.range_epochs = 1;
+    cfg.cgmq_epochs = 4;
+    cfg.out_dir = std::env::temp_dir().join("cgmq_itest").to_string_lossy().into_owned();
+    cfg
+}

@@ -1,0 +1,123 @@
+//! Cross-language golden tests: the Rust quantizer, staircase, BOP model
+//! and SynthMNIST renderer must agree with the Python compile path
+//! (artifacts/goldens.json, emitted by `make artifacts`).
+
+mod common;
+
+use cgmq::quant;
+use cgmq::util::json;
+
+fn goldens() -> Option<json::Json> {
+    let dir = common::artifacts_dir()?;
+    Some(json::parse_file(&dir.join("goldens.json")).expect("parse goldens.json"))
+}
+
+#[test]
+fn quantizer_matches_python_oracle() {
+    let Some(g) = goldens() else { return };
+    let q = g.get("quantizer").unwrap();
+    let x = q.get("x").unwrap().as_f32_vec().unwrap();
+    let beta = q.get("beta").unwrap().as_f64().unwrap() as f32;
+    let cases = q.get("cases").unwrap();
+    for bits in [2u32, 4, 8, 16, 32] {
+        for (signed, tag) in [(true, 's'), (false, 'u')] {
+            let expect = cases.get(&format!("q_b{bits}_{tag}")).unwrap().as_f32_vec().unwrap();
+            for (i, (&xv, &ev)) in x.iter().zip(&expect).enumerate() {
+                let got = quant::quantize(xv, bits, beta, signed);
+                assert!(
+                    (got - ev).abs() <= 1e-6,
+                    "b{bits} {tag} x[{i}]={xv}: rust {got} vs python {ev}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn staircase_matches_python_oracle() {
+    let Some(g) = goldens() else { return };
+    let q = g.get("quantizer").unwrap();
+    let gates = q.get("g").unwrap().as_f32_vec().unwrap();
+    let t = q.get("T").unwrap().as_f32_vec().unwrap();
+    for (&gv, &tv) in gates.iter().zip(&t) {
+        assert_eq!(quant::transform_t(gv) as f32, tv, "T({gv})");
+    }
+}
+
+#[test]
+fn gated_quantizer_matches_python_oracle() {
+    let Some(g) = goldens() else { return };
+    let q = g.get("quantizer").unwrap();
+    let x = q.get("x").unwrap().as_f32_vec().unwrap();
+    let gates = q.get("g").unwrap().as_f32_vec().unwrap();
+    let beta = q.get("beta").unwrap().as_f64().unwrap() as f32;
+    for (key, signed) in [("gated_signed", true), ("gated_unsigned", false)] {
+        let expect = q.get(key).unwrap().as_f32_vec().unwrap();
+        for i in 0..x.len() {
+            let got = quant::gated_quantize(x[i], gates[i], beta, signed);
+            assert!(
+                (got - expect[i]).abs() <= 1e-6,
+                "{key}[{i}]: x={} g={} rust {got} vs python {}",
+                x[i],
+                gates[i],
+                expect[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn synth_renderer_matches_python() {
+    let Some(g) = goldens() else { return };
+    let s = g.get("synth").unwrap();
+    let seed = s.get("seed").unwrap().as_usize().unwrap() as u64;
+    for sample in s.get("samples").unwrap().as_arr().unwrap() {
+        let index = sample.get("index").unwrap().as_usize().unwrap() as u64;
+        let label = sample.get("label").unwrap().as_usize().unwrap();
+        let sum = sample.get("sum").unwrap().as_f64().unwrap();
+        let pixels = sample.get("pixels").unwrap().as_f32_vec().unwrap();
+        let (img, got_label) = cgmq::data::synth::render_digit(seed, index);
+        assert_eq!(got_label, label, "sample {index} label");
+        let got_sum: f64 = img.iter().map(|&v| v as f64).sum();
+        assert!(
+            (got_sum - sum).abs() < 1e-2,
+            "sample {index}: pixel sum rust {got_sum} vs python {sum}"
+        );
+        for (i, &pv) in pixels.iter().enumerate() {
+            assert!(
+                (img[i] - pv).abs() < 1e-4,
+                "sample {index} pixel {i}: rust {} vs python {pv}",
+                img[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn bop_model_matches_python() {
+    let Some(g) = goldens() else { return };
+    let b = g.get("bop").unwrap();
+    for arch_name in ["lenet5", "mlp"] {
+        let arch = cgmq::model::arch_by_name(arch_name).unwrap();
+        let rec = b.get(arch_name).unwrap();
+        assert_eq!(
+            rec.get("fp32_bops").unwrap().as_usize().unwrap() as u64,
+            cgmq::cost::fp32_bops(&arch),
+            "{arch_name} fp32 bops"
+        );
+        assert_eq!(
+            rec.get("floor_bops").unwrap().as_usize().unwrap() as u64,
+            cgmq::cost::floor_bops(&arch),
+            "{arch_name} floor bops"
+        );
+        let layers = rec.get("layers").unwrap().as_arr().unwrap();
+        for (l, lr) in arch.layers.iter().zip(layers) {
+            assert_eq!(
+                lr.get("macs").unwrap().as_usize().unwrap() as u64,
+                l.macs(),
+                "{arch_name}.{} macs",
+                l.name
+            );
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! Runtime integration: load real artifacts through PJRT and check that the
+//! compiled graphs agree with the Rust-side mirrors of the same math.
+
+mod common;
+
+use cgmq::gates::{GateSet, Granularity};
+use cgmq::model::mlp;
+use cgmq::quant::gate_for_bits;
+use cgmq::runtime::{Arg, ArtifactSet};
+use cgmq::tensor::{Tensor, TensorI32};
+use cgmq::util::rng::SplitMix64;
+
+fn setup() -> Option<(ArtifactSet, cgmq::model::ArchSpec)> {
+    let dir = common::artifacts_dir()?;
+    let mut set = ArtifactSet::open(&dir).unwrap();
+    let arch = mlp();
+    set.verify_arch(&arch).unwrap();
+    for kind in ["qat_step", "eval", "eval_float", "calibrate"] {
+        set.load(&format!("mlp_{kind}")).unwrap();
+    }
+    Some((set, arch))
+}
+
+fn eval_args<'a>(
+    params: &'a [Tensor],
+    bw: &'a Tensor,
+    ba: &'a Tensor,
+    gw: &'a [Tensor],
+    ga: &'a [Tensor],
+    x: &'a Tensor,
+) -> Vec<Arg<'a>> {
+    let mut args: Vec<Arg> = params.iter().map(Arg::F32).collect();
+    args.push(Arg::F32(bw));
+    args.push(Arg::F32(ba));
+    args.extend(gw.iter().map(Arg::F32));
+    args.extend(ga.iter().map(Arg::F32));
+    args.push(Arg::F32(x));
+    args
+}
+
+#[test]
+fn verify_arch_catches_drift() {
+    let Some((set, _)) = setup() else { return };
+    let mut wrong = mlp();
+    wrong.layers[0].w_shape = vec![784, 100];
+    assert!(set.verify_arch(&wrong).is_err());
+}
+
+#[test]
+fn eval_at_32bit_matches_float_eval() {
+    // With generous ranges and 32-bit gates the only difference between the
+    // quantized and float graphs is the 8-bit input quantization.
+    let Some((set, arch)) = setup() else { return };
+    let params = arch.init_params(3);
+    let n = arch.eval_batch;
+    let mut rng = SplitMix64::new(5);
+    let xdata: Vec<f32> = (0..n * 784).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let x = Tensor::new(vec![n, 784], xdata).unwrap();
+
+    let float_out = {
+        let mut args: Vec<Arg> = params.iter().map(Arg::F32).collect();
+        args.push(Arg::F32(&x));
+        set.get("mlp_eval_float").unwrap().run(&args).unwrap()
+    };
+
+    let bw = Tensor::new(vec![3], (0..3).map(|i| params[2 * i].abs_max() * 4.0).collect())
+        .unwrap();
+    let ba = Tensor::full(&[2], 100.0);
+    let gates = GateSet::new(&arch, Granularity::Individual);
+    let gw = gates.materialize_all_w(&arch);
+    let ga = gates.materialize_all_a(&arch);
+    let quant_out = set
+        .get("mlp_eval")
+        .unwrap()
+        .run(&eval_args(&params, &bw, &ba, &gw, &ga, &x))
+        .unwrap();
+
+    assert_eq!(quant_out[0].shape(), &[n, 10]);
+    let max_diff: f32 = float_out[0]
+        .data()
+        .iter()
+        .zip(quant_out[0].data())
+        .map(|(&a, &b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(max_diff < 0.2, "32-bit quantized eval drifted {max_diff} from float");
+    // ... and the predictions agree almost everywhere.
+    let pf = float_out[0].argmax_rows().unwrap();
+    let pq = quant_out[0].argmax_rows().unwrap();
+    let agree = pf.iter().zip(&pq).filter(|(a, b)| a == b).count();
+    assert!(agree >= n - 4, "only {agree}/{n} predictions agree");
+}
+
+#[test]
+fn lower_gates_degrade_logits_monotonically() {
+    let Some((set, arch)) = setup() else { return };
+    let params = arch.init_params(3);
+    let n = arch.eval_batch;
+    let mut rng = SplitMix64::new(6);
+    let xdata: Vec<f32> = (0..n * 784).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let x = Tensor::new(vec![n, 784], xdata).unwrap();
+    let bw = Tensor::new(vec![3], (0..3).map(|i| params[2 * i].abs_max()).collect()).unwrap();
+    let ba = Tensor::full(&[2], 8.0);
+
+    let logits_at = |bits: u32| {
+        let mut gates = GateSet::new(&arch, Granularity::Individual);
+        for t in gates.gates_w.iter_mut().chain(gates.gates_a.iter_mut()) {
+            *t = Tensor::full(&t.shape().to_vec(), gate_for_bits(bits));
+        }
+        let gw = gates.materialize_all_w(&arch);
+        let ga = gates.materialize_all_a(&arch);
+        set.get("mlp_eval").unwrap().run(&eval_args(&params, &bw, &ba, &gw, &ga, &x)).unwrap()
+            [0]
+        .clone()
+    };
+
+    let l32 = logits_at(32);
+    let mut last = 0.0f64;
+    for bits in [16u32, 8, 4, 2] {
+        let lb = logits_at(bits);
+        let mse: f64 = l32
+            .data()
+            .iter()
+            .zip(lb.data())
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum::<f64>()
+            / lb.len() as f64;
+        assert!(
+            mse >= last - 1e-9,
+            "distortion not monotone: {bits} bit mse {mse} < previous {last}"
+        );
+        last = mse;
+    }
+    assert!(last > 1e-4, "2-bit quantization should visibly distort logits");
+}
+
+#[test]
+fn qat_step_gradients_descend_loss() {
+    let Some((set, arch)) = setup() else { return };
+    let mut params = arch.init_params(7);
+    let n = arch.train_batch;
+    let data = cgmq::data::Dataset::synth(1, n);
+    let x = Tensor::new(vec![n, 784], data.images.clone()).unwrap();
+    let y = TensorI32::new(vec![n], data.labels.clone()).unwrap();
+    let bw = Tensor::new(vec![3], (0..3).map(|i| params[2 * i].abs_max()).collect()).unwrap();
+    let ba = Tensor::full(&[2], 6.0);
+    let gates = GateSet::new(&arch, Granularity::Individual); // 32 bit
+    let gw = gates.materialize_all_w(&arch);
+    let ga = gates.materialize_all_a(&arch);
+
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        let mut args: Vec<Arg> = params.iter().map(Arg::F32).collect();
+        args.push(Arg::F32(&bw));
+        args.push(Arg::F32(&ba));
+        args.extend(gw.iter().map(Arg::F32));
+        args.extend(ga.iter().map(Arg::F32));
+        args.push(Arg::F32(&x));
+        args.push(Arg::I32(&y));
+        let out = set.get("mlp_qat_step").unwrap().run(&args).unwrap();
+        losses.push(out[0].item().unwrap());
+        for (p, g) in params.iter_mut().zip(&out[1..7]) {
+            p.zip_inplace(g, |p, g| p - 0.05 * g).unwrap();
+        }
+    }
+    assert!(
+        losses.last().unwrap() < &(losses[0] * 0.8),
+        "loss did not descend: {losses:?}"
+    );
+}
+
+#[test]
+fn shape_validation_rejects_bad_args() {
+    let Some((set, arch)) = setup() else { return };
+    let params = arch.init_params(0);
+    let mut args: Vec<Arg> = params.iter().map(Arg::F32).collect();
+    let bad_x = Tensor::zeros(&[7, 784]); // wrong batch
+    args.push(Arg::F32(&bad_x));
+    let err = set.get("mlp_eval_float").unwrap().run(&args).unwrap_err().to_string();
+    assert!(err.contains("shape"), "{err}");
+    // arity mismatch
+    let args2: Vec<Arg> = params.iter().map(Arg::F32).collect();
+    assert!(set.get("mlp_eval_float").unwrap().run(&args2).is_err());
+}
+
+#[test]
+fn calibrate_reports_positive_ranges() {
+    let Some((set, arch)) = setup() else { return };
+    let params = arch.init_params(11);
+    let n = arch.train_batch;
+    let data = cgmq::data::Dataset::synth(2, n);
+    let x = Tensor::new(vec![n, 784], data.images).unwrap();
+    let mut args: Vec<Arg> = params.iter().map(Arg::F32).collect();
+    args.push(Arg::F32(&x));
+    let out = set.get("mlp_calibrate").unwrap().run(&args).unwrap();
+    let w_maxes = &out[0];
+    let act_maxes = &out[1];
+    assert_eq!(w_maxes.shape(), &[3]);
+    assert_eq!(act_maxes.shape(), &[2]);
+    for (li, &wm) in w_maxes.data().iter().enumerate() {
+        let expect = params[2 * li].abs_max();
+        assert!((wm - expect).abs() < 1e-5, "layer {li}: {wm} vs host {expect}");
+    }
+    assert!(act_maxes.data().iter().all(|&v| v > 0.0));
+}

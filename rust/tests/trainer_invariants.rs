@@ -1,0 +1,182 @@
+//! Coordinator invariants — randomized property tests over real training
+//! runs (hand-rolled harness; the environment vendors no proptest).
+//!
+//! G1 (paper §3): "CGMQ guarantees that some model is found that satisfies
+//! the cost constraint as long as such a model exists" — checked here for
+//! random (direction, granularity, bound, seed) draws on the MLP arch.
+
+mod common;
+
+use cgmq::coordinator::Trainer;
+use cgmq::direction::DirKind;
+use cgmq::gates::Granularity;
+use cgmq::util::rng::SplitMix64;
+use cgmq::{GATE_FLOOR, GATE_INIT};
+
+#[test]
+fn constraint_satisfied_for_random_configs() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    // 4 random property draws (each is a full small training run).
+    for case in 0..4 {
+        let mut cfg = common::quick_cfg();
+        cfg.direction = match rng.below(3) {
+            0 => DirKind::Dir1,
+            1 => DirKind::Dir2,
+            _ => DirKind::Dir3,
+        };
+        // CI-fast gate lr (see Config::gate_lr_scale doc): the guarantee
+        // under test is lr-independent.
+        cfg.lr_gates = 0.05;
+        cfg.granularity =
+            if rng.below(2) == 0 { Granularity::Layer } else { Granularity::Individual };
+        cfg.bound_rbop_percent = [0.40, 0.90, 2.00, 5.00][rng.below(4)];
+        cfg.seed = rng.next_u64() % 1000;
+        cfg.cgmq_epochs = 10;
+        let label = format!(
+            "case {case}: {} {} bound {}",
+            cfg.direction.label(),
+            cfg.granularity.label(),
+            cfg.bound_rbop_percent
+        );
+
+        let mut t = Trainer::new(cfg.clone()).unwrap();
+        t.pretrain(cfg.pretrain_epochs).unwrap();
+        t.calibrate().unwrap();
+        t.learn_ranges(cfg.range_epochs).unwrap();
+        // dir2/dir3's Unsat magnitude is ~1/(|grad|+|w|), so the descent
+        // from 32-bit needs a horizon proportional to 1/(lr_g * batches)
+        // (the paper runs 250 epochs x 469 batches; this CI set has 6
+        // batches/epoch). Train in chunks until the guarantee kicks in.
+        let mut epochs = 0;
+        while t.final_model().is_err() && epochs < 60 {
+            t.cgmq(10).unwrap();
+            epochs += 10;
+        }
+        let float_acc = t.evaluate_float().unwrap();
+        let r = t
+            .final_model()
+            .map(|m| cgmq::coordinator::RunResult {
+                run_id: cfg.run_id(),
+                float_acc,
+                quant_acc: m.test_acc,
+                rbop_percent: m.rbop_percent,
+                bound_rbop_percent: cfg.bound_rbop_percent,
+                satisfied: m.rbop_percent <= cfg.bound_rbop_percent + 1e-9,
+                mean_weight_bits: 0.0,
+                rbop_trace: t.rbop_trace.clone(),
+            })
+            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        // The delivered model satisfies the bound — the paper's guarantee.
+        assert!(r.satisfied, "{label}: final model violates bound (rbop {})", r.rbop_percent);
+        assert!(
+            r.rbop_percent <= cfg.bound_rbop_percent + 1e-9,
+            "{label}: rbop {} > bound",
+            r.rbop_percent
+        );
+        // Gates stayed inside [floor, cap] the whole time (checked at end).
+        for g in t.gates.gates_w.iter().chain(t.gates.gates_a.iter()) {
+            for &v in g.data() {
+                assert!(
+                    (GATE_FLOOR..=GATE_INIT + 1e-6).contains(&v),
+                    "{label}: gate {v} escaped [{GATE_FLOOR}, {GATE_INIT}]"
+                );
+            }
+        }
+        // The trace reaches the bound region from above (starts at 100%).
+        assert!(!r.rbop_trace.is_empty());
+        assert!(r.rbop_trace[0] <= 100.0);
+        let min_trace = r.rbop_trace.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            min_trace <= cfg.bound_rbop_percent + 1e-9,
+            "{label}: trace never reached the bound: {:?}",
+            r.rbop_trace
+        );
+    }
+}
+
+#[test]
+fn rbop_decreases_monotonically_while_unsat() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = common::quick_cfg();
+    cfg.cgmq_epochs = 5;
+    cfg.bound_rbop_percent = 0.40;
+    let mut t = Trainer::new(cfg).unwrap();
+    t.pretrain(1).unwrap();
+    t.calibrate().unwrap();
+    t.cgmq(5).unwrap();
+    // While the constraint was unsatisfied, every epoch must reduce RBOP
+    // (dirs are strictly positive in Unsat — paper property (i)).
+    let trace = &t.rbop_trace;
+    for w in trace.windows(2) {
+        let was_unsat = w[0] > 0.40;
+        if was_unsat {
+            assert!(w[1] < w[0] + 1e-9, "RBOP went up while Unsat: {trace:?}");
+        }
+    }
+}
+
+#[test]
+fn accuracy_survives_quantization_on_mlp() {
+    // CGMQ at a loose bound should not destroy accuracy relative to float.
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = common::quick_cfg();
+    cfg.bound_rbop_percent = 5.0;
+    cfg.cgmq_epochs = 5;
+    let mut t = Trainer::new(cfg).unwrap();
+    let r = t.run_full().unwrap();
+    assert!(r.float_acc > 0.5, "float model failed to learn: {}", r.float_acc);
+    assert!(
+        r.quant_acc > r.float_acc - 0.15,
+        "quantization destroyed accuracy: float {} vs quant {}",
+        r.float_acc,
+        r.quant_acc
+    );
+}
+
+#[test]
+fn epoch_log_is_complete_and_serializable() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = common::quick_cfg();
+    cfg.cgmq_epochs = 2;
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    t.run_full().unwrap();
+    let expected = cfg.pretrain_epochs + cfg.range_epochs + cfg.cgmq_epochs;
+    assert_eq!(t.log.records.len(), expected);
+    let csv = t.log.to_csv();
+    assert_eq!(csv.lines().count(), expected + 1);
+    // JSON parses back
+    let j = cgmq::util::json::parse(&t.log.to_json().to_string()).unwrap();
+    assert_eq!(j.as_arr().unwrap().len(), expected);
+}
+
+#[test]
+fn checkpoint_roundtrip_through_trainer() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = common::quick_cfg();
+    cfg.pretrain_epochs = 1;
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    t.pretrain(1).unwrap();
+    let acc1 = t.evaluate_float().unwrap();
+    let path = std::env::temp_dir().join("cgmq_itest_trainer.ckpt");
+    t.save_params(&path).unwrap();
+
+    let mut t2 = Trainer::new(cfg).unwrap();
+    t2.load_params(&path).unwrap();
+    let acc2 = t2.evaluate_float().unwrap();
+    assert!((acc1 - acc2).abs() < 1e-9, "checkpoint changed accuracy: {acc1} vs {acc2}");
+}
+
+#[test]
+fn wrong_arch_checkpoint_rejected() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let cfg = common::quick_cfg();
+    let mut t = Trainer::new(cfg.clone()).unwrap();
+    let path = std::env::temp_dir().join("cgmq_itest_wrongarch.ckpt");
+    t.save_params(&path).unwrap();
+    // rewrite meta to claim a different arch
+    let meta = std::env::temp_dir().join("cgmq_itest_wrongarch.ckpt.meta.json");
+    std::fs::write(&meta, "{\"arch\": \"lenet5\"}").unwrap();
+    let mut t2 = Trainer::new(cfg).unwrap();
+    assert!(t2.load_params(&path).is_err());
+}
