@@ -1,0 +1,32 @@
+# Developer entry points. `make ci` is the tier-1 gate CI runs.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: ci build test fmt fmt-fix artifacts bench clean
+
+ci: build test fmt
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+fmt:
+	$(CARGO) fmt --check
+
+fmt-fix:
+	$(CARGO) fmt
+
+# AOT-compile the JAX/Pallas models to HLO-text artifacts + manifest.json
+# (needed by training runs and the artifact-gated integration tests).
+artifacts:
+	$(PYTHON) python/compile/aot.py
+
+bench:
+	$(CARGO) bench --bench bench_hot_paths
+	$(CARGO) bench --bench bench_tables
+
+clean:
+	$(CARGO) clean

@@ -5,6 +5,11 @@
 //!
 //!     cargo run --release --example baseline_comparison
 //!
+//! Every method is a stage sequence over the same `TrainCtx`: CGMQ is the
+//! paper pipeline, fixed-bit QAT is `PinGates + Finetune`, myQASR is its
+//! own custom stage — the staged API makes the comparison a matter of
+//! swapping the tail of the pipeline.
+//!
 //! The point reproduced from the paper's Section 3: CGMQ hits the budget in
 //! ONE training run with NO hyperparameter; the penalty method's outcome
 //! swings with λ (too small -> budget violated; too large -> accuracy
@@ -14,7 +19,7 @@
 use cgmq::baselines::{bb_proxy, fixed_qat, myqasr, penalty};
 use cgmq::bench_harness;
 use cgmq::config::Config;
-use cgmq::coordinator::Trainer;
+use cgmq::session::TrainCtx;
 
 fn base_cfg() -> Config {
     let mut cfg = Config::default();
@@ -30,12 +35,10 @@ fn base_cfg() -> Config {
     cfg
 }
 
-fn fresh(cfg: &Config, ckpt: &std::path::Path) -> anyhow::Result<Trainer> {
-    let mut t = Trainer::new(cfg.clone())?;
-    t.load_params(ckpt)?;
-    t.calibrate()?;
-    t.learn_ranges(cfg.range_epochs)?;
-    Ok(t)
+/// Phase-3 input state shared by all baselines: loaded from the cached
+/// pretrained checkpoint, calibrated, ranges learned.
+fn fresh(cfg: &Config, ckpt: &std::path::Path) -> anyhow::Result<TrainCtx> {
+    Ok(bench_harness::resumed_session(cfg, ckpt)?.into_ctx())
 }
 
 fn main() -> anyhow::Result<()> {
@@ -57,8 +60,8 @@ fn main() -> anyhow::Result<()> {
 
     // Penalty method at several λ — the tuning burden made visible.
     for lambda in [0.01f32, 0.1, 1.0] {
-        let mut t = fresh(&cfg, &ckpt)?;
-        let p = penalty::run(&mut t, lambda, cfg.cgmq_epochs)?;
+        let mut ctx = fresh(&cfg, &ckpt)?;
+        let p = penalty::run(&mut ctx, lambda, cfg.cgmq_epochs)?;
         println!(
             "                     penalty λ={lambda:<6}            | {:5.2}% | {:5.2}% | {}   | 1",
             100.0 * p.test_acc,
@@ -86,8 +89,8 @@ fn main() -> anyhow::Result<()> {
 
     // Uniform fixed-bit QAT — no budget targeting at all.
     for bits in [2u32, 4] {
-        let mut t = fresh(&cfg, &ckpt)?;
-        let f = fixed_qat::run(&mut t, bits, cfg.cgmq_epochs)?;
+        let mut ctx = fresh(&cfg, &ckpt)?;
+        let f = fixed_qat::run(&mut ctx, bits, cfg.cgmq_epochs)?;
         let sat = f.rbop_percent <= cfg.bound_rbop_percent;
         println!(
             "                     fixed {bits}-bit QAT            | {:5.2}% | {:5.2}% | {}   | 1",
@@ -98,8 +101,8 @@ fn main() -> anyhow::Result<()> {
     }
 
     // myQASR heuristic — search-free descent + finetune.
-    let mut t = fresh(&cfg, &ckpt)?;
-    let m = myqasr::run(&mut t, cfg.cgmq_epochs)?;
+    let mut ctx = fresh(&cfg, &ckpt)?;
+    let m = myqasr::run(&mut ctx, cfg.cgmq_epochs)?;
     println!(
         "                     myQASR                     | {:5.2}% | {:5.2}% | {}   | 1   {:?}",
         100.0 * m.test_acc,

@@ -5,12 +5,15 @@
 //!
 //! This is the workflow the paper's introduction motivates: a practitioner
 //! has a device with a hard compute budget (here: 1.4% of fp32 bit-ops),
-//! runs CGMQ once, and gets a mixed-precision model that provably fits,
-//! plus the per-layer integer formats to provision.
+//! runs the CGMQ pipeline once, and gets a mixed-precision model that
+//! provably fits, plus the per-layer integer formats to provision. The
+//! `BestSnapshotSaver` observer keeps the current deliverable on disk
+//! throughout the run — a crash after the first satisfying epoch still
+//! leaves a shippable model.
 
 use cgmq::config::Config;
-use cgmq::coordinator::Trainer;
 use cgmq::quant;
+use cgmq::session::{BestSnapshotSaver, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = Config::default();
@@ -27,14 +30,19 @@ fn main() -> anyhow::Result<()> {
 
     println!("device budget: {:.2}% of fp32 bit-operations\n", cfg.bound_rbop_percent);
     let out_dir = cfg.out_dir.clone();
-    let mut t = Trainer::new(cfg.clone())?;
-    let result = t.run_full()?;
-    let model = t.final_model()?;
     let ckpt = std::path::Path::new(&out_dir).join("deploy.ckpt");
-    model.save(&ckpt, t.arch.name)?;
+    std::fs::create_dir_all(&out_dir)?;
+    let cfg_export = cfg.clone();
+    let mut session = SessionBuilder::new(cfg)
+        .paper_pipeline()
+        .observer(BestSnapshotSaver::new(&ckpt))
+        .build()?;
+    session.run()?;
+    let result = session.result()?;
+    let model = session.final_model()?;
 
     // Export: per-layer bit histograms + memory (the deployment report).
-    let report = cgmq::baselines::export_report(&cfg, &ckpt)?;
+    let report = cgmq::baselines::export_report(&cfg_export, &ckpt)?;
     std::fs::write(std::path::Path::new(&out_dir).join("deploy.json"), report.to_string())?;
 
     println!("accuracy: {:.2}% (float was {:.2}%)", 100.0 * result.quant_acc,
@@ -59,7 +67,7 @@ fn main() -> anyhow::Result<()> {
     // Show a few exported integer codes (what an int kernel would consume).
     println!("\nsample integer codes (fc1, 4-bit grid if assigned):");
     let w = &model.params[0];
-    let g = &model.gates.materialize_all_w(&t.arch)[0];
+    let g = &model.gates.materialize_all_w(&session.ctx.arch)[0];
     let beta = model.betas_w.data()[0];
     for i in 0..5 {
         let bits = quant::transform_t(g.data()[i]);

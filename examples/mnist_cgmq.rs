@@ -1,6 +1,6 @@
 //! End-to-end driver (DESIGN.md deliverable): the paper's headline
 //! experiment on the paper's model — LeNet-5, quantized under a 0.40% BOP
-//! bound, full four-phase pipeline, loss curve logged per epoch.
+//! bound, full four-stage pipeline, loss curve logged per epoch.
 //!
 //!     cargo run --release --example mnist_cgmq [-- <train_size> <cgmq_epochs>]
 //!
@@ -9,7 +9,7 @@
 //! The run is recorded in EXPERIMENTS.md.
 
 use cgmq::config::{Config, DataSource};
-use cgmq::coordinator::Trainer;
+use cgmq::session::{JsonlMetricsObserver, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -43,11 +43,16 @@ fn main() -> anyhow::Result<()> {
     );
 
     let out_dir = cfg.out_dir.clone();
-    let mut t = Trainer::new(cfg)?;
-    let result = t.run_full()?;
+    let dir = std::path::Path::new(&out_dir);
+    let mut session = SessionBuilder::new(cfg)
+        .paper_pipeline()
+        .observer(JsonlMetricsObserver::create(dir.join("epochs.jsonl"))?)
+        .build()?;
+    session.run()?;
+    let result = session.result()?;
 
     println!("\nphase      epoch   loss      acc      RBOP%    sat");
-    for r in &t.log.records {
+    for r in &session.metrics().records {
         println!(
             "{:<10} {:>5}  {:>7.4}  {:>6.2}%  {:>7.3}  {}",
             r.phase, r.epoch, r.train_loss, 100.0 * r.test_acc, r.rbop_percent, r.sat
@@ -58,23 +63,22 @@ fn main() -> anyhow::Result<()> {
     println!("| FP32 | -           | {:.2} | 100  | 100  |", 100.0 * result.float_acc);
     println!(
         "| CGMQ | {}, {} | {:.2} | {:.2} | {:.2} |",
-        t.cfg.direction.label(),
-        t.cfg.granularity.label(),
+        session.ctx.cfg.direction.label(),
+        session.ctx.cfg.granularity.label(),
         100.0 * result.quant_acc,
         result.rbop_percent,
         result.bound_rbop_percent
     );
     assert!(result.satisfied);
 
-    let dir = std::path::Path::new(&out_dir);
-    t.log.write_csv(&dir.join("epochs.csv"))?;
+    session.metrics().write_csv(&dir.join("epochs.csv"))?;
     std::fs::write(dir.join("result.json"), result.to_json().to_string())?;
-    t.final_model()?.save(&dir.join("model.ckpt"), t.arch.name)?;
-    println!("\nwrote {}/epochs.csv, result.json, model.ckpt", out_dir);
+    session.final_model()?.save(&dir.join("model.ckpt"), session.ctx.arch.name)?;
+    println!("\nwrote {}/epochs.csv, epochs.jsonl, result.json, model.ckpt", out_dir);
 
     // Runtime execution statistics (per artifact).
     println!("\nartifact execution stats:");
-    for (name, s) in t.artifacts.all_stats() {
+    for (name, s) in session.ctx.artifacts.all_stats() {
         if s.calls > 0 {
             println!(
                 "  {:<22} {:>6} calls  {:>8.1} ms/call",

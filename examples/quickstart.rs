@@ -2,13 +2,13 @@
 //!
 //!     make artifacts && cargo run --release --example quickstart
 //!
-//! Demonstrates the public API surface: config -> trainer -> phases ->
-//! constraint-satisfying model, plus a layer-by-layer fake-quantization
-//! trace (the code form of the paper's Fig. 1).
+//! Demonstrates the public API surface: config -> SessionBuilder -> staged
+//! pipeline -> constraint-satisfying model, plus a layer-by-layer
+//! fake-quantization trace (the code form of the paper's Fig. 1).
 
 use cgmq::config::Config;
-use cgmq::coordinator::Trainer;
 use cgmq::quant;
+use cgmq::session::SessionBuilder;
 
 fn main() -> anyhow::Result<()> {
     // 1. Configure a small run. Everything here also lives in configs/*.toml.
@@ -25,16 +25,23 @@ fn main() -> anyhow::Result<()> {
     // 2. Fig. 1 as code: what one layer's fake quantization does.
     println!("== Fake quantization (paper Eq. 1/3/4) ==");
     let beta = 1.0;
-    for (g, what) in [(0.7, "2-bit"), (2.5, "8-bit"), (5.5, "32-bit")] {
+    for (g, _what) in [(0.7, "2-bit"), (2.5, "8-bit"), (5.5, "32-bit")] {
         let x = 0.337f32;
         let q = quant::gated_quantize(x, g, beta, true);
         println!("  gate {g:>3}: T(g) = {:>2} bits, Q({x}) = {q}", quant::transform_t(g));
     }
 
-    // 3. Train: pretrain -> calibrate -> learn ranges -> CGMQ.
-    println!("\n== Training (4 phases) ==");
-    let mut trainer = Trainer::new(cfg)?;
-    let result = trainer.run_full()?;
+    // 3. Train: the paper pipeline is a stage sequence —
+    //    Pretrain -> Calibrate -> RangeLearn -> CgmqLoop.
+    println!("\n== Training (4 stages) ==");
+    let mut session = SessionBuilder::new(cfg).paper_pipeline().build()?;
+    for report in session.run()? {
+        println!(
+            "  stage {:<10} {:>3} epochs in {:.1}s",
+            report.stage, report.epochs_run, report.secs
+        );
+    }
+    let result = session.result()?;
 
     // 4. The guarantee: the delivered model satisfies the bound.
     println!("\n== Result ==");

@@ -14,16 +14,18 @@
 //! downward pressure `μ · |g|` (higher bit-widths pay more, mirroring the
 //! BB prior), with **no constraint feedback**. `tune_mu` then performs the
 //! outer bisection loop a BB practitioner runs by hand — several complete
-//! trainings — to hit a target budget. The contrast measured in experiment
-//! A2/T1 is: CGMQ = 1 training, BB-style = `iterations` trainings.
+//! trainings — to hit a target budget. Each inner training is a fresh
+//! [`TrainCtx`] (typically a session resumed from a shared pretrained
+//! checkpoint); the contrast measured in experiment A2/T1 is: CGMQ = 1
+//! training, BB-style = `iterations` trainings.
 //!
 //! Table 1 also quotes BB's published MNIST numbers (99.30 ± 0.03 @ 0.36%)
 //! directly, as the paper itself does.
 
 use anyhow::Result;
 
-use crate::coordinator::{GatePolicy, PolicyInputs, Trainer};
 use crate::cost::{model_bops, rbop_percent};
+use crate::session::{GatePolicy, PolicyInputs, TrainCtx};
 use crate::tensor::Tensor;
 
 /// BB's published LeNet-5/MNIST row (van Baalen et al. 2020, Table;
@@ -57,31 +59,31 @@ pub struct BbProxyResult {
     pub trainings: usize,
 }
 
-/// One full proxy training at fixed μ (trainer must be pretrained+calibrated).
-pub fn run(trainer: &mut Trainer, mu: f32, epochs: usize) -> Result<BbProxyResult> {
+/// One full proxy training at fixed μ (context must be pretrained+calibrated).
+pub fn run(ctx: &mut TrainCtx, mu: f32, epochs: usize) -> Result<BbProxyResult> {
     let policy = BbProxyPolicy { mu };
     for _ in 0..epochs {
-        trainer.qat_epoch_with(Some(&policy))?;
+        ctx.qat_epoch_with(Some(&policy))?;
     }
     let bops = model_bops(
-        &trainer.arch,
-        &trainer.gates.materialize_all_w(&trainer.arch),
-        &trainer.gates.materialize_all_a(&trainer.arch),
+        &ctx.arch,
+        &ctx.gates.materialize_all_w(&ctx.arch),
+        &ctx.gates.materialize_all_a(&ctx.arch),
     )?;
     Ok(BbProxyResult {
         mu,
-        test_acc: trainer.evaluate()?,
-        rbop_percent: rbop_percent(&trainer.arch, bops),
-        satisfied: trainer.constraint.is_satisfied(&trainer.arch, bops),
+        test_acc: ctx.evaluate()?,
+        rbop_percent: rbop_percent(&ctx.arch, bops),
+        satisfied: ctx.constraint.is_satisfied(&ctx.arch, bops),
         trainings: 1,
     })
 }
 
 /// The practitioner's outer loop: bisect μ over full trainings until the
-/// budget holds (or the iteration cap runs out). `make_trainer` must return
-/// a freshly pretrained+calibrated trainer each call.
+/// budget holds (or the iteration cap runs out). `make_ctx` must return a
+/// freshly pretrained+calibrated context each call.
 pub fn tune_mu(
-    mut make_trainer: impl FnMut() -> Result<Trainer>,
+    mut make_ctx: impl FnMut() -> Result<TrainCtx>,
     epochs: usize,
     max_iters: usize,
 ) -> Result<BbProxyResult> {
@@ -90,8 +92,8 @@ pub fn tune_mu(
     let mut trainings = 0;
     for _ in 0..max_iters {
         let mu = (lo * hi).sqrt(); // geometric bisection
-        let mut t = make_trainer()?;
-        let mut r = run(&mut t, mu, epochs)?;
+        let mut ctx = make_ctx()?;
+        let mut r = run(&mut ctx, mu, epochs)?;
         trainings += 1;
         r.trainings = trainings;
         if r.satisfied {

@@ -5,13 +5,16 @@
 //! the classical QAT recipe (Jacob et al. 2017 / Verhoef et al. 2019): the
 //! practitioner picks b by hand and has no budget knob other than trying
 //! different b values.
+//!
+//! On the staged API this baseline is not special-cased at all — it is the
+//! stage sequence `[Pretrain, Calibrate, PinGates(b), Finetune]` (see
+//! [`stages`] for the post-calibration tail). [`run`] drives that tail over
+//! an existing context for function-style callers.
 
 use anyhow::Result;
 
-use crate::coordinator::Trainer;
-use crate::cost::rbop_percent;
-use crate::quant::gate_for_bits;
-use crate::tensor::Tensor;
+use crate::session::stage::Stage;
+use crate::session::{Finetune, PinGates, TrainCtx};
 
 /// Result of one fixed-bit run.
 #[derive(Debug, Clone)]
@@ -21,32 +24,40 @@ pub struct FixedQatResult {
     pub rbop_percent: f64,
 }
 
+/// The baseline's stage tail (everything after pretrain+calibrate):
+/// pin every gate to `bits`, then finetune for `epochs`.
+pub fn stages(bits: u32, epochs: usize) -> Vec<Box<dyn Stage>> {
+    vec![Box::new(PinGates::bits(bits)), Box::new(Finetune::epochs(epochs))]
+}
+
+/// Summarize a finished fixed-bit run from the context state.
+pub fn result(ctx: &TrainCtx, bits: u32) -> Result<FixedQatResult> {
+    let (rbop, _) = ctx.constraint_status()?;
+    Ok(FixedQatResult { bits, test_acc: ctx.evaluate()?, rbop_percent: rbop })
+}
+
 /// Pin every gate to `bits` and finetune for `epochs`.
 ///
-/// Assumes the trainer is already pretrained + calibrated (phases 1-3).
-pub fn run(trainer: &mut Trainer, bits: u32, epochs: usize) -> Result<FixedQatResult> {
-    let g = gate_for_bits(bits);
-    for t in trainer.gates.gates_w.iter_mut().chain(trainer.gates.gates_a.iter_mut()) {
-        *t = Tensor::full(&t.shape().to_vec(), g);
+/// Assumes the context is already pretrained + calibrated (phases 1-2).
+pub fn run(ctx: &mut TrainCtx, bits: u32, epochs: usize) -> Result<FixedQatResult> {
+    PinGates::bits(bits).run(ctx)?;
+    let report = Finetune::epochs(epochs).run(ctx)?;
+    match report.test_acc {
+        // The final finetune epoch already evaluated this exact state.
+        Some(acc) => {
+            let (rbop, _) = ctx.constraint_status()?;
+            Ok(FixedQatResult { bits, test_acc: acc, rbop_percent: rbop })
+        }
+        None => result(ctx, bits),
     }
-    for _ in 0..epochs {
-        trainer.qat_epoch(false)?;
-    }
-    let bops = crate::cost::model_bops(
-        &trainer.arch,
-        &trainer.gates.materialize_all_w(&trainer.arch),
-        &trainer.gates.materialize_all_a(&trainer.arch),
-    )?;
-    Ok(FixedQatResult {
-        bits,
-        test_acc: trainer.evaluate()?,
-        rbop_percent: rbop_percent(&trainer.arch, bops),
-    })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cost::rbop_percent;
+    use crate::quant::gate_for_bits;
+    use crate::tensor::Tensor;
 
     #[test]
     fn rbop_of_uniform_bits_is_square_ratio() {
@@ -66,5 +77,13 @@ mod tests {
             let bops = crate::cost::model_bops(&arch, &gw, &ga).unwrap();
             assert!((rbop_percent(&arch, bops) - expect).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn stage_tail_is_pin_then_finetune() {
+        let s = stages(8, 3);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[0].name(), "pin-gates");
+        assert_eq!(s[1].name(), "finetune");
     }
 }

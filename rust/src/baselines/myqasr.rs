@@ -12,13 +12,20 @@
 //! Properties mirrored from the paper's discussion: layer granularity only,
 //! at most two distinct bit-widths in flight during the descent, no
 //! training signal in the search itself.
+//!
+//! On the staged API the whole heuristic is one custom [`Stage`]
+//! ([`MyQasrStage`]): run it after `[Pretrain, Calibrate, RangeLearn]` in a
+//! [`SessionBuilder`](crate::session::SessionBuilder) pipeline and read the
+//! outcome back with [`result`].
 
 use anyhow::{bail, Result};
 
-use crate::coordinator::Trainer;
-use crate::cost::{model_bops, rbop_percent};
+use crate::cost::model_bops;
 use crate::gates::Granularity;
+use crate::metrics::Stopwatch;
 use crate::quant::{gate_for_bits, transform_t};
+use crate::session::stage::{Finetune, Stage, StageReport};
+use crate::session::TrainCtx;
 use crate::tensor::Tensor;
 use crate::BIT_LEVELS;
 
@@ -31,6 +38,71 @@ pub struct MyQasrResult {
     pub assignment: Vec<(String, u32)>,
 }
 
+/// The myQASR heuristic as a pipeline stage: bit-width descent until the
+/// budget holds, then QAT finetuning at the frozen assignment.
+///
+/// Requires layer granularity and a pretrained + calibrated context.
+#[derive(Debug, Clone, Default)]
+pub struct MyQasrStage {
+    /// Finetuning epochs after the descent; `None` -> `cfg.cgmq_epochs`.
+    pub epochs: Option<usize>,
+}
+
+impl MyQasrStage {
+    pub fn epochs(epochs: usize) -> Self {
+        Self { epochs: Some(epochs) }
+    }
+}
+
+impl Stage for MyQasrStage {
+    fn name(&self) -> &str {
+        "myqasr"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport> {
+        let total = Stopwatch::start();
+        if ctx.gates.granularity != Granularity::Layer {
+            bail!("myqasr baseline requires layer granularity");
+        }
+        let stats = activation_stats(ctx)?;
+        let n_act = stats.len(); // quantized-activation layers
+
+        // Joint per-layer bit-width (weights + activations move together,
+        // as in myQASR's per-layer setting). Output layer (no quantized
+        // activation) keeps its weight bits at the running level of the
+        // *preceding* rank.
+        let mut bits: Vec<u32> = vec![32; n_act];
+        loop {
+            let assigned: Vec<(usize, u32)> = bits.iter().cloned().enumerate().collect();
+            apply_assignment(ctx, &assigned)?;
+            let bops = model_bops(
+                &ctx.arch,
+                &ctx.gates.materialize_all_w(&ctx.arch),
+                &ctx.gates.materialize_all_a(&ctx.arch),
+            )?;
+            if ctx.constraint.is_satisfied(&ctx.arch, bops) {
+                break;
+            }
+            // candidate: among layers at the current max bit-width, the one
+            // with the smallest activation statistic.
+            let max_bits = *bits.iter().max().unwrap();
+            let candidate = (0..n_act)
+                .filter(|&i| bits[i] == max_bits)
+                .min_by(|&a, &b| stats[a].partial_cmp(&stats[b]).unwrap())
+                .unwrap();
+            match next_lower(bits[candidate]) {
+                Some(b) => bits[candidate] = b,
+                None => bail!("myqasr: budget unreachable even at all-2-bit"),
+            }
+        }
+
+        let mut report = Finetune { epochs: self.epochs }.run(ctx)?;
+        report.stage = self.name().to_string();
+        report.secs = total.secs();
+        Ok(report)
+    }
+}
+
 fn next_lower(bits: u32) -> Option<u32> {
     let i = BIT_LEVELS.iter().position(|&b| b == bits)?;
     if i == 0 {
@@ -40,101 +112,69 @@ fn next_lower(bits: u32) -> Option<u32> {
     }
 }
 
-/// Per-layer activation statistic from one calibration epoch (mean |act|).
-fn activation_stats(trainer: &mut Trainer) -> Result<Vec<f64>> {
-    // One no-update epoch purely to pull the act_mean outputs: we reuse the
-    // calibrate artifact instead (cheaper: float forward, act maxes) — the
-    // ranking only needs a monotone per-layer magnitude.
-    let name = format!("{}_calibrate", trainer.arch.name);
-    let batch = crate::data::Batcher::sequential(&trainer.train_data, trainer.arch.train_batch)
+/// Per-layer activation statistic from one calibration batch (mean |act|).
+fn activation_stats(ctx: &TrainCtx) -> Result<Vec<f64>> {
+    // The calibrate artifact is reused here (cheaper: float forward, act
+    // maxes) — the ranking only needs a monotone per-layer magnitude.
+    let name = format!("{}_calibrate", ctx.arch.name);
+    let batch = crate::data::Batcher::sequential(&ctx.train_data, ctx.arch.train_batch)
         .into_iter()
         .next()
         .ok_or_else(|| anyhow::anyhow!("empty dataset"))?;
-    let mut x_shape = vec![trainer.arch.train_batch];
-    x_shape.extend_from_slice(&trainer.arch.input_shape);
+    let mut x_shape = vec![ctx.arch.train_batch];
+    x_shape.extend_from_slice(&ctx.arch.input_shape);
     let x = Tensor::new(x_shape, batch.images.clone())?;
     let mut args: Vec<crate::runtime::Arg> =
-        trainer.params.iter().map(crate::runtime::Arg::F32).collect();
+        ctx.params.iter().map(crate::runtime::Arg::F32).collect();
     args.push(crate::runtime::Arg::F32(&x));
-    let out = trainer.artifacts.get(&name)?.run(&args)?;
+    let out = ctx.artifacts.get(&name)?.run(&args)?;
     Ok(out[1].data().iter().map(|&v| v as f64).collect())
 }
 
-/// Run the heuristic: descend bit-widths until the budget holds, then
-/// finetune for `epochs`. Trainer must be pretrained + calibrated and use
-/// layer granularity.
-pub fn run(trainer: &mut Trainer, epochs: usize) -> Result<MyQasrResult> {
-    if trainer.gates.granularity != Granularity::Layer {
-        bail!("myqasr baseline requires layer granularity");
-    }
-    let stats = activation_stats(trainer)?;
-    let n_act = stats.len(); // quantized-activation layers
+/// Summarize a finished myQASR run from the context state.
+pub fn result(ctx: &TrainCtx) -> Result<MyQasrResult> {
+    let acc = ctx.evaluate()?;
+    summarize(ctx, acc)
+}
 
-    // Joint per-layer bit-width (weights + activations move together, as in
-    // myQASR's per-layer setting). Output layer (no quantized activation)
-    // keeps its weight bits at the running level of the *preceding* rank.
-    let mut bits: Vec<u32> = vec![32; n_act];
-    loop {
-        let assigned: Vec<(usize, u32)> = bits.iter().cloned().enumerate().collect();
-        apply_assignment(trainer, &assigned)?;
-        let bops = model_bops(
-            &trainer.arch,
-            &trainer.gates.materialize_all_w(&trainer.arch),
-            &trainer.gates.materialize_all_a(&trainer.arch),
-        )?;
-        if trainer.constraint.is_satisfied(&trainer.arch, bops) {
-            break;
-        }
-        // candidate: among layers at the current max bit-width, the one
-        // with the smallest activation statistic.
-        let max_bits = *bits.iter().max().unwrap();
-        let candidate = (0..n_act)
-            .filter(|&i| bits[i] == max_bits)
-            .min_by(|&a, &b| stats[a].partial_cmp(&stats[b]).unwrap())
-            .unwrap();
-        match next_lower(bits[candidate]) {
-            Some(b) => bits[candidate] = b,
-            None => bail!("myqasr: budget unreachable even at all-2-bit"),
-        }
-    }
-
-    for _ in 0..epochs {
-        trainer.qat_epoch(false)?;
-    }
-    let bops = model_bops(
-        &trainer.arch,
-        &trainer.gates.materialize_all_w(&trainer.arch),
-        &trainer.gates.materialize_all_a(&trainer.arch),
-    )?;
-    let assignment = trainer
+fn summarize(ctx: &TrainCtx, test_acc: f64) -> Result<MyQasrResult> {
+    let (rbop, satisfied) = ctx.constraint_status()?;
+    let assignment = ctx
         .arch
         .layers
         .iter()
         .enumerate()
-        .map(|(li, l)| (l.name.to_string(), transform_t(trainer.gates.gates_w[li].data()[0])))
+        .map(|(li, l)| (l.name.to_string(), transform_t(ctx.gates.gates_w[li].data()[0])))
         .collect();
-    Ok(MyQasrResult {
-        test_acc: trainer.evaluate()?,
-        rbop_percent: rbop_percent(&trainer.arch, bops),
-        satisfied: trainer.constraint.is_satisfied(&trainer.arch, bops),
-        assignment,
-    })
+    Ok(MyQasrResult { test_acc, rbop_percent: rbop, satisfied, assignment })
+}
+
+/// Run the heuristic: descend bit-widths until the budget holds, then
+/// finetune for `epochs`. Context must be pretrained + calibrated and use
+/// layer granularity.
+pub fn run(ctx: &mut TrainCtx, epochs: usize) -> Result<MyQasrResult> {
+    let report = MyQasrStage::epochs(epochs).run(ctx)?;
+    match report.test_acc {
+        // The final finetune epoch already evaluated this exact state.
+        Some(acc) => summarize(ctx, acc),
+        None => result(ctx),
+    }
 }
 
 /// Write a per-quant-act-layer bit assignment into the gate set (weights of
 /// the final, non-quant-act layer follow the last assigned level).
-fn apply_assignment(trainer: &mut Trainer, bits: &[(usize, u32)]) -> Result<()> {
+fn apply_assignment(ctx: &mut TrainCtx, bits: &[(usize, u32)]) -> Result<()> {
     let mut last = 32;
     let mut ai = 0;
-    for (li, layer) in trainer.arch.layers.iter().enumerate() {
+    for (li, layer) in ctx.arch.layers.iter().enumerate() {
         if layer.quant_act {
             let (_, b) = bits[ai];
-            trainer.gates.gates_w[li] = Tensor::scalar(gate_for_bits(b));
-            trainer.gates.gates_a[ai] = Tensor::scalar(gate_for_bits(b));
+            ctx.gates.gates_w[li] = Tensor::scalar(gate_for_bits(b));
+            ctx.gates.gates_a[ai] = Tensor::scalar(gate_for_bits(b));
             last = b;
             ai += 1;
         } else {
-            trainer.gates.gates_w[li] = Tensor::scalar(gate_for_bits(last));
+            ctx.gates.gates_w[li] = Tensor::scalar(gate_for_bits(last));
         }
     }
     Ok(())

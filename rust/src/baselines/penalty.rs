@@ -16,12 +16,16 @@
 //! training horizon (constraint violated at the end — DQ's documented
 //! failure mode); too large and every gate is crushed to 2 bits long before
 //! the weights can adapt, wasting accuracy. CGMQ's Sat/Unsat dir needs no
-//! such tuning. `sweep` exposes exactly this trade-off for experiment A2.
+//! such tuning. The A2 sweep in `bench_harness` exposes exactly this
+//! trade-off.
+//!
+//! [`PenaltyStage`] packages one fixed-λ run as a pipeline stage.
 
 use anyhow::Result;
 
-use crate::coordinator::{GatePolicy, PolicyInputs, Trainer};
-use crate::cost::{model_bops, rbop_percent};
+use crate::metrics::{EpochRecord, Stopwatch};
+use crate::session::stage::{Stage, StageReport};
+use crate::session::{ConstraintEvent, GatePolicy, PolicyInputs, TrainCtx};
 use crate::tensor::Tensor;
 
 /// The penalty gate policy.
@@ -51,35 +55,94 @@ pub struct PenaltyResult {
     pub satisfied: bool,
 }
 
+/// The penalty method as a pipeline stage (one fixed λ).
+#[derive(Debug, Clone)]
+pub struct PenaltyStage {
+    pub lambda: f32,
+    /// `None` -> `cfg.cgmq_epochs`.
+    pub epochs: Option<usize>,
+}
+
+impl PenaltyStage {
+    pub fn new(lambda: f32) -> Self {
+        Self { lambda, epochs: None }
+    }
+
+    pub fn epochs(lambda: f32, epochs: usize) -> Self {
+        Self { lambda, epochs: Some(epochs) }
+    }
+}
+
+impl Stage for PenaltyStage {
+    fn name(&self) -> &str {
+        "penalty"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport> {
+        let total = Stopwatch::start();
+        let epochs = self.epochs.unwrap_or(ctx.cfg.cgmq_epochs);
+        let policy = PenaltyPolicy { lambda: self.lambda, over_budget: std::cell::Cell::new(true) };
+        let mut report = StageReport::new(self.name());
+        for epoch in 0..epochs {
+            let sw = Stopwatch::start();
+            let loss = ctx.qat_epoch_with(Some(&policy))?;
+            // Deliberately NOT end_of_epoch_check: penalty epochs are not
+            // CGMQ epochs, so the Sat/Unsat dir state and the G1 RBOP
+            // trace must stay untouched; observers still see the check.
+            let (rbop, sat_now) = ctx.constraint_status()?;
+            ctx.bus.constraint_check(&ConstraintEvent {
+                phase: "penalty".into(),
+                epoch,
+                rbop_percent: rbop,
+                bound_percent: ctx.cfg.bound_rbop_percent,
+                satisfied: sat_now,
+            });
+            policy.over_budget.set(!sat_now);
+            let acc = ctx.evaluate()?;
+            ctx.record_epoch(EpochRecord {
+                phase: "penalty".into(),
+                epoch,
+                train_loss: loss,
+                test_acc: acc,
+                rbop_percent: rbop,
+                sat: sat_now,
+                mean_weight_bits: ctx.gates.mean_weight_bits(&ctx.arch),
+                secs: sw.secs(),
+            });
+            report.epochs_run += 1;
+            report.final_train_loss = Some(loss);
+            report.test_acc = Some(acc);
+            report.rbop_percent = Some(rbop);
+        }
+        report.secs = total.secs();
+        Ok(report)
+    }
+}
+
 /// Train with the penalty method for `epochs` at strength `lambda`.
 ///
-/// Assumes the trainer is pretrained + calibrated. Unlike CGMQ there is no
+/// Assumes the context is pretrained + calibrated. Unlike CGMQ there is no
 /// best-Sat snapshotting: the penalty method has no notion of a guaranteed
 /// feasible iterate, so the *final* iterate is what you get (that is the
 /// point of the comparison).
-pub fn run(trainer: &mut Trainer, lambda: f32, epochs: usize) -> Result<PenaltyResult> {
-    let policy = PenaltyPolicy { lambda, over_budget: std::cell::Cell::new(true) };
-    for _ in 0..epochs {
-        trainer.qat_epoch_with(Some(&policy))?;
-        let bops = model_bops(
-            &trainer.arch,
-            &trainer.gates.materialize_all_w(&trainer.arch),
-            &trainer.gates.materialize_all_a(&trainer.arch),
-        )?;
-        policy.over_budget.set(!trainer.constraint.is_satisfied(&trainer.arch, bops));
+pub fn run(ctx: &mut TrainCtx, lambda: f32, epochs: usize) -> Result<PenaltyResult> {
+    let report = PenaltyStage::epochs(lambda, epochs).run(ctx)?;
+    match report.test_acc {
+        // The final epoch already evaluated this exact state.
+        Some(acc) => summarize(ctx, lambda, acc),
+        None => result(ctx, lambda),
     }
-    let bops = model_bops(
-        &trainer.arch,
-        &trainer.gates.materialize_all_w(&trainer.arch),
-        &trainer.gates.materialize_all_a(&trainer.arch),
-    )?;
-    let rbop = rbop_percent(&trainer.arch, bops);
-    Ok(PenaltyResult {
-        lambda,
-        test_acc: trainer.evaluate()?,
-        rbop_percent: rbop,
-        satisfied: trainer.constraint.is_satisfied(&trainer.arch, bops),
-    })
+}
+
+/// Summarize a finished penalty run from the context state.
+pub fn result(ctx: &TrainCtx, lambda: f32) -> Result<PenaltyResult> {
+    let acc = ctx.evaluate()?;
+    summarize(ctx, lambda, acc)
+}
+
+fn summarize(ctx: &TrainCtx, lambda: f32, test_acc: f64) -> Result<PenaltyResult> {
+    let (rbop, satisfied) = ctx.constraint_status()?;
+    Ok(PenaltyResult { lambda, test_acc, rbop_percent: rbop, satisfied })
 }
 
 #[cfg(test)]

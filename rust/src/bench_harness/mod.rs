@@ -3,9 +3,16 @@
 //! ablation (A1) and the penalty-tuning comparison (A2), printing rows in
 //! the paper's format and writing machine-readable JSON next to them.
 //!
-//! The float pretraining (phases 1-3 input state) is shared across all rows
-//! of a table through a cached checkpoint — exactly how the paper runs it
-//! ("all different choices of CGMQ start with the same pre-trained model").
+//! Every row is a [`SessionBuilder`] pipeline. The float pretraining
+//! (phase-1 input state) is shared across all rows of a table through a
+//! cached checkpoint — exactly how the paper runs it ("all different
+//! choices of CGMQ start with the same pre-trained model") — so a row is
+//! `[LoadCheckpoint, Calibrate, RangeLearn, CgmqLoop]`, with extra
+//! `CgmqLoop` stages appended ad hoc when a short CI schedule needs a
+//! longer horizon to reach the bound. Each row also streams its per-epoch
+//! trajectory as JSONL (`<run_id>.epochs.jsonl` in `out_dir`) via
+//! [`JsonlMetricsObserver`], so table JSON and epoch trajectories can be
+//! scraped without parsing stdout.
 
 use std::path::{Path, PathBuf};
 
@@ -13,9 +20,12 @@ use anyhow::{Context, Result};
 
 use crate::baselines::{bb_proxy, penalty};
 use crate::config::Config;
-use crate::coordinator::{RunResult, Trainer};
 use crate::direction::DirKind;
 use crate::gates::Granularity;
+use crate::session::{
+    Calibrate, CgmqLoop, JsonlMetricsObserver, LoadCheckpoint, Pretrain, RangeLearn, RunResult,
+    Session, SessionBuilder,
+};
 use crate::util::json::Json;
 
 pub const PAPER_BOUNDS: [f64; 5] = [0.40, 0.90, 1.40, 2.00, 5.00];
@@ -35,10 +45,24 @@ pub fn ensure_pretrained(cfg: &Config) -> Result<PathBuf> {
         cfg.pretrain_epochs,
         path.display()
     );
-    let mut t = Trainer::new(cfg.clone())?;
-    t.pretrain(cfg.pretrain_epochs)?;
-    t.save_params(&path)?;
+    let mut session = SessionBuilder::new(cfg.clone()).stage(Pretrain::default()).build()?;
+    session.run()?;
+    session.ctx.save_params(&path)?;
     Ok(path)
+}
+
+/// Open a session resumed from the shared pretrained checkpoint, with
+/// calibration + range learning queued (the phase-3 input state every
+/// baseline and CGMQ row starts from). Skips the float-accuracy pass —
+/// baseline drivers report quantized accuracy only.
+pub fn resumed_session(cfg: &Config, ckpt: &Path) -> Result<Session> {
+    let mut session = SessionBuilder::new(cfg.clone())
+        .stage(LoadCheckpoint::new(ckpt).skip_float_eval())
+        .stage(Calibrate)
+        .stage(RangeLearn::default())
+        .build()?;
+    session.run()?;
+    Ok(session)
 }
 
 /// Run one CGMQ row from the shared pretrained checkpoint.
@@ -50,19 +74,22 @@ pub fn run_row(base: &Config, dir: DirKind, gran: Granularity, bound: f64) -> Re
     cfg.lr_gates = Config::paper_gate_lr(dir) * base.gate_lr_scale;
     cfg.validate()?;
     let ckpt = ensure_pretrained(base)?;
-    let mut t = Trainer::new(cfg.clone())?;
-    t.load_params(&ckpt)?;
-    let float_acc = t.evaluate_float()?;
-    t.calibrate()?;
-    t.learn_ranges(cfg.range_epochs)?;
-    t.cgmq(cfg.cgmq_epochs)?;
+    let jsonl_path = Path::new(&cfg.out_dir).join(format!("{}.epochs.jsonl", cfg.run_id()));
+    let mut session = SessionBuilder::new(cfg.clone())
+        .stage(LoadCheckpoint::new(&ckpt))
+        .stage(Calibrate)
+        .stage(RangeLearn::default())
+        .stage(CgmqLoop::default())
+        .observer(JsonlMetricsObserver::create(&jsonl_path)?)
+        .build()?;
+    session.run()?;
     // The paper's guarantee is "satisfied after sufficiently many
     // iterations" (§3); dir2/dir3's descent speed scales with 1/(lr_g *
     // steps), so short CI schedules may need extra epochs at tight bounds.
-    // Extend in chunks (capped at 6x) until a satisfying model exists.
+    // Extend in chunks (capped at 8x) until a satisfying model exists.
     let mut extra = 0;
-    while t.final_model().is_err() && extra < 8 * cfg.cgmq_epochs {
-        t.cgmq(cfg.cgmq_epochs.max(1))?;
+    while session.final_model().is_err() && extra < 8 * cfg.cgmq_epochs {
+        session.run_stage(CgmqLoop::epochs(cfg.cgmq_epochs.max(1)))?;
         extra += cfg.cgmq_epochs.max(1);
     }
     if extra > 0 {
@@ -72,10 +99,12 @@ pub fn run_row(base: &Config, dir: DirKind, gran: Granularity, bound: f64) -> Re
     // CI schedule), report the row honestly as unsatisfied instead of
     // aborting the table; the paper-scale schedule always converges
     // (property-tested guarantee in tests/trainer_invariants.rs).
-    let r = match t.final_model() {
-        Ok(_) => t.result_with_float_acc(float_acc)?,
+    let r = match session.result() {
+        Ok(r) => r,
         Err(_) => {
-            let last = t.log.last().expect("at least one epoch ran").clone();
+            let float_acc =
+                session.ctx.float_acc.context("LoadCheckpoint records float accuracy")?;
+            let last = session.metrics().last().expect("at least one epoch ran").clone();
             RunResult {
                 run_id: cfg.run_id(),
                 float_acc,
@@ -84,7 +113,7 @@ pub fn run_row(base: &Config, dir: DirKind, gran: Granularity, bound: f64) -> Re
                 bound_rbop_percent: cfg.bound_rbop_percent,
                 satisfied: false,
                 mean_weight_bits: last.mean_weight_bits,
-                rbop_trace: t.rbop_trace.clone(),
+                rbop_trace: session.ctx.rbop_trace.clone(),
             }
         }
     };
@@ -113,10 +142,10 @@ fn write_json(path: &Path, v: &Json) -> Result<()> {
 pub fn table1(base: &Config) -> Result<String> {
     let ckpt = ensure_pretrained(base)?;
     // FP32 row
-    let mut t = Trainer::new(base.clone())?;
-    t.load_params(&ckpt)?;
-    let fp32_acc = t.evaluate_float()?;
-    drop(t);
+    let mut session = SessionBuilder::new(base.clone()).stage(LoadCheckpoint::new(&ckpt)).build()?;
+    session.run()?;
+    let fp32_acc = session.ctx.float_acc.context("LoadCheckpoint records float accuracy")?;
+    drop(session);
 
     let mut rows: Vec<Json> = Vec::new();
     let mut out = String::new();
@@ -212,11 +241,17 @@ pub fn penalty_comparison(base: &Config, lambdas: &[f32]) -> Result<String> {
     out.push_str("|---------------|--------|---------|-----------|-----------|\n");
     let mut rows = Vec::new();
     for &lambda in lambdas {
-        let mut t = Trainer::new(base.clone())?;
-        t.load_params(&ckpt)?;
-        t.calibrate()?;
-        t.learn_ranges(base.range_epochs)?;
-        let r = penalty::run(&mut t, lambda, base.cgmq_epochs)?;
+        let jsonl_path =
+            Path::new(&base.out_dir).join(format!("a2-penalty-l{lambda}.epochs.jsonl"));
+        let mut session = SessionBuilder::new(base.clone())
+            .stage(LoadCheckpoint::new(&ckpt).skip_float_eval())
+            .stage(Calibrate)
+            .stage(RangeLearn::default())
+            .stage(penalty::PenaltyStage::new(lambda))
+            .observer(JsonlMetricsObserver::create(&jsonl_path)?)
+            .build()?;
+        session.run()?;
+        let r = penalty::result(&session.ctx, lambda)?;
         out.push_str(&format!(
             "| penalty       | {:6} | {:7.2} | {:9.2} | {:9} |\n",
             lambda,

@@ -25,7 +25,11 @@ use crate::tensor::Tensor;
 use crate::util::json::Json;
 
 const MAGIC: &[u8; 8] = b"CGMQCKPT";
-const VERSION: u32 = 1;
+
+/// Checkpoint format version written after the magic. Bump on any layout
+/// change; `load` refuses other versions up front so a layout drift fails
+/// with a clear error instead of garbage tensor deserialization.
+pub const FORMAT_VERSION: u32 = 1;
 
 /// Named tensor collection + metadata.
 #[derive(Debug, Clone, Default)]
@@ -76,7 +80,7 @@ impl Checkpoint {
             std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
         );
         f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&FORMAT_VERSION.to_le_bytes())?;
         f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
         for (name, t) in &self.tensors {
             f.write_all(&(name.len() as u32).to_le_bytes())?;
@@ -108,8 +112,12 @@ impl Checkpoint {
             bail!("{}: not a CGMQ checkpoint", path.display());
         }
         let version = read_u32(&mut f)?;
-        if version != VERSION {
-            bail!("{}: unsupported checkpoint version {version}", path.display());
+        if version != FORMAT_VERSION {
+            bail!(
+                "{}: checkpoint format version {version}, but this build reads version \
+                 {FORMAT_VERSION} — re-export the checkpoint with a matching cgmq build",
+                path.display()
+            );
         }
         let n = read_u32(&mut f)? as usize;
         let mut tensors = BTreeMap::new();
@@ -131,7 +139,9 @@ impl Checkpoint {
                 f.read_exact(&mut b)?;
                 dims.push(u64::from_le_bytes(b) as usize);
             }
-            let count: usize = dims.iter().product();
+            let count: usize = dims.iter().try_fold(1usize, |a, &d| a.checked_mul(d))
+                .filter(|&c| c <= (1usize << 31))
+                .with_context(|| format!("corrupt checkpoint: tensor dims {dims:?}"))?;
             let mut data = vec![0f32; count];
             let mut buf = vec![0u8; count * 4];
             f.read_exact(&mut buf).context("truncated tensor payload")?;
@@ -206,6 +216,41 @@ mod tests {
         let back = l.get_all("params").unwrap();
         assert_eq!(back, ts);
         assert!(l.get_all("nope").is_err());
+    }
+
+    #[test]
+    fn version_mismatch_rejected_with_clear_error() {
+        // Write a valid checkpoint, then patch the version field (bytes
+        // 8..12, little-endian, right after the magic) to a future version.
+        let mut c = Checkpoint::new();
+        c.insert("w", Tensor::scalar(1.0));
+        let p = tmp("version.ckpt");
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[8..12].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&p, bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+        assert!(err.contains(&format!("version {FORMAT_VERSION}")), "{err}");
+    }
+
+    #[test]
+    fn absurd_tensor_dims_rejected() {
+        // Header claims a tensor with an overflowing element count; the
+        // loader must fail cleanly instead of attempting the allocation.
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name "w"
+        bytes.push(b'w');
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        bytes.extend_from_slice(&(u64::MAX / 2).to_le_bytes());
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        let p = tmp("absurd.ckpt");
+        std::fs::write(&p, bytes).unwrap();
+        let err = Checkpoint::load(&p).unwrap_err().to_string();
+        assert!(err.contains("corrupt checkpoint"), "{err}");
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Tiny CLI argument parser (the offline environment vendors no clap).
 //!
 //! Grammar: `cgmq <command> [--flag value]... [--switch]...`. Flags may be
-//! given as `--flag value` or `--flag=value`. Unknown flags are rejected by
-//! the command handlers via `finish()`.
+//! given as `--flag value` or `--flag=value`; a flag given twice is a hard
+//! parse error (silent last-wins hides typos in long invocations). Values
+//! starting with a single dash (negative numbers) are accepted. Unknown
+//! flags are rejected by the command handlers via `finish()`, which lists
+//! *every* unconsumed flag at once instead of failing on the first.
 
 use std::collections::BTreeMap;
 
@@ -20,16 +23,25 @@ impl Args {
         let mut it = argv.iter().peekable();
         let command = it.next().cloned().unwrap_or_default();
         let mut flags = BTreeMap::new();
+        let mut insert = |k: &str, v: String| -> Result<()> {
+            if flags.insert(k.to_string(), v).is_some() {
+                bail!("duplicate flag --{k}");
+            }
+            Ok(())
+        };
         while let Some(a) = it.next() {
             let Some(name) = a.strip_prefix("--") else {
                 bail!("unexpected positional argument '{a}'");
             };
+            if name.is_empty() {
+                bail!("empty flag name '--'");
+            }
             if let Some((k, v)) = name.split_once('=') {
-                flags.insert(k.to_string(), v.to_string());
+                insert(k, v.to_string())?;
             } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                flags.insert(name.to_string(), it.next().unwrap().clone());
+                insert(name, it.next().unwrap().clone())?;
             } else {
-                flags.insert(name.to_string(), "true".to_string()); // boolean switch
+                insert(name, "true".to_string())?; // boolean switch
             }
         }
         Ok(Self { command, flags, consumed: Default::default() })
@@ -58,13 +70,18 @@ impl Args {
         matches!(self.get(name), Some("true") | Some("1") | Some("yes"))
     }
 
-    /// Reject any flag no handler asked about (typo guard).
+    /// Reject every flag no handler asked about (typo guard), listing all
+    /// of them at once.
     pub fn finish(&self) -> Result<()> {
         let consumed = self.consumed.borrow();
-        for k in self.flags.keys() {
-            if !consumed.contains(k) {
-                bail!("unknown flag --{k} for command '{}'", self.command);
-            }
+        let unknown: Vec<String> = self
+            .flags
+            .keys()
+            .filter(|k| !consumed.contains(k.as_str()))
+            .map(|k| format!("--{k}"))
+            .collect();
+        if !unknown.is_empty() {
+            bail!("unknown flags for command '{}': {}", self.command, unknown.join(", "));
         }
         Ok(())
     }
@@ -90,14 +107,73 @@ mod tests {
     }
 
     #[test]
+    fn equals_form_matches_space_form() {
+        let a = Args::parse(&argv(&["x", "--seed=7"])).unwrap();
+        let b = Args::parse(&argv(&["x", "--seed", "7"])).unwrap();
+        assert_eq!(a.get_usize("seed").unwrap(), Some(7));
+        assert_eq!(b.get_usize("seed").unwrap(), Some(7));
+    }
+
+    #[test]
+    fn boolean_switches() {
+        // trailing switch, switch followed by another flag, explicit value
+        let a = Args::parse(&argv(&["x", "--verbose", "--arch", "mlp", "--force"])).unwrap();
+        assert!(a.get_bool("verbose"));
+        assert!(a.get_bool("force"));
+        assert_eq!(a.get("arch"), Some("mlp"));
+        let b = Args::parse(&argv(&["x", "--flag=yes"])).unwrap();
+        assert!(b.get_bool("flag"));
+        let c = Args::parse(&argv(&["x", "--flag=no"])).unwrap();
+        assert!(!c.get_bool("flag"));
+    }
+
+    #[test]
+    fn negative_number_values() {
+        // A value starting with a single '-' is a value, not a flag.
+        let a = Args::parse(&argv(&["x", "--bound", "-0.5", "--offset=-3.25"])).unwrap();
+        assert_eq!(a.get_f64("bound").unwrap(), Some(-0.5));
+        assert_eq!(a.get_f64("offset").unwrap(), Some(-3.25));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn duplicate_flags_rejected() {
+        for bad in [
+            &["x", "--seed", "1", "--seed", "2"][..],
+            &["x", "--seed=1", "--seed=2"][..],
+            &["x", "--seed", "1", "--seed=2"][..],
+            &["x", "--quick", "--quick"][..],
+        ] {
+            let err = Args::parse(&argv(bad)).unwrap_err().to_string();
+            assert!(err.contains("duplicate flag"), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
     fn rejects_unconsumed() {
         let a = Args::parse(&argv(&["train", "--tpyo", "1"])).unwrap();
         assert!(a.finish().is_err());
     }
 
     #[test]
+    fn finish_lists_all_unconsumed_flags() {
+        let a =
+            Args::parse(&argv(&["train", "--tpyo", "1", "--arch", "mlp", "--wrnog=2"])).unwrap();
+        let _ = a.get("arch"); // consumed; must not be reported
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("--tpyo"), "{err}");
+        assert!(err.contains("--wrnog"), "{err}");
+        assert!(!err.contains("--arch"), "{err}");
+    }
+
+    #[test]
     fn rejects_positional() {
         assert!(Args::parse(&argv(&["train", "stray"])).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_flag_name() {
+        assert!(Args::parse(&argv(&["train", "--"])).is_err());
     }
 
     #[test]

@@ -1,667 +1,99 @@
-//! The CGMQ training coordinator — the paper's system contribution.
+//! Compatibility shim over the staged [`session`](crate::session) API.
 //!
-//! Orchestrates the four phases of Section 2.4/4.2 entirely from Rust (the
-//! XLA artifacts only ever see one batch at a time):
+//! The CGMQ training loop used to live here as a monolithic `Trainer` that
+//! hard-coded the paper's four phases. The phases are now first-class
+//! [`Stage`](crate::session::Stage) values
+//! ([`Pretrain`](crate::session::Pretrain), [`Calibrate`](crate::session::Calibrate),
+//! [`RangeLearn`](crate::session::RangeLearn), [`CgmqLoop`](crate::session::CgmqLoop))
+//! run over a shared [`TrainCtx`](crate::session::TrainCtx), assembled with
+//! [`SessionBuilder`](crate::session::SessionBuilder) — use that API for
+//! new code (see the crate docs for a migration note).
 //!
-//! 1. **pretrain** — float training (`*_float_step` artifact + Adam);
-//! 2. **calibrate** — quantization-range init: per-layer max|w| for weights,
-//!    running mean (momentum 0.1) of per-layer max|activation| for
-//!    activations (`*_calibrate` artifact);
-//! 3. **range learning** — QAT at 32-bit gates, Adam over weights *and*
-//!    ranges;
-//! 4. **CGMQ** — the constraint-guided loop: every step updates weights +
-//!    ranges with Adam and gates with plain GD along the `dir` rules; the
-//!    BOP constraint is checked **only at the end of each epoch** and that
-//!    Sat/Unsat outcome selects the dir case for the whole next epoch
-//!    (paper Section 2.5).
-//!
-//! The trainer also keeps the best constraint-satisfying snapshot seen at
-//! any epoch end; `final_model()` returns it, which is what makes the
-//! paper's "a model satisfying the cost constraint is found" guarantee an
-//! actual API property rather than a property of the last iterate (the
-//! last epoch may legitimately end Unsat after a Sat-phase gate regrowth).
-
-mod snapshot;
-
-pub use snapshot::Snapshot;
+//! `Trainer` remains as a thin delegate so existing drivers keep
+//! compiling: it derefs to `TrainCtx` (all state fields and primitive
+//! operations come from there) and each old phase method just runs the
+//! corresponding stage. No phase logic lives here.
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::Result;
 
-use crate::config::{Config, DataSource};
-use crate::cost::{model_bops, rbop_percent, CostConstraint};
-use crate::data::{Batch, Batcher, Dataset};
-use crate::direction::{dir_tensor_a, dir_tensor_w, DirConfig, Sat};
-use crate::gates::GateSet;
-use crate::metrics::{accuracy, EpochRecord, MetricsLog, Stopwatch};
-use crate::model::{arch_by_name, ArchSpec};
-use crate::optim::{Adam, GateGd};
-use crate::runtime::{Arg, ArtifactSet};
-use crate::tensor::{Tensor, TensorI32};
+use crate::config::Config;
+use crate::session::stage::Stage;
+use crate::session::{Calibrate, CgmqLoop, LoadCheckpoint, Pretrain, RangeLearn, TrainCtx};
 
-/// Everything needed to train one CGMQ run.
+// Re-exports for pre-session call sites.
+pub use crate::session::{CgmqPolicy, GatePolicy, PolicyInputs, RunResult, Snapshot};
+
+/// Deprecated facade over [`TrainCtx`] + the paper's stages.
+///
+/// Prefer [`SessionBuilder`](crate::session::SessionBuilder):
+///
+/// ```text
+/// // old                                    // new
+/// let mut t = Trainer::new(cfg)?;           let mut s = SessionBuilder::new(cfg)
+/// t.run_full()?;                                .paper_pipeline().build()?;
+///                                           s.run()?; let r = s.result()?;
+/// ```
 pub struct Trainer {
-    pub cfg: Config,
-    pub arch: ArchSpec,
-    pub artifacts: ArtifactSet,
-    // --- model state ---
-    pub params: Vec<Tensor>,
-    pub betas_w: Tensor,
-    pub betas_a: Tensor,
-    pub gates: GateSet,
-    // --- optimization state ---
-    adam: Adam,
-    gate_gd: GateGd,
-    dir_cfg: DirConfig,
-    pub sat: Sat,
-    // --- data ---
-    pub train_data: Dataset,
-    pub test_data: Dataset,
-    batcher: Batcher,
-    // --- bookkeeping ---
-    pub constraint: CostConstraint,
-    pub log: MetricsLog,
-    best: Option<Snapshot>,
-    /// RBOP (%) at the end of every CGMQ epoch — the constraint trace (G1).
-    pub rbop_trace: Vec<f64>,
+    pub ctx: TrainCtx,
+}
+
+impl std::ops::Deref for Trainer {
+    type Target = TrainCtx;
+
+    fn deref(&self) -> &TrainCtx {
+        &self.ctx
+    }
+}
+
+impl std::ops::DerefMut for Trainer {
+    fn deref_mut(&mut self) -> &mut TrainCtx {
+        &mut self.ctx
+    }
 }
 
 impl Trainer {
     /// Build a trainer: load artifacts, verify the manifest, init state.
     pub fn new(cfg: Config) -> Result<Self> {
-        let arch = arch_by_name(&cfg.arch)?;
-        let mut artifacts = ArtifactSet::open(Path::new(&cfg.artifacts_dir))?;
-        artifacts.verify_arch(&arch)?;
-        for kind in ["float_step", "qat_step", "eval", "eval_float", "calibrate"] {
-            artifacts.load(&format!("{}_{kind}", arch.name))?;
-        }
-
-        let (train_data, test_data) = load_data(&cfg, &arch)?;
-        let params = arch.init_params(cfg.seed);
-        let n_layers = arch.layers.len();
-        let n_act = arch.n_quant_act();
-        let betas_w = Tensor::full(&[n_layers], 1.0);
-        let betas_a = Tensor::full(&[n_act], 6.0);
-        let gates = GateSet::with_init(&arch, cfg.granularity, cfg.gate_init);
-
-        // One Adam instance over [params..., betas_w, betas_a] (paper §4.2:
-        // weights and quantization ranges share Adam at lr 1e-3).
-        let mut shapes = arch.param_shapes();
-        shapes.push(vec![n_layers]);
-        shapes.push(vec![n_act]);
-        let adam = Adam::new(cfg.lr_weights, &shapes);
-
-        let mut dir_cfg = DirConfig::new(cfg.direction);
-        dir_cfg.clip_min = cfg.dir_clip_min;
-        dir_cfg.clip_max = cfg.dir_clip_max;
-
-        let batcher = Batcher::new(train_data.len(), arch.train_batch, cfg.seed ^ 0xBA7C4);
-        let constraint = CostConstraint::new(cfg.bound_rbop_percent);
-
-        Ok(Self {
-            gate_gd: GateGd::new(cfg.lr_gates),
-            cfg,
-            arch,
-            artifacts,
-            params,
-            betas_w,
-            betas_a,
-            gates,
-            adam,
-            dir_cfg,
-            sat: Sat::Unsatisfied,
-            train_data,
-            test_data,
-            batcher,
-            constraint,
-            log: MetricsLog::new(),
-            best: None,
-            rbop_trace: Vec::new(),
-        })
+        Ok(Self { ctx: TrainCtx::new(cfg)? })
     }
 
-    // ------------------------------------------------------------------
-    // Phase 1: float pretraining
-    // ------------------------------------------------------------------
-
+    /// Phase 1 — delegates to the [`Pretrain`] stage.
     pub fn pretrain(&mut self, epochs: usize) -> Result<()> {
-        let name = format!("{}_float_step", self.arch.name);
-        for epoch in 0..epochs {
-            let sw = Stopwatch::start();
-            let batches = self.batcher.epoch(&self.train_data);
-            let mut loss_sum = 0.0;
-            for batch in &batches {
-                let (x, y) = self.batch_tensors(batch, self.arch.train_batch)?;
-                let mut args: Vec<Arg> = self.params.iter().map(Arg::F32).collect();
-                args.push(Arg::F32(&x));
-                args.push(Arg::I32(&y));
-                let out = self.artifacts.get(&name)?.run(&args)?;
-                loss_sum += out[0].item()? as f64;
-                let grads = &out[1..1 + self.params.len()];
-                // Adam state covers params + betas; pad beta grads with zero.
-                let mut full_grads: Vec<Tensor> = grads.to_vec();
-                full_grads.push(Tensor::zeros(self.betas_w.shape()));
-                full_grads.push(Tensor::zeros(self.betas_a.shape()));
-                self.adam_step(&full_grads)?;
-            }
-            let acc = self.evaluate_float()?;
-            self.log.push(EpochRecord {
-                phase: "pretrain".into(),
-                epoch,
-                train_loss: loss_sum / batches.len() as f64,
-                test_acc: acc,
-                rbop_percent: 100.0,
-                sat: true,
-                mean_weight_bits: 32.0,
-                secs: sw.secs(),
-            });
-        }
-        Ok(())
+        Pretrain::epochs(epochs).run(&mut self.ctx).map(|_| ())
     }
 
-    // ------------------------------------------------------------------
-    // Phase 2: range calibration (paper §2.4)
-    // ------------------------------------------------------------------
-
+    /// Phase 2 — delegates to the [`Calibrate`] stage.
     pub fn calibrate(&mut self) -> Result<()> {
-        // Weight ranges: exact per-layer max |w| (host-side).
-        let n_layers = self.arch.layers.len();
-        for li in 0..n_layers {
-            self.betas_w.data_mut()[li] = self.params[2 * li].abs_max().max(1e-3);
-        }
-        // Activation ranges: running mean of per-batch max |activation|
-        // with momentum 0.1 over one epoch (paper §2.4).
-        let name = format!("{}_calibrate", self.arch.name);
-        let momentum = self.cfg.calib_momentum;
-        let batches = self.batcher.epoch(&self.train_data);
-        let mut running: Option<Vec<f32>> = None;
-        for batch in &batches {
-            let (x, _) = self.batch_tensors(batch, self.arch.train_batch)?;
-            let mut args: Vec<Arg> = self.params.iter().map(Arg::F32).collect();
-            args.push(Arg::F32(&x));
-            let out = self.artifacts.get(&name)?.run(&args)?;
-            let act_maxes = out[1].data();
-            running = Some(match running {
-                None => act_maxes.to_vec(),
-                Some(prev) => prev
-                    .iter()
-                    .zip(act_maxes)
-                    .map(|(&r, &m)| (1.0 - momentum) * r + momentum * m)
-                    .collect(),
-            });
-        }
-        let running = running.context("no calibration batches")?;
-        for (i, r) in running.iter().enumerate() {
-            self.betas_a.data_mut()[i] = r.max(1e-3);
-        }
-        Ok(())
+        Calibrate.run(&mut self.ctx).map(|_| ())
     }
 
-    // ------------------------------------------------------------------
-    // Phase 3: range learning (QAT at 32-bit gates, no gate updates)
-    // ------------------------------------------------------------------
-
+    /// Phase 3 — delegates to the [`RangeLearn`] stage.
     pub fn learn_ranges(&mut self, epochs: usize) -> Result<()> {
-        for epoch in 0..epochs {
-            let sw = Stopwatch::start();
-            let loss = self.qat_epoch(false)?;
-            let acc = self.evaluate()?;
-            self.log.push(EpochRecord {
-                phase: "ranges".into(),
-                epoch,
-                train_loss: loss,
-                test_acc: acc,
-                rbop_percent: self.current_rbop()?,
-                sat: true,
-                mean_weight_bits: self.gates.mean_weight_bits(&self.arch),
-                secs: sw.secs(),
-            });
-        }
-        Ok(())
+        RangeLearn::epochs(epochs).run(&mut self.ctx).map(|_| ())
     }
 
-    // ------------------------------------------------------------------
-    // Phase 4: CGMQ (paper Sections 2.2-2.5)
-    // ------------------------------------------------------------------
-
+    /// Phase 4 — delegates to the [`CgmqLoop`] stage.
     pub fn cgmq(&mut self, epochs: usize) -> Result<()> {
-        // Initial Sat/Unsat from the initial gate state (everything 32-bit
-        // -> Unsat for any bound < 100%).
-        self.sat = self.check_constraint()?;
-        for epoch in 0..epochs {
-            let sw = Stopwatch::start();
-            let loss = self.qat_epoch(true)?;
-            // End-of-epoch constraint check decides next epoch's dir case
-            // (paper §2.5) and feeds the guarantee trace.
-            let bops = model_bops(
-                &self.arch,
-                &self.gates.materialize_all_w(&self.arch),
-                &self.gates.materialize_all_a(&self.arch),
-            )?;
-            let rbop = rbop_percent(&self.arch, bops);
-            let sat_now = self.constraint.is_satisfied(&self.arch, bops);
-            self.sat = if sat_now { Sat::Satisfied } else { Sat::Unsatisfied };
-            self.rbop_trace.push(rbop);
-
-            let acc = self.evaluate()?;
-            if sat_now {
-                let better = match &self.best {
-                    None => true,
-                    Some(b) => acc > b.test_acc,
-                };
-                if better {
-                    self.best = Some(self.snapshot(acc, rbop));
-                }
-            }
-            self.log.push(EpochRecord {
-                phase: "cgmq".into(),
-                epoch,
-                train_loss: loss,
-                test_acc: acc,
-                rbop_percent: rbop,
-                sat: sat_now,
-                mean_weight_bits: self.gates.mean_weight_bits(&self.arch),
-                secs: sw.secs(),
-            });
-        }
-        Ok(())
+        CgmqLoop::epochs(epochs).run(&mut self.ctx).map(|_| ())
     }
-
-    /// One epoch of QAT steps with the paper's CGMQ gate policy (or none).
-    pub fn qat_epoch(&mut self, update_gates: bool) -> Result<f64> {
-        if update_gates {
-            self.qat_epoch_with(Some(&CgmqPolicy))
-        } else {
-            self.qat_epoch_with(None)
-        }
-    }
-
-    /// One epoch of QAT steps; weights+ranges always get Adam, gates are
-    /// driven by the supplied policy (CGMQ's dirs, a baseline's penalty, or
-    /// nothing).
-    pub fn qat_epoch_with(&mut self, policy: Option<&dyn GatePolicy>) -> Result<f64> {
-        let name = format!("{}_qat_step", self.arch.name);
-        let batches = self.batcher.epoch(&self.train_data);
-        let n_p = self.params.len();
-        let n_a = self.arch.n_quant_act();
-        let mut loss_sum = 0.0;
-        for batch in &batches {
-            let (x, y) = self.batch_tensors(batch, self.arch.train_batch)?;
-            let gw = self.gates.materialize_all_w(&self.arch);
-            let ga = self.gates.materialize_all_a(&self.arch);
-            let mut args: Vec<Arg> = self.params.iter().map(Arg::F32).collect();
-            args.push(Arg::F32(&self.betas_w));
-            args.push(Arg::F32(&self.betas_a));
-            args.extend(gw.iter().map(Arg::F32));
-            args.extend(ga.iter().map(Arg::F32));
-            args.push(Arg::F32(&x));
-            args.push(Arg::I32(&y));
-            let out = self.artifacts.get(&name)?.run(&args)?;
-            // outputs: loss, param grads, grad betas_w, grad betas_a,
-            //          act_grads (n_a), act_means (n_a)
-            loss_sum += out[0].item()? as f64;
-            let mut full_grads: Vec<Tensor> = out[1..1 + n_p].to_vec();
-            full_grads.push(out[1 + n_p].clone());
-            full_grads.push(out[2 + n_p].clone());
-
-            if let Some(policy) = policy {
-                let inputs = PolicyInputs {
-                    arch: &self.arch,
-                    sat: self.sat,
-                    grads: &full_grads[..n_p],
-                    params: &self.params,
-                    act_grads: &out[3 + n_p..3 + n_p + n_a],
-                    act_means: &out[3 + n_p + n_a..3 + n_p + 2 * n_a],
-                    gates: &self.gates,
-                    dir_cfg: &self.dir_cfg,
-                };
-                let (dirs_w, dirs_a) = policy.dirs(&inputs)?;
-                self.gate_gd.step(&mut self.gates.gates_w, &dirs_w)?;
-                self.gate_gd.step(&mut self.gates.gates_a, &dirs_a)?;
-                self.gates.clamp();
-            }
-            self.adam_step(&full_grads)?;
-        }
-        Ok(loss_sum / batches.len() as f64)
-    }
-
-    // ------------------------------------------------------------------
-    // Evaluation
-    // ------------------------------------------------------------------
-
-    /// Quantized test accuracy (the paper's Acc column).
-    pub fn evaluate(&self) -> Result<f64> {
-        self.eval_with(&self.gates, &self.params, &self.betas_w, &self.betas_a)
-    }
-
-    /// Quantized accuracy for an explicit state (snapshots, baselines).
-    pub fn eval_with(
-        &self,
-        gates: &GateSet,
-        params: &[Tensor],
-        betas_w: &Tensor,
-        betas_a: &Tensor,
-    ) -> Result<f64> {
-        let name = format!("{}_eval", self.arch.name);
-        let exe = self.artifacts.get(&name)?;
-        let batch_size = self.arch.eval_batch;
-        let gw = gates.materialize_all_w(&self.arch);
-        let ga = gates.materialize_all_a(&self.arch);
-        let (mut correct, mut total) = (0u64, 0u64);
-        for batch in Batcher::sequential(&self.test_data, batch_size) {
-            let (x, _) = self.batch_tensors(&batch, batch_size)?;
-            let mut args: Vec<Arg> = params.iter().map(Arg::F32).collect();
-            args.push(Arg::F32(betas_w));
-            args.push(Arg::F32(betas_a));
-            args.extend(gw.iter().map(Arg::F32));
-            args.extend(ga.iter().map(Arg::F32));
-            args.push(Arg::F32(&x));
-            let out = exe.run(&args)?;
-            let preds = out[0].argmax_rows()?;
-            let (c, t) = accuracy(&preds, &batch.labels, batch.valid);
-            correct += c;
-            total += t;
-        }
-        Ok(correct as f64 / total as f64)
-    }
-
-    /// Float test accuracy (the paper's FP32 row).
-    pub fn evaluate_float(&self) -> Result<f64> {
-        let name = format!("{}_eval_float", self.arch.name);
-        let exe = self.artifacts.get(&name)?;
-        let batch_size = self.arch.eval_batch;
-        let (mut correct, mut total) = (0u64, 0u64);
-        for batch in Batcher::sequential(&self.test_data, batch_size) {
-            let (x, _) = self.batch_tensors(&batch, batch_size)?;
-            let mut args: Vec<Arg> = self.params.iter().map(Arg::F32).collect();
-            args.push(Arg::F32(&x));
-            let out = exe.run(&args)?;
-            let preds = out[0].argmax_rows()?;
-            let (c, t) = accuracy(&preds, &batch.labels, batch.valid);
-            correct += c;
-            total += t;
-        }
-        Ok(correct as f64 / total as f64)
-    }
-
-    // ------------------------------------------------------------------
-    // Orchestration + results
-    // ------------------------------------------------------------------
 
     /// Full pipeline: pretrain -> calibrate -> range learning -> CGMQ.
     pub fn run_full(&mut self) -> Result<RunResult> {
-        self.pretrain(self.cfg.pretrain_epochs)?;
-        let float_acc = self.evaluate_float()?;
-        self.calibrate()?;
-        self.learn_ranges(self.cfg.range_epochs)?;
-        self.cgmq(self.cfg.cgmq_epochs)?;
-        self.result(float_acc)
+        Pretrain::default().run(&mut self.ctx)?;
+        Calibrate.run(&mut self.ctx)?;
+        RangeLearn::default().run(&mut self.ctx)?;
+        CgmqLoop::default().run(&mut self.ctx)?;
+        self.ctx.result()
     }
 
     /// Resume from a pretrained float checkpoint (skips phase 1).
     pub fn run_from_pretrained(&mut self, ckpt: &Path) -> Result<RunResult> {
-        self.load_params(ckpt)?;
-        let float_acc = self.evaluate_float()?;
-        self.calibrate()?;
-        self.learn_ranges(self.cfg.range_epochs)?;
-        self.cgmq(self.cfg.cgmq_epochs)?;
-        self.result(float_acc)
+        LoadCheckpoint::new(ckpt).run(&mut self.ctx)?;
+        Calibrate.run(&mut self.ctx)?;
+        RangeLearn::default().run(&mut self.ctx)?;
+        CgmqLoop::default().run(&mut self.ctx)?;
+        self.ctx.result()
     }
-
-    /// Public result builder for drivers that run the phases themselves.
-    pub fn result_with_float_acc(&self, float_acc: f64) -> Result<RunResult> {
-        self.result(float_acc)
-    }
-
-    fn result(&self, float_acc: f64) -> Result<RunResult> {
-        let final_model = self.final_model()?;
-        Ok(RunResult {
-            run_id: self.cfg.run_id(),
-            float_acc,
-            quant_acc: final_model.test_acc,
-            rbop_percent: final_model.rbop_percent,
-            bound_rbop_percent: self.cfg.bound_rbop_percent,
-            satisfied: final_model.rbop_percent
-                <= self.cfg.bound_rbop_percent + 1e-9,
-            mean_weight_bits: final_model.gates.mean_weight_bits(&self.arch),
-            rbop_trace: self.rbop_trace.clone(),
-        })
-    }
-
-    /// The delivered model: best accuracy among constraint-satisfying
-    /// epoch-end snapshots (the paper's guarantee as an API property).
-    pub fn final_model(&self) -> Result<Snapshot> {
-        match &self.best {
-            Some(s) => Ok(s.clone()),
-            None => bail!(
-                "no constraint-satisfying model found after {} CGMQ epochs \
-                 (bound {}%, last RBOP {:?}%) — increase cgmq_epochs",
-                self.rbop_trace.len(),
-                self.cfg.bound_rbop_percent,
-                self.rbop_trace.last()
-            ),
-        }
-    }
-
-    pub fn snapshot(&self, test_acc: f64, rbop: f64) -> Snapshot {
-        Snapshot {
-            params: self.params.clone(),
-            betas_w: self.betas_w.clone(),
-            betas_a: self.betas_a.clone(),
-            gates: self.gates.clone(),
-            test_acc,
-            rbop_percent: rbop,
-        }
-    }
-
-    // ------------------------------------------------------------------
-    // Helpers
-    // ------------------------------------------------------------------
-
-    fn adam_step(&mut self, full_grads: &[Tensor]) -> Result<()> {
-        // One parameter list: params..., betas_w, betas_a.
-        let mut all: Vec<Tensor> = std::mem::take(&mut self.params);
-        all.push(std::mem::replace(&mut self.betas_w, Tensor::zeros(&[0])));
-        all.push(std::mem::replace(&mut self.betas_a, Tensor::zeros(&[0])));
-        let r = self.adam.step(&mut all, full_grads);
-        self.betas_a = all.pop().unwrap();
-        self.betas_w = all.pop().unwrap();
-        self.params = all;
-        // Ranges must stay positive (alpha = -beta convention).
-        self.betas_w.map_inplace(|b| b.max(1e-4));
-        self.betas_a.map_inplace(|b| b.max(1e-4));
-        r
-    }
-
-    pub fn current_rbop(&self) -> Result<f64> {
-        let bops = model_bops(
-            &self.arch,
-            &self.gates.materialize_all_w(&self.arch),
-            &self.gates.materialize_all_a(&self.arch),
-        )?;
-        Ok(rbop_percent(&self.arch, bops))
-    }
-
-    pub fn check_constraint(&self) -> Result<Sat> {
-        let bops = model_bops(
-            &self.arch,
-            &self.gates.materialize_all_w(&self.arch),
-            &self.gates.materialize_all_a(&self.arch),
-        )?;
-        Ok(if self.constraint.is_satisfied(&self.arch, bops) {
-            Sat::Satisfied
-        } else {
-            Sat::Unsatisfied
-        })
-    }
-
-    /// Batch -> (x tensor shaped for the arch, y labels).
-    fn batch_tensors(&self, batch: &Batch, batch_size: usize) -> Result<(Tensor, TensorI32)> {
-        let mut x_shape = vec![batch_size];
-        x_shape.extend_from_slice(&self.arch.input_shape);
-        let x = Tensor::new(x_shape, batch.images.clone())?;
-        let y = TensorI32::new(vec![batch_size], batch.labels.clone())?;
-        Ok((x, y))
-    }
-
-    // ------------------------------------------------------------------
-    // Checkpointing
-    // ------------------------------------------------------------------
-
-    pub fn save_params(&self, path: &Path) -> Result<()> {
-        let mut c = crate::checkpoint::Checkpoint::new();
-        c.insert_all("params", &self.params);
-        c.insert("betas_w", self.betas_w.clone());
-        c.insert("betas_a", self.betas_a.clone());
-        c.meta.insert("arch".into(), self.arch.name.to_string());
-        c.save(path)
-    }
-
-    pub fn load_params(&mut self, path: &Path) -> Result<()> {
-        let c = crate::checkpoint::Checkpoint::load(path)?;
-        if let Some(a) = c.meta.get("arch") {
-            if a != self.arch.name {
-                bail!("checkpoint is for arch '{a}', trainer is '{}'", self.arch.name);
-            }
-        }
-        let params = c.get_all("params")?;
-        let shapes = self.arch.param_shapes();
-        if params.len() != shapes.len() {
-            bail!("checkpoint has {} param tensors, arch wants {}", params.len(), shapes.len());
-        }
-        for (p, s) in params.iter().zip(&shapes) {
-            if p.shape() != s.as_slice() {
-                bail!("checkpoint param shape {:?} != arch {:?}", p.shape(), s);
-            }
-        }
-        self.params = params;
-        if let Ok(bw) = c.get("betas_w") {
-            self.betas_w = bw.clone();
-        }
-        if let Ok(ba) = c.get("betas_a") {
-            self.betas_a = ba.clone();
-        }
-        Ok(())
-    }
-}
-
-/// Per-step inputs a gate policy may use to construct its update.
-pub struct PolicyInputs<'a> {
-    pub arch: &'a ArchSpec,
-    /// Constraint state from the *previous* epoch end (paper §2.5).
-    pub sat: Sat,
-    /// Parameter gradients in (w, b) layer order (batch-mean loss).
-    pub grads: &'a [Tensor],
-    pub params: &'a [Tensor],
-    /// Batch-mean loss gradient per quantized activation (probe outputs).
-    pub act_grads: &'a [Tensor],
-    /// Batch-mean activation values.
-    pub act_means: &'a [Tensor],
-    pub gates: &'a GateSet,
-    pub dir_cfg: &'a DirConfig,
-}
-
-/// A per-step gate update rule: returns (dirs_w, dirs_a) shaped like the
-/// gate *stores* (scalars for layer granularity, tensors for individual).
-pub trait GatePolicy {
-    fn dirs(&self, inputs: &PolicyInputs) -> Result<(Vec<Tensor>, Vec<Tensor>)>;
-}
-
-/// The paper's CGMQ policy: dir1/dir2/dir3 dispatched on Sat/Unsat.
-pub struct CgmqPolicy;
-
-impl GatePolicy for CgmqPolicy {
-    fn dirs(&self, t: &PolicyInputs) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
-        let n_l = t.arch.layers.len();
-        let mut dirs_w = Vec::with_capacity(n_l);
-        for li in 0..n_l {
-            dirs_w.push(dir_tensor_w(
-                t.dir_cfg,
-                t.gates.granularity,
-                t.sat,
-                &t.grads[2 * li],
-                &t.params[2 * li],
-                &t.gates.gates_w[li],
-            )?);
-        }
-        let mut dirs_a = Vec::with_capacity(t.act_grads.len());
-        for ai in 0..t.act_grads.len() {
-            dirs_a.push(dir_tensor_a(
-                t.dir_cfg,
-                t.gates.granularity,
-                t.sat,
-                &t.act_grads[ai],
-                &t.act_means[ai],
-                &t.gates.gates_a[ai],
-            )?);
-        }
-        Ok((dirs_w, dirs_a))
-    }
-}
-
-/// Summary of one finished run (one table row).
-#[derive(Debug, Clone)]
-pub struct RunResult {
-    pub run_id: String,
-    pub float_acc: f64,
-    pub quant_acc: f64,
-    pub rbop_percent: f64,
-    pub bound_rbop_percent: f64,
-    pub satisfied: bool,
-    pub mean_weight_bits: f64,
-    pub rbop_trace: Vec<f64>,
-}
-
-impl RunResult {
-    pub fn to_json(&self) -> crate::util::json::Json {
-        use crate::util::json::Json;
-        Json::obj(vec![
-            ("run_id", Json::str(self.run_id.clone())),
-            ("float_acc", Json::num(self.float_acc)),
-            ("quant_acc", Json::num(self.quant_acc)),
-            ("rbop_percent", Json::num(self.rbop_percent)),
-            ("bound_rbop_percent", Json::num(self.bound_rbop_percent)),
-            ("satisfied", Json::Bool(self.satisfied)),
-            ("mean_weight_bits", Json::num(self.mean_weight_bits)),
-            ("rbop_trace", Json::arr_f64(&self.rbop_trace)),
-        ])
-    }
-}
-
-fn load_data(cfg: &Config, arch: &ArchSpec) -> Result<(Dataset, Dataset)> {
-    match &cfg.data {
-        DataSource::Synth => {
-            // Independent seeds for train/test streams; the generator is
-            // balanced by construction.
-            let train = Dataset::synth(cfg.seed, cfg.train_size);
-            let test = Dataset::synth(cfg.seed ^ 0x5EED_7E57, cfg.test_size);
-            check_sample_len(arch, train.sample_len)?;
-            Ok((train, test))
-        }
-        DataSource::Mnist(dir) => {
-            let d = Path::new(dir);
-            let train = crate::data::idx::load_pair(
-                &d.join("train-images-idx3-ubyte"),
-                &d.join("train-labels-idx1-ubyte"),
-            )?;
-            let test = crate::data::idx::load_pair(
-                &d.join("t10k-images-idx3-ubyte"),
-                &d.join("t10k-labels-idx1-ubyte"),
-            )?;
-            let sample_len = train.rows * train.cols;
-            check_sample_len(arch, sample_len)?;
-            Ok((
-                Dataset::new(train.images, train.labels, sample_len)?,
-                Dataset::new(test.images, test.labels, sample_len)?,
-            ))
-        }
-    }
-}
-
-fn check_sample_len(arch: &ArchSpec, sample_len: usize) -> Result<()> {
-    if sample_len != arch.input_len() {
-        bail!("dataset sample length {} != arch input {}", sample_len, arch.input_len());
-    }
-    Ok(())
 }

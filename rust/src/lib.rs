@@ -9,14 +9,51 @@
 //! * **Layer 2** (JAX, build time) — LeNet-5/MLP forward+backward with fake
 //!   quantization, lowered once to HLO-text artifacts (`make artifacts`).
 //! * **Layer 3** (this crate, run time) — the paper's contribution: the
-//!   constraint-guided training coordinator. It owns the epoch loop, the
-//!   end-of-epoch BOP constraint check (Sat/Unsat state machine), the gate
-//!   store and its `dir`-driven update (paper Section 2.2-2.3), optimizers,
-//!   the data pipeline, checkpoints, metrics, baselines and the benchmark
-//!   harness that regenerates the paper's tables.
+//!   constraint-guided training pipeline, exposed through the staged
+//!   [`session`] API.
+//!
+//! ## The staged session API
+//!
+//! Training is a [`session::Session`]: a [`session::TrainCtx`] (model,
+//! gates, optimizers, data, compiled artifacts) driven through an ordered
+//! list of [`session::Stage`]s, with [`session::Observer`]s subscribed to
+//! the event bus (epoch ends, constraint checks, best-model snapshots).
+//! The paper's four phases are the stock stages
+//! [`session::Pretrain`] → [`session::Calibrate`] →
+//! [`session::RangeLearn`] → [`session::CgmqLoop`]:
+//!
+//! ```no_run
+//! use cgmq::config::Config;
+//! use cgmq::session::SessionBuilder;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = SessionBuilder::new(Config::default())
+//!     .paper_pipeline()
+//!     .build()?;
+//! session.run()?;
+//! let result = session.result()?; // best bound-satisfying model
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Baselines and ablations are just other stage sequences over the same
+//! context — uniform fixed-bit QAT is
+//! `[Pretrain, Calibrate, PinGates(b), Finetune]`, resuming from a float
+//! checkpoint swaps `Pretrain` for `LoadCheckpoint`, and the myQASR
+//! heuristic ships as a custom stage in [`baselines::myqasr`].
+//!
+//! ### Migrating from `Trainer`
+//!
+//! The old monolithic `coordinator::Trainer` remains as a thin shim that
+//! delegates every phase method to the corresponding stage. Replace
+//! `Trainer::new(cfg)?` + `run_full()` with
+//! `SessionBuilder::new(cfg).paper_pipeline().build()?` + `run()` +
+//! `result()`; state the trainer exposed as fields (`params`, `gates`,
+//! `log`, `rbop_trace`, ...) lives on `session.ctx`.
 //!
 //! Python never runs on the training path: the Rust binary loads the HLO
-//! artifacts through PJRT (the `xla` crate) and drives everything itself.
+//! artifacts through PJRT (the `xla` crate, behind the `pjrt` feature) and
+//! drives everything itself.
 //!
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured results.
@@ -36,6 +73,7 @@ pub mod model;
 pub mod optim;
 pub mod quant;
 pub mod runtime;
+pub mod session;
 pub mod tensor;
 pub mod util;
 

@@ -9,6 +9,12 @@
 //!   a2         penalty-method (DQ-style) tuning comparison
 //!   info       show artifact manifest + runtime info
 //!
+//! Every command assembles a `session::SessionBuilder` pipeline: `train` is
+//! the paper's four stages, `fixed-qat` swaps the CGMQ loop for
+//! `PinGates + Finetune`, `--from-pretrained` swaps `Pretrain` for
+//! `LoadCheckpoint`. Training commands stream per-epoch metrics as JSONL
+//! (`<run_id>.epochs.jsonl` in `--out-dir`) via the metrics observer.
+//!
 //! Every command takes `--config <toml>` plus targeted overrides; run with
 //! no command for usage.
 
@@ -20,9 +26,12 @@ use cgmq::baselines::{fixed_qat, myqasr};
 use cgmq::bench_harness;
 use cgmq::cli::Args;
 use cgmq::config::Config;
-use cgmq::coordinator::Trainer;
 use cgmq::direction::DirKind;
 use cgmq::gates::Granularity;
+use cgmq::session::{
+    Calibrate, CgmqLoop, JsonlMetricsObserver, LoadCheckpoint, Pretrain, RangeLearn, Session,
+    SessionBuilder,
+};
 
 const USAGE: &str = "\
 cgmq — Constraint Guided Model Quantization (paper reproduction)
@@ -43,6 +52,14 @@ COMMANDS
   table3     --config <toml>   (bound sweep, individual gates)
   a2         --config <toml> [--lambdas 0.001,0.01,...]
   info       [--config <toml>]
+
+Training commands write <run_id>.epochs.csv and <run_id>.epochs.jsonl
+(one JSON event per line: epoch, constraint_check, snapshot, stage_*)
+into --out-dir for machine scraping.
+
+Library users: the same pipelines are cgmq::session::SessionBuilder stage
+sequences — see the crate docs (`cargo doc --open`) for the API and the
+migration note from the old coordinator::Trainer.
 ";
 
 fn main() {
@@ -126,6 +143,22 @@ fn load_config(args: &Args) -> Result<Config> {
     Ok(cfg)
 }
 
+/// The paper pipeline (or its resume-from-checkpoint variant) with the
+/// JSONL metrics observer attached.
+fn train_session(cfg: &Config, from_pretrained: Option<&str>) -> Result<Session> {
+    let jsonl = Path::new(&cfg.out_dir).join(format!("{}.epochs.jsonl", cfg.run_id()));
+    let builder = SessionBuilder::new(cfg.clone()).observer(JsonlMetricsObserver::create(jsonl)?);
+    let builder = match from_pretrained {
+        Some(ckpt) => builder
+            .stage(LoadCheckpoint::new(ckpt))
+            .stage(Calibrate)
+            .stage(RangeLearn::default())
+            .stage(CgmqLoop::default()),
+        None => builder.paper_pipeline(),
+    };
+    builder.build()
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let save = args.get("save").map(str::to_string);
@@ -133,11 +166,9 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.finish()?;
     let out_dir = cfg.out_dir.clone();
     let run_id = cfg.run_id();
-    let mut t = Trainer::new(cfg)?;
-    let result = match from {
-        Some(ckpt) => t.run_from_pretrained(Path::new(&ckpt))?,
-        None => t.run_full()?,
-    };
+    let mut session = train_session(&cfg, from.as_deref())?;
+    session.run()?;
+    let result = session.result()?;
     println!(
         "{}: float acc {:.2}% | quantized acc {:.2}% @ RBOP {:.3}% (bound {:.2}%) sat={} mean bits {:.2}",
         result.run_id,
@@ -149,13 +180,14 @@ fn cmd_train(args: &Args) -> Result<()> {
         result.mean_weight_bits
     );
     let dir = Path::new(&out_dir);
-    t.log.write_csv(&dir.join(format!("{run_id}.epochs.csv")))?;
+    session.metrics().write_csv(&dir.join(format!("{run_id}.epochs.csv")))?;
     std::fs::write(dir.join(format!("{run_id}.result.json")), result.to_json().to_string())?;
     if let Some(save) = save {
-        t.final_model()?.save(Path::new(&save), t.arch.name)?;
+        session.final_model()?.save(Path::new(&save), session.ctx.arch.name)?;
         println!("saved best constraint-satisfying snapshot to {save}");
     }
     println!("epoch log: {}", dir.join(format!("{run_id}.epochs.csv")).display());
+    println!("epoch jsonl: {}", dir.join(format!("{run_id}.epochs.jsonl")).display());
     Ok(())
 }
 
@@ -164,10 +196,10 @@ fn cmd_pretrain(args: &Args) -> Result<()> {
     let save = args.get("save").unwrap_or("runs/pretrained.ckpt").to_string();
     args.finish()?;
     let epochs = cfg.pretrain_epochs;
-    let mut t = Trainer::new(cfg)?;
-    t.pretrain(epochs)?;
-    let acc = t.evaluate_float()?;
-    t.save_params(Path::new(&save))?;
+    let mut session = SessionBuilder::new(cfg).stage(Pretrain::default()).build()?;
+    session.run()?;
+    let acc = session.ctx.float_acc.expect("Pretrain records float accuracy");
+    session.ctx.save_params(Path::new(&save))?;
     println!("pretrained {} epochs, float acc {:.2}%, saved {}", epochs, 100.0 * acc, save);
     Ok(())
 }
@@ -178,18 +210,19 @@ fn cmd_eval(args: &Args) -> Result<()> {
     args.finish()?;
     let Some(ckpt) = ckpt else { bail!("eval needs --ckpt <snapshot>") };
     let c = cgmq::checkpoint::Checkpoint::load(Path::new(&ckpt))?;
-    let mut t = Trainer::new(cfg)?;
-    t.params = c.get_all("params")?;
-    t.betas_w = c.get("betas_w")?.clone();
-    t.betas_a = c.get("betas_a")?.clone();
+    let mut session = SessionBuilder::new(cfg).build()?;
+    let ctx = &mut session.ctx;
+    ctx.params = c.get_all("params")?;
+    ctx.betas_w = c.get("betas_w")?.clone();
+    ctx.betas_a = c.get("betas_a")?.clone();
     if let Ok(gw) = c.get_all("gates_w") {
-        t.gates.gates_w = gw;
-        t.gates.gates_a = c.get_all("gates_a")?;
-        let acc = t.evaluate()?;
-        let rbop = t.current_rbop()?;
+        ctx.gates.gates_w = gw;
+        ctx.gates.gates_a = c.get_all("gates_a")?;
+        let acc = ctx.evaluate()?;
+        let rbop = ctx.current_rbop()?;
         println!("quantized acc {:.2}% @ RBOP {:.3}%", 100.0 * acc, rbop);
     } else {
-        let acc = t.evaluate_float()?;
+        let acc = ctx.evaluate_float()?;
         println!("float acc {:.2}%", 100.0 * acc);
     }
     Ok(())
@@ -215,10 +248,13 @@ fn cmd_fixed_qat(args: &Args) -> Result<()> {
         bail!("--bits must be one of {:?}", cgmq::BIT_LEVELS);
     }
     let epochs = cfg.cgmq_epochs;
-    let mut t = Trainer::new(cfg.clone())?;
-    t.pretrain(cfg.pretrain_epochs)?;
-    t.calibrate()?;
-    let r = fixed_qat::run(&mut t, bits, epochs)?;
+    let mut session = SessionBuilder::new(cfg)
+        .stage(Pretrain::default())
+        .stage(Calibrate)
+        .boxed_stages(fixed_qat::stages(bits, epochs))
+        .build()?;
+    session.run()?;
+    let r = fixed_qat::result(&session.ctx, bits)?;
     println!(
         "fixed {} bit QAT: acc {:.2}% @ RBOP {:.3}%",
         r.bits,
@@ -232,12 +268,14 @@ fn cmd_myqasr(args: &Args) -> Result<()> {
     let mut cfg = load_config(args)?;
     args.finish()?;
     cfg.granularity = Granularity::Layer;
-    let epochs = cfg.cgmq_epochs;
-    let mut t = Trainer::new(cfg.clone())?;
-    t.pretrain(cfg.pretrain_epochs)?;
-    t.calibrate()?;
-    t.learn_ranges(cfg.range_epochs)?;
-    let r = myqasr::run(&mut t, epochs)?;
+    let mut session = SessionBuilder::new(cfg)
+        .stage(Pretrain::default())
+        .stage(Calibrate)
+        .stage(RangeLearn::default())
+        .stage(myqasr::MyQasrStage::default())
+        .build()?;
+    session.run()?;
+    let r = myqasr::result(&session.ctx)?;
     println!(
         "myQASR: acc {:.2}% @ RBOP {:.3}% sat={} assignment {:?}",
         100.0 * r.test_acc,

@@ -1,0 +1,112 @@
+//! Stub PJRT backend, compiled when the `pjrt` feature is off.
+//!
+//! Mirrors the exact slice of the `xla` crate's API that `runtime::mod`
+//! uses, so the whole crate (and its unit tests, CLI plumbing, cost model,
+//! data pipeline, ...) builds and tests in environments without the
+//! `xla_extension` native library. Every entry point that would touch PJRT
+//! fails fast with an actionable error; nothing silently pretends to
+//! execute a model. `ArtifactSet::open` calls [`PjRtClient::cpu`] first,
+//! so that error is what users of a stub build actually see.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error` (converts into `anyhow::Error`
+/// through the usual `std::error::Error` blanket impl).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str = "cgmq was built without the `pjrt` feature: the PJRT/XLA runtime is \
+                           unavailable. To execute artifacts, add the `xla` dependency to \
+                           Cargo.toml (see the commented line under [features]; needs a vendored \
+                           xla-rs checkout plus its xla_extension native library), then rebuild \
+                           with `cargo build --features pjrt`.";
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable()
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+pub struct ArrayShape;
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &[]
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}

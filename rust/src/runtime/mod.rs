@@ -10,6 +10,17 @@
 //! `Executable::run` call validates its inputs against that record, so a
 //! compile-path/run-path drift fails loudly with tensor names instead of
 //! producing garbage.
+//!
+//! The PJRT dependency is gated behind the `pjrt` cargo feature: without it
+//! the crate builds against a stub backend (`backend_stub`) whose client
+//! construction fails with an actionable error, so everything that doesn't
+//! execute artifacts — unit tests, the cost model, CLI plumbing — builds
+//! and runs in environments without the `xla_extension` native library.
+
+#[cfg(not(feature = "pjrt"))]
+mod backend_stub;
+#[cfg(not(feature = "pjrt"))]
+use backend_stub as xla;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -1,0 +1,210 @@
+//! The staged training API — the crate's public entry point.
+//!
+//! A training run is a [`Session`]: a [`TrainCtx`] (model + optimizer +
+//! data + artifact state) driven through an ordered list of [`Stage`]s,
+//! with [`Observer`]s subscribed to the event bus. [`SessionBuilder`]
+//! assembles and validates all three:
+//!
+//! ```no_run
+//! use cgmq::config::Config;
+//! use cgmq::session::SessionBuilder;
+//!
+//! # fn main() -> anyhow::Result<()> {
+//! let mut session = SessionBuilder::new(Config::default())
+//!     .paper_pipeline() // Pretrain -> Calibrate -> RangeLearn -> CgmqLoop
+//!     .build()?;
+//! session.run()?;
+//! let result = session.result()?; // guaranteed to satisfy the bound
+//! println!("acc {:.2}% @ RBOP {:.3}%", 100.0 * result.quant_acc, result.rbop_percent);
+//! # Ok(())
+//! # }
+//! ```
+//!
+//! Alternative methods are alternative stage sequences — uniform QAT is
+//! `[Pretrain, Calibrate, PinGates(b), Finetune]`, resuming from a float
+//! checkpoint swaps `Pretrain` for `LoadCheckpoint` — and custom stages
+//! (anything implementing [`Stage`]) compose with the built-ins.
+
+mod ctx;
+pub mod observer;
+mod snapshot;
+pub mod stage;
+
+pub use ctx::{CgmqPolicy, GatePolicy, PolicyInputs, TrainCtx};
+pub use snapshot::Snapshot;
+pub use observer::{
+    BestSnapshotSaver, ConstraintEvent, JsonlMetricsObserver, Observer, ObserverBus,
+    SnapshotEvent,
+};
+pub use stage::{
+    Calibrate, CgmqLoop, Finetune, LoadCheckpoint, PinGates, Pretrain, RangeLearn, Stage,
+    StageReport,
+};
+
+use std::collections::VecDeque;
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::metrics::MetricsLog;
+
+/// Builder for a [`Session`]: config + stage sequence + observers.
+///
+/// `build()` is where all up-front validation happens — config values,
+/// architecture name, artifact directory and manifest/arch agreement —
+/// so a mis-assembled session fails before any training starts.
+#[derive(Default)]
+pub struct SessionBuilder {
+    cfg: Config,
+    stages: Vec<Box<dyn Stage>>,
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl SessionBuilder {
+    pub fn new(cfg: Config) -> Self {
+        Self { cfg, stages: Vec::new(), observers: Vec::new() }
+    }
+
+    /// Start from a TOML config file (same schema as `--config`).
+    pub fn from_toml(path: &Path) -> Result<Self> {
+        Ok(Self::new(Config::from_file(path)?))
+    }
+
+    /// Append the paper's four-phase pipeline:
+    /// `Pretrain -> Calibrate -> RangeLearn -> CgmqLoop`, all epoch counts
+    /// taken from the config schedule.
+    pub fn paper_pipeline(self) -> Self {
+        self.stage(Pretrain::default())
+            .stage(Calibrate)
+            .stage(RangeLearn::default())
+            .stage(CgmqLoop::default())
+    }
+
+    /// Append one stage.
+    pub fn stage<S: Stage + 'static>(mut self, stage: S) -> Self {
+        self.stages.push(Box::new(stage));
+        self
+    }
+
+    /// Append a pre-boxed stage list (e.g. from a baseline helper).
+    pub fn boxed_stages(mut self, stages: Vec<Box<dyn Stage>>) -> Self {
+        self.stages.extend(stages);
+        self
+    }
+
+    /// Subscribe an observer to the session's event bus.
+    pub fn observer<O: Observer + 'static>(mut self, observer: O) -> Self {
+        self.observers.push(Box::new(observer));
+        self
+    }
+
+    /// Validate everything and construct the session. Fails (without
+    /// training) on invalid config values, an unknown architecture, a
+    /// missing artifacts directory, or manifest/arch drift — all via
+    /// `TrainCtx::new`, the single validation site.
+    pub fn build(self) -> Result<Session> {
+        let mut ctx = TrainCtx::new(self.cfg)?;
+        for o in self.observers {
+            ctx.bus.attach(o);
+        }
+        Ok(Session { ctx, queue: self.stages.into(), reports: Vec::new() })
+    }
+}
+
+/// A training run in progress: context + remaining stages + reports.
+pub struct Session {
+    /// The shared training state; freely inspectable between stages.
+    pub ctx: TrainCtx,
+    queue: VecDeque<Box<dyn Stage>>,
+    reports: Vec<StageReport>,
+}
+
+impl Session {
+    /// Run every queued stage, in order. Returns the reports of the stages
+    /// run by *this* call.
+    pub fn run(&mut self) -> Result<&[StageReport]> {
+        let first = self.reports.len();
+        while let Some(mut stage) = self.queue.pop_front() {
+            self.exec(stage.as_mut())?;
+        }
+        Ok(&self.reports[first..])
+    }
+
+    /// Run one ad-hoc stage immediately (ahead of any queued stages) —
+    /// e.g. extending a run with extra `CgmqLoop` epochs until the
+    /// constraint is met.
+    pub fn run_stage<S: Stage>(&mut self, mut stage: S) -> Result<&StageReport> {
+        self.exec(&mut stage)?;
+        Ok(self.reports.last().expect("exec pushed a report"))
+    }
+
+    fn exec(&mut self, stage: &mut dyn Stage) -> Result<()> {
+        self.ctx.bus.stage_start(stage.name());
+        let report = stage.run(&mut self.ctx)?;
+        self.ctx.bus.stage_end(&report);
+        self.reports.push(report);
+        Ok(())
+    }
+
+    /// Reports of every stage run so far.
+    pub fn reports(&self) -> &[StageReport] {
+        &self.reports
+    }
+
+    /// Number of stages still queued.
+    pub fn pending_stages(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The accumulated per-epoch metrics log.
+    pub fn metrics(&self) -> &MetricsLog {
+        &self.ctx.log
+    }
+
+    /// The delivered model: best accuracy among constraint-satisfying
+    /// epoch-end snapshots (the paper's guarantee as an API property).
+    pub fn final_model(&self) -> Result<Snapshot> {
+        self.ctx.final_model()
+    }
+
+    /// Summary of the finished run (one table row).
+    pub fn result(&self) -> Result<RunResult> {
+        self.ctx.result()
+    }
+
+    /// Dissolve the session into its context (for function-style drivers
+    /// like the outer bb_proxy tuning loop).
+    pub fn into_ctx(self) -> TrainCtx {
+        self.ctx
+    }
+}
+
+/// Summary of one finished run (one table row).
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub run_id: String,
+    pub float_acc: f64,
+    pub quant_acc: f64,
+    pub rbop_percent: f64,
+    pub bound_rbop_percent: f64,
+    pub satisfied: bool,
+    pub mean_weight_bits: f64,
+    pub rbop_trace: Vec<f64>,
+}
+
+impl RunResult {
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("run_id", Json::str(self.run_id.clone())),
+            ("float_acc", Json::num(self.float_acc)),
+            ("quant_acc", Json::num(self.quant_acc)),
+            ("rbop_percent", Json::num(self.rbop_percent)),
+            ("bound_rbop_percent", Json::num(self.bound_rbop_percent)),
+            ("satisfied", Json::Bool(self.satisfied)),
+            ("mean_weight_bits", Json::num(self.mean_weight_bits)),
+            ("rbop_trace", Json::arr_f64(&self.rbop_trace)),
+        ])
+    }
+}

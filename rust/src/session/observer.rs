@@ -1,0 +1,332 @@
+//! Observers — the event bus the training loop reports into.
+//!
+//! Metrics logging, checkpoint-on-best, the RBOP constraint trace and any
+//! user instrumentation subscribe to the stream of training events instead
+//! of being woven through the loop: a [`Stage`](super::Stage) drives
+//! [`TrainCtx`](super::TrainCtx) primitives, and the context broadcasts
+//!
+//! * `on_stage_start` / `on_stage_end` — pipeline progress;
+//! * `on_epoch_end` — one [`EpochRecord`] per trained epoch (any phase);
+//! * `on_constraint_check` — the end-of-epoch BOP constraint verdict that
+//!   drives the Sat/Unsat dir dispatch (paper §2.5);
+//! * `on_snapshot` — a new best constraint-satisfying model was kept.
+//!
+//! Observer callbacks are infallible by design: an observer must not be
+//! able to abort training. IO-backed observers (e.g.
+//! [`JsonlMetricsObserver`]) report their own failures to stderr.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::EpochRecord;
+use crate::util::json::Json;
+
+use super::stage::StageReport;
+use super::Snapshot;
+
+/// End-of-epoch constraint verdict (paper §2.5).
+#[derive(Debug, Clone)]
+pub struct ConstraintEvent {
+    /// Stage phase label ("cgmq", "penalty", ...).
+    pub phase: String,
+    pub epoch: usize,
+    pub rbop_percent: f64,
+    pub bound_percent: f64,
+    pub satisfied: bool,
+}
+
+/// A new best constraint-satisfying model was captured.
+pub struct SnapshotEvent<'a> {
+    pub arch: &'a str,
+    pub epoch: usize,
+    pub test_acc: f64,
+    pub rbop_percent: f64,
+    pub snapshot: &'a Snapshot,
+}
+
+/// Subscriber to training events. All methods default to no-ops so an
+/// observer implements only what it cares about.
+pub trait Observer {
+    fn on_stage_start(&mut self, _stage: &str) {}
+    fn on_stage_end(&mut self, _report: &StageReport) {}
+    fn on_epoch_end(&mut self, _record: &EpochRecord) {}
+    fn on_constraint_check(&mut self, _event: &ConstraintEvent) {}
+    fn on_snapshot(&mut self, _event: &SnapshotEvent<'_>) {}
+}
+
+/// Fan-out bus: broadcasts each event to every attached observer in
+/// attachment order.
+#[derive(Default)]
+pub struct ObserverBus {
+    observers: Vec<Box<dyn Observer>>,
+}
+
+impl ObserverBus {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn attach(&mut self, observer: Box<dyn Observer>) {
+        self.observers.push(observer);
+    }
+
+    pub fn len(&self) -> usize {
+        self.observers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.observers.is_empty()
+    }
+
+    pub fn stage_start(&mut self, stage: &str) {
+        for o in &mut self.observers {
+            o.on_stage_start(stage);
+        }
+    }
+
+    pub fn stage_end(&mut self, report: &StageReport) {
+        for o in &mut self.observers {
+            o.on_stage_end(report);
+        }
+    }
+
+    pub fn epoch_end(&mut self, record: &EpochRecord) {
+        for o in &mut self.observers {
+            o.on_epoch_end(record);
+        }
+    }
+
+    pub fn constraint_check(&mut self, event: &ConstraintEvent) {
+        for o in &mut self.observers {
+            o.on_constraint_check(event);
+        }
+    }
+
+    pub fn snapshot(&mut self, event: &SnapshotEvent<'_>) {
+        for o in &mut self.observers {
+            o.on_snapshot(event);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Built-in observers
+// ---------------------------------------------------------------------------
+
+/// Streams every event as one JSON object per line (JSONL), so per-epoch
+/// trajectories can be scraped by tooling without parsing stdout.
+///
+/// Line shapes (discriminated by the `"event"` key):
+///
+/// ```text
+/// {"event":"stage_start","stage":"cgmq"}
+/// {"event":"epoch","phase":"cgmq","epoch":3,"train_loss":...,"test_acc":...}
+/// {"event":"constraint_check","phase":"cgmq","epoch":3,"rbop_percent":...}
+/// {"event":"snapshot","epoch":3,"test_acc":...,"rbop_percent":...}
+/// {"event":"stage_end","stage":"cgmq","epochs_run":10,"secs":...}
+/// ```
+pub struct JsonlMetricsObserver {
+    path: PathBuf,
+    file: std::io::BufWriter<std::fs::File>,
+}
+
+impl JsonlMetricsObserver {
+    /// Create (truncate) the JSONL file, creating parent directories.
+    pub fn create(path: impl Into<PathBuf>) -> Result<Self> {
+        let path = path.into();
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let file = std::fs::File::create(&path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(Self { path, file: std::io::BufWriter::new(file) })
+    }
+
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    fn write_line(&mut self, json: Json) {
+        let ok = writeln!(self.file, "{}", json.to_string()).and_then(|_| self.file.flush());
+        if ok.is_err() {
+            eprintln!("warning: failed writing metrics line to {}", self.path.display());
+        }
+    }
+}
+
+fn tagged(event: &str, json: Json) -> Json {
+    match json {
+        Json::Obj(mut m) => {
+            m.insert("event".into(), Json::str(event));
+            Json::Obj(m)
+        }
+        other => other,
+    }
+}
+
+impl Observer for JsonlMetricsObserver {
+    fn on_stage_start(&mut self, stage: &str) {
+        self.write_line(tagged(
+            "stage_start",
+            Json::obj(vec![("stage", Json::str(stage))]),
+        ));
+    }
+
+    fn on_stage_end(&mut self, report: &StageReport) {
+        self.write_line(tagged("stage_end", report.to_json()));
+    }
+
+    fn on_epoch_end(&mut self, record: &EpochRecord) {
+        self.write_line(tagged("epoch", record.to_json()));
+    }
+
+    fn on_constraint_check(&mut self, ev: &ConstraintEvent) {
+        self.write_line(tagged(
+            "constraint_check",
+            Json::obj(vec![
+                ("phase", Json::str(ev.phase.clone())),
+                ("epoch", Json::num(ev.epoch as f64)),
+                ("rbop_percent", Json::num(ev.rbop_percent)),
+                ("bound_percent", Json::num(ev.bound_percent)),
+                ("satisfied", Json::Bool(ev.satisfied)),
+            ]),
+        ));
+    }
+
+    fn on_snapshot(&mut self, ev: &SnapshotEvent<'_>) {
+        self.write_line(tagged(
+            "snapshot",
+            Json::obj(vec![
+                ("arch", Json::str(ev.arch)),
+                ("epoch", Json::num(ev.epoch as f64)),
+                ("test_acc", Json::num(ev.test_acc)),
+                ("rbop_percent", Json::num(ev.rbop_percent)),
+            ]),
+        ));
+    }
+}
+
+/// Persists every new best constraint-satisfying model to a fixed path, so
+/// a long CGMQ run always has its current deliverable on disk.
+pub struct BestSnapshotSaver {
+    pub path: PathBuf,
+}
+
+impl BestSnapshotSaver {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into() }
+    }
+}
+
+impl Observer for BestSnapshotSaver {
+    fn on_snapshot(&mut self, ev: &SnapshotEvent<'_>) {
+        if let Err(e) = ev.snapshot.save(&self.path, ev.arch) {
+            eprintln!("warning: failed saving best snapshot to {}: {e:#}", self.path.display());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    /// Observer that journals every callback in order (shared handle).
+    struct Recorder(Rc<RefCell<Vec<String>>>);
+
+    impl Observer for Recorder {
+        fn on_stage_start(&mut self, stage: &str) {
+            self.0.borrow_mut().push(format!("start:{stage}"));
+        }
+        fn on_stage_end(&mut self, report: &StageReport) {
+            self.0.borrow_mut().push(format!("end:{}", report.stage));
+        }
+        fn on_epoch_end(&mut self, r: &EpochRecord) {
+            self.0.borrow_mut().push(format!("epoch:{}:{}", r.phase, r.epoch));
+        }
+        fn on_constraint_check(&mut self, ev: &ConstraintEvent) {
+            self.0.borrow_mut().push(format!("check:{}:{}", ev.epoch, ev.satisfied));
+        }
+    }
+
+    fn rec(epoch: usize) -> EpochRecord {
+        EpochRecord {
+            phase: "cgmq".into(),
+            epoch,
+            train_loss: 0.1,
+            test_acc: 0.9,
+            rbop_percent: 1.0,
+            sat: true,
+            mean_weight_bits: 8.0,
+            secs: 0.0,
+        }
+    }
+
+    #[test]
+    fn bus_broadcasts_in_order() {
+        let seen = Rc::new(RefCell::new(Vec::new()));
+        let mut bus = ObserverBus::new();
+        bus.attach(Box::new(Recorder(seen.clone())));
+        bus.stage_start("cgmq");
+        bus.epoch_end(&rec(0));
+        bus.constraint_check(&ConstraintEvent {
+            phase: "cgmq".into(),
+            epoch: 0,
+            rbop_percent: 1.0,
+            bound_percent: 2.0,
+            satisfied: true,
+        });
+        bus.epoch_end(&rec(1));
+        bus.stage_end(&StageReport::new("cgmq"));
+        assert_eq!(
+            *seen.borrow(),
+            vec!["start:cgmq", "epoch:cgmq:0", "check:0:true", "epoch:cgmq:1", "end:cgmq"]
+        );
+    }
+
+    #[test]
+    fn bus_fans_out_to_all_observers() {
+        let a = Rc::new(RefCell::new(Vec::new()));
+        let b = Rc::new(RefCell::new(Vec::new()));
+        let mut bus = ObserverBus::new();
+        bus.attach(Box::new(Recorder(a.clone())));
+        bus.attach(Box::new(Recorder(b.clone())));
+        assert_eq!(bus.len(), 2);
+        bus.epoch_end(&rec(7));
+        assert_eq!(*a.borrow(), vec!["epoch:cgmq:7"]);
+        assert_eq!(*b.borrow(), vec!["epoch:cgmq:7"]);
+    }
+
+    #[test]
+    fn jsonl_observer_writes_tagged_lines() {
+        let dir = std::env::temp_dir().join("cgmq_observer_tests");
+        let path = dir.join("metrics.jsonl");
+        let mut o = JsonlMetricsObserver::create(&path).unwrap();
+        o.on_stage_start("pretrain");
+        o.on_epoch_end(&rec(0));
+        o.on_constraint_check(&ConstraintEvent {
+            phase: "cgmq".into(),
+            epoch: 0,
+            rbop_percent: 1.5,
+            bound_percent: 0.4,
+            satisfied: false,
+        });
+        drop(o);
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let first = crate::util::json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("event").unwrap().as_str().unwrap(), "stage_start");
+        let second = crate::util::json::parse(lines[1]).unwrap();
+        assert_eq!(second.get("event").unwrap().as_str().unwrap(), "epoch");
+        assert_eq!(second.get("epoch").unwrap().as_usize().unwrap(), 0);
+        let third = crate::util::json::parse(lines[2]).unwrap();
+        assert_eq!(third.get("event").unwrap().as_str().unwrap(), "constraint_check");
+        assert!(!third.get("satisfied").unwrap().as_bool().unwrap());
+    }
+}

@@ -1,0 +1,392 @@
+//! Pipeline stages — the paper's four phases (and baseline building
+//! blocks) as first-class, recomposable values.
+//!
+//! A [`Stage`] is one self-contained segment of a training pipeline. The
+//! paper's CGMQ recipe is the sequence
+//! `[Pretrain, Calibrate, RangeLearn, CgmqLoop]`
+//! (what [`SessionBuilder::paper_pipeline`](super::SessionBuilder) installs),
+//! but the whole point of the staged API is that other methods are just
+//! other sequences over the same [`TrainCtx`]:
+//!
+//! * fixed-bit QAT     — `[Pretrain, Calibrate, PinGates(b), Finetune]`
+//! * resume-from-ckpt  — `[LoadCheckpoint, Calibrate, RangeLearn, CgmqLoop]`
+//! * myQASR heuristic  — `[Pretrain, Calibrate, RangeLearn, MyQasrStage]`
+//!   (see `baselines::myqasr`)
+//!
+//! Epoch-count fields default (`None`) to the corresponding `Config`
+//! schedule value, so a stage list works across configs.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::metrics::{EpochRecord, Stopwatch};
+use crate::quant::gate_for_bits;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+use super::ctx::{CgmqPolicy, TrainCtx};
+
+/// One pipeline segment, run to completion over the shared context.
+pub trait Stage {
+    /// Stable name used for observer events and reports.
+    fn name(&self) -> &str;
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport>;
+}
+
+/// What one stage did (returned by every [`Stage::run`]).
+#[derive(Debug, Clone)]
+pub struct StageReport {
+    pub stage: String,
+    pub epochs_run: usize,
+    pub final_train_loss: Option<f64>,
+    pub test_acc: Option<f64>,
+    pub rbop_percent: Option<f64>,
+    pub secs: f64,
+}
+
+impl StageReport {
+    pub fn new(stage: impl Into<String>) -> Self {
+        Self {
+            stage: stage.into(),
+            epochs_run: 0,
+            final_train_loss: None,
+            test_acc: None,
+            rbop_percent: None,
+            secs: 0.0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("stage", Json::str(self.stage.clone())),
+            ("epochs_run", Json::num(self.epochs_run as f64)),
+            ("final_train_loss", opt(self.final_train_loss)),
+            ("test_acc", opt(self.test_acc)),
+            ("rbop_percent", opt(self.rbop_percent)),
+            ("secs", Json::num(self.secs)),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 1: float pretraining
+// ---------------------------------------------------------------------------
+
+/// Paper phase 1 — float training with Adam (`*_float_step` artifact).
+/// Records the float test accuracy in `ctx.float_acc` when done.
+#[derive(Debug, Clone, Default)]
+pub struct Pretrain {
+    /// `None` -> `cfg.pretrain_epochs`.
+    pub epochs: Option<usize>,
+}
+
+impl Pretrain {
+    pub fn epochs(epochs: usize) -> Self {
+        Self { epochs: Some(epochs) }
+    }
+}
+
+impl Stage for Pretrain {
+    fn name(&self) -> &str {
+        "pretrain"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport> {
+        let total = Stopwatch::start();
+        let epochs = self.epochs.unwrap_or(ctx.cfg.pretrain_epochs);
+        let mut report = StageReport::new(self.name());
+        for epoch in 0..epochs {
+            let sw = Stopwatch::start();
+            let loss = ctx.pretrain_epoch()?;
+            let acc = ctx.evaluate_float()?;
+            ctx.record_epoch(EpochRecord {
+                phase: "pretrain".into(),
+                epoch,
+                train_loss: loss,
+                test_acc: acc,
+                rbop_percent: 100.0,
+                sat: true,
+                mean_weight_bits: 32.0,
+                secs: sw.secs(),
+            });
+            report.epochs_run += 1;
+            report.final_train_loss = Some(loss);
+            report.test_acc = Some(acc);
+        }
+        // The last epoch's eval already measured the final parameters;
+        // only a zero-epoch stage still needs one.
+        let float_acc = match report.test_acc {
+            Some(acc) => acc,
+            None => ctx.evaluate_float()?,
+        };
+        ctx.float_acc = Some(float_acc);
+        report.test_acc = Some(float_acc);
+        report.secs = total.secs();
+        Ok(report)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 2: range calibration (paper §2.4)
+// ---------------------------------------------------------------------------
+
+/// Paper phase 2 — quantization-range initialization.
+#[derive(Debug, Clone, Default)]
+pub struct Calibrate;
+
+impl Stage for Calibrate {
+    fn name(&self) -> &str {
+        "calibrate"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport> {
+        let total = Stopwatch::start();
+        ctx.calibrate_pass()?;
+        let mut report = StageReport::new(self.name());
+        report.secs = total.secs();
+        Ok(report)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 3: range learning (QAT at 32-bit gates, no gate updates)
+// ---------------------------------------------------------------------------
+
+/// Paper phase 3 — QAT over weights *and* ranges with gates frozen.
+#[derive(Debug, Clone, Default)]
+pub struct RangeLearn {
+    /// `None` -> `cfg.range_epochs`.
+    pub epochs: Option<usize>,
+}
+
+impl RangeLearn {
+    pub fn epochs(epochs: usize) -> Self {
+        Self { epochs: Some(epochs) }
+    }
+}
+
+impl Stage for RangeLearn {
+    fn name(&self) -> &str {
+        "ranges"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport> {
+        let total = Stopwatch::start();
+        let epochs = self.epochs.unwrap_or(ctx.cfg.range_epochs);
+        let mut report = StageReport::new(self.name());
+        for epoch in 0..epochs {
+            let sw = Stopwatch::start();
+            let loss = ctx.qat_epoch(false)?;
+            let acc = ctx.evaluate()?;
+            let rbop = ctx.current_rbop()?;
+            ctx.record_epoch(EpochRecord {
+                phase: "ranges".into(),
+                epoch,
+                train_loss: loss,
+                test_acc: acc,
+                rbop_percent: rbop,
+                sat: true,
+                mean_weight_bits: ctx.gates.mean_weight_bits(&ctx.arch),
+                secs: sw.secs(),
+            });
+            report.epochs_run += 1;
+            report.final_train_loss = Some(loss);
+            report.test_acc = Some(acc);
+            report.rbop_percent = Some(rbop);
+        }
+        report.secs = total.secs();
+        Ok(report)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Phase 4: the CGMQ constraint-guided loop (paper §2.2-2.5)
+// ---------------------------------------------------------------------------
+
+/// Paper phase 4 — every step updates weights + ranges with Adam and gates
+/// with plain GD along the dir rules; the BOP constraint is checked only at
+/// the end of each epoch, and that Sat/Unsat outcome selects the dir case
+/// for the whole next epoch. Constraint-satisfying epoch ends are offered
+/// as the delivered model.
+#[derive(Debug, Clone, Default)]
+pub struct CgmqLoop {
+    /// `None` -> `cfg.cgmq_epochs`.
+    pub epochs: Option<usize>,
+}
+
+impl CgmqLoop {
+    pub fn epochs(epochs: usize) -> Self {
+        Self { epochs: Some(epochs) }
+    }
+}
+
+impl Stage for CgmqLoop {
+    fn name(&self) -> &str {
+        "cgmq"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport> {
+        let total = Stopwatch::start();
+        let epochs = self.epochs.unwrap_or(ctx.cfg.cgmq_epochs);
+        let mut report = StageReport::new(self.name());
+        // Initial Sat/Unsat from the current gate state (everything 32-bit
+        // -> Unsat for any bound < 100%).
+        ctx.sat = ctx.check_constraint()?;
+        for epoch in 0..epochs {
+            let sw = Stopwatch::start();
+            let loss = ctx.qat_epoch_with(Some(&CgmqPolicy))?;
+            let (rbop, sat_now) = ctx.end_of_epoch_check("cgmq", epoch)?;
+            let acc = ctx.evaluate()?;
+            if sat_now {
+                ctx.offer_snapshot(acc, rbop, epoch);
+            }
+            ctx.record_epoch(EpochRecord {
+                phase: "cgmq".into(),
+                epoch,
+                train_loss: loss,
+                test_acc: acc,
+                rbop_percent: rbop,
+                sat: sat_now,
+                mean_weight_bits: ctx.gates.mean_weight_bits(&ctx.arch),
+                secs: sw.secs(),
+            });
+            report.epochs_run += 1;
+            report.final_train_loss = Some(loss);
+            report.test_acc = Some(acc);
+            report.rbop_percent = Some(rbop);
+        }
+        report.secs = total.secs();
+        Ok(report)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Baseline / composition building blocks
+// ---------------------------------------------------------------------------
+
+/// Pin every weight and activation gate to one bit-width (classical
+/// uniform QAT setup; combine with [`Finetune`]).
+#[derive(Debug, Clone)]
+pub struct PinGates {
+    pub bits: u32,
+}
+
+impl PinGates {
+    pub fn bits(bits: u32) -> Self {
+        Self { bits }
+    }
+}
+
+impl Stage for PinGates {
+    fn name(&self) -> &str {
+        "pin-gates"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport> {
+        if !crate::BIT_LEVELS.contains(&self.bits) {
+            anyhow::bail!("bits must be one of {:?}, got {}", crate::BIT_LEVELS, self.bits);
+        }
+        let g = gate_for_bits(self.bits);
+        for t in ctx.gates.gates_w.iter_mut().chain(ctx.gates.gates_a.iter_mut()) {
+            *t = Tensor::full(&t.shape().to_vec(), g);
+        }
+        let mut report = StageReport::new(self.name());
+        report.rbop_percent = Some(ctx.current_rbop()?);
+        Ok(report)
+    }
+}
+
+/// QAT finetuning at frozen gates (whatever the gate state currently is).
+/// Same mechanics as [`RangeLearn`] but logged under its own phase label
+/// and with the honest end-of-epoch sat flag.
+#[derive(Debug, Clone, Default)]
+pub struct Finetune {
+    /// `None` -> `cfg.cgmq_epochs` (the schedule slot baselines reuse).
+    pub epochs: Option<usize>,
+}
+
+impl Finetune {
+    pub fn epochs(epochs: usize) -> Self {
+        Self { epochs: Some(epochs) }
+    }
+}
+
+impl Stage for Finetune {
+    fn name(&self) -> &str {
+        "finetune"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport> {
+        let total = Stopwatch::start();
+        let epochs = self.epochs.unwrap_or(ctx.cfg.cgmq_epochs);
+        let mut report = StageReport::new(self.name());
+        for epoch in 0..epochs {
+            let sw = Stopwatch::start();
+            let loss = ctx.qat_epoch(false)?;
+            let acc = ctx.evaluate()?;
+            let (rbop, sat) = ctx.constraint_status()?;
+            ctx.record_epoch(EpochRecord {
+                phase: "finetune".into(),
+                epoch,
+                train_loss: loss,
+                test_acc: acc,
+                rbop_percent: rbop,
+                sat,
+                mean_weight_bits: ctx.gates.mean_weight_bits(&ctx.arch),
+                secs: sw.secs(),
+            });
+            report.epochs_run += 1;
+            report.final_train_loss = Some(loss);
+            report.test_acc = Some(acc);
+            report.rbop_percent = Some(rbop);
+        }
+        report.secs = total.secs();
+        Ok(report)
+    }
+}
+
+/// Load float parameters (and ranges, if present) from a checkpoint instead
+/// of pretraining; records the float accuracy like [`Pretrain`] does, so a
+/// `[LoadCheckpoint, Calibrate, RangeLearn, CgmqLoop]` sequence is a drop-in
+/// resume pipeline.
+#[derive(Debug, Clone)]
+pub struct LoadCheckpoint {
+    pub path: PathBuf,
+    /// Record `ctx.float_acc` after loading (one full float test-set
+    /// pass). On by default — `result()` needs it; pipelines that never
+    /// build a `RunResult` can opt out.
+    pub eval_float: bool,
+}
+
+impl LoadCheckpoint {
+    pub fn new(path: impl Into<PathBuf>) -> Self {
+        Self { path: path.into(), eval_float: true }
+    }
+
+    pub fn skip_float_eval(mut self) -> Self {
+        self.eval_float = false;
+        self
+    }
+}
+
+impl Stage for LoadCheckpoint {
+    fn name(&self) -> &str {
+        "load-checkpoint"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> Result<StageReport> {
+        let total = Stopwatch::start();
+        ctx.load_params(&self.path)?;
+        let mut report = StageReport::new(self.name());
+        if self.eval_float {
+            let float_acc = ctx.evaluate_float()?;
+            ctx.float_acc = Some(float_acc);
+            report.test_acc = Some(float_acc);
+        }
+        report.secs = total.secs();
+        Ok(report)
+    }
+}

@@ -1,0 +1,240 @@
+//! Integration tests for the staged `session` API: builder validation,
+//! stage-sequence composition (including the skip-pretrain resume
+//! pipeline), and observer event ordering over a real training run.
+//!
+//! Builder-validation tests run everywhere; tests that train skip when the
+//! AOT artifacts are absent (same convention as the other integration
+//! tests).
+
+mod common;
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use cgmq::metrics::EpochRecord;
+use cgmq::session::stage::{Stage, StageReport};
+use cgmq::session::{
+    Calibrate, CgmqLoop, ConstraintEvent, JsonlMetricsObserver, LoadCheckpoint, Observer,
+    Pretrain, RangeLearn, SessionBuilder, SnapshotEvent, TrainCtx,
+};
+
+// ---------------------------------------------------------------------------
+// Builder validation (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn build_rejects_unknown_arch() {
+    let mut cfg = common::quick_cfg();
+    cfg.arch = "resnet18".into();
+    let err = SessionBuilder::new(cfg).paper_pipeline().build().unwrap_err().to_string();
+    assert!(err.contains("unknown architecture 'resnet18'"), "{err}");
+}
+
+#[test]
+fn build_rejects_missing_artifacts_dir() {
+    let mut cfg = common::quick_cfg();
+    cfg.artifacts_dir = "/nonexistent/cgmq/artifacts".into();
+    let err = format!("{:#}", SessionBuilder::new(cfg).paper_pipeline().build().unwrap_err());
+    assert!(err.contains("manifest.json"), "{err}");
+}
+
+#[test]
+fn build_rejects_invalid_config_values() {
+    let mut cfg = common::quick_cfg();
+    cfg.bound_rbop_percent = 0.0;
+    assert!(SessionBuilder::new(cfg).build().is_err());
+    let mut cfg = common::quick_cfg();
+    cfg.lr_gates = -1.0;
+    assert!(SessionBuilder::new(cfg).build().is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Event-recording observer used by the ordering tests
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct Journal {
+    events: Rc<RefCell<Vec<String>>>,
+}
+
+impl Journal {
+    fn handle(&self) -> Rc<RefCell<Vec<String>>> {
+        self.events.clone()
+    }
+}
+
+impl Observer for Journal {
+    fn on_stage_start(&mut self, stage: &str) {
+        self.events.borrow_mut().push(format!("start:{stage}"));
+    }
+    fn on_stage_end(&mut self, report: &StageReport) {
+        self.events.borrow_mut().push(format!("end:{}", report.stage));
+    }
+    fn on_epoch_end(&mut self, r: &EpochRecord) {
+        self.events.borrow_mut().push(format!("epoch:{}:{}", r.phase, r.epoch));
+    }
+    fn on_constraint_check(&mut self, ev: &ConstraintEvent) {
+        self.events.borrow_mut().push(format!("check:{}:{}", ev.phase, ev.epoch));
+    }
+    fn on_snapshot(&mut self, ev: &SnapshotEvent<'_>) {
+        self.events.borrow_mut().push(format!("snapshot:{}", ev.epoch));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Composition + observers over real training (artifact-gated)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn observer_sees_epochs_in_order() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = common::quick_cfg();
+    cfg.pretrain_epochs = 2;
+    cfg.cgmq_epochs = 2;
+    let journal = Journal::default();
+    let events = journal.handle();
+    let mut session = SessionBuilder::new(cfg)
+        .stage(Pretrain::default())
+        .stage(Calibrate)
+        .stage(CgmqLoop::default())
+        .observer(journal)
+        .build()
+        .unwrap();
+    session.run().unwrap();
+    let seen = events.borrow();
+    // Stage brackets in pipeline order.
+    let brackets: Vec<&String> =
+        seen.iter().filter(|e| e.starts_with("start:") || e.starts_with("end:")).collect();
+    assert_eq!(
+        brackets,
+        ["start:pretrain", "end:pretrain", "start:calibrate", "end:calibrate", "start:cgmq",
+         "end:cgmq"]
+    );
+    // Epoch events arrive in order within each phase.
+    let pretrain: Vec<&String> = seen.iter().filter(|e| e.starts_with("epoch:pretrain")).collect();
+    assert_eq!(pretrain, ["epoch:pretrain:0", "epoch:pretrain:1"]);
+    let cgmq: Vec<&String> = seen.iter().filter(|e| e.starts_with("epoch:cgmq")).collect();
+    assert_eq!(cgmq, ["epoch:cgmq:0", "epoch:cgmq:1"]);
+    // Every CGMQ epoch performs exactly one end-of-epoch constraint check,
+    // delivered before that epoch's record.
+    let cgmq_related: Vec<&String> = seen
+        .iter()
+        .filter(|e| e.starts_with("check:cgmq") || e.starts_with("epoch:cgmq"))
+        .collect();
+    assert_eq!(cgmq_related, ["check:cgmq:0", "epoch:cgmq:0", "check:cgmq:1", "epoch:cgmq:1"]);
+}
+
+#[test]
+fn custom_sequence_skips_pretrain_from_checkpoint() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = common::quick_cfg();
+    cfg.bound_rbop_percent = 5.0;
+    cfg.cgmq_epochs = 4;
+    cfg.lr_gates = 0.05;
+
+    // First session: pretrain only, save the float checkpoint.
+    let ckpt = std::env::temp_dir().join("cgmq_itest_session_resume.ckpt");
+    let mut pre = SessionBuilder::new(cfg.clone()).stage(Pretrain::epochs(2)).build().unwrap();
+    pre.run().unwrap();
+    pre.ctx.save_params(&ckpt).unwrap();
+    let float_acc = pre.ctx.float_acc.unwrap();
+
+    // Second session: a custom stage sequence that skips pretraining.
+    let mut session = SessionBuilder::new(cfg)
+        .stage(LoadCheckpoint::new(&ckpt))
+        .stage(Calibrate)
+        .stage(RangeLearn::epochs(1))
+        .stage(CgmqLoop::default())
+        .build()
+        .unwrap();
+    session.run().unwrap();
+    // No pretrain epochs were trained in the resumed session...
+    assert!(session.metrics().records.iter().all(|r| r.phase != "pretrain"));
+    // ...but the float accuracy carried over through the checkpoint.
+    assert!((session.ctx.float_acc.unwrap() - float_acc).abs() < 1e-9);
+    // The composed pipeline still delivers the guarantee at a loose bound.
+    let r = session.result().unwrap();
+    assert!(r.satisfied, "resumed pipeline violated the bound: {}", r.rbop_percent);
+    let stages: Vec<&str> = session.reports().iter().map(|s| s.stage.as_str()).collect();
+    assert_eq!(stages, ["load-checkpoint", "calibrate", "ranges", "cgmq"]);
+}
+
+#[test]
+fn ad_hoc_stage_extends_a_finished_session() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = common::quick_cfg();
+    cfg.bound_rbop_percent = 5.0;
+    cfg.cgmq_epochs = 1;
+    cfg.lr_gates = 0.05;
+    let mut session = SessionBuilder::new(cfg).paper_pipeline().build().unwrap();
+    session.run().unwrap();
+    let before = session.ctx.rbop_trace.len();
+    // Extend with two more CGMQ epochs through the public API.
+    session.run_stage(CgmqLoop::epochs(2)).unwrap();
+    assert_eq!(session.ctx.rbop_trace.len(), before + 2);
+    assert_eq!(session.reports().last().unwrap().stage, "cgmq");
+}
+
+#[test]
+fn jsonl_observer_streams_a_training_run() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let mut cfg = common::quick_cfg();
+    cfg.pretrain_epochs = 1;
+    cfg.cgmq_epochs = 1;
+    let path = std::env::temp_dir().join("cgmq_itest_session.jsonl");
+    let mut session = SessionBuilder::new(cfg)
+        .paper_pipeline()
+        .observer(JsonlMetricsObserver::create(&path).unwrap())
+        .build()
+        .unwrap();
+    session.run().unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    let mut epochs = 0;
+    for line in text.lines() {
+        let j = cgmq::util::json::parse(line).unwrap(); // every line is valid JSON
+        let event = j.get("event").unwrap().as_str().unwrap().to_string();
+        if event == "epoch" {
+            epochs += 1;
+        }
+    }
+    // pretrain 1 + ranges (quick_cfg: 1) + cgmq 1
+    assert_eq!(epochs, session.metrics().records.len());
+    assert!(text.contains("\"event\":\"stage_start\""), "stage events present");
+    assert!(text.contains("\"event\":\"constraint_check\""), "constraint events present");
+}
+
+// ---------------------------------------------------------------------------
+// Custom user-defined stage through the public trait
+// ---------------------------------------------------------------------------
+
+/// A user stage: deterministic gate nudge, no training. Verifies the Stage
+/// trait is implementable outside the crate and composes with built-ins.
+struct NudgeGates;
+
+impl Stage for NudgeGates {
+    fn name(&self) -> &str {
+        "nudge-gates"
+    }
+
+    fn run(&mut self, ctx: &mut TrainCtx) -> anyhow::Result<StageReport> {
+        for g in ctx.gates.gates_w.iter_mut().chain(ctx.gates.gates_a.iter_mut()) {
+            g.map_inplace(|v| v - 0.1);
+        }
+        ctx.gates.clamp();
+        let mut report = StageReport::new("nudge-gates");
+        report.rbop_percent = Some(ctx.current_rbop()?);
+        Ok(report)
+    }
+}
+
+#[test]
+fn external_stage_composes_with_builtins() {
+    let Some(_) = common::artifacts_dir() else { return };
+    let cfg = common::quick_cfg();
+    let mut session = SessionBuilder::new(cfg).stage(NudgeGates).build().unwrap();
+    let reports = session.run().unwrap();
+    assert_eq!(reports.len(), 1);
+    assert_eq!(reports[0].stage, "nudge-gates");
+    let rbop = reports[0].rbop_percent.unwrap();
+    assert!(rbop < 100.0, "nudged gates must cost less than fp32: {rbop}");
+}

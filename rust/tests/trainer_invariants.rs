@@ -1,15 +1,17 @@
-//! Coordinator invariants — randomized property tests over real training
+//! Training-loop invariants — randomized property tests over real training
 //! runs (hand-rolled harness; the environment vendors no proptest).
 //!
 //! G1 (paper §3): "CGMQ guarantees that some model is found that satisfies
 //! the cost constraint as long as such a model exists" — checked here for
-//! random (direction, granularity, bound, seed) draws on the MLP arch.
+//! random (direction, granularity, bound, seed) draws on the MLP arch,
+//! driven through the staged `session` API.
 
 mod common;
 
 use cgmq::coordinator::Trainer;
 use cgmq::direction::DirKind;
 use cgmq::gates::Granularity;
+use cgmq::session::{Calibrate, CgmqLoop, Pretrain, RangeLearn, SessionBuilder};
 use cgmq::util::rng::SplitMix64;
 use cgmq::{GATE_FLOOR, GATE_INIT};
 
@@ -40,33 +42,23 @@ fn constraint_satisfied_for_random_configs() {
             cfg.bound_rbop_percent
         );
 
-        let mut t = Trainer::new(cfg.clone()).unwrap();
-        t.pretrain(cfg.pretrain_epochs).unwrap();
-        t.calibrate().unwrap();
-        t.learn_ranges(cfg.range_epochs).unwrap();
+        let mut session = SessionBuilder::new(cfg.clone())
+            .stage(Pretrain::default())
+            .stage(Calibrate)
+            .stage(RangeLearn::default())
+            .build()
+            .unwrap();
+        session.run().unwrap();
         // dir2/dir3's Unsat magnitude is ~1/(|grad|+|w|), so the descent
         // from 32-bit needs a horizon proportional to 1/(lr_g * batches)
         // (the paper runs 250 epochs x 469 batches; this CI set has 6
         // batches/epoch). Train in chunks until the guarantee kicks in.
         let mut epochs = 0;
-        while t.final_model().is_err() && epochs < 60 {
-            t.cgmq(10).unwrap();
+        while session.final_model().is_err() && epochs < 60 {
+            session.run_stage(CgmqLoop::epochs(10)).unwrap();
             epochs += 10;
         }
-        let float_acc = t.evaluate_float().unwrap();
-        let r = t
-            .final_model()
-            .map(|m| cgmq::coordinator::RunResult {
-                run_id: cfg.run_id(),
-                float_acc,
-                quant_acc: m.test_acc,
-                rbop_percent: m.rbop_percent,
-                bound_rbop_percent: cfg.bound_rbop_percent,
-                satisfied: m.rbop_percent <= cfg.bound_rbop_percent + 1e-9,
-                mean_weight_bits: 0.0,
-                rbop_trace: t.rbop_trace.clone(),
-            })
-            .unwrap_or_else(|e| panic!("{label}: {e}"));
+        let r = session.result().unwrap_or_else(|e| panic!("{label}: {e}"));
         // The delivered model satisfies the bound — the paper's guarantee.
         assert!(r.satisfied, "{label}: final model violates bound (rbop {})", r.rbop_percent);
         assert!(
@@ -75,7 +67,8 @@ fn constraint_satisfied_for_random_configs() {
             r.rbop_percent
         );
         // Gates stayed inside [floor, cap] the whole time (checked at end).
-        for g in t.gates.gates_w.iter().chain(t.gates.gates_a.iter()) {
+        let gates = &session.ctx.gates;
+        for g in gates.gates_w.iter().chain(gates.gates_a.iter()) {
             for &v in g.data() {
                 assert!(
                     (GATE_FLOOR..=GATE_INIT + 1e-6).contains(&v),
@@ -101,13 +94,16 @@ fn rbop_decreases_monotonically_while_unsat() {
     let mut cfg = common::quick_cfg();
     cfg.cgmq_epochs = 5;
     cfg.bound_rbop_percent = 0.40;
-    let mut t = Trainer::new(cfg).unwrap();
-    t.pretrain(1).unwrap();
-    t.calibrate().unwrap();
-    t.cgmq(5).unwrap();
+    let mut session = SessionBuilder::new(cfg)
+        .stage(Pretrain::epochs(1))
+        .stage(Calibrate)
+        .stage(CgmqLoop::epochs(5))
+        .build()
+        .unwrap();
+    session.run().unwrap();
     // While the constraint was unsatisfied, every epoch must reduce RBOP
     // (dirs are strictly positive in Unsat — paper property (i)).
-    let trace = &t.rbop_trace;
+    let trace = &session.ctx.rbop_trace;
     for w in trace.windows(2) {
         let was_unsat = w[0] > 0.40;
         if was_unsat {
@@ -123,8 +119,9 @@ fn accuracy_survives_quantization_on_mlp() {
     let mut cfg = common::quick_cfg();
     cfg.bound_rbop_percent = 5.0;
     cfg.cgmq_epochs = 5;
-    let mut t = Trainer::new(cfg).unwrap();
-    let r = t.run_full().unwrap();
+    let mut session = SessionBuilder::new(cfg).paper_pipeline().build().unwrap();
+    session.run().unwrap();
+    let r = session.result().unwrap();
     assert!(r.float_acc > 0.5, "float model failed to learn: {}", r.float_acc);
     assert!(
         r.quant_acc > r.float_acc - 0.15,
@@ -139,19 +136,25 @@ fn epoch_log_is_complete_and_serializable() {
     let Some(_) = common::artifacts_dir() else { return };
     let mut cfg = common::quick_cfg();
     cfg.cgmq_epochs = 2;
-    let mut t = Trainer::new(cfg.clone()).unwrap();
-    t.run_full().unwrap();
+    let mut session = SessionBuilder::new(cfg.clone()).paper_pipeline().build().unwrap();
+    session.run().unwrap();
     let expected = cfg.pretrain_epochs + cfg.range_epochs + cfg.cgmq_epochs;
-    assert_eq!(t.log.records.len(), expected);
-    let csv = t.log.to_csv();
+    assert_eq!(session.metrics().records.len(), expected);
+    let csv = session.metrics().to_csv();
     assert_eq!(csv.lines().count(), expected + 1);
     // JSON parses back
-    let j = cgmq::util::json::parse(&t.log.to_json().to_string()).unwrap();
+    let j = cgmq::util::json::parse(&session.metrics().to_json().to_string()).unwrap();
     assert_eq!(j.as_arr().unwrap().len(), expected);
+    // One report per stage, in pipeline order.
+    let stages: Vec<&str> = session.reports().iter().map(|r| r.stage.as_str()).collect();
+    assert_eq!(stages, ["pretrain", "calibrate", "ranges", "cgmq"]);
 }
 
+/// The old `Trainer` facade still drives the same pipeline (shim coverage:
+/// it must keep compiling *and* producing identical results while external
+/// drivers migrate to `SessionBuilder`).
 #[test]
-fn checkpoint_roundtrip_through_trainer() {
+fn trainer_shim_checkpoint_roundtrip() {
     let Some(_) = common::artifacts_dir() else { return };
     let mut cfg = common::quick_cfg();
     cfg.pretrain_epochs = 1;
@@ -171,12 +174,12 @@ fn checkpoint_roundtrip_through_trainer() {
 fn wrong_arch_checkpoint_rejected() {
     let Some(_) = common::artifacts_dir() else { return };
     let cfg = common::quick_cfg();
-    let mut t = Trainer::new(cfg.clone()).unwrap();
+    let session = SessionBuilder::new(cfg.clone()).build().unwrap();
     let path = std::env::temp_dir().join("cgmq_itest_wrongarch.ckpt");
-    t.save_params(&path).unwrap();
+    session.ctx.save_params(&path).unwrap();
     // rewrite meta to claim a different arch
     let meta = std::env::temp_dir().join("cgmq_itest_wrongarch.ckpt.meta.json");
     std::fs::write(&meta, "{\"arch\": \"lenet5\"}").unwrap();
-    let mut t2 = Trainer::new(cfg).unwrap();
-    assert!(t2.load_params(&path).is_err());
+    let mut session2 = SessionBuilder::new(cfg).build().unwrap();
+    assert!(session2.ctx.load_params(&path).is_err());
 }
