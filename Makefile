@@ -3,9 +3,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt fmt-fix artifacts bench clean
+.PHONY: ci build test fmt fmt-fix clippy bench-smoke artifacts bench clean
 
-ci: build test fmt
+ci: build test fmt clippy bench-smoke
 
 build:
 	$(CARGO) build --release
@@ -15,6 +15,14 @@ test:
 
 fmt:
 	$(CARGO) fmt --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# Compile + execute the deploy engine hot path (tiny iteration counts and
+# the cross-path golden assertion) on every PR.
+bench-smoke:
+	$(CARGO) bench --bench bench_deploy -- --smoke
 
 fmt-fix:
 	$(CARGO) fmt

@@ -1,0 +1,124 @@
+//! Deploy-path microbenchmarks: bit-packing, weight decode, and the packed
+//! inference engine (the new serve hot path).
+//!
+//!     cargo bench --bench bench_deploy
+//!     cargo bench --bench bench_deploy -- --smoke   # CI: tiny iteration
+//!                                                   # counts, asserts the
+//!                                                   # cross-path golden
+//!
+//! Hand-rolled harness (no criterion in the offline vendor set), same
+//! reporting as bench_hot_paths: warmup, then timed repetitions with
+//! mean / min / p50. No artifacts needed — the engine is pure host code.
+
+use std::time::Instant;
+
+use cgmq::bench_harness::{synthetic_deploy_state, SyntheticDeployState, DEPLOY_LEVELS};
+use cgmq::deploy::reference::fake_quant_logits;
+use cgmq::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
+use cgmq::model::{lenet5, mlp};
+
+fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
+    for _ in 0..iters.div_ceil(10).max(1) {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(f64::total_cmp);
+    let mean: f64 = times.iter().sum::<f64>() / times.len() as f64;
+    println!(
+        "{name:<44} {:>10.3} ms/iter (min {:>8.3}, p50 {:>8.3}, n={})",
+        1e3 * mean,
+        1e3 * times[0],
+        1e3 * times[times.len() / 2],
+        iters
+    );
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke" || a == "--test");
+    let scale = if smoke { 1 } else { 10 };
+    println!("== cgmq deploy microbenchmarks{} ==\n", if smoke { " (smoke)" } else { "" });
+
+    let arch = mlp();
+    let SyntheticDeployState { params, betas_w, betas_a, gates } =
+        synthetic_deploy_state(&arch, &DEPLOY_LEVELS, 7);
+
+    // --- packing / decode ---
+    bench("deploy: PackedModel::from_state (mlp)", 2 * scale, || {
+        std::hint::black_box(
+            PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap(),
+        );
+    });
+    let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    bench("deploy: encode .cgmqm (mlp)", 5 * scale, || {
+        std::hint::black_box(model.encode().unwrap());
+    });
+    bench("deploy: decode_weights fc1 (100k codes)", 5 * scale, || {
+        std::hint::black_box(model.decode_weights(0).unwrap());
+    });
+
+    // --- the engine hot path ---
+    let data = cgmq::data::Dataset::synth(3, 64);
+    let in_len = arch.input_len();
+    let one = &data.images[..in_len];
+    let mut streaming = Engine::new(model.clone()).unwrap().with_mode(DecodeMode::Streaming);
+    bench("deploy: Engine::infer b=1 (mlp, streaming)", 5 * scale, || {
+        std::hint::black_box(streaming.infer(one).unwrap());
+    });
+    let mut cached = Engine::new(model.clone()).unwrap();
+    bench("deploy: Engine::infer_batch b=64 (unpack)", 5 * scale, || {
+        std::hint::black_box(cached.infer_batch(&data.images, 64).unwrap());
+    });
+    bench("deploy: reference fake-quant fwd b=64", 2 * scale, || {
+        let logits =
+            fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &data.images, 64);
+        std::hint::black_box(logits.unwrap());
+    });
+
+    // --- the batched serve path ---
+    let mut batcher = RequestBatcher::new(
+        Engine::new(model.clone()).unwrap(),
+        BatchConfig { max_batch: 16, max_delay: std::time::Duration::from_micros(200) },
+    )
+    .unwrap();
+    bench("deploy: RequestBatcher 64 reqs, b=16", 2 * scale, || {
+        let mut done = 0;
+        for i in 0..64 {
+            let now = Instant::now();
+            done += batcher
+                .submit_at(data.images[i * in_len..(i + 1) * in_len].to_vec(), now)
+                .unwrap()
+                .len();
+        }
+        done += batcher.flush_at(Instant::now()).unwrap().len();
+        assert_eq!(done, 64);
+    });
+
+    // --- smoke-mode correctness anchor: engine == fake-quant reference ---
+    let engine_logits = cached.infer_batch(&data.images, 64).unwrap();
+    let ref_logits =
+        fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &data.images, 64).unwrap();
+    assert_eq!(engine_logits.len(), ref_logits.len());
+    assert!(
+        engine_logits.iter().zip(&ref_logits).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "packed engine drifted from the fake-quant reference"
+    );
+    println!("\ncross-path golden: engine logits == fake-quant reference (bit-for-bit) ✓");
+
+    if !smoke {
+        // The conv path at full scale.
+        let arch = lenet5();
+        let s = synthetic_deploy_state(&arch, &DEPLOY_LEVELS, 7);
+        let model =
+            PackedModel::from_state(&arch, &s.params, &s.betas_w, &s.betas_a, &s.gates).unwrap();
+        let mut engine = Engine::new(model).unwrap();
+        let data = cgmq::data::Dataset::synth(5, 8);
+        bench("deploy: Engine::infer_batch b=8 (lenet5)", 5, || {
+            std::hint::black_box(engine.infer_batch(&data.images, 8).unwrap());
+        });
+    }
+}

@@ -17,16 +17,17 @@ use cgmq::config::Config;
 use cgmq::gates::Granularity;
 
 fn base_cfg() -> Config {
-    let mut cfg = Config::default();
-    cfg.arch = std::env::var("CGMQ_BENCH_ARCH").unwrap_or_else(|_| "mlp".into());
-    cfg.train_size = 2_000;
-    cfg.test_size = 512;
-    cfg.pretrain_epochs = 3;
-    cfg.range_epochs = 1;
-    cfg.cgmq_epochs = 10;
-    cfg.gate_lr_scale = 10.0; // schedule-compensated gate lr (Config docs)
-    cfg.out_dir = "runs/bench_tables".into();
-    cfg
+    Config {
+        arch: std::env::var("CGMQ_BENCH_ARCH").unwrap_or_else(|_| "mlp".into()),
+        train_size: 2_000,
+        test_size: 512,
+        pretrain_epochs: 3,
+        range_epochs: 1,
+        cgmq_epochs: 10,
+        gate_lr_scale: 10.0, // schedule-compensated gate lr (Config docs)
+        out_dir: "runs/bench_tables".into(),
+        ..Config::default()
+    }
 }
 
 fn main() -> anyhow::Result<()> {

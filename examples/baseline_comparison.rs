@@ -22,17 +22,18 @@ use cgmq::config::Config;
 use cgmq::session::TrainCtx;
 
 fn base_cfg() -> Config {
-    let mut cfg = Config::default();
-    cfg.arch = "mlp".into();
-    cfg.train_size = 2_000;
-    cfg.test_size = 512;
-    cfg.pretrain_epochs = 3;
-    cfg.range_epochs = 1;
-    cfg.cgmq_epochs = 10;
-    cfg.bound_rbop_percent = 0.90;
-    cfg.gate_lr_scale = 10.0;
-    cfg.out_dir = "runs/baseline_comparison".into();
-    cfg
+    Config {
+        arch: "mlp".into(),
+        train_size: 2_000,
+        test_size: 512,
+        pretrain_epochs: 3,
+        range_epochs: 1,
+        cgmq_epochs: 10,
+        bound_rbop_percent: 0.90,
+        gate_lr_scale: 10.0,
+        out_dir: "runs/baseline_comparison".into(),
+        ..Config::default()
+    }
 }
 
 /// Phase-3 input state shared by all baselines: loaded from the cached

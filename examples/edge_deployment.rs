@@ -1,38 +1,48 @@
 //! Edge-deployment walkthrough: train under a device budget, export the
-//! bit-width assignment, and report what actually ships.
+//! packed `.cgmqm` artifact, and *run* it — the full train → export-packed
+//! → infer loop.
 //!
 //!     cargo run --release --example edge_deployment
 //!
 //! This is the workflow the paper's introduction motivates: a practitioner
 //! has a device with a hard compute budget (here: 1.4% of fp32 bit-ops),
 //! runs the CGMQ pipeline once, and gets a mixed-precision model that
-//! provably fits, plus the per-layer integer formats to provision. The
-//! `BestSnapshotSaver` observer keeps the current deliverable on disk
-//! throughout the run — a crash after the first satisfying epoch still
-//! leaves a shippable model.
+//! provably fits — then actually ships it: the best snapshot is bit-packed
+//! into a `.cgmqm` artifact, loaded by the deploy engine, validated
+//! bit-for-bit against the host fake-quant forward, and served through the
+//! request batcher. (Training executes compiled artifacts, so this example
+//! needs a `pjrt` build plus `make artifacts`; everything after the `run()`
+//! call is pure host code.)
+
+use std::path::Path;
+use std::time::{Duration, Instant};
 
 use cgmq::config::Config;
-use cgmq::quant;
+use cgmq::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
 use cgmq::session::{BestSnapshotSaver, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = Config::default();
-    cfg.arch = "mlp".into();
-    cfg.train_size = 2_000;
-    cfg.test_size = 512;
-    cfg.pretrain_epochs = 3;
-    cfg.range_epochs = 1;
-    cfg.cgmq_epochs = 10;
-    cfg.granularity = cgmq::gates::Granularity::Individual;
-    cfg.bound_rbop_percent = 1.40;
-    cfg.gate_lr_scale = 10.0;
-    cfg.out_dir = "runs/edge_deployment".into();
+    let cfg = Config {
+        arch: "mlp".into(),
+        train_size: 2_000,
+        test_size: 512,
+        pretrain_epochs: 3,
+        range_epochs: 1,
+        cgmq_epochs: 10,
+        granularity: cgmq::gates::Granularity::Individual,
+        bound_rbop_percent: 1.40,
+        gate_lr_scale: 10.0,
+        out_dir: "runs/edge_deployment".into(),
+        ..Config::default()
+    };
 
     println!("device budget: {:.2}% of fp32 bit-operations\n", cfg.bound_rbop_percent);
     let out_dir = cfg.out_dir.clone();
-    let ckpt = std::path::Path::new(&out_dir).join("deploy.ckpt");
+    let ckpt = Path::new(&out_dir).join("deploy.ckpt");
     std::fs::create_dir_all(&out_dir)?;
     let cfg_export = cfg.clone();
+
+    // ---- 1. Train under the constraint --------------------------------
     let mut session = SessionBuilder::new(cfg)
         .paper_pipeline()
         .observer(BestSnapshotSaver::new(&ckpt))
@@ -40,45 +50,100 @@ fn main() -> anyhow::Result<()> {
     session.run()?;
     let result = session.result()?;
     let model = session.final_model()?;
-
-    // Export: per-layer bit histograms + memory (the deployment report).
-    let report = cgmq::baselines::export_report(&cfg_export, &ckpt)?;
-    std::fs::write(std::path::Path::new(&out_dir).join("deploy.json"), report.to_string())?;
-
-    println!("accuracy: {:.2}% (float was {:.2}%)", 100.0 * result.quant_acc,
-        100.0 * result.float_acc);
-    println!("RBOP: {:.3}% <= bound {:.2}%  [guaranteed]", result.rbop_percent,
-        result.bound_rbop_percent);
     println!(
-        "weight memory: {:.1} KiB (fp32 was {:.1} KiB)",
-        report.get("total_weight_memory_bytes")?.as_f64()? / 1024.0,
+        "accuracy: {:.2}% (float was {:.2}%)",
+        100.0 * result.quant_acc,
+        100.0 * result.float_acc
+    );
+    println!(
+        "RBOP: {:.3}% <= bound {:.2}%  [guaranteed]",
+        result.rbop_percent, result.bound_rbop_percent
+    );
+
+    // ---- 2. Export: memory report + the packed artifact ----------------
+    let report = cgmq::baselines::export_report(&cfg_export, &ckpt)?;
+    std::fs::write(Path::new(&out_dir).join("deploy.json"), report.to_string())?;
+    let arch = &session.ctx.arch;
+    let packed = PackedModel::from_snapshot(arch, &model)?;
+    let cgmqm = Path::new(&out_dir).join("deploy.cgmqm");
+    let packed_bytes = packed.save(&cgmqm)?;
+    println!(
+        "\npacked artifact: {} ({:.1} KiB; fp32 weights were {:.1} KiB)",
+        cgmqm.display(),
+        packed_bytes as f64 / 1024.0,
         report.get("fp32_weight_memory_bytes")?.as_f64()? / 1024.0
     );
-    println!("\nper-layer shipped formats:");
+    println!("per-layer shipped formats:");
     for layer in report.get("layers")?.as_arr()? {
         println!(
-            "  {:<6} histogram {:?}  ({:.1} KiB)",
+            "  {:<6} histogram {:?}  (packed {:.1} KiB)",
             layer.get("name")?.as_str()?,
             layer.get("weight_bit_histogram")?,
-            layer.get("weight_memory_bytes")?.as_f64()? / 1024.0
+            layer.get("packed_weight_bytes")?.as_f64()? / 1024.0
         );
     }
 
-    // Show a few exported integer codes (what an int kernel would consume).
-    println!("\nsample integer codes (fc1, 4-bit grid if assigned):");
-    let w = &model.params[0];
-    let g = &model.gates.materialize_all_w(&session.ctx.arch)[0];
-    let beta = model.betas_w.data()[0];
-    for i in 0..5 {
-        let bits = quant::transform_t(g.data()[i]);
-        if bits < quant::IDENTITY_BITS && bits > 0 {
-            let (code, scale) = quant::integer_code(w.data()[i], bits, beta, true);
-            println!("  w[{i}] = {:+.5} -> int{bits} code {code:+} x scale {scale:.5}",
-                w.data()[i]);
-        } else {
-            println!("  w[{i}] = {:+.5} -> kept at {bits} bits", w.data()[i]);
-        }
+    // ---- 3. Infer: load the artifact and run it ------------------------
+    let mut engine = Engine::load(&cgmqm)?;
+    let n = 256.min(session.ctx.test_data.len());
+    let in_len = engine.input_len();
+    let xs = &session.ctx.test_data.images[..n * in_len];
+    let labels = &session.ctx.test_data.labels[..n];
+
+    // Golden check: the packed engine must reproduce the host fake-quant
+    // forward bit-for-bit on the shipped snapshot.
+    let packed_logits = engine.infer_batch(xs, n)?;
+    let reference = cgmq::deploy::reference::fake_quant_logits(
+        arch,
+        &model.params,
+        &model.betas_w,
+        &model.betas_a,
+        &model.gates,
+        xs,
+        n,
+    )?;
+    assert_eq!(packed_logits.len(), reference.len());
+    assert!(
+        packed_logits.iter().zip(&reference).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "packed engine drifted from the fake-quant reference"
+    );
+    let preds = engine.predict_batch(xs, n)?;
+    let correct = preds.iter().zip(labels).filter(|&(&p, &l)| p as i32 == l).count();
+    println!(
+        "\npacked-engine accuracy on {} held-out samples: {:.2}% (bit-exact vs fake-quant eval)",
+        n,
+        100.0 * correct as f64 / n as f64
+    );
+
+    // ---- 4. Serve: batched inference through the request batcher -------
+    let mut batcher = RequestBatcher::new(
+        Engine::load(&cgmqm)?,
+        BatchConfig { max_batch: 32, max_delay: Duration::from_micros(200) },
+    )?;
+    let t0 = Instant::now();
+    let mut served = 0usize;
+    for i in 0..n {
+        let now = Instant::now();
+        served += batcher.submit_at(xs[i * in_len..(i + 1) * in_len].to_vec(), now)?.len();
+        served += batcher.poll_at(Instant::now())?.len();
     }
-    println!("\nwrote {}/deploy.json and deploy.ckpt", out_dir);
+    served += batcher.flush_at(Instant::now())?.len();
+    let batched_rps = n as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(served, n);
+
+    let mut single = Engine::load(&cgmqm)?.with_mode(DecodeMode::Streaming);
+    let t0 = Instant::now();
+    for i in 0..n {
+        std::hint::black_box(single.infer(&xs[i * in_len..(i + 1) * in_len])?);
+    }
+    let single_rps = n as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "serve path: {:.0} req/s batched vs {:.0} req/s one-by-one ({:.1}x, mean batch {:.1})",
+        batched_rps,
+        single_rps,
+        batched_rps / single_rps,
+        batcher.stats().mean_batch()
+    );
+    println!("\nwrote {}/deploy.json, deploy.ckpt and deploy.cgmqm", out_dir);
     Ok(())
 }

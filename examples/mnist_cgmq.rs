@@ -16,17 +16,19 @@ fn main() -> anyhow::Result<()> {
     let train_size: usize = args.first().map(|s| s.parse()).transpose()?.unwrap_or(4_000);
     let cgmq_epochs: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(12);
 
-    let mut cfg = Config::default();
-    cfg.arch = "lenet5".into();
-    cfg.train_size = train_size;
-    cfg.test_size = 1_000;
-    cfg.pretrain_epochs = 6;
-    cfg.range_epochs = 1;
-    cfg.cgmq_epochs = cgmq_epochs;
-    cfg.bound_rbop_percent = 0.40; // the paper's tightest bound
-    cfg.gate_lr_scale = 10.0; // schedule-compensated (see Config docs)
+    let mut cfg = Config {
+        arch: "lenet5".into(),
+        train_size,
+        test_size: 1_000,
+        pretrain_epochs: 6,
+        range_epochs: 1,
+        cgmq_epochs,
+        bound_rbop_percent: 0.40, // the paper's tightest bound
+        gate_lr_scale: 10.0,      // schedule-compensated (see Config docs)
+        out_dir: "runs/mnist_cgmq".into(),
+        ..Config::default()
+    };
     cfg.lr_gates = Config::paper_gate_lr(cfg.direction) * cfg.gate_lr_scale;
-    cfg.out_dir = "runs/mnist_cgmq".into();
     if cgmq::data::idx::mnist_available(std::path::Path::new("mnist")) {
         println!("found real MNIST in ./mnist — using it");
         cfg.data = DataSource::Mnist("mnist".into());

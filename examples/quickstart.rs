@@ -12,15 +12,17 @@ use cgmq::session::SessionBuilder;
 
 fn main() -> anyhow::Result<()> {
     // 1. Configure a small run. Everything here also lives in configs/*.toml.
-    let mut cfg = Config::default();
-    cfg.arch = "mlp".into();
-    cfg.train_size = 2_000;
-    cfg.test_size = 512;
-    cfg.pretrain_epochs = 3;
-    cfg.range_epochs = 1;
-    cfg.cgmq_epochs = 8;
-    cfg.bound_rbop_percent = 0.90; // deploy budget: 0.9% of fp32 bit-ops
-    cfg.out_dir = "runs/quickstart".into();
+    let cfg = Config {
+        arch: "mlp".into(),
+        train_size: 2_000,
+        test_size: 512,
+        pretrain_epochs: 3,
+        range_epochs: 1,
+        cgmq_epochs: 8,
+        bound_rbop_percent: 0.90, // deploy budget: 0.9% of fp32 bit-ops
+        out_dir: "runs/quickstart".into(),
+        ..Config::default()
+    };
 
     // 2. Fig. 1 as code: what one layer's fake quantization does.
     println!("== Fake quantization (paper Eq. 1/3/4) ==");

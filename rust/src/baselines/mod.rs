@@ -26,22 +26,20 @@ use anyhow::Result;
 use crate::util::json::Json;
 
 /// Deployment report for a trained snapshot: per-layer bit histograms,
-/// weight memory, RBOP — what an edge integrator needs to provision the
-/// device the bound was derived from.
+/// weight memory, RBOP, and the *actual* packed `.cgmqm` artifact sizes —
+/// what an edge integrator needs to provision the device the bound was
+/// derived from. `packed_weight_bytes` / `packed_file_bytes` come from the
+/// same packer that writes `cgmq export --format packed`, so the memory
+/// report and a real `.cgmqm` file can be cross-checked byte-for-byte
+/// (pinned by `tests/deploy_roundtrip.rs`).
 pub fn export_report(cfg: &crate::config::Config, ckpt: &Path) -> Result<Json> {
-    let arch = crate::model::arch_by_name(&cfg.arch)?;
-    let c = crate::checkpoint::Checkpoint::load(ckpt)?;
-    let gran = match c.meta.get("granularity").map(|s| s.as_str()) {
-        Some("layer") => crate::gates::Granularity::Layer,
-        _ => crate::gates::Granularity::Individual,
-    };
-    let mut gates = crate::gates::GateSet::new(&arch, gran);
-    gates.gates_w = c.get_all("gates_w")?;
-    gates.gates_a = c.get_all("gates_a")?;
+    let (model, arch, gates) = load_packable_snapshot(cfg, ckpt)?;
+    let gran = gates.granularity;
 
     let gw = gates.materialize_all_w(&arch);
     let ga = gates.materialize_all_a(&arch);
     let bops = crate::cost::model_bops(&arch, &gw, &ga)?;
+    let payload = model.layer_payload_bytes();
     let mut layers = Vec::new();
     for (li, layer) in arch.layers.iter().enumerate() {
         let bits = crate::quant::bitwidths(&gw[li]);
@@ -59,6 +57,7 @@ pub fn export_report(cfg: &crate::config::Config, ckpt: &Path) -> Result<Json> {
                 ),
             ),
             ("weight_memory_bytes", Json::num(mem_bits as f64 / 8.0)),
+            ("packed_weight_bytes", Json::num(payload[li] as f64)),
         ]));
     }
     Ok(Json::obj(vec![
@@ -73,7 +72,47 @@ pub fn export_report(cfg: &crate::config::Config, ckpt: &Path) -> Result<Json> {
             "fp32_weight_memory_bytes",
             Json::num(arch.layers.iter().map(|l| l.w_len() as f64 * 4.0).sum()),
         ),
+        ("packed_total_weight_bytes", Json::num(model.total_payload_bytes() as f64)),
+        ("packed_file_bytes", Json::num(model.encoded_len()? as f64)),
         ("mean_weight_bits", Json::num(gates.mean_weight_bits(&arch))),
         ("layers", Json::Arr(layers)),
     ]))
+}
+
+/// Load a full snapshot checkpoint (params + ranges + gates) and pack it.
+/// Shared by the JSON report and `cgmq export --format packed`, so both
+/// views of the deliverable come from the same bytes.
+pub fn load_packable_snapshot(
+    cfg: &crate::config::Config,
+    ckpt: &Path,
+) -> Result<(crate::deploy::PackedModel, crate::model::ArchSpec, crate::gates::GateSet)> {
+    let arch = crate::model::arch_by_name(&cfg.arch)?;
+    let c = crate::checkpoint::Checkpoint::load(ckpt)?;
+    if let Some(a) = c.meta.get("arch") {
+        if a != arch.name {
+            anyhow::bail!("checkpoint is for arch '{a}', config says '{}'", arch.name);
+        }
+    }
+    let gran = match c.meta.get("granularity").map(|s| s.as_str()) {
+        Some("layer") => crate::gates::Granularity::Layer,
+        _ => crate::gates::Granularity::Individual,
+    };
+    let mut gates = crate::gates::GateSet::new(&arch, gran);
+    gates.gates_w = c.get_all("gates_w")?;
+    gates.gates_a = c.get_all("gates_a")?;
+    if gates.gates_w.len() != arch.layers.len() || gates.gates_a.len() != arch.n_quant_act() {
+        anyhow::bail!(
+            "checkpoint has {} weight / {} activation gate tensors, arch '{}' wants {} / {}",
+            gates.gates_w.len(),
+            gates.gates_a.len(),
+            arch.name,
+            arch.layers.len(),
+            arch.n_quant_act()
+        );
+    }
+    let params = c.get_all("params")?;
+    let betas_w = c.get("betas_w")?.clone();
+    let betas_a = c.get("betas_a")?.clone();
+    let model = crate::deploy::PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates)?;
+    Ok((model, arch, gates))
 }

@@ -282,6 +282,215 @@ pub fn penalty_comparison(base: &Config, lambdas: &[f32]) -> Result<String> {
     Ok(out)
 }
 
+// ---------------------------------------------------------------------------
+// Deploy rows — packed-model size + engine throughput (no artifacts needed)
+// ---------------------------------------------------------------------------
+
+/// Latency percentiles of a sorted-or-not set of per-request durations.
+fn percentiles_ms(durs: &mut [f64]) -> (f64, f64, f64) {
+    durs.sort_by(f64::total_cmp);
+    let pick = |p: f64| durs[((durs.len() - 1) as f64 * p).round() as usize] * 1e3;
+    (pick(0.50), pick(0.90), pick(0.99))
+}
+
+/// Measure one packed model: the naive single-request path (streaming
+/// decode per call) vs the batched serve path ([`RequestBatcher`] over an
+/// unpack-once engine). Returns the `serve-bench` JSON report.
+pub fn serve_bench(
+    model_path: &Path,
+    requests: usize,
+    batch: usize,
+    deadline: std::time::Duration,
+    seed: u64,
+) -> Result<Json> {
+    use crate::deploy::{BatchConfig, DecodeMode, Engine, RequestBatcher};
+    let single = Engine::load(model_path)?.with_mode(DecodeMode::Streaming);
+    let batcher = RequestBatcher::new(
+        Engine::load(model_path)?,
+        BatchConfig { max_batch: batch, max_delay: deadline },
+    )?;
+    let mut report = serve_bench_engines(single, batcher, requests, seed)?;
+    if let Json::Obj(m) = &mut report {
+        m.insert("model".into(), Json::str(model_path.display().to_string()));
+    }
+    Ok(report)
+}
+
+/// Core of [`serve_bench`], reusable with pre-built engines (deploy table).
+pub fn serve_bench_engines(
+    mut single: crate::deploy::Engine,
+    mut batcher: crate::deploy::RequestBatcher,
+    requests: usize,
+    seed: u64,
+) -> Result<Json> {
+    use std::time::Instant;
+    if requests == 0 {
+        anyhow::bail!("serve bench needs at least one request");
+    }
+    let in_len = single.input_len();
+    let ds = crate::data::Dataset::synth(seed, requests);
+    if ds.sample_len != in_len {
+        anyhow::bail!("synth samples have {} values, model wants {in_len}", ds.sample_len);
+    }
+
+    // Path A: one naive engine call per request, weights decoded each time.
+    let t0 = Instant::now();
+    let mut single_lat: Vec<f64> = Vec::with_capacity(requests);
+    for i in 0..requests {
+        let r0 = Instant::now();
+        std::hint::black_box(single.infer(&ds.images[i * in_len..(i + 1) * in_len])?);
+        single_lat.push(r0.elapsed().as_secs_f64());
+    }
+    let single_wall = t0.elapsed().as_secs_f64();
+
+    // Path B: the batched serve path.
+    fn record(
+        completions: Vec<crate::deploy::Completion>,
+        submit_at: &[Instant],
+        batched_lat: &mut [f64],
+        done: &mut usize,
+    ) {
+        let now = Instant::now();
+        for c in completions {
+            let waited = now.duration_since(submit_at[c.id as usize]);
+            batched_lat[c.id as usize] = waited.as_secs_f64();
+            *done += 1;
+        }
+    }
+    let t0 = Instant::now();
+    let mut submit_at: Vec<Instant> = Vec::with_capacity(requests);
+    let mut batched_lat: Vec<f64> = vec![0.0; requests];
+    let mut done = 0usize;
+    for i in 0..requests {
+        let now = Instant::now();
+        submit_at.push(now);
+        let completions = batcher.submit_at(ds.images[i * in_len..(i + 1) * in_len].to_vec(), now)?;
+        record(completions, &submit_at, &mut batched_lat, &mut done);
+        let completions = batcher.poll_at(Instant::now())?;
+        record(completions, &submit_at, &mut batched_lat, &mut done);
+    }
+    let completions = batcher.flush_at(Instant::now())?;
+    record(completions, &submit_at, &mut batched_lat, &mut done);
+    let batched_wall = t0.elapsed().as_secs_f64();
+    if done != requests {
+        anyhow::bail!("serve path completed {done} of {requests} requests");
+    }
+    let stats = batcher.stats();
+
+    let (sp50, sp90, sp99) = percentiles_ms(&mut single_lat);
+    let (bp50, bp90, bp99) = percentiles_ms(&mut batched_lat);
+    let single_rps = requests as f64 / single_wall;
+    let batched_rps = requests as f64 / batched_wall;
+    Ok(Json::obj(vec![
+        ("requests", Json::num(requests as f64)),
+        ("batch", Json::num(stats.mean_batch().max(1.0))),
+        (
+            "single",
+            Json::obj(vec![
+                ("throughput_rps", Json::num(single_rps)),
+                ("p50_ms", Json::num(sp50)),
+                ("p90_ms", Json::num(sp90)),
+                ("p99_ms", Json::num(sp99)),
+            ]),
+        ),
+        (
+            "batched",
+            Json::obj(vec![
+                ("throughput_rps", Json::num(batched_rps)),
+                ("p50_ms", Json::num(bp50)),
+                ("p90_ms", Json::num(bp90)),
+                ("p99_ms", Json::num(bp99)),
+                ("flushes", Json::num(stats.flushes as f64)),
+                ("mean_batch", Json::num(stats.mean_batch())),
+            ]),
+        ),
+        ("speedup", Json::num(batched_rps / single_rps)),
+    ]))
+}
+
+/// A deterministic synthetic mixed-precision snapshot state: He-init
+/// params, calibrated weight ranges, fixed activation ranges, and gates
+/// cycling through the given T(g) levels. Stand-in for a trained model
+/// wherever the deploy path must run without artifacts or training (the
+/// deploy table and `benches/bench_deploy.rs`).
+pub struct SyntheticDeployState {
+    pub params: Vec<crate::tensor::Tensor>,
+    pub betas_w: crate::tensor::Tensor,
+    pub betas_a: crate::tensor::Tensor,
+    pub gates: crate::gates::GateSet,
+}
+
+/// Default level cycle for [`synthetic_deploy_state`].
+pub const DEPLOY_LEVELS: [u32; 8] = [2, 4, 8, 16, 32, 4, 8, 2];
+
+pub fn synthetic_deploy_state(
+    arch: &crate::model::ArchSpec,
+    levels: &[u32],
+    seed: u64,
+) -> SyntheticDeployState {
+    use crate::quant::gate_for_bits;
+    let params = arch.init_params(seed);
+    let n_layers = arch.layers.len();
+    let mut betas_w = crate::tensor::Tensor::zeros(&[n_layers]);
+    for li in 0..n_layers {
+        betas_w.data_mut()[li] = params[2 * li].abs_max().max(1e-3);
+    }
+    let betas_a = crate::tensor::Tensor::full(&[arch.n_quant_act()], 6.0);
+    let mut gates = crate::gates::GateSet::new(arch, crate::gates::Granularity::Individual);
+    for t in gates.gates_w.iter_mut().chain(gates.gates_a.iter_mut()) {
+        for (i, g) in t.data_mut().iter_mut().enumerate() {
+            *g = gate_for_bits(levels[i % levels.len()]);
+        }
+    }
+    SyntheticDeployState { params, betas_w, betas_a, gates }
+}
+
+/// The deploy rows: per arch, packed artifact size vs fp32 and the
+/// single-vs-batched engine throughput, on a deterministic synthetic
+/// snapshot. Writes `table_deploy.json` next to the text table.
+pub fn deploy_table(base: &Config, requests: usize, batch: usize) -> Result<String> {
+    use crate::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Deploy: packed .cgmqm artifacts + engine serve path ({requests} requests, batch {batch}).\n"
+    ));
+    out.push_str("| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup |\n");
+    out.push_str("|--------|------------|----------|--------------|---------------|---------|\n");
+    let mut rows = Vec::new();
+    for arch in [crate::model::mlp(), crate::model::lenet5()] {
+        let s = synthetic_deploy_state(&arch, &DEPLOY_LEVELS, 7);
+        let model = PackedModel::from_state(&arch, &s.params, &s.betas_w, &s.betas_a, &s.gates)?;
+        let packed_bytes = model.encoded_len()?;
+        let fp32_bytes: u64 = arch.layers.iter().map(|l| l.w_len() as u64 * 4).sum();
+        let single = Engine::new(model.clone())?.with_mode(DecodeMode::Streaming);
+        let batcher = RequestBatcher::new(
+            Engine::new(model)?,
+            BatchConfig { max_batch: batch, max_delay: std::time::Duration::from_micros(200) },
+        )?;
+        let bench = serve_bench_engines(single, batcher, requests, base.seed)?;
+        let single_rps = bench.get("single")?.get("throughput_rps")?.as_f64()?;
+        let batched_rps = bench.get("batched")?.get("throughput_rps")?.as_f64()?;
+        out.push_str(&format!(
+            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x |\n",
+            arch.name,
+            packed_bytes as f64 / 1024.0,
+            fp32_bytes as f64 / 1024.0,
+            single_rps,
+            batched_rps,
+            batched_rps / single_rps
+        ));
+        let mut j = bench;
+        if let Json::Obj(m) = &mut j {
+            m.insert("arch".into(), Json::str(arch.name));
+            m.insert("packed_bytes".into(), Json::num(packed_bytes as f64));
+            m.insert("fp32_bytes".into(), Json::num(fp32_bytes as f64));
+        }
+        rows.push(j);
+    }
+    write_json(&Path::new(&base.out_dir).join("table_deploy.json"), &Json::Arr(rows))?;
+    Ok(out)
+}
+
 fn result_json(method: &str, r: &RunResult) -> Json {
     let mut j = r.to_json();
     if let Json::Obj(m) = &mut j {

@@ -56,6 +56,14 @@ pub fn load_labels(path: &Path) -> Result<Vec<u8>> {
     Ok(data)
 }
 
+/// Paper preprocessing for one raw pixel: [0, 255] -> [-1, 1]
+/// (mean 0.5 / std 0.5, §4.1). Single definition shared by every IDX
+/// consumer so the normalization cannot drift between paths.
+#[inline]
+pub fn normalize_pixel(p: u8) -> f32 {
+    ((p as f32 / 255.0) - 0.5) / 0.5
+}
+
 /// Load an (images, labels) pair and normalise like the paper.
 pub fn load_pair(images_path: &Path, labels_path: &Path) -> Result<IdxDataset> {
     let (raw, n, rows, cols) = load_images(images_path)?;
@@ -63,7 +71,7 @@ pub fn load_pair(images_path: &Path, labels_path: &Path) -> Result<IdxDataset> {
     if labels_u8.len() != n {
         bail!("{} images but {} labels", n, labels_u8.len());
     }
-    let images = raw.iter().map(|&p| ((p as f32 / 255.0) - 0.5) / 0.5).collect();
+    let images = raw.iter().map(|&p| normalize_pixel(p)).collect();
     let labels = labels_u8.iter().map(|&l| l as i32).collect();
     Ok(IdxDataset { images, labels, n, rows, cols })
 }

@@ -1,0 +1,174 @@
+//! Request batching for the serve path.
+//!
+//! Single-sample `infer` requests are aggregated into batched
+//! [`Engine::infer_batch`] invocations so the engine's per-layer weight
+//! unpacking (and the cache-friendly batched matmuls) amortize across
+//! requests. Two flush triggers, the standard micro-batching pair:
+//!
+//! * **size** — the queue reached `max_batch` pending requests;
+//! * **deadline** — the *oldest* pending request has waited `max_delay`.
+//!
+//! The batcher is deterministic and clock-injected: `submit_at` / `poll_at`
+//! take the caller's `Instant`, so tests drive time explicitly and the
+//! serve loop passes `Instant::now()`. Completions preserve submission
+//! order (FIFO, like `data::Batcher::sequential`), and every completion
+//! reports its queue delay and the batch size it rode in — the raw
+//! material for `serve-bench`'s latency percentiles.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::engine::{argmax, Engine};
+
+/// Flush policy of a [`RequestBatcher`].
+#[derive(Debug, Clone, Copy)]
+pub struct BatchConfig {
+    /// Flush as soon as this many requests are pending (>= 1).
+    pub max_batch: usize,
+    /// Flush once the oldest pending request has waited this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self { max_batch: 32, max_delay: Duration::from_millis(2) }
+    }
+}
+
+/// One finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// Submission-order id (monotone from 0).
+    pub id: u64,
+    pub logits: Vec<f32>,
+    /// Argmax class of `logits`.
+    pub predicted: usize,
+    /// Time spent queued before its batch was flushed.
+    pub queue_delay: Duration,
+    /// Size of the engine invocation this request rode in.
+    pub batch_size: usize,
+}
+
+/// Cumulative batcher statistics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatcherStats {
+    pub submitted: u64,
+    pub completed: u64,
+    pub flushes: u64,
+    pub size_flushes: u64,
+    pub deadline_flushes: u64,
+}
+
+impl BatcherStats {
+    /// Mean samples per engine invocation (the amortization factor).
+    pub fn mean_batch(&self) -> f64 {
+        if self.flushes == 0 {
+            0.0
+        } else {
+            self.completed as f64 / self.flushes as f64
+        }
+    }
+}
+
+struct Pending {
+    id: u64,
+    x: Vec<f32>,
+    enqueued: Instant,
+}
+
+/// Aggregates single-sample requests into batched engine invocations.
+pub struct RequestBatcher {
+    engine: Engine,
+    cfg: BatchConfig,
+    queue: VecDeque<Pending>,
+    next_id: u64,
+    stats: BatcherStats,
+}
+
+impl RequestBatcher {
+    pub fn new(engine: Engine, cfg: BatchConfig) -> Result<Self> {
+        if cfg.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        Ok(Self { engine, cfg, queue: VecDeque::new(), next_id: 0, stats: BatcherStats::default() })
+    }
+
+    /// Enqueue one request at time `now`; returns the completions of any
+    /// size-triggered flush (empty while the batch is still filling).
+    pub fn submit_at(&mut self, x: Vec<f32>, now: Instant) -> Result<Vec<Completion>> {
+        if x.len() != self.engine.input_len() {
+            bail!("request has {} values, model wants {}", x.len(), self.engine.input_len());
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.stats.submitted += 1;
+        self.queue.push_back(Pending { id, x, enqueued: now });
+        if self.queue.len() >= self.cfg.max_batch {
+            self.stats.size_flushes += 1;
+            return self.flush_at(now);
+        }
+        Ok(Vec::new())
+    }
+
+    /// Deadline check at time `now`: flushes if the oldest pending request
+    /// has waited `max_delay` or longer.
+    pub fn poll_at(&mut self, now: Instant) -> Result<Vec<Completion>> {
+        match self.queue.front() {
+            Some(p) if now.duration_since(p.enqueued) >= self.cfg.max_delay => {
+                self.stats.deadline_flushes += 1;
+                self.flush_at(now)
+            }
+            _ => Ok(Vec::new()),
+        }
+    }
+
+    /// Flush every pending request now (in `max_batch`-sized engine calls),
+    /// regardless of triggers — end-of-stream drain.
+    pub fn flush_at(&mut self, now: Instant) -> Result<Vec<Completion>> {
+        let mut out = Vec::with_capacity(self.queue.len());
+        while !self.queue.is_empty() {
+            let take = self.queue.len().min(self.cfg.max_batch);
+            let batch: Vec<Pending> = self.queue.drain(..take).collect();
+            let in_len = self.engine.input_len();
+            let mut xs = Vec::with_capacity(take * in_len);
+            for p in &batch {
+                xs.extend_from_slice(&p.x);
+            }
+            let logits = self.engine.infer_batch(&xs, take)?;
+            let c = self.engine.num_classes();
+            self.stats.flushes += 1;
+            self.stats.completed += take as u64;
+            for (k, p) in batch.into_iter().enumerate() {
+                let row = logits[k * c..(k + 1) * c].to_vec();
+                out.push(Completion {
+                    id: p.id,
+                    predicted: argmax(&row),
+                    logits: row,
+                    queue_delay: now.duration_since(p.enqueued),
+                    batch_size: take,
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn stats(&self) -> BatcherStats {
+        self.stats
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Dissolve into the wrapped engine (pending requests are dropped —
+    /// call [`flush_at`](Self::flush_at) first to drain).
+    pub fn into_engine(self) -> Engine {
+        self.engine
+    }
+}

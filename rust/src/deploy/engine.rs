@@ -1,0 +1,370 @@
+//! The packed-model inference engine: the deploy-path hot loop.
+//!
+//! Runs a [`PackedModel`] forward on the host — dense, conv (NCHW/OIHW,
+//! valid padding, stride 1), ReLU, max-pool — decoding the bit-packed
+//! integer weight codes back to their fake-quantized f32 values via the
+//! per-gate scales, and fake-quantizing activations per unit exactly as the
+//! training-path eval graph does (unsigned grid on `[0, beta_a]` after
+//! ReLU, pooling *after* activation quantization, 8-bit input
+//! quantization, float logits).
+//!
+//! Two decode modes:
+//!
+//! * [`DecodeMode::Streaming`] — decode every layer's weights on the fly,
+//!   per call, into a scratch buffer that is dropped afterwards. Minimal
+//!   resident memory (the packed codes stay packed); the decode cost is
+//!   paid on every call. This is the honest single-request deployment
+//!   baseline `serve-bench` measures.
+//! * [`DecodeMode::UnpackOnce`] — decode each layer once, cache the dense
+//!   f32 weights, and reuse them for every subsequent call. The batched
+//!   serve path ([`super::batch::RequestBatcher`]) uses this mode so the
+//!   unpack cost amortizes across aggregated requests.
+//!
+//! Both modes produce bit-identical logits (same kernels, same decoded
+//! values), and both match the host fake-quant reference forward
+//! ([`super::reference`]) bit-for-bit — the cross-path golden test in
+//! `tests/deploy_roundtrip.rs` pins all three.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::model::{ArchSpec, LayerKind};
+use crate::quant::quantize;
+
+use super::format::{PackedAct, PackedModel};
+
+/// Weight decode strategy of an [`Engine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DecodeMode {
+    /// Decode per call; drop the dense weights afterwards.
+    Streaming,
+    /// Decode each layer once and cache the dense f32 weights.
+    #[default]
+    UnpackOnce,
+}
+
+/// Packed-model inference engine.
+pub struct Engine {
+    model: PackedModel,
+    arch: ArchSpec,
+    mode: DecodeMode,
+    /// Per-layer dense weight cache (`UnpackOnce` mode).
+    cache: Vec<Option<Vec<f32>>>,
+}
+
+impl Engine {
+    /// Wrap an already-verified packed model (default `UnpackOnce` mode).
+    pub fn new(model: PackedModel) -> Result<Self> {
+        let arch = model.verify()?;
+        let cache = vec![None; model.layers.len()];
+        Ok(Self { model, arch, mode: DecodeMode::default(), cache })
+    }
+
+    /// Load a `.cgmqm` file (checksum + arch verification included).
+    pub fn load(path: &Path) -> Result<Self> {
+        let (model, _) = PackedModel::load(path)?;
+        Self::new(model)
+    }
+
+    /// Select the weight decode strategy (resets the cache).
+    pub fn with_mode(mut self, mode: DecodeMode) -> Self {
+        self.mode = mode;
+        for slot in &mut self.cache {
+            *slot = None;
+        }
+        self
+    }
+
+    pub fn mode(&self) -> DecodeMode {
+        self.mode
+    }
+
+    pub fn arch(&self) -> &ArchSpec {
+        &self.arch
+    }
+
+    pub fn model(&self) -> &PackedModel {
+        &self.model
+    }
+
+    /// Per-sample input element count.
+    pub fn input_len(&self) -> usize {
+        self.model.input_len()
+    }
+
+    /// Logit count (output units of the last layer).
+    pub fn num_classes(&self) -> usize {
+        self.arch.layers.last().expect("arch has layers").n_units()
+    }
+
+    /// Run one sample; returns its logits.
+    pub fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+        self.infer_batch(x, 1)
+    }
+
+    /// Run `n` samples (row-major, `n * input_len` values); returns the
+    /// flattened `n x num_classes` logits.
+    pub fn infer_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
+        let in_len = self.model.input_len();
+        if n == 0 {
+            bail!("infer_batch needs at least one sample");
+        }
+        if xs.len() != n * in_len {
+            bail!("input has {} values, {} samples x {} want {}", xs.len(), n, in_len, n * in_len);
+        }
+        // Fixed input quantization (mirror of quantizer.quantize_input).
+        let input_bits = self.model.input_bits;
+        let mut h: Vec<f32> = xs.iter().map(|&v| quantize(v, input_bits, 1.0, true)).collect();
+        let mut dims: Vec<usize> = self.model.input_shape.clone();
+        let n_layers = self.model.layers.len();
+        for li in 0..n_layers {
+            if self.mode == DecodeMode::UnpackOnce && self.cache[li].is_none() {
+                self.cache[li] = Some(self.model.decode_weights(li)?);
+            }
+            let scratch;
+            let wq: &[f32] = match &self.cache[li] {
+                Some(w) => w,
+                None => {
+                    scratch = self.model.decode_weights(li)?;
+                    &scratch
+                }
+            };
+            let layer = &self.model.layers[li];
+            match layer.kind {
+                LayerKind::Dense => {
+                    let d_in = layer.w_shape[0];
+                    let d_out = layer.w_shape[1];
+                    let flat: usize = dims.iter().product();
+                    if flat != d_in {
+                        bail!(
+                            "layer {}: input {} features, weights want {}",
+                            layer.name,
+                            flat,
+                            d_in
+                        );
+                    }
+                    h = dense(&h, wq, &layer.bias, n, d_in, d_out);
+                    dims = vec![d_out];
+                }
+                LayerKind::Conv => {
+                    if dims.len() != 3 {
+                        bail!("layer {}: conv wants CHW input, got {:?}", layer.name, dims);
+                    }
+                    let (ci, hi, wi) = (dims[0], dims[1], dims[2]);
+                    let (o, wc, kh, kw) =
+                        (layer.w_shape[0], layer.w_shape[1], layer.w_shape[2], layer.w_shape[3]);
+                    if wc != ci || hi < kh || wi < kw {
+                        bail!(
+                            "layer {}: input {:?} incompatible with kernel {:?}",
+                            layer.name,
+                            dims,
+                            layer.w_shape
+                        );
+                    }
+                    h = conv2d_valid(&h, wq, &layer.bias, n, ci, hi, wi, o, kh, kw);
+                    dims = vec![o, hi - kh + 1, wi - kw + 1];
+                }
+            }
+            if li == n_layers - 1 {
+                return Ok(h); // output layer: float logits, no activation FQ
+            }
+            relu_inplace(&mut h);
+            if let Some(act) = &layer.act {
+                quantize_activations(&mut h, act, n);
+            }
+            if layer.pool > 1 {
+                let (c, hh, ww) = (dims[0], dims[1], dims[2]);
+                h = maxpool(&h, n, c, hh, ww, layer.pool);
+                dims = vec![c, hh / layer.pool, ww / layer.pool];
+            }
+        }
+        unreachable!("loop returns at the output layer");
+    }
+
+    /// Predicted class per sample (argmax over logits).
+    pub fn predict_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<usize>> {
+        let logits = self.infer_batch(xs, n)?;
+        let c = self.num_classes();
+        Ok((0..n).map(|s| argmax(&logits[s * c..(s + 1) * c])).collect())
+    }
+}
+
+/// Argmax index of a non-empty slice (first max wins, like
+/// `Tensor::argmax_rows`).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for j in 1..row.len() {
+        if row[j] > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+// ---------------------------------------------------------------------------
+// Kernels (shared with the fake-quant reference path so the cross-path
+// golden compares quantization fidelity, not summation order)
+// ---------------------------------------------------------------------------
+
+/// Per-unit activation fake quantization: ReLU output on the unsigned grid
+/// `[0, beta_a]` at that unit's trained bit-width (0 = pruned unit).
+pub(super) fn quantize_activations(h: &mut [f32], act: &PackedAct, n: usize) {
+    let units = h.len() / n;
+    for s in 0..n {
+        let block = &mut h[s * units..(s + 1) * units];
+        for (u, v) in block.iter_mut().enumerate() {
+            *v = match act.a_bits.get(u) {
+                0 => 0.0,
+                bits => quantize(*v, bits, act.beta_a, false),
+            };
+        }
+    }
+}
+
+/// `out[s] = h[s] @ w + bias` for row-major `h (n, d_in)`, `w (d_in, d_out)`.
+pub(super) fn dense(
+    h: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    d_in: usize,
+    d_out: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d_out];
+    for s in 0..n {
+        let hrow = &h[s * d_in..(s + 1) * d_in];
+        let orow = &mut out[s * d_out..(s + 1) * d_out];
+        for (i, &hv) in hrow.iter().enumerate() {
+            let wrow = &w[i * d_out..(i + 1) * d_out];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += hv * wv;
+            }
+        }
+        for (o, &b) in orow.iter_mut().zip(bias) {
+            *o += b;
+        }
+    }
+    out
+}
+
+/// Valid-padding stride-1 conv, NCHW input, OIHW weights, then bias.
+#[allow(clippy::too_many_arguments)]
+pub(super) fn conv2d_valid(
+    h: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    ci: usize,
+    hi: usize,
+    wi: usize,
+    o: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let ho = hi - kh + 1;
+    let wo = wi - kw + 1;
+    let mut out = vec![0.0f32; n * o * ho * wo];
+    for s in 0..n {
+        let img = &h[s * ci * hi * wi..(s + 1) * ci * hi * wi];
+        for oc in 0..o {
+            let kernel = &w[oc * ci * kh * kw..(oc + 1) * ci * kh * kw];
+            let b = bias[oc];
+            let plane = &mut out[(s * o + oc) * ho * wo..(s * o + oc + 1) * ho * wo];
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = 0.0f32;
+                    for ic in 0..ci {
+                        let ch = &img[ic * hi * wi..(ic + 1) * hi * wi];
+                        let kc = &kernel[ic * kh * kw..(ic + 1) * kh * kw];
+                        for ky in 0..kh {
+                            let irow = &ch[(oy + ky) * wi + ox..(oy + ky) * wi + ox + kw];
+                            let krow = &kc[ky * kw..(ky + 1) * kw];
+                            for (iv, kv) in irow.iter().zip(krow) {
+                                acc += iv * kv;
+                            }
+                        }
+                    }
+                    plane[oy * wo + ox] = acc + b;
+                }
+            }
+        }
+    }
+    out
+}
+
+pub(super) fn relu_inplace(h: &mut [f32]) {
+    for v in h.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// Non-overlapping `k x k` max pooling over NCHW, window == stride.
+pub(super) fn maxpool(h: &[f32], n: usize, c: usize, hh: usize, ww: usize, k: usize) -> Vec<f32> {
+    let ho = hh / k;
+    let wo = ww / k;
+    let mut out = vec![f32::NEG_INFINITY; n * c * ho * wo];
+    for sc in 0..n * c {
+        let plane = &h[sc * hh * ww..(sc + 1) * hh * ww];
+        let oplane = &mut out[sc * ho * wo..(sc + 1) * ho * wo];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        m = m.max(plane[(oy * k + ky) * ww + ox * k + kx]);
+                    }
+                }
+                oplane[oy * wo + ox] = m;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matches_hand_computation() {
+        // h (1, 2) @ w (2, 3) + b
+        let h = [1.0, 2.0];
+        let w = [1.0, 0.0, -1.0, 0.5, 2.0, 1.0];
+        let b = [10.0, 20.0, 30.0];
+        let out = dense(&h, &w, &b, 1, 2, 3);
+        assert_eq!(out, vec![1.0 + 1.0 + 10.0, 4.0 + 20.0, -1.0 + 2.0 + 30.0]);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with weight 1 is a passthrough plus bias.
+        let h: Vec<f32> = (0..9).map(|v| v as f32).collect();
+        let out = conv2d_valid(&h, &[1.0], &[0.5], 1, 1, 3, 3, 1, 1, 1);
+        let expect: Vec<f32> = (0..9).map(|v| v as f32 + 0.5).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn conv_sums_window() {
+        // 2x2 all-ones kernel over a 3x3 ramp.
+        let h: Vec<f32> = (0..9).map(|v| v as f32).collect();
+        let out = conv2d_valid(&h, &[1.0; 4], &[0.0], 1, 1, 3, 3, 1, 2, 2);
+        let expect = [0. + 1. + 3. + 4., 1. + 2. + 4. + 5., 3. + 4. + 6. + 7., 4. + 5. + 7. + 8.];
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn maxpool_2x2() {
+        let h =
+            [1.0, 2.0, 3.0, 4.0, 8.0, 7.0, 6.0, 5.0, 0.0, -1.0, -2.0, -3.0, 4.0, 4.0, 4.0, 4.0];
+        let out = maxpool(&h, 1, 1, 4, 4, 2);
+        assert_eq!(out, [8.0, 6.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+}

@@ -1,0 +1,974 @@
+//! `.cgmqm` — the packed mixed-precision model format.
+//!
+//! A trained CGMQ snapshot (params + ranges + gates) is turned into a
+//! self-contained, serde-free binary artifact that stores each layer's
+//! *integer weight codes* bit-packed at their trained per-gate bit-widths
+//! (0/2/4/8/16/32 from [`crate::quant::transform_t`]), together with the
+//! per-layer ranges and the activation quantization recipe the inference
+//! engine needs. Biases are not quantized by the model and ship as f32.
+//!
+//! Layout (little-endian; all bit streams LSB-first within each byte):
+//!
+//! ```text
+//! magic      "CGMQMODL"            8 bytes
+//! version    u32                   currently 1
+//! checksum   u64                   FNV-1a 64 over every byte after this field
+//! arch_name  u16 len + utf-8
+//! granularity u8                   0 = layer, 1 = individual
+//! input_bits u32
+//! input_shape u8 rank + u32 dims
+//! n_layers   u32
+//! per layer:
+//!   name          u16 len + utf-8
+//!   kind          u8               0 = dense, 1 = conv
+//!   w_shape       u8 rank + u32 dims
+//!   beta_w        f32
+//!   bias          u32 len + f32 x len
+//!   pool          u8
+//!   weight widths  width stream (see below), one width per weight
+//!   code_bits     u64
+//!   codes         ceil(code_bits / 8) bytes, bit-packed weight codes
+//!   has_act       u8
+//!   if has_act: beta_a f32, activation width stream (one per act unit)
+//! ```
+//!
+//! A *width stream* is `flag u8` then either `u8` (flag 0: one uniform
+//! width code for the whole tensor — the `Layer` granularity case) or
+//! `u64 count` + packed 4-bit width codes (flag 1: per-element widths,
+//! the `Individual` granularity case). Width codes index
+//! [`WIDTH_TABLE`] = `[0, 2, 4, 8, 16, 32]`.
+//!
+//! Weight codes are stored per weight at that weight's bit-width: nothing
+//! for pruned (0-bit) weights, the two's-complement grid index in `b` bits
+//! for b in {2, 4, 8, 16}, and the raw bits of the *clipped* f32 value for
+//! 32 (>= [`crate::quant::IDENTITY_BITS`] fake quantization degenerates to
+//! clip, so there is no integer grid to index). Decoding multiplies the
+//! grid index by [`crate::quant::step_size`] — exactly the arithmetic the
+//! fake quantizer used, so `decode(pack(w)) == gated_quantize(w)`
+//! bit-for-bit; the cross-path golden test in `tests/deploy_roundtrip.rs`
+//! holds the whole forward pass to that standard.
+//!
+//! The loader mirrors the `runtime::ArtifactSet::verify_arch` idiom: the
+//! recorded arch name is resolved through [`arch_by_name`] and every layer
+//! record is verified against the compiled-in [`ArchSpec`] (names, kinds,
+//! shapes, pooling, activation quantization), so a model packed against a
+//! drifted architecture fails fast at load instead of feeding codes into
+//! the wrong matmul.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gates::{GateSet, Granularity};
+use crate::model::{arch_by_name, ArchSpec, LayerKind};
+use crate::quant::{clip, integer_code, transform_t, IDENTITY_BITS};
+use crate::session::Snapshot;
+use crate::tensor::Tensor;
+
+pub const MAGIC: &[u8; 8] = b"CGMQMODL";
+
+/// Packed-model format version. Bump on any layout change; `load` refuses
+/// other versions up front (same contract as `checkpoint::FORMAT_VERSION`).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// The bit-widths a width code can index (T(g) levels incl. pruning).
+pub const WIDTH_TABLE: [u32; 6] = [0, 2, 4, 8, 16, 32];
+
+/// Bits of storage one weight of width `w` occupies in the code stream.
+#[inline]
+pub fn storage_bits(width: u32) -> u64 {
+    match width {
+        0 => 0,
+        w if w >= IDENTITY_BITS => 32,
+        w => w as u64,
+    }
+}
+
+fn width_code(width: u32) -> Result<u8> {
+    WIDTH_TABLE
+        .iter()
+        .position(|&w| w == width)
+        .map(|i| i as u8)
+        .with_context(|| format!("bit-width {width} is not a T(g) level"))
+}
+
+fn width_from_code(code: u8) -> Result<u32> {
+    WIDTH_TABLE
+        .get(code as usize)
+        .copied()
+        .with_context(|| format!("width code {code} out of range"))
+}
+
+// ---------------------------------------------------------------------------
+// Bit-level packing
+// ---------------------------------------------------------------------------
+
+/// LSB-first bit stream writer: bit i of the stream is
+/// `byte[i / 8] >> (i % 8) & 1`.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    /// Total bits written.
+    bits: u64,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append the low `n_bits` of `value` (n_bits <= 64).
+    pub fn push(&mut self, value: u64, n_bits: u32) {
+        debug_assert!(n_bits <= 64);
+        let mut remaining = n_bits;
+        let mut v = value;
+        while remaining > 0 {
+            let used = (self.bits % 8) as u32;
+            if used == 0 {
+                self.bytes.push(0);
+            }
+            let room = 8 - used;
+            let take = room.min(remaining);
+            let mask = if take == 64 { u64::MAX } else { (1u64 << take) - 1 };
+            let last = self.bytes.last_mut().expect("byte pushed above");
+            *last |= ((v & mask) as u8) << used;
+            v >>= take;
+            self.bits += take as u64;
+            remaining -= take;
+        }
+    }
+
+    pub fn bit_len(&self) -> u64 {
+        self.bits
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.bytes
+    }
+}
+
+/// LSB-first bit stream reader over a byte slice.
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    /// Read the next `n_bits` (<= 64) as an unsigned value.
+    pub fn read(&mut self, n_bits: u32) -> Result<u64> {
+        debug_assert!(n_bits <= 64);
+        if self.pos + n_bits as u64 > self.bytes.len() as u64 * 8 {
+            bail!(
+                "bit stream exhausted: want {} bits at position {}, have {}",
+                n_bits,
+                self.pos,
+                self.bytes.len() as u64 * 8
+            );
+        }
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < n_bits {
+            let byte = self.bytes[(self.pos / 8) as usize] as u64;
+            let used = (self.pos % 8) as u32;
+            let room = 8 - used;
+            let take = room.min(n_bits - got);
+            let mask = (1u64 << take) - 1;
+            out |= ((byte >> used) & mask) << got;
+            self.pos += take as u64;
+            got += take;
+        }
+        Ok(out)
+    }
+}
+
+/// Sign-extend an LSB-aligned `bits`-wide two's-complement value.
+#[inline]
+pub fn sign_extend(raw: u64, bits: u32) -> i64 {
+    debug_assert!((1..=63).contains(&bits));
+    let shift = 64 - bits;
+    ((raw << shift) as i64) >> shift
+}
+
+// ---------------------------------------------------------------------------
+// Width streams
+// ---------------------------------------------------------------------------
+
+/// Per-tensor bit-width assignment: one shared width (`Layer` granularity)
+/// or one width per element (`Individual` granularity).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WidthStream {
+    Uniform(u32),
+    PerElement(Vec<u32>),
+}
+
+impl WidthStream {
+    /// Width of element `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        match self {
+            WidthStream::Uniform(w) => *w,
+            WidthStream::PerElement(v) => v[i],
+        }
+    }
+
+    /// Total storage bits of `n` elements packed at these widths.
+    pub fn payload_bits(&self, n: usize) -> u64 {
+        match self {
+            WidthStream::Uniform(w) => storage_bits(*w) * n as u64,
+            WidthStream::PerElement(v) => v.iter().map(|&w| storage_bits(w)).sum(),
+        }
+    }
+
+    /// Build from a gate tensor: uniform for `Layer` granularity (single
+    /// scalar gate), per-element otherwise.
+    pub fn from_gates(granularity: Granularity, gates: &Tensor) -> Result<Self> {
+        match granularity {
+            Granularity::Layer => {
+                if gates.len() != 1 {
+                    bail!("layer granularity wants a scalar gate, got {} values", gates.len());
+                }
+                Ok(WidthStream::Uniform(transform_t(gates.data()[0])))
+            }
+            Granularity::Individual => {
+                Ok(WidthStream::PerElement(gates.data().iter().map(|&g| transform_t(g)).collect()))
+            }
+        }
+    }
+
+    fn encode(&self, out: &mut Vec<u8>) -> Result<()> {
+        match self {
+            WidthStream::Uniform(w) => {
+                out.push(0);
+                out.push(width_code(*w)?);
+            }
+            WidthStream::PerElement(v) => {
+                out.push(1);
+                out.extend_from_slice(&(v.len() as u64).to_le_bytes());
+                let mut bw = BitWriter::new();
+                for &w in v {
+                    bw.push(width_code(w)? as u64, 4);
+                }
+                out.extend_from_slice(&bw.into_bytes());
+            }
+        }
+        Ok(())
+    }
+
+    fn decode(cur: &mut Cursor, expect_n: usize) -> Result<Self> {
+        match cur.u8()? {
+            0 => Ok(WidthStream::Uniform(width_from_code(cur.u8()?)?)),
+            1 => {
+                let n = cur.u64()? as usize;
+                if n != expect_n {
+                    bail!("width stream has {n} entries, tensor wants {expect_n}");
+                }
+                let packed = cur.bytes((n as u64 * 4).div_ceil(8) as usize)?;
+                let mut br = BitReader::new(packed);
+                let mut v = Vec::with_capacity(n);
+                for _ in 0..n {
+                    v.push(width_from_code(br.read(4)? as u8)?);
+                }
+                Ok(WidthStream::PerElement(v))
+            }
+            other => bail!("bad width stream flag {other}"),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed layers / model
+// ---------------------------------------------------------------------------
+
+/// One layer of a packed model: quantization recipe + bit-packed codes.
+#[derive(Debug, Clone)]
+pub struct PackedLayer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub w_shape: Vec<usize>,
+    /// Weight range (alpha = -beta, signed grid).
+    pub beta_w: f32,
+    /// Per-weight bit-widths.
+    pub w_bits: WidthStream,
+    /// Bit-packed weight codes (see module docs for the per-width layout).
+    pub codes: Vec<u8>,
+    /// Exact bit length of `codes` (the tail byte may be partial).
+    pub code_bits: u64,
+    /// Unquantized bias, shipped as f32.
+    pub bias: Vec<f32>,
+    /// Square max-pool window/stride applied after the activation (0 = none).
+    pub pool: usize,
+    /// Activation fake-quantization recipe (`None` for the output layer).
+    pub act: Option<PackedAct>,
+}
+
+/// Activation quantization recipe of one layer (unsigned grid on [0, beta]).
+#[derive(Debug, Clone)]
+pub struct PackedAct {
+    pub beta_a: f32,
+    /// Per-activation-unit bit-widths (feature dims, broadcast over batch).
+    pub a_bits: WidthStream,
+}
+
+impl PackedLayer {
+    pub fn w_len(&self) -> usize {
+        self.w_shape.iter().product()
+    }
+
+    /// Bytes of the bit-packed weight code payload of this layer.
+    pub fn payload_bytes(&self) -> u64 {
+        self.code_bits.div_ceil(8)
+    }
+
+    /// Decode the packed codes back to the fake-quantized f32 weights.
+    pub fn decode_weights(&self) -> Result<Vec<f32>> {
+        let n = self.w_len();
+        let mut out = Vec::with_capacity(n);
+        let mut br = BitReader::new(&self.codes);
+        for i in 0..n {
+            let width = self.w_bits.get(i);
+            let v = match width {
+                0 => 0.0,
+                w if w >= IDENTITY_BITS => f32::from_bits(br.read(32)? as u32),
+                w => {
+                    let raw = br.read(w)?;
+                    crate::quant::decode_code(sign_extend(raw, w), w, self.beta_w, true)
+                }
+            };
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// A full packed model: what `.cgmqm` serializes.
+#[derive(Debug, Clone)]
+pub struct PackedModel {
+    pub arch_name: String,
+    pub granularity: Granularity,
+    pub input_bits: u32,
+    pub input_shape: Vec<usize>,
+    pub layers: Vec<PackedLayer>,
+}
+
+impl PackedModel {
+    /// Pack a trained state (the tensors a [`Snapshot`] carries).
+    pub fn from_state(
+        arch: &ArchSpec,
+        params: &[Tensor],
+        betas_w: &Tensor,
+        betas_a: &Tensor,
+        gates: &GateSet,
+    ) -> Result<Self> {
+        if params.len() != 2 * arch.layers.len() {
+            bail!(
+                "{} param tensors, arch '{}' wants {}",
+                params.len(),
+                arch.name,
+                2 * arch.layers.len()
+            );
+        }
+        if betas_w.len() != arch.layers.len() || betas_a.len() != arch.n_quant_act() {
+            bail!(
+                "range tensors ({}, {}) do not match arch '{}' ({} layers, {} quant acts)",
+                betas_w.len(),
+                betas_a.len(),
+                arch.name,
+                arch.layers.len(),
+                arch.n_quant_act()
+            );
+        }
+        let mut layers = Vec::with_capacity(arch.layers.len());
+        let mut ai = 0;
+        for (li, spec) in arch.layers.iter().enumerate() {
+            let w = &params[2 * li];
+            if w.shape() != spec.w_shape.as_slice() {
+                bail!(
+                    "layer {}: weight shape {:?} != arch {:?}",
+                    spec.name,
+                    w.shape(),
+                    spec.w_shape
+                );
+            }
+            let beta_w = betas_w.data()[li];
+            let w_bits = match gates.granularity {
+                Granularity::Layer => {
+                    WidthStream::from_gates(gates.granularity, &gates.gates_w[li])?
+                }
+                Granularity::Individual => {
+                    WidthStream::from_gates(gates.granularity, &gates.materialize_w(arch, li))?
+                }
+            };
+            if let WidthStream::PerElement(v) = &w_bits {
+                if v.len() != spec.w_len() {
+                    bail!(
+                        "layer {}: {} weight gates for {} weights (granularity mismatch?)",
+                        spec.name,
+                        v.len(),
+                        spec.w_len()
+                    );
+                }
+            }
+            let mut bw = BitWriter::new();
+            for (i, &x) in w.data().iter().enumerate() {
+                match w_bits.get(i) {
+                    0 => {}
+                    width if width >= IDENTITY_BITS => {
+                        bw.push(clip(x, -beta_w, beta_w).to_bits() as u64, 32);
+                    }
+                    width => {
+                        let (n, _) = integer_code(x, width, beta_w, true);
+                        bw.push(n as u64 & ((1u64 << width) - 1), width);
+                    }
+                }
+            }
+            let act = if spec.quant_act {
+                let a_bits = match gates.granularity {
+                    Granularity::Layer => {
+                        WidthStream::from_gates(gates.granularity, &gates.gates_a[ai])?
+                    }
+                    Granularity::Individual => {
+                        WidthStream::from_gates(gates.granularity, &gates.materialize_a(arch, ai))?
+                    }
+                };
+                if let WidthStream::PerElement(v) = &a_bits {
+                    if v.len() != spec.n_units() {
+                        bail!(
+                            "layer {}: {} activation gates for {} units (granularity mismatch?)",
+                            spec.name,
+                            v.len(),
+                            spec.n_units()
+                        );
+                    }
+                }
+                let beta_a = betas_a.data()[ai];
+                ai += 1;
+                Some(PackedAct { beta_a, a_bits })
+            } else {
+                None
+            };
+            layers.push(PackedLayer {
+                name: spec.name.to_string(),
+                kind: spec.kind,
+                w_shape: spec.w_shape.clone(),
+                beta_w,
+                code_bits: bw.bit_len(),
+                codes: bw.into_bytes(),
+                w_bits,
+                bias: params[2 * li + 1].data().to_vec(),
+                pool: spec.pool,
+                act,
+            });
+        }
+        Ok(Self {
+            arch_name: arch.name.to_string(),
+            granularity: gates.granularity,
+            input_bits: arch.input_bits,
+            input_shape: arch.input_shape.clone(),
+            layers,
+        })
+    }
+
+    /// Pack the delivered model of a finished run.
+    pub fn from_snapshot(arch: &ArchSpec, snap: &Snapshot) -> Result<Self> {
+        Self::from_state(arch, &snap.params, &snap.betas_w, &snap.betas_a, &snap.gates)
+    }
+
+    /// Per-sample input element count.
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Bytes of each layer's bit-packed weight code payload.
+    pub fn layer_payload_bytes(&self) -> Vec<u64> {
+        self.layers.iter().map(|l| l.payload_bytes()).collect()
+    }
+
+    /// Total bit-packed weight payload across layers.
+    pub fn total_payload_bytes(&self) -> u64 {
+        self.layers.iter().map(|l| l.payload_bytes()).sum()
+    }
+
+    /// Decode layer `li`'s weights to the fake-quantized f32 tensor data.
+    pub fn decode_weights(&self, li: usize) -> Result<Vec<f32>> {
+        self.layers
+            .get(li)
+            .with_context(|| format!("layer index {li} out of range"))?
+            .decode_weights()
+    }
+
+    // ------------------------------------------------------------- encoding
+
+    /// Serialize to the `.cgmqm` byte layout (including header + checksum).
+    pub fn encode(&self) -> Result<Vec<u8>> {
+        let mut body = Vec::new();
+        write_str(&mut body, &self.arch_name)?;
+        body.push(match self.granularity {
+            Granularity::Layer => 0,
+            Granularity::Individual => 1,
+        });
+        body.extend_from_slice(&self.input_bits.to_le_bytes());
+        write_shape(&mut body, &self.input_shape)?;
+        body.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            write_str(&mut body, &l.name)?;
+            body.push(match l.kind {
+                LayerKind::Dense => 0,
+                LayerKind::Conv => 1,
+            });
+            write_shape(&mut body, &l.w_shape)?;
+            body.extend_from_slice(&l.beta_w.to_le_bytes());
+            body.extend_from_slice(&(l.bias.len() as u32).to_le_bytes());
+            for &b in &l.bias {
+                body.extend_from_slice(&b.to_le_bytes());
+            }
+            body.push(l.pool as u8);
+            l.w_bits.encode(&mut body)?;
+            let expect = l.w_bits.payload_bits(l.w_len());
+            if expect != l.code_bits || l.codes.len() as u64 != l.code_bits.div_ceil(8) {
+                bail!(
+                    "layer {}: code stream is {} bits / {} bytes, widths want {} bits",
+                    l.name,
+                    l.code_bits,
+                    l.codes.len(),
+                    expect
+                );
+            }
+            body.extend_from_slice(&l.code_bits.to_le_bytes());
+            body.extend_from_slice(&l.codes);
+            match &l.act {
+                None => body.push(0),
+                Some(act) => {
+                    body.push(1);
+                    body.extend_from_slice(&act.beta_a.to_le_bytes());
+                    act.a_bits.encode(&mut body)?;
+                }
+            }
+        }
+        let mut out = Vec::with_capacity(body.len() + 20);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+        out.extend_from_slice(&fnv1a64(&body).to_le_bytes());
+        out.extend_from_slice(&body);
+        Ok(out)
+    }
+
+    /// Total `.cgmqm` file size in bytes (header + all records). Performs
+    /// a full serialization — when also writing the file, prefer the byte
+    /// count [`save`](Self::save) returns.
+    pub fn encoded_len(&self) -> Result<u64> {
+        Ok(self.encode()?.len() as u64)
+    }
+
+    /// Write the `.cgmqm` file; returns the number of bytes written.
+    pub fn save(&self, path: &Path) -> Result<u64> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let bytes = self.encode()?;
+        std::fs::write(path, &bytes).with_context(|| format!("writing {}", path.display()))?;
+        Ok(bytes.len() as u64)
+    }
+
+    /// Load and fully verify a packed model: magic, version, checksum, then
+    /// the recorded arch against the compiled-in [`ArchSpec`] (fail-fast on
+    /// drift). Returns the model together with its resolved arch.
+    pub fn load(path: &Path) -> Result<(Self, ArchSpec)> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+        let model = Self::decode(&bytes).with_context(|| format!("loading {}", path.display()))?;
+        let arch = model.verify()?;
+        Ok((model, arch))
+    }
+
+    /// Parse the byte layout (magic/version/checksum checks; no arch check).
+    pub fn decode(bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 20 || &bytes[..8] != MAGIC {
+            bail!("not a .cgmqm packed model (bad magic)");
+        }
+        let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+        if version != FORMAT_VERSION {
+            bail!(
+                "packed model format version {version}, but this build reads version \
+                 {FORMAT_VERSION} — re-export with a matching cgmq build"
+            );
+        }
+        let checksum = u64::from_le_bytes(bytes[12..20].try_into().unwrap());
+        let body = &bytes[20..];
+        let actual = fnv1a64(body);
+        if checksum != actual {
+            bail!("checksum mismatch: header {checksum:#x}, payload {actual:#x} — file corrupt");
+        }
+        let mut cur = Cursor::new(body);
+        let arch_name = cur.string()?;
+        let granularity = match cur.u8()? {
+            0 => Granularity::Layer,
+            1 => Granularity::Individual,
+            other => bail!("bad granularity byte {other}"),
+        };
+        let input_bits = cur.u32()?;
+        let input_shape = cur.shape()?;
+        let n_layers = cur.u32()? as usize;
+        if n_layers > 256 {
+            bail!("corrupt packed model: {n_layers} layers");
+        }
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let name = cur.string()?;
+            let kind = match cur.u8()? {
+                0 => LayerKind::Dense,
+                1 => LayerKind::Conv,
+                other => bail!("layer {name}: bad kind byte {other}"),
+            };
+            let w_shape = cur.shape()?;
+            let w_len: usize = w_shape.iter().product();
+            let beta_w = cur.f32()?;
+            let bias_len = cur.u32()? as usize;
+            if bias_len > (1 << 24) {
+                bail!("layer {name}: corrupt bias length {bias_len}");
+            }
+            let mut bias = Vec::with_capacity(bias_len);
+            for _ in 0..bias_len {
+                bias.push(cur.f32()?);
+            }
+            let pool = cur.u8()? as usize;
+            let w_bits = WidthStream::decode(&mut cur, w_len)?;
+            let code_bits = cur.u64()?;
+            let expect = w_bits.payload_bits(w_len);
+            if code_bits != expect {
+                bail!("layer {name}: {code_bits} code bits recorded, widths want {expect}");
+            }
+            let codes = cur.bytes(code_bits.div_ceil(8) as usize)?.to_vec();
+            let act = match cur.u8()? {
+                0 => None,
+                1 => {
+                    let beta_a = cur.f32()?;
+                    // Unit count is validated against the arch in verify();
+                    // here only self-consistency of the stream is enforced.
+                    let n_units = cur.peek_stream_len()?;
+                    let a_bits = WidthStream::decode(&mut cur, n_units)?;
+                    Some(PackedAct { beta_a, a_bits })
+                }
+                other => bail!("layer {name}: bad has_act byte {other}"),
+            };
+            layers.push(PackedLayer {
+                name,
+                kind,
+                w_shape,
+                beta_w,
+                w_bits,
+                codes,
+                code_bits,
+                bias,
+                pool,
+                act,
+            });
+        }
+        cur.expect_end()?;
+        Ok(Self { arch_name, granularity, input_bits, input_shape, layers })
+    }
+
+    /// Resolve the recorded arch and verify every layer record against it
+    /// (the manifest-verification idiom): names, kinds, shapes, pooling and
+    /// activation quantization must all match the compiled-in spec.
+    pub fn verify(&self) -> Result<ArchSpec> {
+        let arch = arch_by_name(&self.arch_name)
+            .with_context(|| format!("packed model records unknown arch '{}'", self.arch_name))?;
+        if self.input_shape != arch.input_shape {
+            bail!(
+                "{}: input_shape {:?} != arch {:?}",
+                self.arch_name,
+                self.input_shape,
+                arch.input_shape
+            );
+        }
+        if self.input_bits != arch.input_bits {
+            bail!("{}: input_bits {} != arch {}", self.arch_name, self.input_bits, arch.input_bits);
+        }
+        if self.layers.len() != arch.layers.len() {
+            bail!("{}: {} layers != arch {}", self.arch_name, self.layers.len(), arch.layers.len());
+        }
+        for (l, spec) in self.layers.iter().zip(&arch.layers) {
+            if l.name != spec.name {
+                bail!("{}: layer name '{}' != arch '{}'", self.arch_name, l.name, spec.name);
+            }
+            if l.kind != spec.kind {
+                bail!("{}: layer {} kind drifted", self.arch_name, l.name);
+            }
+            if l.w_shape != spec.w_shape {
+                bail!(
+                    "{}: layer {} w_shape {:?} != arch {:?}",
+                    self.arch_name,
+                    l.name,
+                    l.w_shape,
+                    spec.w_shape
+                );
+            }
+            let b_len: usize = spec.b_shape.iter().product();
+            if l.bias.len() != b_len {
+                bail!(
+                    "{}: layer {} bias length {} != arch {}",
+                    self.arch_name,
+                    l.name,
+                    l.bias.len(),
+                    b_len
+                );
+            }
+            if l.pool != spec.pool {
+                bail!("{}: layer {} pool drifted", self.arch_name, l.name);
+            }
+            if l.act.is_some() != spec.quant_act {
+                bail!("{}: layer {} quant_act drifted", self.arch_name, l.name);
+            }
+            if let Some(act) = &l.act {
+                if let WidthStream::PerElement(v) = &act.a_bits {
+                    if v.len() != spec.n_units() {
+                        bail!(
+                            "{}: layer {} has {} act widths, arch wants {}",
+                            self.arch_name,
+                            l.name,
+                            v.len(),
+                            spec.n_units()
+                        );
+                    }
+                }
+            }
+        }
+        Ok(arch)
+    }
+}
+
+/// FNV-1a 64-bit hash (the header checksum).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// Byte-level helpers
+// ---------------------------------------------------------------------------
+
+fn write_str(out: &mut Vec<u8>, s: &str) -> Result<()> {
+    if s.len() > u16::MAX as usize {
+        bail!("string too long for format: {} bytes", s.len());
+    }
+    out.extend_from_slice(&(s.len() as u16).to_le_bytes());
+    out.extend_from_slice(s.as_bytes());
+    Ok(())
+}
+
+fn write_shape(out: &mut Vec<u8>, shape: &[usize]) -> Result<()> {
+    if shape.len() > u8::MAX as usize {
+        bail!("shape rank too large: {}", shape.len());
+    }
+    out.push(shape.len() as u8);
+    for &d in shape {
+        if d > u32::MAX as usize {
+            bail!("shape dim too large: {d}");
+        }
+        out.extend_from_slice(&(d as u32).to_le_bytes());
+    }
+    Ok(())
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.bytes.len() {
+            bail!("truncated packed model: want {} bytes at offset {}", n, self.pos);
+        }
+        let s = &self.bytes[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        let n = self.u16()? as usize;
+        String::from_utf8(self.bytes(n)?.to_vec()).context("non-utf8 string in packed model")
+    }
+
+    fn shape(&mut self) -> Result<Vec<usize>> {
+        let rank = self.u8()? as usize;
+        if rank > 16 {
+            bail!("corrupt packed model: rank {rank}");
+        }
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(self.u32()? as usize);
+        }
+        dims.iter()
+            .try_fold(1usize, |a, &d| a.checked_mul(d))
+            .filter(|&c| c <= (1usize << 31))
+            .with_context(|| format!("corrupt packed model: dims {dims:?}"))?;
+        Ok(dims)
+    }
+
+    /// For a per-element width stream whose count field is self-recorded:
+    /// read the count *without* consuming it (the stream decoder validates
+    /// it against the caller's expectation).
+    fn peek_stream_len(&self) -> Result<usize> {
+        if self.pos >= self.bytes.len() {
+            bail!("truncated packed model at width stream");
+        }
+        match self.bytes[self.pos] {
+            0 => Ok(0), // uniform: count unused by decode()
+            _ => {
+                if self.pos + 9 > self.bytes.len() {
+                    bail!("truncated packed model at width stream count");
+                }
+                let raw: [u8; 8] = self.bytes[self.pos + 1..self.pos + 9].try_into().unwrap();
+                let n = u64::from_le_bytes(raw);
+                if n > (1 << 31) {
+                    bail!("corrupt packed model: width stream count {n}");
+                }
+                Ok(n as usize)
+            }
+        }
+    }
+
+    fn expect_end(&self) -> Result<()> {
+        if self.pos != self.bytes.len() {
+            bail!("{} trailing bytes after packed model payload", self.bytes.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    #[test]
+    fn bit_writer_reader_roundtrip_unaligned() {
+        // Mixed widths with a non-byte-aligned tail.
+        let mut w = BitWriter::new();
+        let fields: [(u64, u32); 7] =
+            [(0b10, 2), (0b1011, 4), (0xAB, 8), (0x7FFF, 16), (1, 2), (0, 2), (0b101, 3)];
+        for &(v, b) in &fields {
+            w.push(v, b);
+        }
+        assert_eq!(w.bit_len(), 37);
+        let bytes = w.into_bytes();
+        assert_eq!(bytes.len(), 5); // ceil(37 / 8)
+        let mut r = BitReader::new(&bytes);
+        for &(v, b) in &fields {
+            assert_eq!(r.read(b).unwrap(), v);
+        }
+        assert!(r.read(8).is_err()); // exhausted
+    }
+
+    #[test]
+    fn sign_extend_small_widths() {
+        assert_eq!(sign_extend(0b11, 2), -1);
+        assert_eq!(sign_extend(0b01, 2), 1);
+        assert_eq!(sign_extend(0b1111, 4), -1);
+        assert_eq!(sign_extend(0b1001, 4), -7);
+        assert_eq!(sign_extend(0x8001, 16), -32767);
+        assert_eq!(sign_extend(0x7FFF, 16), 32767);
+    }
+
+    #[test]
+    fn width_stream_payload_accounting() {
+        let u = WidthStream::Uniform(4);
+        assert_eq!(u.payload_bits(10), 40);
+        let p = WidthStream::PerElement(vec![0, 2, 4, 8, 16, 32]);
+        assert_eq!(p.payload_bits(6), 2 + 4 + 8 + 16 + 32);
+    }
+
+    #[test]
+    fn fnv_vector() {
+        // FNV-1a 64 known vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
+
+    #[test]
+    fn width_stream_encode_decode_odd_counts() {
+        // Odd element counts leave a partial nibble byte at the tail.
+        for n in [1usize, 3, 5, 13, 257] {
+            let v: Vec<u32> = (0..n).map(|i| WIDTH_TABLE[i % 6]).collect();
+            let ws = WidthStream::PerElement(v);
+            let mut out = Vec::new();
+            ws.encode(&mut out).unwrap();
+            let mut cur = Cursor::new(&out);
+            let back = WidthStream::decode(&mut cur, n).unwrap();
+            assert_eq!(back, ws);
+            cur.expect_end().unwrap();
+            // Wrong expected count is rejected.
+            let mut cur = Cursor::new(&out);
+            assert!(WidthStream::decode(&mut cur, n + 1).is_err());
+        }
+    }
+
+    #[test]
+    fn random_codes_roundtrip_all_widths() {
+        let mut rng = SplitMix64::new(21);
+        for len in [1usize, 3, 7, 13, 64, 257] {
+            let widths: Vec<u32> =
+                (0..len).map(|_| WIDTH_TABLE[(rng.next_u64() % 6) as usize]).collect();
+            let mut codes: Vec<i64> = Vec::with_capacity(len);
+            let mut w = BitWriter::new();
+            for &b in &widths {
+                match b {
+                    0 => codes.push(0),
+                    32 => {
+                        let v = rng.uniform(-2.0, 2.0) as f32;
+                        codes.push(v.to_bits() as i64);
+                        w.push(v.to_bits() as u64, 32);
+                    }
+                    b => {
+                        let n_max = (1i64 << (b - 1)) - 1;
+                        let n = (rng.next_u64() % (2 * n_max as u64 + 1)) as i64 - n_max;
+                        codes.push(n);
+                        w.push(n as u64 & ((1u64 << b) - 1), b);
+                    }
+                }
+            }
+            let bytes = w.into_bytes();
+            let mut r = BitReader::new(&bytes);
+            for (i, &b) in widths.iter().enumerate() {
+                match b {
+                    0 => {}
+                    32 => assert_eq!(r.read(32).unwrap(), codes[i] as u64),
+                    b => assert_eq!(sign_extend(r.read(b).unwrap(), b), codes[i], "i={i} b={b}"),
+                }
+            }
+        }
+    }
+}

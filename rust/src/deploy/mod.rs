@@ -1,0 +1,43 @@
+//! Deployment subsystem: packed mixed-precision artifacts + the inference
+//! engine + the batched serve path.
+//!
+//! Training ([`crate::session`]) produces a [`Snapshot`](crate::session::Snapshot)
+//! whose gates assign every weight and activation unit a bit-width; this
+//! module is what turns that snapshot into something that *runs*:
+//!
+//! * [`format`] — the `.cgmqm` binary model format: per-layer integer
+//!   weight codes bit-packed at their trained bit-widths, plus ranges,
+//!   signs, biases and the arch fingerprint, behind a checksummed header
+//!   and a loader that fails fast on architecture drift.
+//! * [`Engine`] — the integer-domain forward pass (dense, conv, ReLU,
+//!   max-pool) decoding packed weights through the per-gate scales, with a
+//!   streaming mode (decode per call) and an unpack-once mode that caches
+//!   dense weights for batched serving.
+//! * [`RequestBatcher`] — aggregates single-sample `infer` requests into
+//!   batched engine invocations (size- and deadline-triggered flush) so
+//!   the unpack cost and the batched matmuls amortize across requests.
+//! * [`reference`] — the host fake-quant forward mirroring the eval graph;
+//!   the engine is held to bit-for-bit agreement with it (the cross-path
+//!   golden test in `tests/deploy_roundtrip.rs`).
+//!
+//! ```no_run
+//! use cgmq::deploy::{BatchConfig, Engine, PackedModel, RequestBatcher};
+//! # fn main() -> anyhow::Result<()> {
+//! # let (arch, snapshot): (cgmq::model::ArchSpec, cgmq::session::Snapshot) = todo!();
+//! // Pack the delivered model and serve it:
+//! let packed = PackedModel::from_snapshot(&arch, &snapshot)?;
+//! packed.save(std::path::Path::new("model.cgmqm"))?;
+//! let engine = Engine::load(std::path::Path::new("model.cgmqm"))?;
+//! let _server = RequestBatcher::new(engine, BatchConfig::default())?;
+//! # Ok(())
+//! # }
+//! ```
+
+pub mod batch;
+pub mod engine;
+pub mod format;
+pub mod reference;
+
+pub use batch::{BatchConfig, BatcherStats, Completion, RequestBatcher};
+pub use engine::{DecodeMode, Engine};
+pub use format::{PackedLayer, PackedModel, WidthStream};

@@ -1,0 +1,97 @@
+//! Host fake-quant reference forward — the golden anchor of the deploy
+//! subsystem.
+//!
+//! Mirrors the training-path eval graph (`python/compile/model.py::
+//! forward_quantized`, the `<arch>_eval` artifact the `session::ctx` eval
+//! path executes) on the host: 8-bit input quantization, per-layer gated
+//! weight fake quantization (Eq. 3, signed on `[-beta_w, beta_w]`), dense /
+//! conv / bias, ReLU, per-unit gated activation fake quantization (unsigned
+//! on `[0, beta_a]`), max-pool after activation quantization, float logits
+//! from the output layer.
+//!
+//! The packed [`Engine`](super::Engine) must agree with this function
+//! *bit-for-bit* on every layer at every bit-width — that is the property
+//! `tests/deploy_roundtrip.rs` pins. The two paths share the linear-algebra
+//! kernels (`engine::dense` / `conv2d_valid` / `maxpool`) so the comparison
+//! isolates exactly what deployment changes: fake-quantized f32 weights vs
+//! bit-packed integer codes decoded through per-gate scales.
+
+use anyhow::{bail, Result};
+
+use crate::gates::GateSet;
+use crate::model::{ArchSpec, LayerKind};
+use crate::quant::{gated_quantize, quantize};
+use crate::tensor::Tensor;
+
+use super::engine::{conv2d_valid, dense, maxpool, relu_inplace};
+
+/// Fake-quant forward over `n` samples; returns flattened
+/// `n x num_classes` logits. This is the eval-graph semantics computed on
+/// the host from the raw (float) snapshot state.
+pub fn fake_quant_logits(
+    arch: &ArchSpec,
+    params: &[Tensor],
+    betas_w: &Tensor,
+    betas_a: &Tensor,
+    gates: &GateSet,
+    xs: &[f32],
+    n: usize,
+) -> Result<Vec<f32>> {
+    if params.len() != 2 * arch.layers.len() {
+        bail!("{} param tensors, arch wants {}", params.len(), 2 * arch.layers.len());
+    }
+    if xs.len() != n * arch.input_len() {
+        bail!("input has {} values, want {} x {}", xs.len(), n, arch.input_len());
+    }
+    let mut h: Vec<f32> = xs.iter().map(|&v| quantize(v, arch.input_bits, 1.0, true)).collect();
+    let mut dims: Vec<usize> = arch.input_shape.clone();
+    let n_layers = arch.layers.len();
+    let mut ai = 0;
+    for (li, spec) in arch.layers.iter().enumerate() {
+        let beta_w = betas_w.data()[li];
+        let gw = gates.materialize_w(arch, li);
+        let w = &params[2 * li];
+        let wq: Vec<f32> = w
+            .data()
+            .iter()
+            .zip(gw.data())
+            .map(|(&x, &g)| gated_quantize(x, g, beta_w, true))
+            .collect();
+        let bias = params[2 * li + 1].data();
+        match spec.kind {
+            LayerKind::Dense => {
+                let (d_in, d_out) = (spec.w_shape[0], spec.w_shape[1]);
+                h = dense(&h, &wq, bias, n, d_in, d_out);
+                dims = vec![d_out];
+            }
+            LayerKind::Conv => {
+                let (ci, hi, wi) = (dims[0], dims[1], dims[2]);
+                let (o, kh, kw) = (spec.w_shape[0], spec.w_shape[2], spec.w_shape[3]);
+                h = conv2d_valid(&h, &wq, bias, n, ci, hi, wi, o, kh, kw);
+                dims = vec![o, hi - kh + 1, wi - kw + 1];
+            }
+        }
+        if li == n_layers - 1 {
+            return Ok(h);
+        }
+        relu_inplace(&mut h);
+        if spec.quant_act {
+            let beta_a = betas_a.data()[ai];
+            let ga = gates.materialize_a(arch, ai);
+            let units = ga.len();
+            for s in 0..n {
+                let block = &mut h[s * units..(s + 1) * units];
+                for (v, &g) in block.iter_mut().zip(ga.data()) {
+                    *v = gated_quantize(*v, g, beta_a, false);
+                }
+            }
+            ai += 1;
+        }
+        if spec.pool > 1 {
+            let (c, hh, ww) = (dims[0], dims[1], dims[2]);
+            h = maxpool(&h, n, c, hh, ww, spec.pool);
+            dims = vec![c, hh / spec.pool, ww / spec.pool];
+        }
+    }
+    unreachable!("loop returns at the output layer");
+}

@@ -42,6 +42,16 @@
 //! checkpoint swaps `Pretrain` for `LoadCheckpoint`, and the myQASR
 //! heuristic ships as a custom stage in [`baselines::myqasr`].
 //!
+//! ## Deployment
+//!
+//! `session` users: the snapshot a finished run delivers does not stop at
+//! a memory report — [`deploy`] packs it into a bit-packed `.cgmqm`
+//! artifact ([`deploy::PackedModel`]) and runs it with
+//! [`deploy::Engine`], whose logits match the fake-quant eval path
+//! bit-for-bit; [`deploy::RequestBatcher`] batches single-sample `infer`
+//! requests for serving (`cgmq export --format packed`, `cgmq infer`,
+//! `cgmq serve-bench`).
+//!
 //! ### Migrating from `Trainer`
 //!
 //! The old monolithic `coordinator::Trainer` remains as a thin shim that
@@ -66,6 +76,7 @@ pub mod config;
 pub mod coordinator;
 pub mod cost;
 pub mod data;
+pub mod deploy;
 pub mod direction;
 pub mod gates;
 pub mod metrics;

@@ -4,8 +4,11 @@
 //!   train      full pipeline (pretrain -> calibrate -> ranges -> CGMQ)
 //!   pretrain   float pretraining only; caches a checkpoint
 //!   eval       evaluate a snapshot checkpoint
-//!   export     export a snapshot's bit-width assignment + memory report
+//!   export     export a snapshot: JSON memory report or packed .cgmqm
+//!   infer      run a packed .cgmqm model on IDX / synthetic inputs
+//!   serve-bench  throughput/latency of the batched serve path
 //!   table1/2/3 regenerate the paper's tables
+//!   table-deploy packed-model size + engine throughput table
 //!   a2         penalty-method (DQ-style) tuning comparison
 //!   info       show artifact manifest + runtime info
 //!
@@ -44,12 +47,21 @@ COMMANDS
              [--save <ckpt>] [--from-pretrained <ckpt>]
   pretrain   same config flags; --save <ckpt> (default runs/pretrained.ckpt)
   eval       --ckpt <snapshot> [--config <toml>]
-  export     --ckpt <snapshot> [--config <toml>] [--out <json>]
+  export     --ckpt <snapshot> [--config <toml>] [--format json|packed]
+             [--out <path>]   (json: memory report incl. packed sizes;
+             packed: bit-packed .cgmqm artifact for `infer`/`serve-bench`)
+  infer      --model <m.cgmqm> (--input <idx-images> | --synth <n>)
+             [--index <i>] [--labels <idx-labels>] [--batch <b>]
+             [--mode unpack|streaming] [--seed <s>]
+  serve-bench --model <m.cgmqm> [--requests <n>] [--batch <b>]
+             [--deadline-us <d>] [--seed <s>]   (prints JSON: single vs
+             batched throughput + latency percentiles)
   fixed-qat  --bits <b> + config flags (uniform-bit QAT baseline)
   myqasr     config flags (heuristic baseline; layer granularity)
   table1     --config <toml>   (method comparison @ bound 0.40%)
   table2     --config <toml>   (bound sweep, layer gates)
   table3     --config <toml>   (bound sweep, individual gates)
+  table-deploy [--requests <n>] [--batch <b>]  (deploy engine bench rows)
   a2         --config <toml> [--lambdas 0.001,0.01,...]
   info       [--config <toml>]
 
@@ -84,11 +96,14 @@ fn run(argv: &[String]) -> Result<()> {
         "pretrain" => cmd_pretrain(&args),
         "eval" => cmd_eval(&args),
         "export" => cmd_export(&args),
+        "infer" => cmd_infer(&args),
+        "serve-bench" => cmd_serve_bench(&args),
         "fixed-qat" => cmd_fixed_qat(&args),
         "myqasr" => cmd_myqasr(&args),
         "table1" => cmd_table(&args, 1),
         "table2" => cmd_table(&args, 2),
         "table3" => cmd_table(&args, 3),
+        "table-deploy" => cmd_table_deploy(&args),
         "a2" => cmd_a2(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -231,12 +246,160 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_export(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let ckpt = args.get("ckpt").map(str::to_string);
-    let out = args.get("out").unwrap_or("export.json").to_string();
+    let format = args.get("format").unwrap_or("json").to_string();
+    let out = args.get("out").map(str::to_string);
     args.finish()?;
     let Some(ckpt) = ckpt else { bail!("export needs --ckpt <snapshot>") };
-    let report = cgmq::baselines::export_report(&cfg, Path::new(&ckpt))?;
-    std::fs::write(&out, report.to_string())?;
-    println!("wrote deployment report to {out}");
+    match format.as_str() {
+        "json" => {
+            let out = out.unwrap_or_else(|| "export.json".into());
+            let report = cgmq::baselines::export_report(&cfg, Path::new(&ckpt))?;
+            std::fs::write(&out, report.to_string())?;
+            println!("wrote deployment report to {out}");
+        }
+        "packed" => {
+            let out = out.unwrap_or_else(|| "export.cgmqm".into());
+            let (model, arch, _) =
+                cgmq::baselines::load_packable_snapshot(&cfg, Path::new(&ckpt))?;
+            let bytes = model.save(Path::new(&out))?;
+            println!(
+                "wrote packed model to {out} ({} bytes, {} weight payload bytes, arch {})",
+                bytes,
+                model.total_payload_bytes(),
+                arch.name
+            );
+        }
+        other => bail!("unknown --format '{other}' (json | packed)"),
+    }
+    Ok(())
+}
+
+/// Load sample images for `infer`: an IDX images file (normalised like the
+/// paper, mean 0.5 / std 0.5) or `--synth n` SynthMNIST samples.
+fn infer_inputs(args: &Args) -> Result<(Vec<f32>, Option<Vec<i32>>, usize, usize)> {
+    // Consumed up front so `--seed` is accepted (and ignored) with --input
+    // too, instead of erroring as an unknown flag on that path only.
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    match (args.get("input").map(str::to_string), args.get_usize("synth")?) {
+        (Some(path), None) => match args.get("labels") {
+            // With labels: the shared loader enforces image/label count
+            // agreement and applies the paper normalization.
+            Some(lp) => {
+                let ds = cgmq::data::idx::load_pair(Path::new(&path), Path::new(lp))?;
+                Ok((ds.images, Some(ds.labels), ds.n, ds.rows * ds.cols))
+            }
+            None => {
+                let (raw, n, rows, cols) = cgmq::data::idx::load_images(Path::new(&path))?;
+                let images: Vec<f32> =
+                    raw.iter().map(|&p| cgmq::data::idx::normalize_pixel(p)).collect();
+                Ok((images, None, n, rows * cols))
+            }
+        },
+        (None, Some(0)) => bail!("--synth needs at least one sample"),
+        (None, Some(n)) => {
+            let ds = cgmq::data::Dataset::synth(seed, n);
+            let sample_len = ds.sample_len;
+            Ok((ds.images, Some(ds.labels), n, sample_len))
+        }
+        (Some(_), Some(_)) => bail!("--input and --synth are mutually exclusive"),
+        (None, None) => bail!("infer needs --input <idx-images> or --synth <n>"),
+    }
+}
+
+fn cmd_infer(args: &Args) -> Result<()> {
+    use cgmq::deploy::{DecodeMode, Engine};
+    use cgmq::util::json::Json;
+    let Some(model_path) = args.get("model").map(str::to_string) else {
+        bail!("infer needs --model <m.cgmqm>")
+    };
+    let mode = match args.get("mode").unwrap_or("unpack") {
+        "unpack" => DecodeMode::UnpackOnce,
+        "streaming" => DecodeMode::Streaming,
+        other => bail!("unknown --mode '{other}' (unpack | streaming)"),
+    };
+    let index = args.get_usize("index")?;
+    let batch = args.get_usize("batch")?.unwrap_or(64).max(1);
+    let (images, labels, n, sample_len) = infer_inputs(args)?;
+    args.finish()?;
+    let mut engine = Engine::load(Path::new(&model_path))?.with_mode(mode);
+    if sample_len != engine.input_len() {
+        bail!("inputs have {} values/sample, model wants {}", sample_len, engine.input_len());
+    }
+    if let Some(i) = index {
+        if i >= n {
+            bail!("--index {i} out of range ({n} samples)");
+        }
+        let x = &images[i * sample_len..(i + 1) * sample_len];
+        let logits = engine.infer(x)?;
+        let pred = cgmq::deploy::engine::argmax(&logits);
+        let mut fields = vec![
+            ("model", Json::str(model_path)),
+            ("index", Json::num(i as f64)),
+            ("predicted", Json::num(pred as f64)),
+            ("logits", Json::arr_f32(&logits)),
+        ];
+        if let Some(labels) = &labels {
+            fields.push(("label", Json::num(labels[i] as f64)));
+        }
+        println!("{}", Json::obj(fields));
+        return Ok(());
+    }
+    // Full-set prediction in engine batches.
+    let mut preds = Vec::with_capacity(n);
+    let mut start = 0;
+    while start < n {
+        let take = batch.min(n - start);
+        let xs = &images[start * sample_len..(start + take) * sample_len];
+        preds.extend(engine.predict_batch(xs, take)?);
+        start += take;
+    }
+    let mut hist = vec![0u64; engine.num_classes()];
+    for &p in &preds {
+        hist[p] += 1;
+    }
+    let mut fields = vec![
+        ("model", Json::str(model_path)),
+        ("samples", Json::num(n as f64)),
+        (
+            "prediction_histogram",
+            Json::Arr(hist.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+    ];
+    if let Some(labels) = &labels {
+        let correct = preds.iter().zip(labels).filter(|&(&p, &l)| p as i32 == l).count();
+        fields.push(("accuracy", Json::num(correct as f64 / n as f64)));
+    }
+    println!("{}", Json::obj(fields));
+    Ok(())
+}
+
+fn cmd_serve_bench(args: &Args) -> Result<()> {
+    let Some(model_path) = args.get("model").map(str::to_string) else {
+        bail!("serve-bench needs --model <m.cgmqm>")
+    };
+    let requests = args.get_usize("requests")?.unwrap_or(256).max(1);
+    let batch = args.get_usize("batch")?.unwrap_or(32).max(1);
+    let deadline_us = args.get_usize("deadline-us")?.unwrap_or(200) as u64;
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    args.finish()?;
+    let report = cgmq::bench_harness::serve_bench(
+        Path::new(&model_path),
+        requests,
+        batch,
+        std::time::Duration::from_micros(deadline_us),
+        seed,
+    )?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_table_deploy(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let requests = args.get_usize("requests")?.unwrap_or(64).max(1);
+    let batch = args.get_usize("batch")?.unwrap_or(16).max(1);
+    args.finish()?;
+    let out = bench_harness::deploy_table(&cfg, requests, batch)?;
+    println!("{out}");
     Ok(())
 }
 

@@ -24,6 +24,17 @@ pub fn clip(x: f32, alpha: f32, beta: f32) -> f32 {
     x.max(alpha).min(beta)
 }
 
+/// Step size of the `bits`-bit grid over the range implied by `beta`
+/// (alpha = -beta if signed else 0). Shared by [`quantize`],
+/// [`integer_code`] and [`decode_code`] so the deploy path dequantizes
+/// with *exactly* the arithmetic the fake quantizer used (bit-for-bit).
+#[inline]
+pub fn step_size(bits: u32, beta: f32, signed: bool) -> f32 {
+    let alpha = if signed { -beta } else { 0.0 };
+    let levels = ((1u64 << bits) - 1) as f32;
+    ((beta - alpha) / levels).max(EPS_SCALE)
+}
+
 /// Eq. 1: fake-quantize one value to `bits` bits on the range implied by
 /// `beta` (alpha = -beta if signed else 0), saturated integer grid.
 #[inline]
@@ -34,11 +45,16 @@ pub fn quantize(x: f32, bits: u32, beta: f32, signed: bool) -> f32 {
         return v;
     }
     let levels = ((1u64 << bits) - 1) as f32;
-    let scale = ((beta - alpha) / levels).max(EPS_SCALE);
+    let scale = step_size(bits, beta, signed);
     let n_max = if signed { ((1u64 << (bits - 1)) - 1) as f32 } else { levels };
     let n_min = if signed { -n_max } else { 0.0 };
     let n = (v / scale).round_ties_even().max(n_min).min(n_max);
-    scale * n
+    // `+ 0.0` normalizes -0.0 (tiny negative x rounds to n = -0.0) to +0.0:
+    // the integer grid index cannot carry a zero sign, so this keeps
+    // decode_code(integer_code(x)) == quantize(x) bit-for-bit on the deploy
+    // path. Exact identity for every nonzero value; the cross-language
+    // goldens compare within tolerance and are unaffected.
+    scale * n + 0.0
 }
 
 /// Eq. 4: staircase transform gate value -> bit-width (0 = pruned).
@@ -133,11 +149,23 @@ pub fn integer_code(x: f32, bits: u32, beta: f32, signed: bool) -> (i64, f32) {
     let alpha = if signed { -beta } else { 0.0 };
     let v = clip(x, alpha, beta);
     let levels = ((1u64 << bits) - 1) as f32;
-    let scale = ((beta - alpha) / levels).max(EPS_SCALE);
+    let scale = step_size(bits, beta, signed);
     let n_max = if signed { ((1i64 << (bits - 1)) - 1) as f32 } else { levels };
     let n_min = if signed { -n_max } else { 0.0 };
     let n = (v / scale).round_ties_even().max(n_min).min(n_max);
     (n as i64, scale)
+}
+
+/// Inverse of [`integer_code`]: grid index -> fake-quantized value.
+///
+/// Computes `step_size * n` with the same f32 arithmetic as [`quantize`],
+/// so for every code produced by `integer_code` the decoded value equals
+/// the fake-quantized value *bit-for-bit* — the invariant the packed
+/// deployment format ([`crate::deploy::format`]) is built on.
+#[inline]
+pub fn decode_code(n: i64, bits: u32, beta: f32, signed: bool) -> f32 {
+    debug_assert!(bits < IDENTITY_BITS, "integer decode only for real bit-widths");
+    step_size(bits, beta, signed) * n as f32
 }
 
 #[cfg(test)]
@@ -272,6 +300,27 @@ mod tests {
             let q = quantize(x, 4, 1.0, true);
             assert!(((n as f32) * scale - q).abs() < 1e-7);
             assert!(n.abs() <= 7);
+        }
+    }
+
+    #[test]
+    fn decode_code_is_bitwise_inverse_of_integer_code() {
+        // The deploy format depends on decode(encode(x)) == quantize(x)
+        // exactly (f32 bit equality), for every bit-width, signedness,
+        // range and value — including clipped values and the pruned grid
+        // extremes.
+        let mut rng = crate::util::rng::SplitMix64::new(11);
+        for _ in 0..5000 {
+            let x = rng.uniform(-4.0, 4.0) as f32;
+            let beta = rng.uniform(0.05, 3.0) as f32;
+            for bits in [2u32, 4, 8, 16] {
+                for signed in [true, false] {
+                    let (n, _) = integer_code(x, bits, beta, signed);
+                    let decoded = decode_code(n, bits, beta, signed);
+                    let q = quantize(x, bits, beta, signed);
+                    assert_eq!(decoded.to_bits(), q.to_bits(), "x={x} bits={bits} beta={beta}");
+                }
+            }
         }
     }
 

@@ -112,12 +112,6 @@ impl Json {
     }
 
     // ------------------------------------------------------------ serialize
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -153,6 +147,16 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Serialization goes through `Display`, so both `json.to_string()` and
+/// `format!`/`println!` interpolation produce the compact wire form.
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 

@@ -19,13 +19,14 @@ pub fn artifacts_dir() -> Option<PathBuf> {
 
 /// A fast CI-scale config on the MLP arch.
 pub fn quick_cfg() -> cgmq::config::Config {
-    let mut cfg = cgmq::config::Config::default();
-    cfg.arch = "mlp".into();
-    cfg.train_size = 768;
-    cfg.test_size = 256;
-    cfg.pretrain_epochs = 2;
-    cfg.range_epochs = 1;
-    cfg.cgmq_epochs = 4;
-    cfg.out_dir = std::env::temp_dir().join("cgmq_itest").to_string_lossy().into_owned();
-    cfg
+    cgmq::config::Config {
+        arch: "mlp".into(),
+        train_size: 768,
+        test_size: 256,
+        pretrain_epochs: 2,
+        range_epochs: 1,
+        cgmq_epochs: 4,
+        out_dir: std::env::temp_dir().join("cgmq_itest").to_string_lossy().into_owned(),
+        ..cgmq::config::Config::default()
+    }
 }

@@ -1,0 +1,399 @@
+//! Deploy subsystem integration tests: bit-packer round-trips, the `.cgmqm`
+//! format contract (checksum, version, arch drift), the cross-path golden
+//! (packed engine vs host fake-quant eval logits, bit-for-bit), the request
+//! batcher's flush triggers, and the export-report / file size cross-check.
+//!
+//! None of these need compiled artifacts — the whole deploy path is host
+//! code — so they run in the default (stub-runtime) build.
+
+use std::time::{Duration, Instant};
+
+use cgmq::baselines::{export_report, load_packable_snapshot};
+use cgmq::config::Config;
+use cgmq::deploy::reference::fake_quant_logits;
+use cgmq::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
+use cgmq::gates::{GateSet, Granularity};
+use cgmq::model::{lenet5, mlp, ArchSpec};
+use cgmq::quant::{gate_for_bits, gated_quantize_tensor};
+use cgmq::session::Snapshot;
+use cgmq::tensor::Tensor;
+use cgmq::util::rng::SplitMix64;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("cgmq_deploy_tests");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir.join(name)
+}
+
+/// Deterministic mixed-precision state covering every T(g) level,
+/// including pruned (0-bit) gates — which training never produces (the
+/// gate floor is 2 bits) but the format must support. Intentionally
+/// independent of `bench_harness::synthetic_deploy_state`: the golden
+/// fixture must not share code with the library it pins.
+fn mixed_state(
+    arch: &ArchSpec,
+    granularity: Granularity,
+    seed: u64,
+) -> (Vec<Tensor>, Tensor, Tensor, GateSet) {
+    let params = arch.init_params(seed);
+    let n_layers = arch.layers.len();
+    let mut betas_w = Tensor::zeros(&[n_layers]);
+    for li in 0..n_layers {
+        betas_w.data_mut()[li] = params[2 * li].abs_max().max(1e-3);
+    }
+    let betas_a = Tensor::full(&[arch.n_quant_act()], 4.0);
+    let mut gates = GateSet::new(arch, granularity);
+    // 0 must appear (pruned weights); cycle the full level set.
+    let levels = [2u32, 0, 4, 8, 16, 32, 8, 2];
+    let mut k = seed as usize;
+    for t in gates.gates_w.iter_mut().chain(gates.gates_a.iter_mut()) {
+        for g in t.data_mut().iter_mut() {
+            *g = gate_for_bits(levels[k % levels.len()]);
+            k += 1;
+        }
+    }
+    (params, betas_w, betas_a, gates)
+}
+
+// ---------------------------------------------------------------------------
+// Pack -> unpack identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_weights_decode_to_fake_quantized_values_exactly() {
+    for arch in [mlp(), lenet5()] {
+        for gran in [Granularity::Layer, Granularity::Individual] {
+            let (params, betas_w, betas_a, gates) = mixed_state(&arch, gran, 3);
+            let model =
+                PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+            for li in 0..arch.layers.len() {
+                let decoded = model.decode_weights(li).unwrap();
+                let expect = gated_quantize_tensor(
+                    &params[2 * li],
+                    &gates.materialize_w(&arch, li),
+                    betas_w.data()[li],
+                    true,
+                );
+                assert_eq!(decoded.len(), expect.len());
+                for (i, (&d, &e)) in decoded.iter().zip(expect.data()).enumerate() {
+                    assert_eq!(
+                        d.to_bits(),
+                        e.to_bits(),
+                        "{} {:?} layer {li} weight {i}: {d} != {e}",
+                        arch.name,
+                        gran
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn format_file_roundtrip_preserves_everything() {
+    let arch = mlp();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Individual, 5);
+    let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    let path = tmp("roundtrip.cgmqm");
+    model.save(&path).unwrap();
+    let (loaded, loaded_arch) = PackedModel::load(&path).unwrap();
+    assert_eq!(loaded_arch.name, "mlp");
+    assert_eq!(loaded.arch_name, model.arch_name);
+    assert_eq!(loaded.granularity, model.granularity);
+    assert_eq!(loaded.input_bits, model.input_bits);
+    assert_eq!(loaded.layers.len(), model.layers.len());
+    for (a, b) in loaded.layers.iter().zip(&model.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.beta_w.to_bits(), b.beta_w.to_bits());
+        assert_eq!(a.codes, b.codes);
+        assert_eq!(a.code_bits, b.code_bits);
+        assert_eq!(a.w_bits, b.w_bits);
+        assert_eq!(a.bias, b.bias);
+        assert_eq!(a.decode_weights().unwrap(), b.decode_weights().unwrap());
+    }
+}
+
+#[test]
+fn uniform_width_models_roundtrip_at_every_level() {
+    // Whole-file round-trip at each uniform width, 2 through 32 bit.
+    // (Ragged, non-byte-aligned code tails are pinned by the bit-level
+    // property tests in deploy::format — random widths at odd lengths.)
+    let arch = mlp();
+    for bits in [2u32, 4, 8, 16, 32] {
+        let params = arch.init_params(9);
+        let n_layers = arch.layers.len();
+        let mut betas_w = Tensor::zeros(&[n_layers]);
+        for li in 0..n_layers {
+            betas_w.data_mut()[li] = params[2 * li].abs_max().max(1e-3);
+        }
+        let betas_a = Tensor::full(&[arch.n_quant_act()], 4.0);
+        let mut gates = GateSet::new(&arch, Granularity::Layer);
+        for t in gates.gates_w.iter_mut().chain(gates.gates_a.iter_mut()) {
+            t.data_mut()[0] = gate_for_bits(bits);
+        }
+        let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+        let path = tmp(&format!("uniform{bits}.cgmqm"));
+        model.save(&path).unwrap();
+        let (loaded, _) = PackedModel::load(&path).unwrap();
+        for li in 0..n_layers {
+            let expect = gated_quantize_tensor(
+                &params[2 * li],
+                &gates.materialize_w(&arch, li),
+                betas_w.data()[li],
+                true,
+            );
+            let decoded = loaded.decode_weights(li).unwrap();
+            for (&d, &e) in decoded.iter().zip(expect.data()) {
+                assert_eq!(d.to_bits(), e.to_bits(), "bits={bits} layer={li}");
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cross-path golden: packed engine == host fake-quant eval, bit-for-bit
+// ---------------------------------------------------------------------------
+
+fn golden_for(arch: ArchSpec, n: usize) {
+    let mut rng = SplitMix64::new(17);
+    let in_len = arch.input_len();
+    let xs: Vec<f32> = (0..n * in_len).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    for gran in [Granularity::Layer, Granularity::Individual] {
+        let (params, betas_w, betas_a, gates) = mixed_state(&arch, gran, 11);
+        let reference =
+            fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &xs, n).unwrap();
+        let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+        for mode in [DecodeMode::Streaming, DecodeMode::UnpackOnce] {
+            let mut engine = Engine::new(model.clone()).unwrap().with_mode(mode);
+            let logits = engine.infer_batch(&xs, n).unwrap();
+            assert_eq!(logits.len(), reference.len());
+            for (i, (&a, &b)) in logits.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} {:?} {:?} logit {i}: {a} != {b}",
+                    arch.name,
+                    gran,
+                    mode
+                );
+            }
+            // Single-sample calls must agree with the batched call.
+            let mut single = Engine::new(model.clone()).unwrap().with_mode(mode);
+            for s in 0..n {
+                let one = single.infer(&xs[s * in_len..(s + 1) * in_len]).unwrap();
+                for (j, &v) in one.iter().enumerate() {
+                    let b = reference[s * one.len() + j];
+                    assert_eq!(v.to_bits(), b.to_bits(), "sample {s} logit {j}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_path_golden_mlp() {
+    golden_for(mlp(), 4);
+}
+
+#[test]
+fn cross_path_golden_lenet5() {
+    golden_for(lenet5(), 2);
+}
+
+// ---------------------------------------------------------------------------
+// Fail-fast loading
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_payload_fails_checksum() {
+    let arch = mlp();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Layer, 2);
+    let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    let path = tmp("corrupt.cgmqm");
+    model.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", PackedModel::load(&path).unwrap_err());
+    assert!(err.contains("checksum"), "{err}");
+}
+
+#[test]
+fn version_mismatch_rejected() {
+    let arch = mlp();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Layer, 2);
+    let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    let path = tmp("version.cgmqm");
+    model.save(&path).unwrap();
+    let mut bytes = std::fs::read(&path).unwrap();
+    bytes[8..12].copy_from_slice(&99u32.to_le_bytes()); // version field
+    std::fs::write(&path, &bytes).unwrap();
+    let err = format!("{:#}", PackedModel::load(&path).unwrap_err());
+    assert!(err.contains("version 99"), "{err}");
+}
+
+#[test]
+fn arch_drift_fails_fast() {
+    let arch = mlp();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Layer, 2);
+    let mut model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+
+    // Unknown arch name.
+    model.arch_name = "resnet18".into();
+    let path = tmp("drift_name.cgmqm");
+    model.save(&path).unwrap(); // save recomputes the checksum
+    let err = format!("{:#}", PackedModel::load(&path).unwrap_err());
+    assert!(err.contains("unknown arch") || err.contains("resnet18"), "{err}");
+
+    // Right name, drifted layer shape (same element count, so the byte
+    // layout stays coherent and only the arch check can object).
+    model.arch_name = "mlp".into();
+    model.layers[0].w_shape = vec![128, 784];
+    let path = tmp("drift_shape.cgmqm");
+    model.save(&path).unwrap();
+    let err = format!("{:#}", PackedModel::load(&path).unwrap_err());
+    assert!(err.contains("w_shape"), "{err}");
+}
+
+#[test]
+fn garbage_rejected() {
+    let path = tmp("garbage.cgmqm");
+    std::fs::write(&path, b"definitely not a packed model").unwrap();
+    assert!(PackedModel::load(&path).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Export report <-> file size cross-check
+// ---------------------------------------------------------------------------
+
+#[test]
+fn export_report_sizes_match_packed_file() {
+    let arch = mlp();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Individual, 13);
+    let snap = Snapshot {
+        params,
+        betas_w,
+        betas_a,
+        gates,
+        test_acc: 0.9,
+        rbop_percent: 1.0,
+    };
+    let ckpt = tmp("report.ckpt");
+    snap.save(&ckpt, arch.name).unwrap();
+
+    let cfg = Config { arch: "mlp".into(), ..Config::default() };
+    let report = export_report(&cfg, &ckpt).unwrap();
+
+    // The same packer writes the real artifact; sizes must agree exactly.
+    let (model, _, _) = load_packable_snapshot(&cfg, &ckpt).unwrap();
+    let path = tmp("report.cgmqm");
+    model.save(&path).unwrap();
+    let file_bytes = std::fs::metadata(&path).unwrap().len();
+    assert_eq!(report.get("packed_file_bytes").unwrap().as_f64().unwrap(), file_bytes as f64);
+
+    let payload = model.layer_payload_bytes();
+    let layers = report.get("layers").unwrap().as_arr().unwrap();
+    assert_eq!(layers.len(), payload.len());
+    let mut total = 0.0;
+    for (li, l) in layers.iter().enumerate() {
+        let b = l.get("packed_weight_bytes").unwrap().as_f64().unwrap();
+        assert_eq!(b, payload[li] as f64, "layer {li}");
+        total += b;
+        // The packed payload is the bit-exact ceil of the ideal memory
+        // report (which counts fractional bytes).
+        let ideal = l.get("weight_memory_bytes").unwrap().as_f64().unwrap();
+        assert!(b >= ideal && b < ideal + 1.0, "layer {li}: packed {b} vs ideal {ideal}");
+    }
+    assert_eq!(
+        report.get("packed_total_weight_bytes").unwrap().as_f64().unwrap(),
+        total
+    );
+    // The file adds only headers/metadata on top of the weight payload.
+    assert!(file_bytes as f64 >= total);
+}
+
+// ---------------------------------------------------------------------------
+// Request batcher
+// ---------------------------------------------------------------------------
+
+fn small_engine() -> Engine {
+    let arch = mlp();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Layer, 4);
+    let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    Engine::new(model).unwrap()
+}
+
+#[test]
+fn batcher_flushes_on_size() {
+    let engine = small_engine();
+    let in_len = engine.input_len();
+    let cfg = BatchConfig { max_batch: 4, max_delay: Duration::from_secs(3600) };
+    let mut b = RequestBatcher::new(engine, cfg).unwrap();
+    let now = Instant::now();
+    let x = vec![0.1f32; in_len];
+    for i in 0..3 {
+        assert!(b.submit_at(x.clone(), now).unwrap().is_empty(), "i={i}");
+    }
+    assert_eq!(b.pending(), 3);
+    let done = b.submit_at(x.clone(), now).unwrap();
+    assert_eq!(done.len(), 4);
+    assert_eq!(b.pending(), 0);
+    // FIFO ids, batch size recorded.
+    assert_eq!(done.iter().map(|c| c.id).collect::<Vec<_>>(), [0, 1, 2, 3]);
+    assert!(done.iter().all(|c| c.batch_size == 4));
+    let stats = b.stats();
+    assert_eq!(stats.flushes, 1);
+    assert_eq!(stats.size_flushes, 1);
+    assert_eq!(stats.deadline_flushes, 0);
+    assert_eq!(stats.completed, 4);
+}
+
+#[test]
+fn batcher_flushes_on_deadline() {
+    let engine = small_engine();
+    let in_len = engine.input_len();
+    let cfg = BatchConfig { max_batch: 1000, max_delay: Duration::from_millis(5) };
+    let mut b = RequestBatcher::new(engine, cfg).unwrap();
+    let t0 = Instant::now();
+    let x = vec![0.1f32; in_len];
+    assert!(b.submit_at(x.clone(), t0).unwrap().is_empty());
+    assert!(b.submit_at(x.clone(), t0 + Duration::from_millis(1)).unwrap().is_empty());
+    // Before the deadline: nothing.
+    assert!(b.poll_at(t0 + Duration::from_millis(4)).unwrap().is_empty());
+    assert_eq!(b.pending(), 2);
+    // At/after the deadline of the *oldest* request: flush both.
+    let done = b.poll_at(t0 + Duration::from_millis(5)).unwrap();
+    assert_eq!(done.len(), 2);
+    assert!(done[0].queue_delay >= Duration::from_millis(5));
+    let stats = b.stats();
+    assert_eq!(stats.deadline_flushes, 1);
+}
+
+#[test]
+fn batcher_matches_direct_engine_and_validates_input() {
+    let mut direct = small_engine();
+    let in_len = direct.input_len();
+    let data = cgmq::data::Dataset::synth(8, 6);
+    assert_eq!(data.sample_len, in_len);
+    let expect = direct.infer_batch(&data.images, 6).unwrap();
+    let c = direct.num_classes();
+
+    let cfg = BatchConfig { max_batch: 4, max_delay: Duration::from_secs(3600) };
+    let mut b = RequestBatcher::new(small_engine(), cfg).unwrap();
+    let now = Instant::now();
+    let mut got: Vec<cgmq::deploy::Completion> = Vec::new();
+    for i in 0..6 {
+        got.extend(b.submit_at(data.images[i * in_len..(i + 1) * in_len].to_vec(), now).unwrap());
+    }
+    got.extend(b.flush_at(now).unwrap());
+    assert_eq!(got.len(), 6);
+    for comp in &got {
+        let s = comp.id as usize;
+        for (j, &v) in comp.logits.iter().enumerate() {
+            assert_eq!(v.to_bits(), expect[s * c + j].to_bits(), "req {s} logit {j}");
+        }
+    }
+    // Wrong-length input is rejected up front.
+    assert!(b.submit_at(vec![0.0; in_len + 1], now).is_err());
+}
