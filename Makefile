@@ -3,9 +3,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt fmt-fix clippy bench-smoke artifacts bench clean
+.PHONY: ci build test fmt fmt-fix clippy bench-smoke serve-smoke artifacts bench clean
 
-ci: build test fmt clippy bench-smoke
+ci: build test fmt clippy bench-smoke serve-smoke
 
 build:
 	$(CARGO) build --release
@@ -23,6 +23,18 @@ clippy:
 # the cross-path golden assertion) on every PR.
 bench-smoke:
 	$(CARGO) bench --bench bench_deploy -- --smoke
+
+# End-to-end serve smoke: export a packed model, run it on synthetic
+# inputs, then drive the pooled serve bench (1 vs 4 workers). A *trained*
+# export needs a pjrt build + `make artifacts`; `export --synth` packs the
+# deterministic synthetic mixed-precision state instead, exercising the
+# identical pack -> save -> load -> infer -> pooled-serve path offline.
+serve-smoke: build
+	mkdir -p runs
+	./target/release/cgmq export --synth --arch mlp --out runs/serve-smoke.cgmqm
+	./target/release/cgmq infer --model runs/serve-smoke.cgmqm --synth 8
+	./target/release/cgmq serve-bench --model runs/serve-smoke.cgmqm \
+		--requests 96 --batch 16 --workers 4
 
 fmt-fix:
 	$(CARGO) fmt

@@ -10,9 +10,12 @@
 //! reporting as bench_hot_paths: warmup, then timed repetitions with
 //! mean / min / p50. No artifacts needed — the engine is pure host code.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use cgmq::bench_harness::{synthetic_deploy_state, SyntheticDeployState, DEPLOY_LEVELS};
+use cgmq::bench_harness::{
+    pool_bench_engine, synthetic_deploy_state, SyntheticDeployState, DEPLOY_LEVELS,
+};
 use cgmq::deploy::reference::fake_quant_logits;
 use cgmq::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
 use cgmq::model::{lenet5, mlp};
@@ -65,11 +68,11 @@ fn main() {
     let data = cgmq::data::Dataset::synth(3, 64);
     let in_len = arch.input_len();
     let one = &data.images[..in_len];
-    let mut streaming = Engine::new(model.clone()).unwrap().with_mode(DecodeMode::Streaming);
+    let streaming = Engine::new(model.clone()).unwrap().with_mode(DecodeMode::Streaming);
     bench("deploy: Engine::infer b=1 (mlp, streaming)", 5 * scale, || {
         std::hint::black_box(streaming.infer(one).unwrap());
     });
-    let mut cached = Engine::new(model.clone()).unwrap();
+    let cached = Engine::new(model.clone()).unwrap();
     bench("deploy: Engine::infer_batch b=64 (unpack)", 5 * scale, || {
         std::hint::black_box(cached.infer_batch(&data.images, 64).unwrap());
     });
@@ -98,6 +101,24 @@ fn main() {
         assert_eq!(done, 64);
     });
 
+    // --- the sharded worker pool: 1 vs 4 workers over one shared engine ---
+    let pool_requests = if smoke { 96 } else { 512 };
+    let shared = Arc::new(Engine::new(model.clone()).unwrap());
+    let bcfg = BatchConfig { max_batch: 16, max_delay: std::time::Duration::from_micros(200) };
+    let rps_of = |workers: usize| {
+        let j = pool_bench_engine(&shared, pool_requests, workers, bcfg, 11).unwrap();
+        let rps = j.get("throughput_rps").unwrap().as_f64().unwrap();
+        let p99 = j.get("p99_ms").unwrap().as_f64().unwrap();
+        println!(
+            "deploy: WorkerPool {pool_requests} reqs, workers={workers:<2}   \
+             {rps:>10.1} req/s (p99 {p99:.3} ms)"
+        );
+        rps
+    };
+    let pool1 = rps_of(1);
+    let pool4 = rps_of(4);
+    println!("deploy: pool speedup 4 vs 1 workers          {:>10.2}x", pool4 / pool1);
+
     // --- smoke-mode correctness anchor: engine == fake-quant reference ---
     let engine_logits = cached.infer_batch(&data.images, 64).unwrap();
     let ref_logits =
@@ -115,7 +136,7 @@ fn main() {
         let s = synthetic_deploy_state(&arch, &DEPLOY_LEVELS, 7);
         let model =
             PackedModel::from_state(&arch, &s.params, &s.betas_w, &s.betas_a, &s.gates).unwrap();
-        let mut engine = Engine::new(model).unwrap();
+        let engine = Engine::new(model).unwrap();
         let data = cgmq::data::Dataset::synth(5, 8);
         bench("deploy: Engine::infer_batch b=8 (lenet5)", 5, || {
             std::hint::black_box(engine.infer_batch(&data.images, 8).unwrap());

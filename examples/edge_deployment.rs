@@ -1,6 +1,6 @@
 //! Edge-deployment walkthrough: train under a device budget, export the
 //! packed `.cgmqm` artifact, and *run* it — the full train → export-packed
-//! → infer loop.
+//! → infer → serve loop, ending with the sharded multi-worker pool.
 //!
 //!     cargo run --release --example edge_deployment
 //!
@@ -15,10 +15,13 @@
 //! call is pure host code.)
 
 use std::path::Path;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use cgmq::config::Config;
-use cgmq::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
+use cgmq::deploy::{
+    BatchConfig, DecodeMode, Engine, PackedModel, PoolConfig, RequestBatcher, WorkerPool,
+};
 use cgmq::session::{BestSnapshotSaver, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
@@ -84,7 +87,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // ---- 3. Infer: load the artifact and run it ------------------------
-    let mut engine = Engine::load(&cgmqm)?;
+    let engine = Engine::load(&cgmqm)?;
     let n = 256.min(session.ctx.test_data.len());
     let in_len = engine.input_len();
     let xs = &session.ctx.test_data.images[..n * in_len];
@@ -131,7 +134,7 @@ fn main() -> anyhow::Result<()> {
     let batched_rps = n as f64 / t0.elapsed().as_secs_f64();
     assert_eq!(served, n);
 
-    let mut single = Engine::load(&cgmqm)?.with_mode(DecodeMode::Streaming);
+    let single = Engine::load(&cgmqm)?.with_mode(DecodeMode::Streaming);
     let t0 = Instant::now();
     for i in 0..n {
         std::hint::black_box(single.infer(&xs[i * in_len..(i + 1) * in_len])?);
@@ -143,6 +146,39 @@ fn main() -> anyhow::Result<()> {
         single_rps,
         batched_rps / single_rps,
         batcher.stats().mean_batch()
+    );
+
+    // ---- 5. Scale out: the sharded worker pool --------------------------
+    // One engine, shared by N threads (`infer_batch` takes `&self`; the
+    // decoded-weight cache is lock-free). Requests are routed round-robin
+    // into per-shard batching queues with the same flush triggers.
+    let shared = Arc::new(Engine::load(&cgmqm)?);
+    let workers = cgmq::deploy::default_workers();
+    let mut pool = WorkerPool::new(
+        Arc::clone(&shared),
+        PoolConfig {
+            workers,
+            batch: BatchConfig { max_batch: 32, max_delay: Duration::from_micros(200) },
+        },
+    )?;
+    let t0 = Instant::now();
+    for i in 0..n {
+        pool.submit(xs[i * in_len..(i + 1) * in_len].to_vec())?;
+    }
+    let (completions, shard_stats) = pool.shutdown()?;
+    let pooled_rps = n as f64 / t0.elapsed().as_secs_f64();
+    assert_eq!(completions.len(), n);
+    // The pool serves the same bits the single-threaded engine does.
+    for c in &completions {
+        let direct = shared.infer(&xs[c.id as usize * in_len..(c.id as usize + 1) * in_len])?;
+        assert!(c.logits.iter().zip(&direct).all(|(a, b)| a.to_bits() == b.to_bits()));
+    }
+    println!(
+        "pooled serve path: {:.0} req/s across {} workers ({:.1}x vs one-by-one, {} shard flushes)",
+        pooled_rps,
+        workers,
+        pooled_rps / single_rps,
+        shard_stats.iter().map(|s| s.flushes).sum::<u64>()
     );
     println!("\nwrote {}/deploy.json, deploy.ckpt and deploy.cgmqm", out_dir);
     Ok(())

@@ -286,39 +286,143 @@ pub fn penalty_comparison(base: &Config, lambdas: &[f32]) -> Result<String> {
 // Deploy rows — packed-model size + engine throughput (no artifacts needed)
 // ---------------------------------------------------------------------------
 
-/// Latency percentiles of a sorted-or-not set of per-request durations.
-fn percentiles_ms(durs: &mut [f64]) -> (f64, f64, f64) {
+/// Latency percentiles (ms) of a sorted-or-not set of per-request
+/// durations in seconds.
+///
+/// Ceil-based nearest rank: index `ceil((len - 1) * p)`, so a tail
+/// percentile never rounds *down* onto a faster request — p99 of 100
+/// requests reads the slowest sample (index 99), where the previous
+/// `round()` rule read index 98 and under-reported tail latency.
+pub fn percentiles_ms(durs: &mut [f64]) -> (f64, f64, f64) {
     durs.sort_by(f64::total_cmp);
-    let pick = |p: f64| durs[((durs.len() - 1) as f64 * p).round() as usize] * 1e3;
+    let pick = |p: f64| durs[((durs.len() - 1) as f64 * p).ceil() as usize] * 1e3;
     (pick(0.50), pick(0.90), pick(0.99))
 }
 
 /// Measure one packed model: the naive single-request path (streaming
 /// decode per call) vs the batched serve path ([`RequestBatcher`] over an
-/// unpack-once engine). Returns the `serve-bench` JSON report.
+/// unpack-once engine) vs the sharded worker pool at 1 and `workers`
+/// workers. Returns the `serve-bench` JSON report.
 pub fn serve_bench(
     model_path: &Path,
     requests: usize,
     batch: usize,
     deadline: std::time::Duration,
+    workers: usize,
     seed: u64,
 ) -> Result<Json> {
     use crate::deploy::{BatchConfig, DecodeMode, Engine, RequestBatcher};
     let single = Engine::load(model_path)?.with_mode(DecodeMode::Streaming);
-    let batcher = RequestBatcher::new(
-        Engine::load(model_path)?,
-        BatchConfig { max_batch: batch, max_delay: deadline },
-    )?;
+    let bcfg = BatchConfig { max_batch: batch, max_delay: deadline };
+    let batcher = RequestBatcher::new(Engine::load(model_path)?, bcfg)?;
     let mut report = serve_bench_engines(single, batcher, requests, seed)?;
+    let shared = std::sync::Arc::new(Engine::load(model_path)?);
+    let pooled = pool_comparison(shared, requests, workers, bcfg, seed)?;
     if let Json::Obj(m) = &mut report {
         m.insert("model".into(), Json::str(model_path.display().to_string()));
+        m.insert("pool".into(), pooled);
     }
     Ok(report)
 }
 
+/// The 1-vs-N-worker pool row: same engine, same shard batching policy,
+/// only the worker count differs. `speedup` is N-worker throughput over
+/// 1-worker throughput.
+pub fn pool_comparison(
+    engine: std::sync::Arc<crate::deploy::Engine>,
+    requests: usize,
+    workers: usize,
+    batch: crate::deploy::BatchConfig,
+    seed: u64,
+) -> Result<Json> {
+    let one = pool_bench_engine(&engine, requests, 1, batch, seed)?;
+    let n = if workers > 1 {
+        pool_bench_engine(&engine, requests, workers, batch, seed)?
+    } else {
+        one.clone()
+    };
+    let rps1 = one.get("throughput_rps")?.as_f64()?;
+    let rps_n = n.get("throughput_rps")?.as_f64()?;
+    Ok(Json::obj(vec![
+        ("workers", Json::num(workers as f64)),
+        ("one_worker", one),
+        ("n_workers", n),
+        ("speedup", Json::num(rps_n / rps1)),
+    ]))
+}
+
+/// Drive `requests` synthetic requests through a [`WorkerPool`] of
+/// `workers` shards over the shared `engine`; returns throughput +
+/// latency percentiles + merged shard stats as JSON.
+pub fn pool_bench_engine(
+    engine: &std::sync::Arc<crate::deploy::Engine>,
+    requests: usize,
+    workers: usize,
+    batch: crate::deploy::BatchConfig,
+    seed: u64,
+) -> Result<Json> {
+    use std::time::Instant;
+
+    use crate::deploy::{BatcherStats, PoolConfig, WorkerPool};
+    if requests == 0 {
+        anyhow::bail!("pool bench needs at least one request");
+    }
+    let in_len = engine.input_len();
+    let ds = crate::data::Dataset::synth(seed, requests);
+    if ds.sample_len != in_len {
+        anyhow::bail!("synth samples have {} values, model wants {in_len}", ds.sample_len);
+    }
+    let mut pool = WorkerPool::new(std::sync::Arc::clone(engine), PoolConfig { workers, batch })?;
+    let t0 = Instant::now();
+    let mut submitted_at: Vec<Instant> = Vec::with_capacity(requests);
+    let mut lat = vec![0.0f64; requests];
+    let mut done = 0usize;
+    // Latency is stamped by the *worker* at forward time
+    // (`PoolCompletion::completed_at`), not by this collector loop —
+    // completions drained late (especially after shutdown) must not have
+    // the collector's own delay or thread-join time charged to them.
+    for i in 0..requests {
+        submitted_at.push(Instant::now());
+        pool.submit(ds.images[i * in_len..(i + 1) * in_len].to_vec())?;
+        for c in pool.try_completions() {
+            let served = c.completed_at.duration_since(submitted_at[c.id as usize]);
+            lat[c.id as usize] = served.as_secs_f64();
+            done += 1;
+        }
+    }
+    let (rest, shard_stats) = pool.shutdown()?;
+    for c in rest {
+        let served = c.completed_at.duration_since(submitted_at[c.id as usize]);
+        lat[c.id as usize] = served.as_secs_f64();
+        done += 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if done != requests {
+        anyhow::bail!("pool completed {done} of {requests} requests");
+    }
+    let mut stats = BatcherStats::default();
+    for (shard, s) in shard_stats.iter().enumerate() {
+        if !s.consistent() {
+            anyhow::bail!("shard {shard} batcher stats violate the flush invariant: {s:?}");
+        }
+        stats.merge(s);
+    }
+    let (p50, p90, p99) = percentiles_ms(&mut lat);
+    Ok(Json::obj(vec![
+        ("workers", Json::num(workers as f64)),
+        ("throughput_rps", Json::num(requests as f64 / wall)),
+        ("p50_ms", Json::num(p50)),
+        ("p90_ms", Json::num(p90)),
+        ("p99_ms", Json::num(p99)),
+        ("flushes", Json::num(stats.flushes as f64)),
+        ("engine_calls", Json::num(stats.engine_calls as f64)),
+        ("mean_batch", Json::num(stats.mean_batch())),
+    ]))
+}
+
 /// Core of [`serve_bench`], reusable with pre-built engines (deploy table).
 pub fn serve_bench_engines(
-    mut single: crate::deploy::Engine,
+    single: crate::deploy::Engine,
     mut batcher: crate::deploy::RequestBatcher,
     requests: usize,
     seed: u64,
@@ -401,6 +505,7 @@ pub fn serve_bench_engines(
                 ("p90_ms", Json::num(bp90)),
                 ("p99_ms", Json::num(bp99)),
                 ("flushes", Json::num(stats.flushes as f64)),
+                ("engine_calls", Json::num(stats.engine_calls as f64)),
                 ("mean_batch", Json::num(stats.mean_batch())),
             ]),
         ),
@@ -445,50 +550,92 @@ pub fn synthetic_deploy_state(
     SyntheticDeployState { params, betas_w, betas_a, gates }
 }
 
-/// The deploy rows: per arch, packed artifact size vs fp32 and the
-/// single-vs-batched engine throughput, on a deterministic synthetic
-/// snapshot. Writes `table_deploy.json` next to the text table.
-pub fn deploy_table(base: &Config, requests: usize, batch: usize) -> Result<String> {
+/// The deploy rows: per arch, packed artifact size vs fp32, the
+/// single-vs-batched engine throughput, and the sharded pool at 1 vs
+/// `workers` workers (throughput + tail latency), on a deterministic
+/// synthetic snapshot. Writes `table_deploy.json` next to the text table.
+pub fn deploy_table(
+    base: &Config,
+    requests: usize,
+    batch: usize,
+    workers: usize,
+) -> Result<String> {
     use crate::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
     let mut out = String::new();
     out.push_str(&format!(
-        "Deploy: packed .cgmqm artifacts + engine serve path ({requests} requests, batch {batch}).\n"
+        "Deploy: packed .cgmqm artifacts + engine serve path \
+         ({requests} requests, batch {batch}, {workers} workers).\n"
     ));
-    out.push_str("| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup |\n");
-    out.push_str("|--------|------------|----------|--------------|---------------|---------|\n");
+    out.push_str(
+        "| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup | Pool x1 req/s | Pool xN req/s | Pool gain |\n",
+    );
+    out.push_str(
+        "|--------|------------|----------|--------------|---------------|---------|---------------|---------------|-----------|\n",
+    );
     let mut rows = Vec::new();
+    let bcfg = BatchConfig { max_batch: batch, max_delay: std::time::Duration::from_micros(200) };
     for arch in [crate::model::mlp(), crate::model::lenet5()] {
         let s = synthetic_deploy_state(&arch, &DEPLOY_LEVELS, 7);
         let model = PackedModel::from_state(&arch, &s.params, &s.betas_w, &s.betas_a, &s.gates)?;
         let packed_bytes = model.encoded_len()?;
         let fp32_bytes: u64 = arch.layers.iter().map(|l| l.w_len() as u64 * 4).sum();
         let single = Engine::new(model.clone())?.with_mode(DecodeMode::Streaming);
-        let batcher = RequestBatcher::new(
-            Engine::new(model)?,
-            BatchConfig { max_batch: batch, max_delay: std::time::Duration::from_micros(200) },
-        )?;
+        let batcher = RequestBatcher::new(Engine::new(model.clone())?, bcfg)?;
         let bench = serve_bench_engines(single, batcher, requests, base.seed)?;
+        let shared = std::sync::Arc::new(Engine::new(model)?);
+        let pool = pool_comparison(shared, requests, workers, bcfg, base.seed)?;
         let single_rps = bench.get("single")?.get("throughput_rps")?.as_f64()?;
         let batched_rps = bench.get("batched")?.get("throughput_rps")?.as_f64()?;
+        let pool1_rps = pool.get("one_worker")?.get("throughput_rps")?.as_f64()?;
+        let pool_n_rps = pool.get("n_workers")?.get("throughput_rps")?.as_f64()?;
         out.push_str(&format!(
-            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x |\n",
+            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x | {:13.1} | {:13.1} | {:8.2}x |\n",
             arch.name,
             packed_bytes as f64 / 1024.0,
             fp32_bytes as f64 / 1024.0,
             single_rps,
             batched_rps,
-            batched_rps / single_rps
+            batched_rps / single_rps,
+            pool1_rps,
+            pool_n_rps,
+            pool_n_rps / pool1_rps
         ));
         let mut j = bench;
         if let Json::Obj(m) = &mut j {
             m.insert("arch".into(), Json::str(arch.name));
             m.insert("packed_bytes".into(), Json::num(packed_bytes as f64));
             m.insert("fp32_bytes".into(), Json::num(fp32_bytes as f64));
+            m.insert("pool".into(), pool);
         }
         rows.push(j);
     }
     write_json(&Path::new(&base.out_dir).join("table_deploy.json"), &Json::Arr(rows))?;
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::percentiles_ms;
+
+    #[test]
+    fn percentiles_use_ceil_nearest_rank() {
+        // 100 known durations: 0.001s .. 0.100s. Under the old round()
+        // rule p99 read index round(99 * 0.99) = 98 (99 ms); ceil-based
+        // nearest rank reads the slowest sample.
+        let mut durs: Vec<f64> = (1..=100).map(|i| i as f64 * 1e-3).collect();
+        let (p50, p90, p99) = percentiles_ms(&mut durs);
+        assert_eq!(p50, 51.0); // ceil(99 * 0.50) = 50 -> 51 ms
+        assert_eq!(p90, 91.0); // ceil(99 * 0.90) = 90 -> 91 ms
+        assert_eq!(p99, 100.0); // ceil(99 * 0.99) = 99 -> the tail sample
+
+        // Unsorted input is sorted in place; a single sample is every
+        // percentile of itself.
+        let mut one = vec![0.007];
+        assert_eq!(percentiles_ms(&mut one), (7.0, 7.0, 7.0));
+        let mut shuffled = vec![0.003, 0.001, 0.002];
+        let (p50, p90, p99) = percentiles_ms(&mut shuffled);
+        assert_eq!((p50, p90, p99), (2.0, 3.0, 3.0));
+    }
 }
 
 fn result_json(method: &str, r: &RunResult) -> Json {

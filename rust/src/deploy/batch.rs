@@ -8,14 +8,27 @@
 //! * **size** — the queue reached `max_batch` pending requests;
 //! * **deadline** — the *oldest* pending request has waited `max_delay`.
 //!
+//! A third flush kind, **drain**, is the explicit end-of-stream
+//! [`flush_at`](RequestBatcher::flush_at) call. Exactly one of the three
+//! counters is bumped per flush event, so the stats hold the invariant
+//! `flushes == size_flushes + deadline_flushes + drain_flushes`; the
+//! engine invocations a flush fans out into (a drain spanning several
+//! `max_batch` chunks makes more than one) are counted separately as
+//! `engine_calls`, the denominator of the amortization factor.
+//!
 //! The batcher is deterministic and clock-injected: `submit_at` / `poll_at`
 //! take the caller's `Instant`, so tests drive time explicitly and the
 //! serve loop passes `Instant::now()`. Completions preserve submission
 //! order (FIFO, like `data::Batcher::sequential`), and every completion
 //! reports its queue delay and the batch size it rode in — the raw
 //! material for `serve-bench`'s latency percentiles.
+//!
+//! The batcher holds its engine behind an [`Arc`], so several batchers —
+//! the per-shard queues of [`super::pool::WorkerPool`] — can share one
+//! engine and its decoded-weight cache.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -52,23 +65,55 @@ pub struct Completion {
 }
 
 /// Cumulative batcher statistics.
+///
+/// Invariant: `flushes == size_flushes + deadline_flushes + drain_flushes`
+/// — every flush event has exactly one trigger. `engine_calls >= flushes`:
+/// one flush event drains the whole queue in `max_batch`-sized engine
+/// invocations, so a drain of 70 pending requests at `max_batch = 32` is
+/// one flush (one `drain_flushes`) but three engine calls.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BatcherStats {
     pub submitted: u64,
     pub completed: u64,
+    /// Flush events (any trigger).
     pub flushes: u64,
+    /// Flushes triggered by the queue reaching `max_batch`.
     pub size_flushes: u64,
+    /// Flushes triggered by the oldest request reaching `max_delay`.
     pub deadline_flushes: u64,
+    /// Explicit end-of-stream drains that found pending requests.
+    pub drain_flushes: u64,
+    /// `Engine::infer_batch` invocations across all flushes.
+    pub engine_calls: u64,
 }
 
 impl BatcherStats {
     /// Mean samples per engine invocation (the amortization factor).
     pub fn mean_batch(&self) -> f64 {
-        if self.flushes == 0 {
+        if self.engine_calls == 0 {
             0.0
         } else {
-            self.completed as f64 / self.flushes as f64
+            self.completed as f64 / self.engine_calls as f64
         }
+    }
+
+    /// The counter invariant; asserted by tests, cheap enough to check in
+    /// debug servers.
+    pub fn consistent(&self) -> bool {
+        self.flushes == self.size_flushes + self.deadline_flushes + self.drain_flushes
+            && self.engine_calls >= self.flushes
+            && self.completed <= self.submitted
+    }
+
+    /// Fold another shard's counters into this one (pool-wide totals).
+    pub fn merge(&mut self, other: &BatcherStats) {
+        self.submitted += other.submitted;
+        self.completed += other.completed;
+        self.flushes += other.flushes;
+        self.size_flushes += other.size_flushes;
+        self.deadline_flushes += other.deadline_flushes;
+        self.drain_flushes += other.drain_flushes;
+        self.engine_calls += other.engine_calls;
     }
 }
 
@@ -80,7 +125,7 @@ struct Pending {
 
 /// Aggregates single-sample requests into batched engine invocations.
 pub struct RequestBatcher {
-    engine: Engine,
+    engine: Arc<Engine>,
     cfg: BatchConfig,
     queue: VecDeque<Pending>,
     next_id: u64,
@@ -88,11 +133,19 @@ pub struct RequestBatcher {
 }
 
 impl RequestBatcher {
-    pub fn new(engine: Engine, cfg: BatchConfig) -> Result<Self> {
+    /// Wrap an engine (owned or already-shared `Arc` — the serve pool
+    /// passes one `Arc<Engine>` to every shard's batcher).
+    pub fn new(engine: impl Into<Arc<Engine>>, cfg: BatchConfig) -> Result<Self> {
         if cfg.max_batch == 0 {
             bail!("max_batch must be >= 1");
         }
-        Ok(Self { engine, cfg, queue: VecDeque::new(), next_id: 0, stats: BatcherStats::default() })
+        Ok(Self {
+            engine: engine.into(),
+            cfg,
+            queue: VecDeque::new(),
+            next_id: 0,
+            stats: BatcherStats::default(),
+        })
     }
 
     /// Enqueue one request at time `now`; returns the completions of any
@@ -106,8 +159,9 @@ impl RequestBatcher {
         self.stats.submitted += 1;
         self.queue.push_back(Pending { id, x, enqueued: now });
         if self.queue.len() >= self.cfg.max_batch {
+            self.stats.flushes += 1;
             self.stats.size_flushes += 1;
-            return self.flush_at(now);
+            return self.run_flush(now);
         }
         Ok(Vec::new())
     }
@@ -117,16 +171,30 @@ impl RequestBatcher {
     pub fn poll_at(&mut self, now: Instant) -> Result<Vec<Completion>> {
         match self.queue.front() {
             Some(p) if now.duration_since(p.enqueued) >= self.cfg.max_delay => {
+                self.stats.flushes += 1;
                 self.stats.deadline_flushes += 1;
-                self.flush_at(now)
+                self.run_flush(now)
             }
             _ => Ok(Vec::new()),
         }
     }
 
     /// Flush every pending request now (in `max_batch`-sized engine calls),
-    /// regardless of triggers — end-of-stream drain.
+    /// regardless of triggers — end-of-stream drain. A no-op on an empty
+    /// queue (no flush event is counted).
     pub fn flush_at(&mut self, now: Instant) -> Result<Vec<Completion>> {
+        if self.queue.is_empty() {
+            return Ok(Vec::new());
+        }
+        self.stats.flushes += 1;
+        self.stats.drain_flushes += 1;
+        self.run_flush(now)
+    }
+
+    /// One flush event: drain the whole queue in `max_batch`-sized engine
+    /// invocations. Trigger counters are the caller's job; this counts
+    /// only `engine_calls` and `completed`.
+    fn run_flush(&mut self, now: Instant) -> Result<Vec<Completion>> {
         let mut out = Vec::with_capacity(self.queue.len());
         while !self.queue.is_empty() {
             let take = self.queue.len().min(self.cfg.max_batch);
@@ -138,7 +206,7 @@ impl RequestBatcher {
             }
             let logits = self.engine.infer_batch(&xs, take)?;
             let c = self.engine.num_classes();
-            self.stats.flushes += 1;
+            self.stats.engine_calls += 1;
             self.stats.completed += take as u64;
             for (k, p) in batch.into_iter().enumerate() {
                 let row = logits[k * c..(k + 1) * c].to_vec();
@@ -158,6 +226,12 @@ impl RequestBatcher {
         self.queue.len()
     }
 
+    /// Enqueue time of the oldest pending request — what a serve loop
+    /// sleeps against to wake exactly at the deadline flush.
+    pub fn oldest_enqueued(&self) -> Option<Instant> {
+        self.queue.front().map(|p| p.enqueued)
+    }
+
     pub fn stats(&self) -> BatcherStats {
         self.stats
     }
@@ -166,9 +240,10 @@ impl RequestBatcher {
         &self.engine
     }
 
-    /// Dissolve into the wrapped engine (pending requests are dropped —
-    /// call [`flush_at`](Self::flush_at) first to drain).
-    pub fn into_engine(self) -> Engine {
+    /// Dissolve into the wrapped (possibly shared) engine — pending
+    /// requests are dropped; call [`flush_at`](Self::flush_at) first to
+    /// drain.
+    pub fn into_engine(self) -> Arc<Engine> {
         self.engine
     }
 }

@@ -24,8 +24,17 @@
 //! values), and both match the host fake-quant reference forward
 //! ([`super::reference`]) bit-for-bit — the cross-path golden test in
 //! `tests/deploy_roundtrip.rs` pins all three.
+//!
+//! The engine is **shared state**: inference takes `&self`, the decoded
+//! weight cache lives in per-layer [`OnceLock`] slots, and the packed
+//! model behind them is immutable, so one `Arc<Engine>` serves any number
+//! of threads concurrently ([`super::pool::WorkerPool`]). The hot path is
+//! lock-free — a filled slot costs one atomic load; a decode race on a
+//! cold slot wastes at most one redundant decode (both threads compute
+//! the same bytes, the first `set` wins).
 
 use std::path::Path;
+use std::sync::OnceLock;
 
 use anyhow::{bail, Result};
 
@@ -44,20 +53,23 @@ pub enum DecodeMode {
     UnpackOnce,
 }
 
-/// Packed-model inference engine.
+/// Packed-model inference engine. Immutable after construction: `infer*`
+/// take `&self`, so an `Arc<Engine>` is safely shared across threads.
 pub struct Engine {
     model: PackedModel,
     arch: ArchSpec,
     mode: DecodeMode,
-    /// Per-layer dense weight cache (`UnpackOnce` mode).
-    cache: Vec<Option<Vec<f32>>>,
+    /// Per-layer dense weight cache (`UnpackOnce` mode), filled lazily and
+    /// at most once; `OnceLock::get` on the hot path is a single atomic
+    /// load, no lock.
+    cache: Vec<OnceLock<Vec<f32>>>,
 }
 
 impl Engine {
     /// Wrap an already-verified packed model (default `UnpackOnce` mode).
     pub fn new(model: PackedModel) -> Result<Self> {
         let arch = model.verify()?;
-        let cache = vec![None; model.layers.len()];
+        let cache = (0..model.layers.len()).map(|_| OnceLock::new()).collect();
         Ok(Self { model, arch, mode: DecodeMode::default(), cache })
     }
 
@@ -70,10 +82,32 @@ impl Engine {
     /// Select the weight decode strategy (resets the cache).
     pub fn with_mode(mut self, mode: DecodeMode) -> Self {
         self.mode = mode;
-        for slot in &mut self.cache {
-            *slot = None;
-        }
+        self.cache = (0..self.model.layers.len()).map(|_| OnceLock::new()).collect();
         self
+    }
+
+    /// Eagerly decode every layer into the cache (`UnpackOnce` mode), so a
+    /// worker pool pays the unpack cost once up front instead of racing on
+    /// the first requests. No-op in `Streaming` mode (the cache is unread).
+    pub fn preload(&self) -> Result<()> {
+        if self.mode == DecodeMode::UnpackOnce {
+            for li in 0..self.model.layers.len() {
+                self.cached_weights(li)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The decoded dense weights of layer `li`, filling the slot on first
+    /// use. A lost `set` race means another thread stored the identical
+    /// decode first; its value is returned.
+    fn cached_weights(&self, li: usize) -> Result<&[f32]> {
+        if let Some(w) = self.cache[li].get() {
+            return Ok(w);
+        }
+        let w = self.model.decode_weights(li)?;
+        let _ = self.cache[li].set(w);
+        Ok(self.cache[li].get().expect("slot filled above").as_slice())
     }
 
     pub fn mode(&self) -> DecodeMode {
@@ -99,13 +133,14 @@ impl Engine {
     }
 
     /// Run one sample; returns its logits.
-    pub fn infer(&mut self, x: &[f32]) -> Result<Vec<f32>> {
+    pub fn infer(&self, x: &[f32]) -> Result<Vec<f32>> {
         self.infer_batch(x, 1)
     }
 
     /// Run `n` samples (row-major, `n * input_len` values); returns the
-    /// flattened `n x num_classes` logits.
-    pub fn infer_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
+    /// flattened `n x num_classes` logits. Takes `&self`: safe to call
+    /// from many threads over one shared engine.
+    pub fn infer_batch(&self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
         let in_len = self.model.input_len();
         if n == 0 {
             bail!("infer_batch needs at least one sample");
@@ -119,13 +154,10 @@ impl Engine {
         let mut dims: Vec<usize> = self.model.input_shape.clone();
         let n_layers = self.model.layers.len();
         for li in 0..n_layers {
-            if self.mode == DecodeMode::UnpackOnce && self.cache[li].is_none() {
-                self.cache[li] = Some(self.model.decode_weights(li)?);
-            }
             let scratch;
-            let wq: &[f32] = match &self.cache[li] {
-                Some(w) => w,
-                None => {
+            let wq: &[f32] = match self.mode {
+                DecodeMode::UnpackOnce => self.cached_weights(li)?,
+                DecodeMode::Streaming => {
                     scratch = self.model.decode_weights(li)?;
                     &scratch
                 }
@@ -183,12 +215,19 @@ impl Engine {
     }
 
     /// Predicted class per sample (argmax over logits).
-    pub fn predict_batch(&mut self, xs: &[f32], n: usize) -> Result<Vec<usize>> {
+    pub fn predict_batch(&self, xs: &[f32], n: usize) -> Result<Vec<usize>> {
         let logits = self.infer_batch(xs, n)?;
         let c = self.num_classes();
         Ok((0..n).map(|s| argmax(&logits[s * c..(s + 1) * c])).collect())
     }
 }
+
+// Compile-time proof the engine is shareable across threads; the serve
+// pool hands one `Arc<Engine>` to every worker.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<Engine>();
+};
 
 /// Argmax index of a non-empty slice (first max wins, like
 /// `Tensor::argmax_rows`).
@@ -300,6 +339,9 @@ pub(super) fn relu_inplace(h: &mut [f32]) {
 }
 
 /// Non-overlapping `k x k` max pooling over NCHW, window == stride.
+/// Assumes `k` divides both spatial dims — inputs where it doesn't are
+/// rejected up front by `PackedModel::verify`'s geometry walk (the floor
+/// division here would otherwise silently drop edge rows/cols).
 pub(super) fn maxpool(h: &[f32], n: usize, c: usize, hh: usize, ww: usize, k: usize) -> Vec<f32> {
     let ho = hh / k;
     let wo = ww / k;

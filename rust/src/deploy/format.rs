@@ -671,10 +671,67 @@ impl PackedModel {
         Ok(Self { arch_name, granularity, input_bits, input_shape, layers })
     }
 
+    /// Walk the recorded geometry (input shape through conv/dense/pool)
+    /// and reject anything the engine's kernels would mishandle —
+    /// foremost a max-pool window that does not divide the spatial dims:
+    /// `engine::maxpool` floor-divides, so a non-divisible window would
+    /// *silently drop* edge rows/cols instead of pooling them.
+    fn verify_geometry(&self) -> Result<()> {
+        let mut dims = self.input_shape.clone();
+        for l in &self.layers {
+            match l.kind {
+                LayerKind::Dense => {
+                    if l.w_shape.len() != 2 {
+                        bail!("layer {}: dense weight shape {:?} is not 2-D", l.name, l.w_shape);
+                    }
+                    dims = vec![l.w_shape[1]];
+                }
+                LayerKind::Conv => {
+                    if l.w_shape.len() != 4 {
+                        bail!("layer {}: conv weight shape {:?} is not OIHW", l.name, l.w_shape);
+                    }
+                    if dims.len() != 3 {
+                        bail!("layer {}: conv wants CHW input, got {:?}", l.name, dims);
+                    }
+                    let (kh, kw) = (l.w_shape[2], l.w_shape[3]);
+                    if dims[1] < kh || dims[2] < kw {
+                        bail!(
+                            "layer {}: input {:?} smaller than kernel {:?}",
+                            l.name,
+                            dims,
+                            l.w_shape
+                        );
+                    }
+                    dims = vec![l.w_shape[0], dims[1] - kh + 1, dims[2] - kw + 1];
+                }
+            }
+            if l.pool > 1 {
+                if dims.len() != 3 {
+                    bail!("layer {}: max-pool on a non-spatial output {:?}", l.name, dims);
+                }
+                if dims[1] % l.pool != 0 || dims[2] % l.pool != 0 {
+                    bail!(
+                        "layer {}: {}x{} output is not divisible by max-pool window {} — \
+                         pooling would silently drop edge rows/cols",
+                        l.name,
+                        dims[1],
+                        dims[2],
+                        l.pool
+                    );
+                }
+                dims = vec![dims[0], dims[1] / l.pool, dims[2] / l.pool];
+            }
+        }
+        Ok(())
+    }
+
     /// Resolve the recorded arch and verify every layer record against it
     /// (the manifest-verification idiom): names, kinds, shapes, pooling and
-    /// activation quantization must all match the compiled-in spec.
+    /// activation quantization must all match the compiled-in spec. Runs
+    /// the geometry walk first, so impossible pooling is reported as such
+    /// rather than as generic arch drift.
     pub fn verify(&self) -> Result<ArchSpec> {
+        self.verify_geometry()?;
         let arch = arch_by_name(&self.arch_name)
             .with_context(|| format!("packed model records unknown arch '{}'", self.arch_name))?;
         if self.input_shape != arch.input_shape {

@@ -16,19 +16,25 @@
 //! * [`RequestBatcher`] — aggregates single-sample `infer` requests into
 //!   batched engine invocations (size- and deadline-triggered flush) so
 //!   the unpack cost and the batched matmuls amortize across requests.
+//! * [`WorkerPool`] — multi-worker sharded serving: N std threads over
+//!   one shared `Arc<Engine>` (inference takes `&self`; the decoded
+//!   weight cache is `OnceLock`-filled, lock-free on the hot path), each
+//!   worker batching its own shard with the same flush triggers.
 //! * [`reference`] — the host fake-quant forward mirroring the eval graph;
 //!   the engine is held to bit-for-bit agreement with it (the cross-path
 //!   golden test in `tests/deploy_roundtrip.rs`).
 //!
 //! ```no_run
-//! use cgmq::deploy::{BatchConfig, Engine, PackedModel, RequestBatcher};
+//! use cgmq::deploy::{Engine, PackedModel, PoolConfig, WorkerPool};
 //! # fn main() -> anyhow::Result<()> {
 //! # let (arch, snapshot): (cgmq::model::ArchSpec, cgmq::session::Snapshot) = todo!();
-//! // Pack the delivered model and serve it:
+//! // Pack the delivered model and serve it across all cores:
 //! let packed = PackedModel::from_snapshot(&arch, &snapshot)?;
 //! packed.save(std::path::Path::new("model.cgmqm"))?;
-//! let engine = Engine::load(std::path::Path::new("model.cgmqm"))?;
-//! let _server = RequestBatcher::new(engine, BatchConfig::default())?;
+//! let mut pool = WorkerPool::load(std::path::Path::new("model.cgmqm"), PoolConfig::default())?;
+//! let _id = pool.submit(vec![0.0; pool.engine().input_len()])?;
+//! let (completions, _stats) = pool.shutdown()?;
+//! # assert_eq!(completions.len(), 1);
 //! # Ok(())
 //! # }
 //! ```
@@ -36,8 +42,10 @@
 pub mod batch;
 pub mod engine;
 pub mod format;
+pub mod pool;
 pub mod reference;
 
 pub use batch::{BatchConfig, BatcherStats, Completion, RequestBatcher};
 pub use engine::{DecodeMode, Engine};
 pub use format::{PackedLayer, PackedModel, WidthStream};
+pub use pool::{default_workers, PoolCompletion, PoolConfig, WorkerPool};

@@ -1,0 +1,252 @@
+//! Multi-worker sharded serving: N threads over one shared engine.
+//!
+//! The serve path used to be single-threaded by construction — the engine
+//! took `&mut self`, so a packed model could drive at most one
+//! [`RequestBatcher`]. With the engine immutable ([`Engine::infer_batch`]
+//! takes `&self`, decoded weights live in per-layer `OnceLock` slots),
+//! serving scales out by plain sharding:
+//!
+//! ```text
+//!            submit() — round-robin by global id
+//!           /          |           \
+//!      shard 0      shard 1     shard N-1      (mpsc channel each)
+//!         |            |            |
+//!      worker 0     worker 1    worker N-1     (std thread each)
+//!      batcher      batcher      batcher       (size/deadline flushes)
+//!           \          |           /
+//!            one shared Arc<Engine>  — lock-free hot path
+//!           \          |           /
+//!            completions (mpsc, many-to-one)
+//! ```
+//!
+//! Each worker owns a private [`RequestBatcher`] over the shared engine,
+//! so the existing size/deadline flush triggers apply per shard and FIFO
+//! order is preserved *within* a shard (requests routed to different
+//! shards complete independently — that is the point). The front is
+//! clock-free: workers stamp `Instant::now()` on arrival, and a worker
+//! with pending requests sleeps on its channel only until the oldest
+//! request's deadline, so `max_delay` holds under idle fronts too.
+//!
+//! Everything is `std` — threads + `mpsc` channels, no new dependencies.
+//! [`WorkerPool::shutdown`] closes the front, drains every shard, joins
+//! the workers and returns the per-shard [`BatcherStats`] (their counter
+//! invariant holds shard-wise and therefore pool-wide).
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::batch::{BatchConfig, BatcherStats, Completion, RequestBatcher};
+use super::engine::Engine;
+
+/// Sizing/flush policy of a [`WorkerPool`].
+#[derive(Debug, Clone, Copy)]
+pub struct PoolConfig {
+    /// Worker threads == shards (>= 1).
+    pub workers: usize,
+    /// Per-shard batching policy (size/deadline flush triggers).
+    pub batch: BatchConfig,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self { workers: default_workers(), batch: BatchConfig::default() }
+    }
+}
+
+/// Default worker count: available cores, capped at 8 shards (beyond
+/// that, per-shard batches thin out faster than throughput grows for the
+/// model sizes this crate ships).
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1).min(8)
+}
+
+/// One finished request, as the pool reports it.
+#[derive(Debug, Clone)]
+pub struct PoolCompletion {
+    /// Global submission id (monotone from 0 across all shards; the value
+    /// [`WorkerPool::submit`] returned).
+    pub id: u64,
+    /// Shard that served the request (`id % workers` under round-robin).
+    pub shard: usize,
+    pub logits: Vec<f32>,
+    /// Argmax class of `logits`.
+    pub predicted: usize,
+    /// Time spent queued in the shard before its batch was flushed.
+    pub queue_delay: Duration,
+    /// Size of the engine invocation this request rode in.
+    pub batch_size: usize,
+    /// Instant the worker forwarded this completion — the end stamp for
+    /// per-request latency (a collector draining later must not charge its
+    /// own delay to the request).
+    pub completed_at: Instant,
+}
+
+struct Job {
+    id: u64,
+    x: Vec<f32>,
+}
+
+/// N worker threads sharing one engine, fed round-robin through per-shard
+/// batching queues.
+pub struct WorkerPool {
+    engine: Arc<Engine>,
+    shards: Vec<Sender<Job>>,
+    workers: Vec<JoinHandle<Result<BatcherStats>>>,
+    completions: Receiver<PoolCompletion>,
+    next_id: u64,
+}
+
+impl WorkerPool {
+    /// Spawn `cfg.workers` threads over `engine`. The engine's weight
+    /// cache is preloaded up front so workers never race-decode layers on
+    /// the first requests.
+    pub fn new(engine: Arc<Engine>, cfg: PoolConfig) -> Result<Self> {
+        if cfg.workers == 0 {
+            bail!("worker pool needs at least one worker");
+        }
+        if cfg.batch.max_batch == 0 {
+            bail!("max_batch must be >= 1");
+        }
+        engine.preload()?;
+        let (done_tx, completions) = mpsc::channel();
+        let mut shards = Vec::with_capacity(cfg.workers);
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for shard in 0..cfg.workers {
+            let (job_tx, job_rx) = mpsc::channel::<Job>();
+            let engine = Arc::clone(&engine);
+            let done = done_tx.clone();
+            let batch = cfg.batch;
+            let handle = std::thread::Builder::new()
+                .name(format!("cgmq-serve-{shard}"))
+                .spawn(move || worker_loop(shard, engine, batch, job_rx, done))
+                .with_context(|| format!("spawning serve worker {shard}"))?;
+            shards.push(job_tx);
+            workers.push(handle);
+        }
+        Ok(Self { engine, shards, workers, completions, next_id: 0 })
+    }
+
+    /// Convenience: load a `.cgmqm` file and serve it pooled.
+    pub fn load(path: &std::path::Path, cfg: PoolConfig) -> Result<Self> {
+        Self::new(Arc::new(Engine::load(path)?), cfg)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Route one request round-robin to its shard; returns the global id
+    /// its [`PoolCompletion`] will carry. Non-blocking (shard queues are
+    /// unbounded; apply backpressure by pacing on [`try_completions`]).
+    ///
+    /// [`try_completions`]: Self::try_completions
+    pub fn submit(&mut self, x: Vec<f32>) -> Result<u64> {
+        if x.len() != self.engine.input_len() {
+            bail!("request has {} values, model wants {}", x.len(), self.engine.input_len());
+        }
+        let id = self.next_id;
+        let shard = (id % self.shards.len() as u64) as usize;
+        self.shards[shard]
+            .send(Job { id, x })
+            .map_err(|_| anyhow!("serve worker {shard} has shut down"))?;
+        self.next_id += 1;
+        Ok(id)
+    }
+
+    /// Completions that have arrived so far (non-blocking).
+    pub fn try_completions(&mut self) -> Vec<PoolCompletion> {
+        self.completions.try_iter().collect()
+    }
+
+    /// Close the front, let every worker drain its shard, join them, and
+    /// return the still-uncollected completions plus per-shard stats
+    /// (indexed by shard). Every submitted request is accounted for:
+    /// summed `completed` equals the number of `submit` calls.
+    pub fn shutdown(self) -> Result<(Vec<PoolCompletion>, Vec<BatcherStats>)> {
+        drop(self.shards); // workers see Disconnected, drain, and exit
+        let mut stats = Vec::with_capacity(self.workers.len());
+        for (shard, handle) in self.workers.into_iter().enumerate() {
+            let s = handle
+                .join()
+                .map_err(|_| anyhow!("serve worker {shard} panicked"))?
+                .with_context(|| format!("serve worker {shard}"))?;
+            stats.push(s);
+        }
+        // All senders are gone; this drains every buffered completion.
+        let rest: Vec<PoolCompletion> = self.completions.try_iter().collect();
+        Ok((rest, stats))
+    }
+}
+
+/// One shard: receive jobs, batch them, forward completions. Sleeps on
+/// the channel — until the oldest pending request's deadline when the
+/// queue is non-empty, indefinitely when it is — so deadline flushes fire
+/// on time without spinning.
+fn worker_loop(
+    shard: usize,
+    engine: Arc<Engine>,
+    cfg: BatchConfig,
+    jobs: Receiver<Job>,
+    done: Sender<PoolCompletion>,
+) -> Result<BatcherStats> {
+    let mut batcher = RequestBatcher::new(engine, cfg)?;
+    // The batcher's ids are shard-local; submission order is FIFO on both
+    // sides, so the front's global ids map positionally.
+    let mut global_ids: VecDeque<u64> = VecDeque::new();
+    let forward = |comps: Vec<Completion>, ids: &mut VecDeque<u64>| -> Result<()> {
+        let completed_at = Instant::now();
+        for c in comps {
+            let id = ids.pop_front().expect("one pending global id per completion");
+            done.send(PoolCompletion {
+                id,
+                shard,
+                logits: c.logits,
+                predicted: c.predicted,
+                queue_delay: c.queue_delay,
+                batch_size: c.batch_size,
+                completed_at,
+            })
+            .map_err(|_| anyhow!("completion receiver dropped"))?;
+        }
+        Ok(())
+    };
+    loop {
+        let job = match batcher.oldest_enqueued() {
+            // Idle shard: block until work arrives or the front closes.
+            None => match jobs.recv() {
+                Ok(j) => Some(j),
+                Err(_) => break,
+            },
+            // Pending requests: sleep only until the oldest one's deadline.
+            Some(oldest) => {
+                let deadline = oldest + cfg.max_delay;
+                match jobs.recv_timeout(deadline.saturating_duration_since(Instant::now())) {
+                    Ok(j) => Some(j),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+        };
+        if let Some(job) = job {
+            global_ids.push_back(job.id);
+            let comps = batcher.submit_at(job.x, Instant::now())?;
+            forward(comps, &mut global_ids)?;
+        }
+        let comps = batcher.poll_at(Instant::now())?;
+        forward(comps, &mut global_ids)?;
+    }
+    // Front closed: drain whatever is still queued, then report.
+    let comps = batcher.flush_at(Instant::now())?;
+    forward(comps, &mut global_ids)?;
+    debug_assert!(global_ids.is_empty(), "shard {shard} dropped requests");
+    Ok(batcher.stats())
+}

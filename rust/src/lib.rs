@@ -49,8 +49,9 @@
 //! artifact ([`deploy::PackedModel`]) and runs it with
 //! [`deploy::Engine`], whose logits match the fake-quant eval path
 //! bit-for-bit; [`deploy::RequestBatcher`] batches single-sample `infer`
-//! requests for serving (`cgmq export --format packed`, `cgmq infer`,
-//! `cgmq serve-bench`).
+//! requests, and [`deploy::WorkerPool`] serves one shared `Arc<Engine>`
+//! from N sharded worker threads (`cgmq export --format packed`,
+//! `cgmq infer`, `cgmq serve-bench --workers N`).
 //!
 //! ### Migrating from `Trainer`
 //!

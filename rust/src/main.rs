@@ -47,21 +47,26 @@ COMMANDS
              [--save <ckpt>] [--from-pretrained <ckpt>]
   pretrain   same config flags; --save <ckpt> (default runs/pretrained.ckpt)
   eval       --ckpt <snapshot> [--config <toml>]
-  export     --ckpt <snapshot> [--config <toml>] [--format json|packed]
-             [--out <path>]   (json: memory report incl. packed sizes;
-             packed: bit-packed .cgmqm artifact for `infer`/`serve-bench`)
+  export     (--ckpt <snapshot> | --synth) [--config <toml>]
+             [--format json|packed] [--out <path>]   (json: memory report
+             incl. packed sizes; packed: bit-packed .cgmqm artifact for
+             `infer`/`serve-bench`; --synth packs a deterministic
+             synthetic mixed-precision state — no checkpoint/artifacts
+             needed, the CI serve-smoke path)
   infer      --model <m.cgmqm> (--input <idx-images> | --synth <n>)
              [--index <i>] [--labels <idx-labels>] [--batch <b>]
              [--mode unpack|streaming] [--seed <s>]
   serve-bench --model <m.cgmqm> [--requests <n>] [--batch <b>]
-             [--deadline-us <d>] [--seed <s>]   (prints JSON: single vs
-             batched throughput + latency percentiles)
+             [--deadline-us <d>] [--workers <n>] [--seed <s>]
+             (prints JSON: single vs batched vs pooled 1-vs-N-worker
+             throughput + latency percentiles)
   fixed-qat  --bits <b> + config flags (uniform-bit QAT baseline)
   myqasr     config flags (heuristic baseline; layer granularity)
   table1     --config <toml>   (method comparison @ bound 0.40%)
   table2     --config <toml>   (bound sweep, layer gates)
   table3     --config <toml>   (bound sweep, individual gates)
-  table-deploy [--requests <n>] [--batch <b>]  (deploy engine bench rows)
+  table-deploy [--requests <n>] [--batch <b>] [--workers <n>]
+             (deploy engine bench rows incl. the 1-vs-N-worker pool)
   a2         --config <toml> [--lambdas 0.001,0.01,...]
   info       [--config <toml>]
 
@@ -246,10 +251,42 @@ fn cmd_eval(args: &Args) -> Result<()> {
 fn cmd_export(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let ckpt = args.get("ckpt").map(str::to_string);
-    let format = args.get("format").unwrap_or("json").to_string();
+    let synth = args.get_bool("synth");
+    let format = args.get("format").unwrap_or(if synth { "packed" } else { "json" }).to_string();
     let out = args.get("out").map(str::to_string);
     args.finish()?;
-    let Some(ckpt) = ckpt else { bail!("export needs --ckpt <snapshot>") };
+    if synth {
+        // No checkpoint (and no compiled artifacts) needed: pack the
+        // deterministic synthetic mixed-precision state the deploy bench
+        // rows use. Exercises the identical pack → save → load → serve
+        // path, so CI can smoke the serving stack without a pjrt build.
+        if ckpt.is_some() {
+            bail!("--ckpt and --synth are mutually exclusive");
+        }
+        if format != "packed" {
+            bail!("export --synth only supports --format packed");
+        }
+        let out = out.unwrap_or_else(|| "synth.cgmqm".into());
+        let arch = cgmq::model::arch_by_name(&cfg.arch)?;
+        let s =
+            bench_harness::synthetic_deploy_state(&arch, &bench_harness::DEPLOY_LEVELS, cfg.seed);
+        let model = cgmq::deploy::PackedModel::from_state(
+            &arch,
+            &s.params,
+            &s.betas_w,
+            &s.betas_a,
+            &s.gates,
+        )?;
+        let bytes = model.save(Path::new(&out))?;
+        println!(
+            "wrote synthetic packed model to {out} ({} bytes, {} weight payload bytes, arch {})",
+            bytes,
+            model.total_payload_bytes(),
+            arch.name
+        );
+        return Ok(());
+    }
+    let Some(ckpt) = ckpt else { bail!("export needs --ckpt <snapshot> (or --synth)") };
     match format.as_str() {
         "json" => {
             let out = out.unwrap_or_else(|| "export.json".into());
@@ -321,7 +358,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
     let batch = args.get_usize("batch")?.unwrap_or(64).max(1);
     let (images, labels, n, sample_len) = infer_inputs(args)?;
     args.finish()?;
-    let mut engine = Engine::load(Path::new(&model_path))?.with_mode(mode);
+    let engine = Engine::load(Path::new(&model_path))?.with_mode(mode);
     if sample_len != engine.input_len() {
         bail!("inputs have {} values/sample, model wants {}", sample_len, engine.input_len());
     }
@@ -380,6 +417,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     let requests = args.get_usize("requests")?.unwrap_or(256).max(1);
     let batch = args.get_usize("batch")?.unwrap_or(32).max(1);
     let deadline_us = args.get_usize("deadline-us")?.unwrap_or(200) as u64;
+    let workers = args.get_usize("workers")?.unwrap_or_else(cgmq::deploy::default_workers).max(1);
     let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
     args.finish()?;
     let report = cgmq::bench_harness::serve_bench(
@@ -387,6 +425,7 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         requests,
         batch,
         std::time::Duration::from_micros(deadline_us),
+        workers,
         seed,
     )?;
     println!("{report}");
@@ -397,8 +436,9 @@ fn cmd_table_deploy(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let requests = args.get_usize("requests")?.unwrap_or(64).max(1);
     let batch = args.get_usize("batch")?.unwrap_or(16).max(1);
+    let workers = args.get_usize("workers")?.unwrap_or_else(cgmq::deploy::default_workers).max(1);
     args.finish()?;
-    let out = bench_harness::deploy_table(&cfg, requests, batch)?;
+    let out = bench_harness::deploy_table(&cfg, requests, batch, workers)?;
     println!("{out}");
     Ok(())
 }

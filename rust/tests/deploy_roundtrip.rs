@@ -164,7 +164,7 @@ fn golden_for(arch: ArchSpec, n: usize) {
             fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &xs, n).unwrap();
         let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
         for mode in [DecodeMode::Streaming, DecodeMode::UnpackOnce] {
-            let mut engine = Engine::new(model.clone()).unwrap().with_mode(mode);
+            let engine = Engine::new(model.clone()).unwrap().with_mode(mode);
             let logits = engine.infer_batch(&xs, n).unwrap();
             assert_eq!(logits.len(), reference.len());
             for (i, (&a, &b)) in logits.iter().zip(&reference).enumerate() {
@@ -178,7 +178,7 @@ fn golden_for(arch: ArchSpec, n: usize) {
                 );
             }
             // Single-sample calls must agree with the batched call.
-            let mut single = Engine::new(model.clone()).unwrap().with_mode(mode);
+            let single = Engine::new(model.clone()).unwrap().with_mode(mode);
             for s in 0..n {
                 let one = single.infer(&xs[s * in_len..(s + 1) * in_len]).unwrap();
                 for (j, &v) in one.iter().enumerate() {
@@ -254,6 +254,36 @@ fn arch_drift_fails_fast() {
     model.save(&path).unwrap();
     let err = format!("{:#}", PackedModel::load(&path).unwrap_err());
     assert!(err.contains("w_shape"), "{err}");
+}
+
+#[test]
+fn non_divisible_maxpool_geometry_rejected() {
+    // lenet5 conv1 yields a 24x24 activation map; a pool window of 5 does
+    // not divide it. The engine's `maxpool` floor-divides, so without the
+    // verify() geometry walk this would *silently drop* the edge rows and
+    // columns instead of erroring.
+    let arch = lenet5();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Layer, 6);
+    let mut model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    assert!(model.verify().is_ok());
+    model.layers[0].pool = 5;
+    let err = format!("{:#}", model.verify().unwrap_err());
+    assert!(
+        err.contains("not divisible by max-pool window") && err.contains("24x24"),
+        "{err}"
+    );
+    // The engine refuses to wrap it, and a saved file refuses to load.
+    let err = format!("{:#}", Engine::new(model.clone()).unwrap_err());
+    assert!(err.contains("max-pool window"), "{err}");
+    let path = tmp("bad_pool.cgmqm");
+    model.save(&path).unwrap(); // save recomputes the checksum
+    assert!(PackedModel::load(&path).is_err());
+
+    // Pooling a dense (non-spatial) output is geometry nonsense too.
+    let mut model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    model.layers[2].pool = 2; // fc1
+    let err = format!("{:#}", model.verify().unwrap_err());
+    assert!(err.contains("non-spatial"), "{err}");
 }
 
 #[test]
@@ -346,7 +376,10 @@ fn batcher_flushes_on_size() {
     assert_eq!(stats.flushes, 1);
     assert_eq!(stats.size_flushes, 1);
     assert_eq!(stats.deadline_flushes, 0);
+    assert_eq!(stats.drain_flushes, 0);
+    assert_eq!(stats.engine_calls, 1);
     assert_eq!(stats.completed, 4);
+    assert!(stats.consistent(), "{stats:?}");
 }
 
 #[test]
@@ -368,11 +401,61 @@ fn batcher_flushes_on_deadline() {
     assert!(done[0].queue_delay >= Duration::from_millis(5));
     let stats = b.stats();
     assert_eq!(stats.deadline_flushes, 1);
+    assert_eq!(stats.flushes, 1);
+    assert!(stats.consistent(), "{stats:?}");
+}
+
+#[test]
+fn batcher_stats_hold_flush_invariant_across_triggers() {
+    // Exercise all three flush kinds and pin the invariant
+    // `flushes == size_flushes + deadline_flushes + drain_flushes`,
+    // with `engine_calls` counted separately (the drift the old counters
+    // had: `flushes` bumped per engine call, triggers per event).
+    let engine = small_engine();
+    let in_len = engine.input_len();
+    let cfg = BatchConfig { max_batch: 4, max_delay: Duration::from_millis(5) };
+    let mut b = RequestBatcher::new(engine, cfg).unwrap();
+    let t0 = Instant::now();
+    let x = vec![0.1f32; in_len];
+
+    // 8 submits -> two size flushes (at the 4th and 8th).
+    let mut completed = 0;
+    for i in 0..8 {
+        completed += b.submit_at(x.clone(), t0).unwrap().len();
+        assert!(b.pending() < 4, "i={i}");
+    }
+    assert_eq!(completed, 8);
+
+    // 2 pending + an expired deadline -> one deadline flush.
+    b.submit_at(x.clone(), t0).unwrap();
+    b.submit_at(x.clone(), t0).unwrap();
+    completed += b.poll_at(t0 + Duration::from_millis(5)).unwrap().len();
+    assert_eq!(completed, 10);
+
+    // 3 pending + an explicit drain -> one drain flush...
+    for _ in 0..3 {
+        b.submit_at(x.clone(), t0).unwrap();
+    }
+    completed += b.flush_at(t0).unwrap().len();
+    assert_eq!(completed, 13);
+    // ...and an empty drain is a no-op, not a flush event.
+    assert!(b.flush_at(t0).unwrap().is_empty());
+
+    let stats = b.stats();
+    assert_eq!(stats.submitted, 13);
+    assert_eq!(stats.completed, 13);
+    assert_eq!(stats.size_flushes, 2);
+    assert_eq!(stats.deadline_flushes, 1);
+    assert_eq!(stats.drain_flushes, 1);
+    assert_eq!(stats.flushes, 4, "one flush event per trigger");
+    assert_eq!(stats.engine_calls, 4);
+    assert!(stats.consistent(), "{stats:?}");
+    assert!((stats.mean_batch() - 13.0 / 4.0).abs() < 1e-12);
 }
 
 #[test]
 fn batcher_matches_direct_engine_and_validates_input() {
-    let mut direct = small_engine();
+    let direct = small_engine();
     let in_len = direct.input_len();
     let data = cgmq::data::Dataset::synth(8, 6);
     assert_eq!(data.sample_len, in_len);

@@ -1,0 +1,181 @@
+//! Concurrent-serving tests: one shared `Engine` across threads must be
+//! bit-identical to the single-threaded path (no loom needed — the only
+//! shared mutable state is the `OnceLock` weight cache, and these tests
+//! hammer it cold), and the sharded `WorkerPool` must complete every
+//! submitted request exactly once, in submission order per shard.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cgmq::bench_harness::{synthetic_deploy_state, DEPLOY_LEVELS};
+use cgmq::deploy::{BatchConfig, Engine, PackedModel, PoolConfig, WorkerPool};
+use cgmq::model::{lenet5, mlp, ArchSpec};
+
+fn packed(arch: &ArchSpec, seed: u64) -> PackedModel {
+    let s = synthetic_deploy_state(arch, &DEPLOY_LEVELS, seed);
+    PackedModel::from_state(arch, &s.params, &s.betas_w, &s.betas_a, &s.gates).unwrap()
+}
+
+// ---------------------------------------------------------------------------
+// Shared-engine determinism
+// ---------------------------------------------------------------------------
+
+#[test]
+fn shared_engine_is_bit_identical_across_threads() {
+    for arch in [mlp(), lenet5()] {
+        let n = if arch.name == "mlp" { 16 } else { 4 };
+        let model = packed(&arch, 7);
+        let in_len = arch.input_len();
+        let data = cgmq::data::Dataset::synth(13, n);
+        assert_eq!(data.sample_len, in_len);
+
+        // Single-threaded reference on a private engine.
+        let reference = Engine::new(model.clone()).unwrap().infer_batch(&data.images, n).unwrap();
+
+        // One *cold* shared engine (no preload — the threads race to fill
+        // the OnceLock weight cache), hit concurrently from 4 threads,
+        // each mixing whole-set and per-sample calls.
+        let shared = Arc::new(Engine::new(model).unwrap());
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let shared = &shared;
+                let reference = &reference;
+                let images = &data.images;
+                s.spawn(move || {
+                    let all = shared.infer_batch(images, n).unwrap();
+                    for (i, (&a, &b)) in all.iter().zip(reference).enumerate() {
+                        assert_eq!(a.to_bits(), b.to_bits(), "thread {t} batched logit {i}");
+                    }
+                    let c = shared.num_classes();
+                    for sample in (t % 4..n).step_by(4) {
+                        let one =
+                            shared.infer(&images[sample * in_len..(sample + 1) * in_len]).unwrap();
+                        for (j, &v) in one.iter().enumerate() {
+                            assert_eq!(
+                                v.to_bits(),
+                                reference[sample * c + j].to_bits(),
+                                "thread {t} sample {sample} logit {j}"
+                            );
+                        }
+                    }
+                });
+            }
+        });
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Worker pool
+// ---------------------------------------------------------------------------
+
+#[test]
+fn pool_completes_every_request_exactly_once_in_shard_order() {
+    let arch = mlp();
+    let model = packed(&arch, 7);
+    let in_len = arch.input_len();
+    let workers = 3;
+    let requests = 50;
+    let data = cgmq::data::Dataset::synth(29, requests);
+    let reference =
+        Engine::new(model.clone()).unwrap().infer_batch(&data.images, requests).unwrap();
+    let c = reference.len() / requests;
+
+    let mut pool = WorkerPool::new(
+        Arc::new(Engine::new(model).unwrap()),
+        PoolConfig {
+            workers,
+            batch: BatchConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
+        },
+    )
+    .unwrap();
+    assert_eq!(pool.workers(), workers);
+    let mut completions = Vec::new();
+    for i in 0..requests {
+        let id = pool.submit(data.images[i * in_len..(i + 1) * in_len].to_vec()).unwrap();
+        assert_eq!(id, i as u64, "global ids are monotone from 0");
+        completions.extend(pool.try_completions());
+    }
+    let (rest, shard_stats) = pool.shutdown().unwrap();
+    completions.extend(rest);
+
+    // Exactly once: every id appears once, with the round-robin shard.
+    assert_eq!(completions.len(), requests);
+    let mut seen = vec![false; requests];
+    for comp in &completions {
+        let id = comp.id as usize;
+        assert!(!seen[id], "request {id} completed twice");
+        seen[id] = true;
+        assert_eq!(comp.shard, id % workers, "round-robin routing");
+        // Pool logits are the single-threaded engine's bits.
+        for (j, &v) in comp.logits.iter().enumerate() {
+            assert_eq!(v.to_bits(), reference[id * c + j].to_bits(), "req {id} logit {j}");
+        }
+    }
+    assert!(seen.iter().all(|&s| s), "every request completed");
+
+    // Submission order per shard: within one shard, ids strictly increase.
+    let mut last: Vec<Option<u64>> = vec![None; workers];
+    for comp in &completions {
+        if let Some(prev) = last[comp.shard] {
+            assert!(prev < comp.id, "shard {} completed {} after {}", comp.shard, comp.id, prev);
+        }
+        last[comp.shard] = Some(comp.id);
+    }
+
+    // Per-shard stats: the flush-counter invariant holds, and the shards
+    // together account for every request exactly once.
+    assert_eq!(shard_stats.len(), workers);
+    for (shard, s) in shard_stats.iter().enumerate() {
+        assert!(s.consistent(), "shard {shard}: {s:?}");
+    }
+    assert_eq!(shard_stats.iter().map(|s| s.submitted).sum::<u64>(), requests as u64);
+    assert_eq!(shard_stats.iter().map(|s| s.completed).sum::<u64>(), requests as u64);
+}
+
+#[test]
+fn pool_deadline_flush_completes_without_shutdown() {
+    // Fewer requests than max_batch: only the deadline (fired inside the
+    // worker's channel sleep) can complete them — no drain involved.
+    let arch = mlp();
+    let model = packed(&arch, 7);
+    let in_len = arch.input_len();
+    let mut pool = WorkerPool::new(
+        Arc::new(Engine::new(model).unwrap()),
+        PoolConfig {
+            workers: 2,
+            batch: BatchConfig { max_batch: 1000, max_delay: Duration::from_millis(2) },
+        },
+    )
+    .unwrap();
+    for i in 0..3 {
+        pool.submit(vec![0.25 * (i as f32); in_len]).unwrap();
+    }
+    let deadline = Instant::now() + Duration::from_secs(10);
+    let mut got = Vec::new();
+    while got.len() < 3 && Instant::now() < deadline {
+        got.extend(pool.try_completions());
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    assert_eq!(got.len(), 3, "deadline flush must complete pending requests");
+    let (rest, shard_stats) = pool.shutdown().unwrap();
+    assert!(rest.is_empty());
+    assert!(shard_stats.iter().map(|s| s.deadline_flushes).sum::<u64>() > 0);
+    assert_eq!(shard_stats.iter().map(|s| s.drain_flushes).sum::<u64>(), 0);
+}
+
+#[test]
+fn pool_validates_input_and_worker_count() {
+    let arch = mlp();
+    let model = packed(&arch, 7);
+    let engine = Arc::new(Engine::new(model).unwrap());
+    assert!(WorkerPool::new(
+        Arc::clone(&engine),
+        PoolConfig { workers: 0, batch: BatchConfig::default() }
+    )
+    .is_err());
+    let mut pool =
+        WorkerPool::new(engine, PoolConfig { workers: 1, batch: BatchConfig::default() }).unwrap();
+    assert!(pool.submit(vec![0.0; 3]).is_err(), "wrong-length input rejected at the front");
+    let (rest, _) = pool.shutdown().unwrap();
+    assert!(rest.is_empty());
+}
