@@ -3,9 +3,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt fmt-fix clippy bench-smoke serve-smoke artifacts bench clean
+.PHONY: ci build test fmt fmt-fix clippy bench-smoke serve-smoke route-smoke artifacts bench clean
 
-ci: build test fmt clippy bench-smoke serve-smoke
+ci: build test fmt clippy bench-smoke serve-smoke route-smoke
 
 build:
 	$(CARGO) build --release
@@ -35,6 +35,18 @@ serve-smoke: build
 	./target/release/cgmq infer --model runs/serve-smoke.cgmqm --synth 8
 	./target/release/cgmq serve-bench --model runs/serve-smoke.cgmqm \
 		--requests 96 --batch 16 --workers 4
+
+# Multi-model routing smoke: export two synthetic budget variants, then
+# drive the router bench with a tiny per-shard queue cap so the shed
+# (429) path actually executes, plus a mid-traffic hot swap of every
+# model (--swap). The bench itself asserts the per-model accounting
+# invariant (submitted == accepted + shed, nothing lost).
+route-smoke: build
+	mkdir -p runs
+	./target/release/cgmq export --synth --arch mlp --seed 7 --out runs/route-a.cgmqm
+	./target/release/cgmq export --synth --arch mlp --seed 8 --out runs/route-b.cgmqm
+	./target/release/cgmq route-bench --models a=runs/route-a.cgmqm,b=runs/route-b.cgmqm \
+		--requests 96 --batch 8 --workers 2 --queue-cap 2 --swap
 
 fmt-fix:
 	$(CARGO) fmt

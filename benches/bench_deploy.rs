@@ -14,10 +14,11 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use cgmq::bench_harness::{
-    pool_bench_engine, synthetic_deploy_state, SyntheticDeployState, DEPLOY_LEVELS,
+    pool_bench_engine, router_bench, synthetic_deploy_state, RouterBenchSpec,
+    SyntheticDeployState, DEPLOY_LEVELS,
 };
 use cgmq::deploy::reference::fake_quant_logits;
-use cgmq::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
+use cgmq::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, PoolConfig, RequestBatcher};
 use cgmq::model::{lenet5, mlp};
 
 fn bench(name: &str, iters: usize, mut f: impl FnMut()) {
@@ -118,6 +119,42 @@ fn main() {
     let pool1 = rps_of(1);
     let pool4 = rps_of(4);
     println!("deploy: pool speedup 4 vs 1 workers          {:>10.2}x", pool4 / pool1);
+
+    // --- the multi-model router: two variants behind one front, bounded
+    // queues (tiny cap so the shed path executes), hot swap mid-traffic ---
+    let s_b = synthetic_deploy_state(&arch, &DEPLOY_LEVELS, 8);
+    let model_b =
+        PackedModel::from_state(&arch, &s_b.params, &s_b.betas_w, &s_b.betas_a, &s_b.gates)
+            .unwrap();
+    let specs = vec![
+        RouterBenchSpec {
+            key: "mlp-a".into(),
+            engine: Arc::new(Engine::new(model.clone()).unwrap()),
+            // Hot-swap "mlp-a" to a fresh engine at the halfway mark:
+            // exercises spawn-new -> swap -> drain-old under load.
+            swap_to: Some(Arc::new(Engine::new(model.clone()).unwrap())),
+        },
+        RouterBenchSpec {
+            key: "mlp-b".into(),
+            engine: Arc::new(Engine::new(model_b).unwrap()),
+            swap_to: None,
+        },
+    ];
+    let route = router_bench(
+        &specs,
+        pool_requests,
+        PoolConfig { workers: 2, batch: bcfg, queue_cap: 4 },
+        11,
+    )
+    .unwrap();
+    println!(
+        "deploy: Router {pool_requests} reqs, 2 models, cap=4  {:>10.1} req/s \
+         (shed {} of {}, {} swaps)",
+        route.get("throughput_rps").unwrap().as_f64().unwrap(),
+        route.get("shed").unwrap().as_f64().unwrap(),
+        route.get("submitted").unwrap().as_f64().unwrap(),
+        route.get("swaps").unwrap().as_f64().unwrap(),
+    );
 
     // --- smoke-mode correctness anchor: engine == fake-quant reference ---
     let engine_logits = cached.infer_batch(&data.images, 64).unwrap();

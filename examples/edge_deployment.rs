@@ -1,6 +1,7 @@
 //! Edge-deployment walkthrough: train under a device budget, export the
 //! packed `.cgmqm` artifact, and *run* it — the full train → export-packed
-//! → infer → serve loop, ending with the sharded multi-worker pool.
+//! → infer → serve loop, ending with the sharded multi-worker pool and a
+//! two-tier model router that hot-swaps a variant mid-traffic.
 //!
 //!     cargo run --release --example edge_deployment
 //!
@@ -20,8 +21,11 @@ use std::time::{Duration, Instant};
 
 use cgmq::config::Config;
 use cgmq::deploy::{
-    BatchConfig, DecodeMode, Engine, PackedModel, PoolConfig, RequestBatcher, WorkerPool,
+    BatchConfig, DecodeMode, Engine, PackedModel, PoolConfig, RequestBatcher, Router, Submission,
+    WorkerPool,
 };
+use cgmq::gates::{GateSet, Granularity};
+use cgmq::quant::gate_for_bits;
 use cgmq::session::{BestSnapshotSaver, SessionBuilder};
 
 fn main() -> anyhow::Result<()> {
@@ -159,6 +163,7 @@ fn main() -> anyhow::Result<()> {
         PoolConfig {
             workers,
             batch: BatchConfig { max_batch: 32, max_delay: Duration::from_micros(200) },
+            queue_cap: 0,
         },
     )?;
     let t0 = Instant::now();
@@ -180,6 +185,85 @@ fn main() -> anyhow::Result<()> {
         pooled_rps / single_rps,
         shard_stats.iter().map(|s| s.flushes).sum::<u64>()
     );
+
+    // ---- 6. Route: two budget variants behind one front, swapped live --
+    // CGMQ's deliverable is a *family* of models, one per compute budget.
+    // Stand a second, looser tier next to the trained one — the same
+    // delivered weights at uniform 8 bits (a real deployment would pin
+    // each tier with its own CGMQ run; reusing the weights keeps this
+    // example to one training run) — and serve both behind one router
+    // with bounded shard queues.
+    let mut gates8 = GateSet::new(arch, Granularity::Layer);
+    for t in gates8.gates_w.iter_mut().chain(gates8.gates_a.iter_mut()) {
+        t.data_mut()[0] = gate_for_bits(8);
+    }
+    let loose =
+        PackedModel::from_state(arch, &model.params, &model.betas_w, &model.betas_a, &gates8)?;
+    let loose_ref = cgmq::deploy::reference::fake_quant_logits(
+        arch,
+        &model.params,
+        &model.betas_w,
+        &model.betas_a,
+        &gates8,
+        xs,
+        n,
+    )?;
+    let c = shared.num_classes();
+
+    let mut router = Router::new(PoolConfig {
+        workers: 2,
+        batch: BatchConfig { max_batch: 32, max_delay: Duration::from_micros(200) },
+        // Bound each shard's in-flight depth: overload is *shed* (a
+        // network front would answer 429), never queued without limit.
+        queue_cap: 128,
+    });
+    router.add_model("tight", Arc::clone(&shared))?;
+    router.add_model("loose", Arc::new(Engine::new(loose)?))?;
+
+    // Alternate the tiers; halfway through, roll "loose" forward to the
+    // tight engine — a zero-downtime hot swap (replacement pool spawned
+    // and preloaded first, old pool drained, nothing dropped).
+    let mut routed: std::collections::BTreeMap<&str, Vec<usize>> =
+        [("tight", Vec::new()), ("loose", Vec::new())].into();
+    let mut pre_swap_accepted = 0;
+    for i in 0..n {
+        if i == n / 2 {
+            pre_swap_accepted = router.stats("loose")?.accepted;
+            router.swap_model("loose", Arc::clone(&shared))?;
+        }
+        let key = if i % 2 == 0 { "tight" } else { "loose" };
+        match router.try_submit(key, xs[i * in_len..(i + 1) * in_len].to_vec())? {
+            Submission::Accepted { .. } => routed.get_mut(key).unwrap().push(i),
+            Submission::Shed { .. } => {} // admission refused; try the other tier or back off
+        }
+    }
+    let reports = router.shutdown()?;
+    for (key, report) in &reports {
+        let stats = report.stats;
+        assert!(stats.consistent(), "{key}: {stats:?}");
+        assert_eq!(
+            stats.completed, stats.accepted,
+            "{key}: every accepted request completes, even across the swap"
+        );
+        // Per-model bit-identity: each completion matches the reference
+        // forward of the engine *version* that served it.
+        for comp in &report.completions {
+            let sample = routed[key.as_str()][comp.id as usize];
+            let served_by_loose = key == "loose" && comp.id < pre_swap_accepted;
+            let expect = if served_by_loose { &loose_ref } else { &packed_logits };
+            let row = &expect[sample * c..(sample + 1) * c];
+            assert!(
+                comp.logits.iter().zip(row).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{key} request {} drifted from its engine's reference",
+                comp.id
+            );
+        }
+        println!(
+            "router '{key}': {} accepted, {} shed, {} swap(s) — bit-exact per engine version",
+            stats.accepted, stats.shed, stats.swaps
+        );
+    }
+
     println!("\nwrote {}/deploy.json, deploy.ckpt and deploy.cgmqm", out_dir);
     Ok(())
 }

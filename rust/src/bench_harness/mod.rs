@@ -372,7 +372,8 @@ pub fn pool_bench_engine(
     if ds.sample_len != in_len {
         anyhow::bail!("synth samples have {} values, model wants {in_len}", ds.sample_len);
     }
-    let mut pool = WorkerPool::new(std::sync::Arc::clone(engine), PoolConfig { workers, batch })?;
+    let pool_cfg = PoolConfig { workers, batch, queue_cap: 0 };
+    let mut pool = WorkerPool::new(std::sync::Arc::clone(engine), pool_cfg)?;
     let t0 = Instant::now();
     let mut submitted_at: Vec<Instant> = Vec::with_capacity(requests);
     let mut lat = vec![0.0f64; requests];
@@ -418,6 +419,203 @@ pub fn pool_bench_engine(
         ("engine_calls", Json::num(stats.engine_calls as f64)),
         ("mean_batch", Json::num(stats.mean_batch())),
     ]))
+}
+
+/// One model behind the router in a [`router_bench`] run.
+pub struct RouterBenchSpec {
+    /// Model key requests are routed by.
+    pub key: String,
+    /// Engine serving the key at the start of the run.
+    pub engine: std::sync::Arc<crate::deploy::Engine>,
+    /// Engine to hot-swap behind the key at the halfway mark (exercises
+    /// load-new → swap → drain-old mid-traffic); `None` = no swap.
+    pub swap_to: Option<std::sync::Arc<crate::deploy::Engine>>,
+}
+
+/// Drive `requests` synthetic requests round-robin across the models of a
+/// [`Router`](crate::deploy::Router) built from `specs` (all pools use
+/// `pool`, including its `queue_cap` admission bound), hot-swapping any
+/// model with a `swap_to` engine at the halfway mark. Returns aggregate
+/// and per-model throughput, shed counts/rates, swap counts and latency
+/// percentiles as JSON, and bails if any per-model accounting invariant
+/// (`submitted == accepted + shed`, `completed == accepted` after drain)
+/// is violated.
+pub fn router_bench(
+    specs: &[RouterBenchSpec],
+    requests: usize,
+    pool: crate::deploy::PoolConfig,
+    seed: u64,
+) -> Result<Json> {
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+    use std::time::Instant;
+
+    use crate::deploy::{Router, Submission};
+    if specs.is_empty() {
+        anyhow::bail!("router bench needs at least one model");
+    }
+    if requests == 0 {
+        anyhow::bail!("router bench needs at least one request");
+    }
+    let in_len = specs[0].engine.input_len();
+    for s in &specs[1..] {
+        if s.engine.input_len() != in_len {
+            anyhow::bail!(
+                "model '{}' wants {} input values, '{}' wants {} — one synthetic \
+                 request stream cannot drive both",
+                s.key,
+                s.engine.input_len(),
+                specs[0].key,
+                in_len
+            );
+        }
+    }
+    let ds = crate::data::Dataset::synth(seed, requests);
+    if ds.sample_len != in_len {
+        anyhow::bail!("synth samples have {} values, models want {in_len}", ds.sample_len);
+    }
+
+    let mut router = Router::new(pool);
+    for s in specs {
+        router.add_model(s.key.clone(), Arc::clone(&s.engine))?;
+    }
+    // Per key: submit stamp per accepted id (ids are contiguous from 0 in
+    // acceptance order, across swaps too) and the matching latency slot.
+    fn record(
+        key: &str,
+        comps: Vec<crate::deploy::PoolCompletion>,
+        stamps: &[std::time::Instant],
+        slots: &mut [Option<f64>],
+    ) -> Result<()> {
+        for c in comps {
+            let id = c.id as usize;
+            if id >= stamps.len() || slots[id].is_some() {
+                anyhow::bail!("model '{key}': unknown or duplicate completion id {id}");
+            }
+            slots[id] = Some(c.completed_at.duration_since(stamps[id]).as_secs_f64());
+        }
+        Ok(())
+    }
+    let mut submit_at: BTreeMap<&str, Vec<Instant>> =
+        specs.iter().map(|s| (s.key.as_str(), Vec::new())).collect();
+    let mut lat: BTreeMap<&str, Vec<Option<f64>>> =
+        specs.iter().map(|s| (s.key.as_str(), Vec::new())).collect();
+
+    let swap_at = requests / 2;
+    let mut swapped = false;
+    let t0 = Instant::now();
+    for i in 0..requests {
+        if !swapped && i >= swap_at {
+            swapped = true;
+            for s in specs {
+                if let Some(to) = &s.swap_to {
+                    router.swap_model(&s.key, Arc::clone(to))?;
+                }
+            }
+        }
+        let key = specs[i % specs.len()].key.as_str();
+        let now = Instant::now();
+        let x = ds.images[i * in_len..(i + 1) * in_len].to_vec();
+        if let Submission::Accepted { .. } = router.try_submit(key, x)? {
+            submit_at.get_mut(key).expect("known key").push(now);
+            lat.get_mut(key).expect("known key").push(None);
+        }
+        let comps = router.try_completions(key)?;
+        record(key, comps, &submit_at[key], lat.get_mut(key).expect("known key"))?;
+    }
+    let reports = router.shutdown()?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut models = BTreeMap::new();
+    let mut total = crate::deploy::RouteStats::default();
+    for (key, report) in reports {
+        let s = report.stats;
+        record(
+            &key,
+            report.completions,
+            &submit_at[key.as_str()],
+            lat.get_mut(key.as_str()).expect("known key"),
+        )?;
+        if !s.consistent() {
+            anyhow::bail!("model '{key}' stats violate the routing invariant: {s:?}");
+        }
+        if s.completed != s.accepted {
+            anyhow::bail!(
+                "model '{key}' lost requests: accepted {} but completed {}",
+                s.accepted,
+                s.completed
+            );
+        }
+        let mut durs: Vec<f64> = lat[key.as_str()]
+            .iter()
+            .map(|d| (*d).context("accepted request never completed"))
+            .collect::<Result<_>>()?;
+        let (p50, p90, p99) =
+            if durs.is_empty() { (0.0, 0.0, 0.0) } else { percentiles_ms(&mut durs) };
+        total.submitted += s.submitted;
+        total.accepted += s.accepted;
+        total.completed += s.completed;
+        total.shed += s.shed;
+        total.swaps += s.swaps;
+        models.insert(
+            key,
+            Json::obj(vec![
+                ("submitted", Json::num(s.submitted as f64)),
+                ("accepted", Json::num(s.accepted as f64)),
+                ("completed", Json::num(s.completed as f64)),
+                ("shed", Json::num(s.shed as f64)),
+                ("shed_rate", Json::num(s.shed_rate())),
+                ("swaps", Json::num(s.swaps as f64)),
+                ("p50_ms", Json::num(p50)),
+                ("p90_ms", Json::num(p90)),
+                ("p99_ms", Json::num(p99)),
+                ("flushes", Json::num(s.batch.flushes as f64)),
+                ("engine_calls", Json::num(s.batch.engine_calls as f64)),
+                ("mean_batch", Json::num(s.batch.mean_batch())),
+            ]),
+        );
+    }
+    Ok(Json::obj(vec![
+        ("requests", Json::num(requests as f64)),
+        ("workers", Json::num(pool.workers as f64)),
+        ("queue_cap", Json::num(pool.queue_cap as f64)),
+        ("wall_s", Json::num(wall)),
+        ("throughput_rps", Json::num(total.completed as f64 / wall)),
+        ("submitted", Json::num(total.submitted as f64)),
+        ("accepted", Json::num(total.accepted as f64)),
+        ("shed", Json::num(total.shed as f64)),
+        ("shed_rate", Json::num(total.shed_rate())),
+        ("swaps", Json::num(total.swaps as f64)),
+        ("models", Json::Obj(models)),
+    ]))
+}
+
+/// [`router_bench`] over `.cgmqm` files: load each `(key, path)` pair;
+/// with `swap`, load a second engine per path and hot-swap it in at the
+/// halfway mark (the `cgmq route-bench --swap` path).
+pub fn router_bench_files(
+    models: &[(String, PathBuf)],
+    swap: bool,
+    requests: usize,
+    pool: crate::deploy::PoolConfig,
+    seed: u64,
+) -> Result<Json> {
+    use crate::deploy::Engine;
+    let specs: Vec<RouterBenchSpec> = models
+        .iter()
+        .map(|(key, path)| {
+            Ok(RouterBenchSpec {
+                key: key.clone(),
+                engine: std::sync::Arc::new(Engine::load(path)?),
+                swap_to: if swap {
+                    Some(std::sync::Arc::new(Engine::load(path)?))
+                } else {
+                    None
+                },
+            })
+        })
+        .collect::<Result<_>>()?;
+    router_bench(&specs, requests, pool, seed)
 }
 
 /// Core of [`serve_bench`], reusable with pre-built engines (deploy table).
@@ -551,26 +749,28 @@ pub fn synthetic_deploy_state(
 }
 
 /// The deploy rows: per arch, packed artifact size vs fp32, the
-/// single-vs-batched engine throughput, and the sharded pool at 1 vs
-/// `workers` workers (throughput + tail latency), on a deterministic
-/// synthetic snapshot. Writes `table_deploy.json` next to the text table.
+/// single-vs-batched engine throughput, the sharded pool at 1 vs
+/// `workers` workers (throughput + tail latency), and the two-variant
+/// router front with a bounded queue (throughput + shed rate), on
+/// deterministic synthetic snapshots. Writes `table_deploy.json` next to
+/// the text table.
 pub fn deploy_table(
     base: &Config,
     requests: usize,
     batch: usize,
     workers: usize,
 ) -> Result<String> {
-    use crate::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
+    use crate::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, PoolConfig, RequestBatcher};
     let mut out = String::new();
     out.push_str(&format!(
         "Deploy: packed .cgmqm artifacts + engine serve path \
          ({requests} requests, batch {batch}, {workers} workers).\n"
     ));
     out.push_str(
-        "| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup | Pool x1 req/s | Pool xN req/s | Pool gain |\n",
+        "| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup | Pool x1 req/s | Pool xN req/s | Pool gain | Route req/s | Shed % |\n",
     );
     out.push_str(
-        "|--------|------------|----------|--------------|---------------|---------|---------------|---------------|-----------|\n",
+        "|--------|------------|----------|--------------|---------------|---------|---------------|---------------|-----------|-------------|--------|\n",
     );
     let mut rows = Vec::new();
     let bcfg = BatchConfig { max_batch: batch, max_delay: std::time::Duration::from_micros(200) };
@@ -582,14 +782,40 @@ pub fn deploy_table(
         let single = Engine::new(model.clone())?.with_mode(DecodeMode::Streaming);
         let batcher = RequestBatcher::new(Engine::new(model.clone())?, bcfg)?;
         let bench = serve_bench_engines(single, batcher, requests, base.seed)?;
-        let shared = std::sync::Arc::new(Engine::new(model)?);
+        let shared = std::sync::Arc::new(Engine::new(model.clone())?);
         let pool = pool_comparison(shared, requests, workers, bcfg, base.seed)?;
+        // Router row: two budget variants of this arch behind one front,
+        // per-shard queues capped at one batch so overload sheds instead
+        // of queueing unboundedly.
+        let s2 = synthetic_deploy_state(&arch, &DEPLOY_LEVELS, 8);
+        let model2 =
+            PackedModel::from_state(&arch, &s2.params, &s2.betas_w, &s2.betas_a, &s2.gates)?;
+        let specs = vec![
+            RouterBenchSpec {
+                key: format!("{}-a", arch.name),
+                engine: std::sync::Arc::new(Engine::new(model)?),
+                swap_to: None,
+            },
+            RouterBenchSpec {
+                key: format!("{}-b", arch.name),
+                engine: std::sync::Arc::new(Engine::new(model2)?),
+                swap_to: None,
+            },
+        ];
+        let route = router_bench(
+            &specs,
+            requests,
+            PoolConfig { workers, batch: bcfg, queue_cap: batch },
+            base.seed,
+        )?;
         let single_rps = bench.get("single")?.get("throughput_rps")?.as_f64()?;
         let batched_rps = bench.get("batched")?.get("throughput_rps")?.as_f64()?;
         let pool1_rps = pool.get("one_worker")?.get("throughput_rps")?.as_f64()?;
         let pool_n_rps = pool.get("n_workers")?.get("throughput_rps")?.as_f64()?;
+        let route_rps = route.get("throughput_rps")?.as_f64()?;
+        let shed_rate = route.get("shed_rate")?.as_f64()?;
         out.push_str(&format!(
-            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x | {:13.1} | {:13.1} | {:8.2}x |\n",
+            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x | {:13.1} | {:13.1} | {:8.2}x | {:11.1} | {:5.1}% |\n",
             arch.name,
             packed_bytes as f64 / 1024.0,
             fp32_bytes as f64 / 1024.0,
@@ -598,7 +824,9 @@ pub fn deploy_table(
             batched_rps / single_rps,
             pool1_rps,
             pool_n_rps,
-            pool_n_rps / pool1_rps
+            pool_n_rps / pool1_rps,
+            route_rps,
+            100.0 * shed_rate
         ));
         let mut j = bench;
         if let Json::Obj(m) = &mut j {
@@ -606,6 +834,7 @@ pub fn deploy_table(
             m.insert("packed_bytes".into(), Json::num(packed_bytes as f64));
             m.insert("fp32_bytes".into(), Json::num(fp32_bytes as f64));
             m.insert("pool".into(), pool);
+            m.insert("router".into(), route);
         }
         rows.push(j);
     }

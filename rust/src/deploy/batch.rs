@@ -106,6 +106,9 @@ impl BatcherStats {
     }
 
     /// Fold another shard's counters into this one (pool-wide totals).
+    /// Sums of consistent stats stay consistent — the invariant is linear
+    /// in every counter — so merging never masks a shard-level violation
+    /// that was not already there.
     pub fn merge(&mut self, other: &BatcherStats) {
         self.submitted += other.submitted;
         self.completed += other.completed;
@@ -114,6 +117,16 @@ impl BatcherStats {
         self.deadline_flushes += other.deadline_flushes;
         self.drain_flushes += other.drain_flushes;
         self.engine_calls += other.engine_calls;
+    }
+
+    /// Fold a whole set of shard stats (a pool's, or every drained pool of
+    /// a router entry) into one total.
+    pub fn merge_all<'a>(stats: impl IntoIterator<Item = &'a BatcherStats>) -> BatcherStats {
+        let mut out = BatcherStats::default();
+        for s in stats {
+            out.merge(s);
+        }
+        out
     }
 }
 

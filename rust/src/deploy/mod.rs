@@ -19,7 +19,13 @@
 //! * [`WorkerPool`] — multi-worker sharded serving: N std threads over
 //!   one shared `Arc<Engine>` (inference takes `&self`; the decoded
 //!   weight cache is `OnceLock`-filled, lock-free on the hot path), each
-//!   worker batching its own shard with the same flush triggers.
+//!   worker batching its own shard with the same flush triggers. Admission
+//!   is bounded: [`WorkerPool::try_submit`] sheds ([`Submission::Shed`])
+//!   once every shard holds `queue_cap` in-flight requests.
+//! * [`Router`] — the multi-model front: several named pools (one per
+//!   loaded `.cgmqm` model/version), requests routed by key, per-model
+//!   [`RouteStats`] (accepted/completed/shed), and zero-downtime hot swap
+//!   that drains the old pool without losing a request.
 //! * [`reference`] — the host fake-quant forward mirroring the eval graph;
 //!   the engine is held to bit-for-bit agreement with it (the cross-path
 //!   golden test in `tests/deploy_roundtrip.rs`).
@@ -44,8 +50,10 @@ pub mod engine;
 pub mod format;
 pub mod pool;
 pub mod reference;
+pub mod router;
 
 pub use batch::{BatchConfig, BatcherStats, Completion, RequestBatcher};
 pub use engine::{DecodeMode, Engine};
 pub use format::{PackedLayer, PackedModel, WidthStream};
-pub use pool::{default_workers, PoolCompletion, PoolConfig, WorkerPool};
+pub use pool::{default_workers, PoolCompletion, PoolConfig, Submission, WorkerPool};
+pub use router::{ModelReport, RouteStats, Router};

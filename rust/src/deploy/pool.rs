@@ -31,8 +31,19 @@
 //! [`WorkerPool::shutdown`] closes the front, drains every shard, joins
 //! the workers and returns the per-shard [`BatcherStats`] (their counter
 //! invariant holds shard-wise and therefore pool-wide).
+//!
+//! **Backpressure.** The channels themselves are unbounded, but admission
+//! is not: each shard carries an atomic in-flight depth counter
+//! (incremented at the front, decremented by the worker as it forwards
+//! each completion), and [`WorkerPool::try_submit`] refuses new work with
+//! a typed [`Submission::Shed`] once every shard's depth has reached
+//! `queue_cap` — the load-shedding 429 a network front maps this to.
+//! [`WorkerPool::submit`] is the legacy uncapped path (benchmarks that
+//! want to measure the queue itself); admission-controlled serving goes
+//! through `try_submit`, as [`super::router::Router`] does.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -43,19 +54,33 @@ use anyhow::{anyhow, bail, Context, Result};
 use super::batch::{BatchConfig, BatcherStats, Completion, RequestBatcher};
 use super::engine::Engine;
 
-/// Sizing/flush policy of a [`WorkerPool`].
+/// Sizing/flush/admission policy of a [`WorkerPool`].
 #[derive(Debug, Clone, Copy)]
 pub struct PoolConfig {
     /// Worker threads == shards (>= 1).
     pub workers: usize,
     /// Per-shard batching policy (size/deadline flush triggers).
     pub batch: BatchConfig,
+    /// Per-shard in-flight cap enforced by [`WorkerPool::try_submit`]
+    /// (submitted-but-not-yet-completed requests per shard). `0` means
+    /// unbounded — every `try_submit` is accepted, like `submit`.
+    pub queue_cap: usize,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        Self { workers: default_workers(), batch: BatchConfig::default() }
+        Self { workers: default_workers(), batch: BatchConfig::default(), queue_cap: 0 }
     }
+}
+
+/// Outcome of an admission-controlled [`WorkerPool::try_submit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Submission {
+    /// Enqueued on `shard`; its [`PoolCompletion`] will carry `id`.
+    Accepted { id: u64, shard: usize },
+    /// Every shard's in-flight depth was at `queue_cap`; nothing was
+    /// enqueued. The caller decides the policy (429, retry, spill).
+    Shed { queue_cap: usize },
 }
 
 /// Default worker count: available cores, capped at 8 shards (beyond
@@ -71,7 +96,11 @@ pub struct PoolCompletion {
     /// Global submission id (monotone from 0 across all shards; the value
     /// [`WorkerPool::submit`] returned).
     pub id: u64,
-    /// Shard that served the request (`id % workers` under round-robin).
+    /// Shard that served the request (`id % workers` under [`submit`]'s
+    /// round-robin; [`try_submit`] may route past a full shard).
+    ///
+    /// [`submit`]: WorkerPool::submit
+    /// [`try_submit`]: WorkerPool::try_submit
     pub shard: usize,
     pub logits: Vec<f32>,
     /// Argmax class of `logits`.
@@ -99,6 +128,10 @@ pub struct WorkerPool {
     workers: Vec<JoinHandle<Result<BatcherStats>>>,
     completions: Receiver<PoolCompletion>,
     next_id: u64,
+    /// Per-shard in-flight depth (front increments, worker decrements as
+    /// it forwards each completion). The admission-control signal.
+    depth: Vec<Arc<AtomicUsize>>,
+    queue_cap: usize,
 }
 
 impl WorkerPool {
@@ -116,19 +149,24 @@ impl WorkerPool {
         let (done_tx, completions) = mpsc::channel();
         let mut shards = Vec::with_capacity(cfg.workers);
         let mut workers = Vec::with_capacity(cfg.workers);
+        let mut depth = Vec::with_capacity(cfg.workers);
         for shard in 0..cfg.workers {
             let (job_tx, job_rx) = mpsc::channel::<Job>();
             let engine = Arc::clone(&engine);
             let done = done_tx.clone();
             let batch = cfg.batch;
+            let shard_depth = Arc::new(AtomicUsize::new(0));
+            let worker_depth = Arc::clone(&shard_depth);
             let handle = std::thread::Builder::new()
                 .name(format!("cgmq-serve-{shard}"))
-                .spawn(move || worker_loop(shard, engine, batch, job_rx, done))
+                .spawn(move || worker_loop(shard, engine, batch, job_rx, done, worker_depth))
                 .with_context(|| format!("spawning serve worker {shard}"))?;
             shards.push(job_tx);
             workers.push(handle);
+            depth.push(shard_depth);
         }
-        Ok(Self { engine, shards, workers, completions, next_id: 0 })
+        let queue_cap = cfg.queue_cap;
+        Ok(Self { engine, shards, workers, completions, next_id: 0, depth, queue_cap })
     }
 
     /// Convenience: load a `.cgmqm` file and serve it pooled.
@@ -145,21 +183,60 @@ impl WorkerPool {
     }
 
     /// Route one request round-robin to its shard; returns the global id
-    /// its [`PoolCompletion`] will carry. Non-blocking (shard queues are
-    /// unbounded; apply backpressure by pacing on [`try_completions`]).
+    /// its [`PoolCompletion`] will carry. Non-blocking and **uncapped** —
+    /// `queue_cap` is not consulted on this path (it still maintains the
+    /// depth counters, so mixing `submit` and [`try_submit`] stays
+    /// coherent). Admission-controlled serving uses `try_submit`.
     ///
-    /// [`try_completions`]: Self::try_completions
+    /// [`try_submit`]: Self::try_submit
     pub fn submit(&mut self, x: Vec<f32>) -> Result<u64> {
         if x.len() != self.engine.input_len() {
             bail!("request has {} values, model wants {}", x.len(), self.engine.input_len());
         }
+        let shard = (self.next_id % self.shards.len() as u64) as usize;
+        self.enqueue(shard, x)
+    }
+
+    /// Admission-controlled submission: route to the round-robin shard, or
+    /// — when that shard's in-flight depth is at `queue_cap` — to the next
+    /// shard with room; if every shard is full, shed the request instead
+    /// of enqueueing it ([`Submission::Shed`]). Input-length validation
+    /// failures and a shut-down pool are `Err`, not sheds.
+    pub fn try_submit(&mut self, x: Vec<f32>) -> Result<Submission> {
+        if x.len() != self.engine.input_len() {
+            bail!("request has {} values, model wants {}", x.len(), self.engine.input_len());
+        }
+        let n = self.shards.len();
+        let start = (self.next_id % n as u64) as usize;
+        let shard = (0..n).map(|k| (start + k) % n).find(|&s| {
+            self.queue_cap == 0 || self.depth[s].load(Ordering::SeqCst) < self.queue_cap
+        });
+        match shard {
+            Some(shard) => {
+                let id = self.enqueue(shard, x)?;
+                Ok(Submission::Accepted { id, shard })
+            }
+            None => Ok(Submission::Shed { queue_cap: self.queue_cap }),
+        }
+    }
+
+    fn enqueue(&mut self, shard: usize, x: Vec<f32>) -> Result<u64> {
         let id = self.next_id;
-        let shard = (id % self.shards.len() as u64) as usize;
-        self.shards[shard]
-            .send(Job { id, x })
-            .map_err(|_| anyhow!("serve worker {shard} has shut down"))?;
+        self.depth[shard].fetch_add(1, Ordering::SeqCst);
+        if self.shards[shard].send(Job { id, x }).is_err() {
+            self.depth[shard].fetch_sub(1, Ordering::SeqCst);
+            bail!("serve worker {shard} has shut down");
+        }
         self.next_id += 1;
         Ok(id)
+    }
+
+    /// Requests accepted so far (`submit` + admitted `try_submit` calls);
+    /// also the next global id. Shed counting is the caller's concern —
+    /// [`try_submit`](Self::try_submit) returns the outcome, and
+    /// [`super::router::RouteStats`] keeps the authoritative counters.
+    pub fn accepted(&self) -> u64 {
+        self.next_id
     }
 
     /// Completions that have arrived so far (non-blocking).
@@ -197,6 +274,7 @@ fn worker_loop(
     cfg: BatchConfig,
     jobs: Receiver<Job>,
     done: Sender<PoolCompletion>,
+    depth: Arc<AtomicUsize>,
 ) -> Result<BatcherStats> {
     let mut batcher = RequestBatcher::new(engine, cfg)?;
     // The batcher's ids are shard-local; submission order is FIFO on both
@@ -216,6 +294,8 @@ fn worker_loop(
                 completed_at,
             })
             .map_err(|_| anyhow!("completion receiver dropped"))?;
+            // Forwarded = no longer in flight: free a slot for admission.
+            depth.fetch_sub(1, Ordering::SeqCst);
         }
         Ok(())
     };

@@ -1,0 +1,316 @@
+//! Multi-model routing front: several packed models served side by side.
+//!
+//! One [`WorkerPool`] serves one `.cgmqm`; CGMQ's whole point is a
+//! *family* of mixed-precision models, each pinned under a different
+//! compute budget, so a deployment wants several variants live at once —
+//! budget-tiered traffic, A/B comparison, staged rollouts. The [`Router`]
+//! is that front:
+//!
+//! ```text
+//!   try_submit("tight", x)            try_submit("loose", x)
+//!            \                                 /
+//!             Router — BTreeMap<key, ModelEntry>
+//!            /                |                \
+//!      WorkerPool "tight"  WorkerPool "loose"  ...   (one pool per key)
+//!        shards + shed       shards + shed           (bounded queues)
+//! ```
+//!
+//! * **Routing** — each named model key owns a private [`WorkerPool`]
+//!   (its own shards, workers and admission cap from the shared
+//!   [`PoolConfig`]); requests are routed by key, an unknown key is a
+//!   clean error naming the loaded keys.
+//! * **Backpressure** — submission goes through the pool's
+//!   admission-controlled [`try_submit`](WorkerPool::try_submit): once a
+//!   model's shards are all at `queue_cap` in-flight requests, the router
+//!   returns [`Submission::Shed`] instead of queueing unboundedly, and
+//!   counts the shed in that model's [`RouteStats`].
+//! * **Hot swap** — [`swap_model`](Router::swap_model) loads the
+//!   replacement *first* (spawn + preload, fail-fast interface check),
+//!   atomically swaps the pool behind the key, then drains the old pool;
+//!   its in-flight completions are carried over and delivered through the
+//!   normal [`try_completions`](Router::try_completions) path, so no
+//!   accepted request is ever lost across a swap.
+//!
+//! Request ids are **per key and monotone across swaps**: each entry
+//! remaps its live pool's ids by the number of requests every previous
+//! pool behind that key accepted, so `(key, id)` uniquely names a request
+//! for the lifetime of the router. The accounting invariant — per key,
+//! `submitted == accepted + shed` always, and `completed == accepted`
+//! once drained — is pinned by `tests/router.rs`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::batch::BatcherStats;
+use super::engine::Engine;
+use super::pool::{PoolCompletion, PoolConfig, Submission, WorkerPool};
+
+/// Cumulative per-model routing statistics.
+///
+/// Invariants: `submitted == accepted + shed` (every routed request is
+/// either admitted or shed, never both), `completed <= accepted` at all
+/// times and `completed == accepted` after the entry is drained
+/// (shutdown/remove). `batch` folds in the per-shard [`BatcherStats`] of
+/// every pool drained so far behind this key (swapped-out pools
+/// immediately, the live pool at shutdown).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RouteStats {
+    /// `try_submit` calls that passed validation (accepted + shed).
+    pub submitted: u64,
+    /// Requests admitted into a pool behind this key.
+    pub accepted: u64,
+    /// Completions handed back to the caller.
+    pub completed: u64,
+    /// Requests refused because every shard was at `queue_cap`.
+    pub shed: u64,
+    /// Hot swaps performed on this key.
+    pub swaps: u64,
+    /// Merged shard batcher counters of every drained pool.
+    pub batch: BatcherStats,
+}
+
+impl RouteStats {
+    /// Shed fraction of all routed requests (0 when nothing was routed).
+    pub fn shed_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            0.0
+        } else {
+            self.shed as f64 / self.submitted as f64
+        }
+    }
+
+    /// The accounting invariant; `tests/router.rs` holds it under
+    /// saturating load and across hot swaps.
+    pub fn consistent(&self) -> bool {
+        self.submitted == self.accepted + self.shed
+            && self.completed <= self.accepted
+            && self.batch.consistent()
+    }
+}
+
+/// Everything a drained model entry reports: the completions that were
+/// still buffered, plus the final [`RouteStats`].
+#[derive(Debug)]
+pub struct ModelReport {
+    pub completions: Vec<PoolCompletion>,
+    pub stats: RouteStats,
+}
+
+struct ModelEntry {
+    pool: WorkerPool,
+    /// Requests accepted by every *previous* pool behind this key; the
+    /// live pool's shard-local ids are offset by this so `(key, id)` stays
+    /// unique across hot swaps.
+    base: u64,
+    stats: RouteStats,
+    /// Completions drained from a swapped-out pool, ids already remapped;
+    /// delivered ahead of live completions by `try_completions`.
+    carryover: Vec<PoolCompletion>,
+}
+
+impl ModelEntry {
+    /// Shut the live pool down and fold everything into a final report.
+    fn drain(mut self) -> Result<ModelReport> {
+        let base = self.base;
+        let (rest, shard_stats) = self.pool.shutdown()?;
+        self.stats.batch.merge(&BatcherStats::merge_all(&shard_stats));
+        let mut completions = std::mem::take(&mut self.carryover);
+        completions.extend(rest.into_iter().map(|mut c| {
+            c.id += base;
+            c
+        }));
+        self.stats.completed += completions.len() as u64;
+        Ok(ModelReport { completions, stats: self.stats })
+    }
+}
+
+/// A routing front over several named [`WorkerPool`]s — one per loaded
+/// `.cgmqm` model/version — with bounded per-shard queues and
+/// zero-downtime hot swap. See the module docs for the architecture.
+pub struct Router {
+    cfg: PoolConfig,
+    models: BTreeMap<String, ModelEntry>,
+}
+
+impl Router {
+    /// A router whose pools all use `cfg` (worker count, batching policy
+    /// and the per-shard `queue_cap` admission bound).
+    pub fn new(cfg: PoolConfig) -> Self {
+        Self { cfg, models: BTreeMap::new() }
+    }
+
+    /// Put `engine` behind `key` (spawns its pool, preloads the weight
+    /// cache). Errors on an empty or already-loaded key — replacing a live
+    /// model is [`swap_model`](Self::swap_model)'s job.
+    pub fn add_model(&mut self, key: impl Into<String>, engine: Arc<Engine>) -> Result<()> {
+        let key = key.into();
+        if key.is_empty() {
+            bail!("model key must be non-empty");
+        }
+        let cfg = self.cfg;
+        match self.models.entry(key) {
+            std::collections::btree_map::Entry::Occupied(e) => {
+                bail!("model key '{}' is already loaded (use swap_model to replace it)", e.key())
+            }
+            std::collections::btree_map::Entry::Vacant(v) => {
+                let pool = WorkerPool::new(engine, cfg)
+                    .with_context(|| format!("spawning pool for model '{}'", v.key()))?;
+                v.insert(ModelEntry {
+                    pool,
+                    base: 0,
+                    stats: RouteStats::default(),
+                    carryover: Vec::new(),
+                });
+                Ok(())
+            }
+        }
+    }
+
+    /// Load a `.cgmqm` file (checksum + arch verification) behind `key`.
+    pub fn load_model(&mut self, key: impl Into<String>, path: &Path) -> Result<()> {
+        self.add_model(key, Arc::new(Engine::load(path)?))
+    }
+
+    /// Loaded model keys, sorted.
+    pub fn keys(&self) -> Vec<&str> {
+        self.models.keys().map(String::as_str).collect()
+    }
+
+    /// The engine currently serving `key`.
+    pub fn engine(&self, key: &str) -> Result<&Engine> {
+        Ok(self.entry(key)?.pool.engine())
+    }
+
+    /// A snapshot of `key`'s routing statistics. `batch` covers only the
+    /// pools drained so far — the live pool's shard counters join at
+    /// shutdown/remove.
+    pub fn stats(&self, key: &str) -> Result<RouteStats> {
+        Ok(self.entry(key)?.stats)
+    }
+
+    /// Route one request to the model behind `key`. Returns the admission
+    /// outcome: [`Submission::Accepted`] with the per-key request id its
+    /// completion will carry, or [`Submission::Shed`] when every shard of
+    /// that model's pool is at `queue_cap`. Unknown keys and wrong-length
+    /// inputs are `Err` (and are not counted as submitted).
+    pub fn try_submit(&mut self, key: &str, x: Vec<f32>) -> Result<Submission> {
+        let entry = self.entry_mut(key)?;
+        let outcome = entry.pool.try_submit(x)?;
+        entry.stats.submitted += 1;
+        match outcome {
+            Submission::Accepted { id, shard } => {
+                entry.stats.accepted += 1;
+                Ok(Submission::Accepted { id: entry.base + id, shard })
+            }
+            shed @ Submission::Shed { .. } => {
+                entry.stats.shed += 1;
+                Ok(shed)
+            }
+        }
+    }
+
+    /// Completions of `key` that have arrived so far (non-blocking):
+    /// carryover from a hot swap first, then the live pool's.
+    pub fn try_completions(&mut self, key: &str) -> Result<Vec<PoolCompletion>> {
+        let entry = self.entry_mut(key)?;
+        let base = entry.base;
+        let mut out = std::mem::take(&mut entry.carryover);
+        out.extend(entry.pool.try_completions().into_iter().map(|mut c| {
+            c.id += base;
+            c
+        }));
+        entry.stats.completed += out.len() as u64;
+        Ok(out)
+    }
+
+    /// Zero-downtime hot swap: spawn a pool for `engine` (preloading its
+    /// weight cache) while the old pool is still serving, fail fast if the
+    /// replacement does not serve the same request/response interface,
+    /// atomically swap the pool behind `key`, then drain the old pool —
+    /// its in-flight completions are carried over (ids remapped) and
+    /// delivered through [`try_completions`](Self::try_completions), so no
+    /// accepted request is lost. Returns the number of carried-over
+    /// completions.
+    ///
+    /// The interface check is input length + class count: budget variants
+    /// (even of different architectures) may stand behind one key as long
+    /// as callers see the same request and logit shapes. Internal
+    /// consistency of the replacement itself (checksum, arch fingerprint)
+    /// was already enforced when it was loaded/constructed.
+    pub fn swap_model(&mut self, key: &str, engine: Arc<Engine>) -> Result<usize> {
+        let cfg = self.cfg;
+        let entry = self.entry_mut(key)?;
+        let old = entry.pool.engine();
+        if engine.input_len() != old.input_len() || engine.num_classes() != old.num_classes() {
+            bail!(
+                "hot swap rejected for '{key}': replacement serves {} -> {} values, \
+                 the live model serves {} -> {}",
+                engine.input_len(),
+                engine.num_classes(),
+                old.input_len(),
+                old.num_classes()
+            );
+        }
+        // New pool up (workers spawned, cache preloaded) before the old
+        // one stops taking traffic.
+        let new_pool = WorkerPool::new(engine, cfg)
+            .with_context(|| format!("spawning replacement pool for model '{key}'"))?;
+        let old_pool = std::mem::replace(&mut entry.pool, new_pool);
+        let old_base = entry.base;
+        entry.base += old_pool.accepted();
+        let (rest, shard_stats) = old_pool.shutdown()?;
+        entry.stats.batch.merge(&BatcherStats::merge_all(&shard_stats));
+        let carried = rest.len();
+        entry.carryover.extend(rest.into_iter().map(|mut c| {
+            c.id += old_base;
+            c
+        }));
+        entry.stats.swaps += 1;
+        Ok(carried)
+    }
+
+    /// Take the model behind `key` out of service: drain its pool and
+    /// return the buffered completions plus final stats.
+    pub fn remove_model(&mut self, key: &str) -> Result<ModelReport> {
+        match self.models.remove(key) {
+            Some(entry) => entry.drain(),
+            None => bail!("no model behind key '{key}' (loaded: {})", self.key_list()),
+        }
+    }
+
+    /// Drain every model and return the per-key reports. After this, each
+    /// key's `completed == accepted` — the no-request-lost guarantee.
+    pub fn shutdown(self) -> Result<BTreeMap<String, ModelReport>> {
+        let mut out = BTreeMap::new();
+        for (key, entry) in self.models {
+            let report = entry.drain().with_context(|| format!("draining model '{key}'"))?;
+            out.insert(key, report);
+        }
+        Ok(out)
+    }
+
+    fn entry(&self, key: &str) -> Result<&ModelEntry> {
+        match self.models.get(key) {
+            Some(e) => Ok(e),
+            None => bail!("no model behind key '{key}' (loaded: {})", self.key_list()),
+        }
+    }
+
+    fn entry_mut(&mut self, key: &str) -> Result<&mut ModelEntry> {
+        if !self.models.contains_key(key) {
+            bail!("no model behind key '{key}' (loaded: {})", self.key_list());
+        }
+        Ok(self.models.get_mut(key).expect("checked above"))
+    }
+
+    fn key_list(&self) -> String {
+        if self.models.is_empty() {
+            "none".to_string()
+        } else {
+            self.models.keys().cloned().collect::<Vec<_>>().join(", ")
+        }
+    }
+}

@@ -49,9 +49,12 @@
 //! artifact ([`deploy::PackedModel`]) and runs it with
 //! [`deploy::Engine`], whose logits match the fake-quant eval path
 //! bit-for-bit; [`deploy::RequestBatcher`] batches single-sample `infer`
-//! requests, and [`deploy::WorkerPool`] serves one shared `Arc<Engine>`
-//! from N sharded worker threads (`cgmq export --format packed`,
-//! `cgmq infer`, `cgmq serve-bench --workers N`).
+//! requests, [`deploy::WorkerPool`] serves one shared `Arc<Engine>` from
+//! N sharded worker threads with bounded admission (`try_submit` sheds
+//! once the per-shard in-flight cap is hit), and [`deploy::Router`] runs
+//! several models/versions side by side with per-model stats and
+//! zero-downtime hot swap (`cgmq export --format packed`, `cgmq infer`,
+//! `cgmq serve-bench --workers N`, `cgmq route-bench --models ...`).
 //!
 //! ### Migrating from `Trainer`
 //!

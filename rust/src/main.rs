@@ -7,6 +7,7 @@
 //!   export     export a snapshot: JSON memory report or packed .cgmqm
 //!   infer      run a packed .cgmqm model on IDX / synthetic inputs
 //!   serve-bench  throughput/latency of the batched serve path
+//!   route-bench  multi-model router: routing, bounded queues + shed, hot swap
 //!   table1/2/3 regenerate the paper's tables
 //!   table-deploy packed-model size + engine throughput table
 //!   a2         penalty-method (DQ-style) tuning comparison
@@ -60,6 +61,13 @@ COMMANDS
              [--deadline-us <d>] [--workers <n>] [--seed <s>]
              (prints JSON: single vs batched vs pooled 1-vs-N-worker
              throughput + latency percentiles)
+  route-bench --models <key=m.cgmqm,key2=m2.cgmqm,...> [--requests <n>]
+             [--batch <b>] [--deadline-us <d>] [--workers <n>]
+             [--queue-cap <c>] [--swap] [--seed <s>]
+             (drives a multi-model router: requests routed round-robin
+             across keys through bounded per-shard queues — overload is
+             shed, not queued; --swap hot-swaps every model mid-traffic;
+             prints per-model throughput/shed/swap stats as JSON)
   fixed-qat  --bits <b> + config flags (uniform-bit QAT baseline)
   myqasr     config flags (heuristic baseline; layer granularity)
   table1     --config <toml>   (method comparison @ bound 0.40%)
@@ -103,6 +111,7 @@ fn run(argv: &[String]) -> Result<()> {
         "export" => cmd_export(&args),
         "infer" => cmd_infer(&args),
         "serve-bench" => cmd_serve_bench(&args),
+        "route-bench" => cmd_route_bench(&args),
         "fixed-qat" => cmd_fixed_qat(&args),
         "myqasr" => cmd_myqasr(&args),
         "table1" => cmd_table(&args, 1),
@@ -428,6 +437,46 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
         workers,
         seed,
     )?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_route_bench(args: &Args) -> Result<()> {
+    let Some(spec) = args.get("models").map(str::to_string) else {
+        bail!("route-bench needs --models <key=m.cgmqm,key2=m2.cgmqm,...>")
+    };
+    let mut models: Vec<(String, std::path::PathBuf)> = Vec::new();
+    for part in spec.split(',') {
+        let Some((key, path)) = part.split_once('=') else {
+            bail!("--models entry '{part}' is not key=path");
+        };
+        let (key, path) = (key.trim(), path.trim());
+        if key.is_empty() || path.is_empty() {
+            bail!("--models entry '{part}' has an empty key or path");
+        }
+        if models.iter().any(|(k, _)| k == key) {
+            bail!("--models lists key '{key}' twice");
+        }
+        models.push((key.to_string(), std::path::PathBuf::from(path)));
+    }
+    let requests = args.get_usize("requests")?.unwrap_or(256).max(1);
+    let batch = args.get_usize("batch")?.unwrap_or(16).max(1);
+    let deadline_us = args.get_usize("deadline-us")?.unwrap_or(200) as u64;
+    let workers = args.get_usize("workers")?.unwrap_or_else(cgmq::deploy::default_workers).max(1);
+    // Per-shard in-flight cap; 0 = unbounded (no shedding).
+    let queue_cap = args.get_usize("queue-cap")?.unwrap_or(32);
+    let swap = args.get_bool("swap");
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    args.finish()?;
+    let pool = cgmq::deploy::PoolConfig {
+        workers,
+        batch: cgmq::deploy::BatchConfig {
+            max_batch: batch,
+            max_delay: std::time::Duration::from_micros(deadline_us),
+        },
+        queue_cap,
+    };
+    let report = bench_harness::router_bench_files(&models, swap, requests, pool, seed)?;
     println!("{report}");
     Ok(())
 }

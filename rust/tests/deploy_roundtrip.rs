@@ -10,10 +10,13 @@ use std::time::{Duration, Instant};
 
 use cgmq::baselines::{export_report, load_packable_snapshot};
 use cgmq::config::Config;
+use cgmq::deploy::format::{sign_extend, BitReader, BitWriter, PackedAct, PackedLayer};
 use cgmq::deploy::reference::fake_quant_logits;
-use cgmq::deploy::{BatchConfig, DecodeMode, Engine, PackedModel, RequestBatcher};
+use cgmq::deploy::{
+    BatchConfig, BatcherStats, DecodeMode, Engine, PackedModel, RequestBatcher, WidthStream,
+};
 use cgmq::gates::{GateSet, Granularity};
-use cgmq::model::{lenet5, mlp, ArchSpec};
+use cgmq::model::{lenet5, mlp, ArchSpec, LayerKind};
 use cgmq::quant::{gate_for_bits, gated_quantize_tensor};
 use cgmq::session::Snapshot;
 use cgmq::tensor::Tensor;
@@ -294,6 +297,214 @@ fn garbage_rejected() {
 }
 
 // ---------------------------------------------------------------------------
+// Corruption matrix: every mutation is an Err, never a panic
+// ---------------------------------------------------------------------------
+
+/// A deliberately tiny hand-built model (one 4x3 dense layer, mixed
+/// per-element widths including pruned and fp32) whose encoding is small
+/// enough to corrupt *exhaustively*. `decode` does not resolve the arch,
+/// so the record does not need to match a compiled-in spec.
+fn tiny_packed_model() -> PackedModel {
+    let w_bits = vec![2u32, 0, 4, 8, 16, 32, 2, 4, 8, 0, 16, 2];
+    let mut bw = BitWriter::new();
+    for (i, &b) in w_bits.iter().enumerate() {
+        match b {
+            0 => {}
+            32 => bw.push((0.25f32 * i as f32).to_bits() as u64, 32),
+            b => {
+                let n_max = (1i64 << (b - 1)) - 1;
+                let n = (i as i64 % (2 * n_max + 1)) - n_max;
+                bw.push(n as u64 & ((1u64 << b) - 1), b);
+            }
+        }
+    }
+    let code_bits = bw.bit_len();
+    let codes = bw.into_bytes();
+    PackedModel {
+        arch_name: "mlp".into(),
+        granularity: Granularity::Individual,
+        input_bits: 8,
+        input_shape: vec![4],
+        layers: vec![PackedLayer {
+            name: "fc".into(),
+            kind: LayerKind::Dense,
+            w_shape: vec![4, 3],
+            beta_w: 0.5,
+            w_bits: WidthStream::PerElement(w_bits),
+            codes,
+            code_bits,
+            bias: vec![0.0, 0.1, -0.1],
+            pool: 0,
+            act: Some(PackedAct {
+                beta_a: 4.0,
+                a_bits: WidthStream::PerElement(vec![2, 4, 8]),
+            }),
+        }],
+    }
+}
+
+#[test]
+fn corruption_matrix_every_byte_flip_and_truncation_errors() {
+    // Exhaustive single-byte-flip / every-prefix-truncation matrix on the
+    // tiny artifact: `decode` must return Err on every mutation and panic
+    // on none. A single-byte flip always changes the FNV-1a checksum
+    // (each absorption step is a bijection of the running state for a
+    // fixed input byte), so no flip can slip through as valid.
+    let model = tiny_packed_model();
+    let bytes = model.encode().unwrap();
+    assert!(PackedModel::decode(&bytes).is_ok(), "baseline must parse");
+
+    for pos in 0..bytes.len() {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0xFF;
+        assert!(
+            PackedModel::decode(&bad).is_err(),
+            "flipping byte {pos} of {} must be rejected",
+            bytes.len()
+        );
+        // A milder flip (lowest bit) must be caught just the same.
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0x01;
+        assert!(PackedModel::decode(&bad).is_err(), "bit-flip at byte {pos}");
+    }
+    for len in 0..bytes.len() {
+        assert!(
+            PackedModel::decode(&bytes[..len]).is_err(),
+            "truncation to {len} of {} bytes must be rejected",
+            bytes.len()
+        );
+    }
+    // Trailing junk after the payload is rejected too.
+    let mut long = bytes.clone();
+    long.push(0);
+    assert!(PackedModel::decode(&long).is_err());
+}
+
+/// Mirror of the documented `.cgmqm` layout: the byte offset *after* each
+/// section of `model`'s encoding (header fields, model preamble, every
+/// per-layer field). The last offset must equal the file length — this
+/// pins the layout described in `deploy::format`'s module docs.
+fn section_boundaries(model: &PackedModel) -> Vec<usize> {
+    fn width_stream_bytes(ws: &WidthStream) -> usize {
+        match ws {
+            WidthStream::Uniform(_) => 2,                                // flag + code
+            WidthStream::PerElement(v) => 1 + 8 + (v.len() * 4).div_ceil(8), // flag + count + nibbles
+        }
+    }
+    let mut offs = vec![8, 12, 20]; // magic | version | checksum
+    let mut pos = 20;
+    let section = |n: usize, offs: &mut Vec<usize>, pos: &mut usize| {
+        *pos += n;
+        offs.push(*pos);
+    };
+    section(2 + model.arch_name.len(), &mut offs, &mut pos); // arch_name
+    section(1, &mut offs, &mut pos); // granularity
+    section(4, &mut offs, &mut pos); // input_bits
+    section(1 + 4 * model.input_shape.len(), &mut offs, &mut pos); // input_shape
+    section(4, &mut offs, &mut pos); // n_layers
+    for l in &model.layers {
+        section(2 + l.name.len(), &mut offs, &mut pos); // name
+        section(1, &mut offs, &mut pos); // kind
+        section(1 + 4 * l.w_shape.len(), &mut offs, &mut pos); // w_shape
+        section(4, &mut offs, &mut pos); // beta_w
+        section(4 + 4 * l.bias.len(), &mut offs, &mut pos); // bias
+        section(1, &mut offs, &mut pos); // pool
+        section(width_stream_bytes(&l.w_bits), &mut offs, &mut pos); // weight widths
+        section(8, &mut offs, &mut pos); // code_bits
+        section(l.codes.len(), &mut offs, &mut pos); // codes
+        section(1, &mut offs, &mut pos); // has_act
+        if let Some(act) = &l.act {
+            section(4, &mut offs, &mut pos); // beta_a
+            section(width_stream_bytes(&act.a_bits), &mut offs, &mut pos); // act widths
+        }
+    }
+    offs
+}
+
+#[test]
+fn corruption_matrix_real_artifact_header_flips_and_boundary_truncations() {
+    // The same matrix against a real exported artifact through the full
+    // `load` path (file read + decode + arch verify): flip each header
+    // byte, truncate at every section boundary.
+    let arch = mlp();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Layer, 8);
+    let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    let path = tmp("matrix.cgmqm");
+    model.save(&path).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    assert!(PackedModel::load(&path).is_ok(), "baseline must load");
+
+    let boundaries = section_boundaries(&model);
+    assert_eq!(
+        *boundaries.last().unwrap(),
+        bytes.len(),
+        "layout walk must land exactly on the file end (format drifted from its docs?)"
+    );
+
+    let mutated = tmp("matrix_mut.cgmqm");
+    for pos in 0..20 {
+        let mut bad = bytes.clone();
+        bad[pos] ^= 0xFF;
+        std::fs::write(&mutated, &bad).unwrap();
+        assert!(PackedModel::load(&mutated).is_err(), "header byte {pos} flip");
+    }
+    for &b in &boundaries {
+        if b == bytes.len() {
+            continue; // the full file is the valid baseline
+        }
+        std::fs::write(&mutated, &bytes[..b]).unwrap();
+        assert!(PackedModel::load(&mutated).is_err(), "truncation at section boundary {b}");
+        // One byte into the next section must fail too (unless that byte
+        // is the last one, which would reconstruct the valid file).
+        if b + 1 < bytes.len() {
+            std::fs::write(&mutated, &bytes[..b + 1]).unwrap();
+            assert!(PackedModel::load(&mutated).is_err(), "truncation at boundary {b} + 1");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-packer property: seeded-random round-trips per width
+// ---------------------------------------------------------------------------
+
+#[test]
+fn bit_packer_roundtrips_random_codes_at_every_width_and_awkward_length() {
+    // For each real integer width, pack seeded-random two's-complement
+    // codes at lengths chosen to leave every possible partial tail byte,
+    // and require bit-exact recovery plus exact storage accounting.
+    let mut rng = SplitMix64::new(0xC0DE);
+    for &bits in &[2u32, 4, 8, 16] {
+        for &len in &[1usize, 2, 3, 5, 7, 9, 31, 63, 64, 65, 127, 255, 257] {
+            let n_max = (1i64 << (bits - 1)) - 1;
+            let mut codes: Vec<i64> = vec![n_max, -n_max]; // always hit the grid extremes
+            codes.extend(
+                (2..len.max(2)).map(|_| (rng.next_u64() % (2 * n_max as u64 + 1)) as i64 - n_max),
+            );
+            codes.truncate(len);
+            let mut w = BitWriter::new();
+            for &n in &codes {
+                w.push(n as u64 & ((1u64 << bits) - 1), bits);
+            }
+            let total_bits = bits as u64 * len as u64;
+            assert_eq!(w.bit_len(), total_bits, "bits={bits} len={len}");
+            let bytes = w.into_bytes();
+            assert_eq!(bytes.len() as u64, total_bits.div_ceil(8), "bits={bits} len={len}");
+            let mut r = BitReader::new(&bytes);
+            for (i, &n) in codes.iter().enumerate() {
+                assert_eq!(
+                    sign_extend(r.read(bits).unwrap(), bits),
+                    n,
+                    "bits={bits} len={len} i={i}"
+                );
+            }
+            // The stream is exhausted at the tail: at most 7 spare bits
+            // remain in the last byte, so a full-byte read must fail.
+            assert!(r.read(8).is_err(), "bits={bits} len={len}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Export report <-> file size cross-check
 // ---------------------------------------------------------------------------
 
@@ -479,4 +690,112 @@ fn batcher_matches_direct_engine_and_validates_input() {
     }
     // Wrong-length input is rejected up front.
     assert!(b.submit_at(vec![0.0; in_len + 1], now).is_err());
+}
+
+#[test]
+fn batcher_max_batch_one_degenerates_to_immediate_serving() {
+    // max_batch == 1: every submit is its own size flush — the batcher
+    // degenerates to direct per-request inference, never queueing.
+    let engine = small_engine();
+    let in_len = engine.input_len();
+    let cfg = BatchConfig { max_batch: 1, max_delay: Duration::from_secs(3600) };
+    let mut b = RequestBatcher::new(engine, cfg).unwrap();
+    let now = Instant::now();
+    for i in 0..5u64 {
+        let done = b.submit_at(vec![0.1; in_len], now).unwrap();
+        assert_eq!(done.len(), 1, "submit {i} must flush immediately");
+        assert_eq!(done[0].id, i);
+        assert_eq!(done[0].batch_size, 1);
+        assert_eq!(b.pending(), 0);
+    }
+    let stats = b.stats();
+    assert_eq!(stats.size_flushes, 5);
+    assert_eq!(stats.flushes, 5);
+    assert_eq!(stats.engine_calls, 5);
+    assert_eq!((stats.submitted, stats.completed), (5, 5));
+    assert!(stats.consistent(), "{stats:?}");
+}
+
+#[test]
+fn batcher_zero_max_delay_flushes_on_every_poll() {
+    // max_delay == 0: any pending request is instantly past its deadline,
+    // so a poll at the very same instant already flushes.
+    let engine = small_engine();
+    let in_len = engine.input_len();
+    let cfg = BatchConfig { max_batch: 1000, max_delay: Duration::ZERO };
+    let mut b = RequestBatcher::new(engine, cfg).unwrap();
+    let now = Instant::now();
+    assert!(b.submit_at(vec![0.1; in_len], now).unwrap().is_empty());
+    assert!(b.submit_at(vec![0.2; in_len], now).unwrap().is_empty());
+    let done = b.poll_at(now).unwrap(); // zero elapsed time
+    assert_eq!(done.len(), 2);
+    assert!(done.iter().all(|c| c.queue_delay == Duration::ZERO));
+    let stats = b.stats();
+    assert_eq!(stats.deadline_flushes, 1);
+    assert_eq!(stats.flushes, 1);
+    assert!(stats.consistent(), "{stats:?}");
+}
+
+#[test]
+fn batcher_empty_queue_poll_and_flush_are_noops() {
+    let engine = small_engine();
+    let cfg = BatchConfig { max_batch: 4, max_delay: Duration::ZERO };
+    let mut b = RequestBatcher::new(engine, cfg).unwrap();
+    let now = Instant::now();
+    assert!(b.oldest_enqueued().is_none());
+    assert!(b.poll_at(now).unwrap().is_empty());
+    assert!(b.flush_at(now).unwrap().is_empty());
+    assert!(b.poll_at(now + Duration::from_secs(1)).unwrap().is_empty());
+    let stats = b.stats();
+    // No flush event of any kind was counted.
+    assert_eq!(stats.flushes, 0);
+    assert_eq!(
+        (stats.size_flushes, stats.deadline_flushes, stats.drain_flushes, stats.engine_calls),
+        (0, 0, 0, 0)
+    );
+    assert_eq!((stats.submitted, stats.completed), (0, 0));
+    assert!(stats.consistent(), "{stats:?}");
+}
+
+#[test]
+fn batcher_stats_merge_preserves_consistency() {
+    // Two batchers driven through different flush kinds, merged: the
+    // counter invariant is linear, so consistent inputs merge into a
+    // consistent total with component-wise sums.
+    let in_len = small_engine().input_len();
+    let now = Instant::now();
+
+    let cfg = BatchConfig { max_batch: 2, max_delay: Duration::from_secs(3600) };
+    let mut a = RequestBatcher::new(small_engine(), cfg).unwrap();
+    for _ in 0..4 {
+        a.submit_at(vec![0.1; in_len], now).unwrap(); // two size flushes
+    }
+    a.submit_at(vec![0.1; in_len], now).unwrap();
+    a.flush_at(now).unwrap(); // one drain flush
+    let sa = a.stats();
+    assert!(sa.consistent(), "{sa:?}");
+
+    let cfg = BatchConfig { max_batch: 1000, max_delay: Duration::ZERO };
+    let mut b = RequestBatcher::new(small_engine(), cfg).unwrap();
+    b.submit_at(vec![0.2; in_len], now).unwrap();
+    b.poll_at(now).unwrap(); // one deadline flush
+    let sb = b.stats();
+    assert!(sb.consistent(), "{sb:?}");
+
+    let mut merged = sa;
+    merged.merge(&sb);
+    assert!(merged.consistent(), "{merged:?}");
+    assert_eq!(merged.submitted, sa.submitted + sb.submitted);
+    assert_eq!(merged.completed, sa.completed + sb.completed);
+    assert_eq!(merged.flushes, sa.flushes + sb.flushes);
+    assert_eq!(merged.size_flushes, 2);
+    assert_eq!(merged.drain_flushes, 1);
+    assert_eq!(merged.deadline_flushes, 1);
+    assert_eq!(merged.engine_calls, sa.engine_calls + sb.engine_calls);
+
+    // merge_all over shards equals repeated merge, and merging the
+    // default (all-zero) stats is the identity.
+    let all = BatcherStats::merge_all([&sa, &sb, &BatcherStats::default()]);
+    assert_eq!(format!("{all:?}"), format!("{merged:?}"));
+    assert!(all.consistent());
 }

@@ -85,6 +85,7 @@ fn pool_completes_every_request_exactly_once_in_shard_order() {
         PoolConfig {
             workers,
             batch: BatchConfig { max_batch: 8, max_delay: Duration::from_millis(1) },
+            queue_cap: 0,
         },
     )
     .unwrap();
@@ -144,6 +145,7 @@ fn pool_deadline_flush_completes_without_shutdown() {
         PoolConfig {
             workers: 2,
             batch: BatchConfig { max_batch: 1000, max_delay: Duration::from_millis(2) },
+            queue_cap: 0,
         },
     )
     .unwrap();
@@ -170,11 +172,14 @@ fn pool_validates_input_and_worker_count() {
     let engine = Arc::new(Engine::new(model).unwrap());
     assert!(WorkerPool::new(
         Arc::clone(&engine),
-        PoolConfig { workers: 0, batch: BatchConfig::default() }
+        PoolConfig { workers: 0, batch: BatchConfig::default(), queue_cap: 0 }
     )
     .is_err());
-    let mut pool =
-        WorkerPool::new(engine, PoolConfig { workers: 1, batch: BatchConfig::default() }).unwrap();
+    let mut pool = WorkerPool::new(
+        engine,
+        PoolConfig { workers: 1, batch: BatchConfig::default(), queue_cap: 0 },
+    )
+    .unwrap();
     assert!(pool.submit(vec![0.0; 3]).is_err(), "wrong-length input rejected at the front");
     let (rest, _) = pool.shutdown().unwrap();
     assert!(rest.is_empty());
