@@ -3,9 +3,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt fmt-fix clippy bench-smoke serve-smoke route-smoke artifacts bench clean
+.PHONY: ci build test fmt fmt-fix clippy bench-smoke serve-smoke route-smoke net-smoke artifacts bench clean
 
-ci: build test fmt clippy bench-smoke serve-smoke route-smoke
+ci: build test fmt clippy bench-smoke serve-smoke route-smoke net-smoke
 
 build:
 	$(CARGO) build --release
@@ -47,6 +47,33 @@ route-smoke: build
 	./target/release/cgmq export --synth --arch mlp --seed 8 --out runs/route-b.cgmqm
 	./target/release/cgmq route-bench --models a=runs/route-a.cgmqm,b=runs/route-b.cgmqm \
 		--requests 96 --batch 8 --workers 2 --queue-cap 2 --swap
+
+# End-to-end network serving smoke: export a synthetic model, run it once
+# through direct `cgmq infer` (the in-process reference path), start
+# `cgmq serve` on an ephemeral loopback port (workers=1, queue-cap=1 and a
+# 5ms batching deadline, so a 4-client burst saturates admission and MUST
+# observe >= 1 shed mapped to 429), then drive it with `cgmq load-bench`:
+# every HTTP response is asserted bit-identical to the locally loaded
+# engine (--verify-model), --min-shed 1 asserts the 429 path executed, and
+# --shutdown drains the server via /admin/shutdown — `wait` propagates the
+# server's exit code, which is non-zero if any accepted request was lost.
+net-smoke: build
+	mkdir -p runs
+	./target/release/cgmq export --synth --arch mlp --out runs/net-smoke.cgmqm
+	./target/release/cgmq infer --model runs/net-smoke.cgmqm --synth 8
+	rm -f runs/net-smoke.addr; \
+	./target/release/cgmq serve --models m=runs/net-smoke.cgmqm --addr 127.0.0.1:0 \
+		--workers 1 --queue-cap 1 --batch 64 --deadline-us 5000 \
+		--addr-file runs/net-smoke.addr & \
+	pid=$$!; \
+	i=0; while [ ! -s runs/net-smoke.addr ] && [ $$i -lt 100 ]; do sleep 0.1; i=$$((i+1)); done; \
+	if [ ! -s runs/net-smoke.addr ]; then echo "cgmq serve did not come up"; kill $$pid 2>/dev/null; exit 1; fi; \
+	if ! ./target/release/cgmq load-bench --addr $$(cat runs/net-smoke.addr) --key m \
+		--requests 96 --clients 4 --verify-model runs/net-smoke.cgmqm \
+		--min-shed 1 --shutdown; then \
+		kill $$pid 2>/dev/null; wait $$pid; exit 1; \
+	fi; \
+	wait $$pid
 
 fmt-fix:
 	$(CARGO) fmt

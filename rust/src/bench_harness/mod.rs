@@ -523,6 +523,14 @@ pub fn router_bench(
         let comps = router.try_completions(key)?;
         record(key, comps, &submit_at[key], lat.get_mut(key).expect("known key"))?;
     }
+    // Live snapshot through the one-call stats surface (what `/stats`
+    // serves) — catches an accounting violation before the drain below
+    // folds in the shard counters.
+    for (key, s) in router.stats_all() {
+        if !s.consistent() {
+            anyhow::bail!("model '{key}' live stats violate the routing invariant: {s:?}");
+        }
+    }
     let reports = router.shutdown()?;
     let wall = t0.elapsed().as_secs_f64();
 
@@ -557,23 +565,13 @@ pub fn router_bench(
         total.completed += s.completed;
         total.shed += s.shed;
         total.swaps += s.swaps;
-        models.insert(
-            key,
-            Json::obj(vec![
-                ("submitted", Json::num(s.submitted as f64)),
-                ("accepted", Json::num(s.accepted as f64)),
-                ("completed", Json::num(s.completed as f64)),
-                ("shed", Json::num(s.shed as f64)),
-                ("shed_rate", Json::num(s.shed_rate())),
-                ("swaps", Json::num(s.swaps as f64)),
-                ("p50_ms", Json::num(p50)),
-                ("p90_ms", Json::num(p90)),
-                ("p99_ms", Json::num(p99)),
-                ("flushes", Json::num(s.batch.flushes as f64)),
-                ("engine_calls", Json::num(s.batch.engine_calls as f64)),
-                ("mean_batch", Json::num(s.batch.mean_batch())),
-            ]),
-        );
+        let mut model_json = s.to_json();
+        if let Json::Obj(m) = &mut model_json {
+            m.insert("p50_ms".into(), Json::num(p50));
+            m.insert("p90_ms".into(), Json::num(p90));
+            m.insert("p99_ms".into(), Json::num(p99));
+        }
+        models.insert(key, model_json);
     }
     Ok(Json::obj(vec![
         ("requests", Json::num(requests as f64)),
@@ -616,6 +614,215 @@ pub fn router_bench_files(
         })
         .collect::<Result<_>>()?;
     router_bench(&specs, requests, pool, seed)
+}
+
+/// One `cgmq load-bench` run: the loopback load generator over the HTTP
+/// serving front ([`crate::deploy::net::Server`]).
+pub struct LoadBenchSpec {
+    /// Server address, e.g. `127.0.0.1:8080`.
+    pub addr: String,
+    /// Model key to drive (`POST /v1/models/{key}/infer`).
+    pub key: String,
+    /// Distinct requests to complete (shed retries do not count extra).
+    pub requests: usize,
+    /// Concurrent client threads (each with one keep-alive connection).
+    pub clients: usize,
+    /// Target open-loop arrival rate across all clients, requests/s;
+    /// `0` = unpaced burst (saturate the admission bound).
+    pub rate_rps: f64,
+    /// Seed of the synthetic request stream (`Dataset::synth`).
+    pub seed: u64,
+    /// Load this `.cgmqm` locally and assert every HTTP logits row is
+    /// bit-identical to the direct [`Engine::infer_batch`] output.
+    ///
+    /// [`Engine::infer_batch`]: crate::deploy::Engine::infer_batch
+    pub verify_model: Option<PathBuf>,
+    /// `POST /admin/shutdown` after the run (graceful server drain).
+    pub shutdown: bool,
+}
+
+/// What one load-bench client thread brings home.
+#[derive(Default)]
+struct LoadClientOut {
+    /// `(request index, seconds from first attempt to 200, logits)`.
+    results: Vec<(usize, f64, Vec<f32>)>,
+    /// HTTP attempts (accepted + shed).
+    attempts: u64,
+    /// 429 responses observed (each retried until accepted).
+    shed: u64,
+}
+
+/// Drive `spec.requests` synthetic requests at the server from
+/// `spec.clients` threads. A 429 is counted as a shed and the request is
+/// retried with backoff until accepted — so every request finishes, and
+/// with `verify_model` every response is held to bit-identity against the
+/// locally loaded engine. Returns throughput / shed rate / latency
+/// percentiles as JSON.
+pub fn load_bench(spec: &LoadBenchSpec) -> Result<Json> {
+    use std::sync::Arc;
+    use std::time::{Duration, Instant};
+
+    use crate::deploy::net::HttpClient;
+    if spec.requests == 0 {
+        anyhow::bail!("load bench needs at least one request");
+    }
+    if spec.clients == 0 {
+        anyhow::bail!("load bench needs at least one client");
+    }
+    let ds = crate::data::Dataset::synth(spec.seed, spec.requests);
+    let in_len = ds.sample_len;
+    let expect = match &spec.verify_model {
+        Some(path) => {
+            let engine = crate::deploy::Engine::load(path)?;
+            if engine.input_len() != in_len {
+                anyhow::bail!(
+                    "synth samples have {in_len} values, verify model wants {}",
+                    engine.input_len()
+                );
+            }
+            let c = engine.num_classes();
+            Some((engine.infer_batch(&ds.images, spec.requests)?, c))
+        }
+        None => None,
+    };
+    let images = Arc::new(ds.images);
+
+    let target = format!("/v1/models/{}/infer", spec.key);
+    let (requests, clients, rate) = (spec.requests, spec.clients, spec.rate_rps);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(clients);
+    for t in 0..clients {
+        let (addr, target, images) = (spec.addr.clone(), target.clone(), Arc::clone(&images));
+        let handle = std::thread::Builder::new()
+            .name(format!("cgmq-load-{t}"))
+            .spawn(move || -> Result<LoadClientOut> {
+                let mut client = HttpClient::connect(&addr, Duration::from_secs(5))?;
+                let mut out = LoadClientOut::default();
+                let mut i = t;
+                while i < requests {
+                    if rate > 0.0 {
+                        // Open-loop schedule: request i is due at t0 + i/rate,
+                        // regardless of how earlier requests fared.
+                        let due = t0 + Duration::from_secs_f64(i as f64 / rate);
+                        let now = Instant::now();
+                        if due > now {
+                            std::thread::sleep(due - now);
+                        }
+                    }
+                    let x = &images[i * in_len..(i + 1) * in_len];
+                    let body = Json::obj(vec![("x", Json::arr_f32(x))]).to_string();
+                    let started = Instant::now();
+                    let mut backoff = Duration::from_micros(500);
+                    loop {
+                        out.attempts += 1;
+                        let (status, text) = client.request("POST", &target, Some(&body))?;
+                        match status {
+                            200 => {
+                                let parsed = crate::util::json::parse(&text)?;
+                                let logits = parsed.get("logits")?.as_f32_vec()?;
+                                out.results.push((i, started.elapsed().as_secs_f64(), logits));
+                                break;
+                            }
+                            429 => {
+                                out.shed += 1;
+                                std::thread::sleep(backoff);
+                                backoff = (backoff * 2).min(Duration::from_millis(10));
+                            }
+                            s => anyhow::bail!("POST {target}: unexpected HTTP {s}: {text}"),
+                        }
+                    }
+                    i += clients;
+                }
+                Ok(out)
+            })
+            .context("spawning load client")?;
+        handles.push(handle);
+    }
+    let (mut attempts, mut shed) = (0u64, 0u64);
+    let mut lat = vec![f64::NAN; requests];
+    let mut verified = 0usize;
+    for handle in handles {
+        let out = handle.join().map_err(|_| anyhow::anyhow!("load client panicked"))??;
+        attempts += out.attempts;
+        shed += out.shed;
+        for (i, secs, logits) in out.results {
+            lat[i] = secs;
+            if let Some((expect, c)) = &expect {
+                let row = &expect[i * c..(i + 1) * c];
+                if logits.len() != *c
+                    || logits.iter().zip(row).any(|(a, b)| a.to_bits() != b.to_bits())
+                {
+                    anyhow::bail!(
+                        "request {i}: HTTP logits drifted from the direct engine output"
+                    );
+                }
+                verified += 1;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    if lat.iter().any(|d| d.is_nan()) {
+        anyhow::bail!("load bench lost requests (client thread under-reported)");
+    }
+    if spec.shutdown {
+        let mut client = HttpClient::connect(&spec.addr, Duration::from_secs(5))?;
+        let (status, text) = client.request("POST", "/admin/shutdown", Some("{}"))?;
+        if status != 200 {
+            anyhow::bail!("POST /admin/shutdown: unexpected HTTP {status}: {text}");
+        }
+    }
+    let (p50, p90, p99) = percentiles_ms(&mut lat);
+    Ok(Json::obj(vec![
+        ("addr", Json::str(spec.addr.clone())),
+        ("key", Json::str(spec.key.clone())),
+        ("requests", Json::num(requests as f64)),
+        ("clients", Json::num(clients as f64)),
+        ("rate_rps", Json::num(rate)),
+        ("wall_s", Json::num(wall)),
+        ("throughput_rps", Json::num(requests as f64 / wall)),
+        ("attempts", Json::num(attempts as f64)),
+        ("shed", Json::num(shed as f64)),
+        ("shed_rate", Json::num(if attempts == 0 { 0.0 } else { shed as f64 / attempts as f64 })),
+        ("p50_ms", Json::num(p50)),
+        ("p90_ms", Json::num(p90)),
+        ("p99_ms", Json::num(p99)),
+        ("verified", Json::num(verified as f64)),
+    ]))
+}
+
+/// Loopback HTTP serving row: stand a [`Server`](crate::deploy::net::Server)
+/// up on an ephemeral port over `models`, drive the first key with the
+/// [`load_bench`] client fleet, drain gracefully (bailing if any accepted
+/// request was lost) and fold the server-side stats into the report.
+pub fn net_bench(
+    models: Vec<(String, std::sync::Arc<crate::deploy::Engine>)>,
+    requests: usize,
+    clients: usize,
+    pool: crate::deploy::PoolConfig,
+    seed: u64,
+) -> Result<Json> {
+    use crate::deploy::net::{Server, ServerConfig};
+    let key = models.first().context("net bench needs at least one model")?.0.clone();
+    let cfg = ServerConfig { pool, ..ServerConfig::default() };
+    let server = Server::bind("127.0.0.1:0", models, cfg)?;
+    let spec = LoadBenchSpec {
+        addr: server.local_addr().to_string(),
+        key,
+        requests,
+        clients,
+        rate_rps: 0.0,
+        seed,
+        verify_model: None,
+        shutdown: false,
+    };
+    let bench = load_bench(&spec);
+    let report = server.finish()?;
+    let mut bench = bench?; // after finish: a failed bench must still drain the server
+    report.verify_drained()?;
+    if let Json::Obj(m) = &mut bench {
+        m.insert("server".into(), report.to_json());
+    }
+    Ok(bench)
 }
 
 /// Core of [`serve_bench`], reusable with pre-built engines (deploy table).
@@ -750,10 +957,11 @@ pub fn synthetic_deploy_state(
 
 /// The deploy rows: per arch, packed artifact size vs fp32, the
 /// single-vs-batched engine throughput, the sharded pool at 1 vs
-/// `workers` workers (throughput + tail latency), and the two-variant
-/// router front with a bounded queue (throughput + shed rate), on
-/// deterministic synthetic snapshots. Writes `table_deploy.json` next to
-/// the text table.
+/// `workers` workers (throughput + tail latency), the two-variant
+/// router front with a bounded queue (throughput + shed rate), and the
+/// loopback HTTP front ([`net_bench`]: throughput + client-observed 429
+/// rate), on deterministic synthetic snapshots. Writes
+/// `table_deploy.json` next to the text table.
 pub fn deploy_table(
     base: &Config,
     requests: usize,
@@ -767,10 +975,10 @@ pub fn deploy_table(
          ({requests} requests, batch {batch}, {workers} workers).\n"
     ));
     out.push_str(
-        "| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup | Pool x1 req/s | Pool xN req/s | Pool gain | Route req/s | Shed % |\n",
+        "| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup | Pool x1 req/s | Pool xN req/s | Pool gain | Route req/s | Shed % | Net req/s | Net shed % |\n",
     );
     out.push_str(
-        "|--------|------------|----------|--------------|---------------|---------|---------------|---------------|-----------|-------------|--------|\n",
+        "|--------|------------|----------|--------------|---------------|---------|---------------|---------------|-----------|-------------|--------|-----------|------------|\n",
     );
     let mut rows = Vec::new();
     let bcfg = BatchConfig { max_batch: batch, max_delay: std::time::Duration::from_micros(200) };
@@ -783,7 +991,18 @@ pub fn deploy_table(
         let batcher = RequestBatcher::new(Engine::new(model.clone())?, bcfg)?;
         let bench = serve_bench_engines(single, batcher, requests, base.seed)?;
         let shared = std::sync::Arc::new(Engine::new(model.clone())?);
-        let pool = pool_comparison(shared, requests, workers, bcfg, base.seed)?;
+        let pool =
+            pool_comparison(std::sync::Arc::clone(&shared), requests, workers, bcfg, base.seed)?;
+        // Net row: the same shared engine behind the loopback HTTP front,
+        // driven by the load-bench client fleet (server drain is asserted
+        // lossless).
+        let net = net_bench(
+            vec![(format!("{}-net", arch.name), shared)],
+            requests,
+            4,
+            PoolConfig { workers, batch: bcfg, queue_cap: batch },
+            base.seed,
+        )?;
         // Router row: two budget variants of this arch behind one front,
         // per-shard queues capped at one batch so overload sheds instead
         // of queueing unboundedly.
@@ -814,8 +1033,10 @@ pub fn deploy_table(
         let pool_n_rps = pool.get("n_workers")?.get("throughput_rps")?.as_f64()?;
         let route_rps = route.get("throughput_rps")?.as_f64()?;
         let shed_rate = route.get("shed_rate")?.as_f64()?;
+        let net_rps = net.get("throughput_rps")?.as_f64()?;
+        let net_shed_rate = net.get("shed_rate")?.as_f64()?;
         out.push_str(&format!(
-            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x | {:13.1} | {:13.1} | {:8.2}x | {:11.1} | {:5.1}% |\n",
+            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x | {:13.1} | {:13.1} | {:8.2}x | {:11.1} | {:5.1}% | {:9.1} | {:9.1}% |\n",
             arch.name,
             packed_bytes as f64 / 1024.0,
             fp32_bytes as f64 / 1024.0,
@@ -826,7 +1047,9 @@ pub fn deploy_table(
             pool_n_rps,
             pool_n_rps / pool1_rps,
             route_rps,
-            100.0 * shed_rate
+            100.0 * shed_rate,
+            net_rps,
+            100.0 * net_shed_rate
         ));
         let mut j = bench;
         if let Json::Obj(m) = &mut j {
@@ -835,6 +1058,7 @@ pub fn deploy_table(
             m.insert("fp32_bytes".into(), Json::num(fp32_bytes as f64));
             m.insert("pool".into(), pool);
             m.insert("router".into(), route);
+            m.insert("net".into(), net);
         }
         rows.push(j);
     }

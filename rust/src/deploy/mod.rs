@@ -26,6 +26,11 @@
 //!   loaded `.cgmqm` model/version), requests routed by key, per-model
 //!   [`RouteStats`] (accepted/completed/shed), and zero-downtime hot swap
 //!   that drains the old pool without losing a request.
+//! * [`net`] — the network front: a dependency-free HTTP/1.1 server
+//!   ([`Server`]) exposing the router over TCP — `POST
+//!   /v1/models/{key}/infer`, `GET /healthz`, `GET /stats` — mapping
+//!   [`Submission::Shed`] to `429 Retry-After` and draining gracefully on
+//!   shutdown so no accepted request is dropped.
 //! * [`reference`] — the host fake-quant forward mirroring the eval graph;
 //!   the engine is held to bit-for-bit agreement with it (the cross-path
 //!   golden test in `tests/deploy_roundtrip.rs`).
@@ -48,6 +53,7 @@
 pub mod batch;
 pub mod engine;
 pub mod format;
+pub mod net;
 pub mod pool;
 pub mod reference;
 pub mod router;
@@ -55,5 +61,6 @@ pub mod router;
 pub use batch::{BatchConfig, BatcherStats, Completion, RequestBatcher};
 pub use engine::{DecodeMode, Engine};
 pub use format::{PackedLayer, PackedModel, WidthStream};
-pub use pool::{default_workers, PoolCompletion, PoolConfig, Submission, WorkerPool};
+pub use net::{Server, ServerConfig, ServerReport};
+pub use pool::{default_workers, PoolCompletion, PoolConfig, PoolStats, Submission, WorkerPool};
 pub use router::{ModelReport, RouteStats, Router};

@@ -1,0 +1,647 @@
+//! Minimal HTTP/1.1 wire handling: request parser, response writer, and a
+//! tiny client — `std` only.
+//!
+//! The parser is deliberately small and *hard to surprise*: every way a
+//! request can be wrong maps to one documented status code, and none of
+//! them can panic the connection worker. The taxonomy (also in the README):
+//!
+//! | condition                                   | status |
+//! |---------------------------------------------|--------|
+//! | malformed request line / headers / body     | 400    |
+//! | unknown route or model key (server layer)   | 404    |
+//! | wrong method on a known route (server layer)| 405    |
+//! | read deadline hit mid-request               | 408    |
+//! | body-bearing method without `Content-Length`| 411    |
+//! | declared body larger than the cap           | 413 (refused before reading) |
+//! | admission shed (server layer)               | 429 + `Retry-After` |
+//!
+//! Unsupported-but-valid HTTP (chunked transfer encoding, non-1.x
+//! versions) is a 400 with a message naming the gap. A connection that
+//! goes quiet *between* requests (idle keep-alive) is closed silently; a
+//! deadline hit *inside* a request is a 408 — the distinction is
+//! [`ReadError::Timeout::started`].
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Cap on the request line + header section, total bytes.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+/// Cap on the header count.
+pub const MAX_HEADERS: usize = 64;
+
+/// The status codes this server speaks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    Ok,
+    BadRequest,
+    NotFound,
+    MethodNotAllowed,
+    RequestTimeout,
+    LengthRequired,
+    PayloadTooLarge,
+    TooManyRequests,
+    InternalError,
+    ServiceUnavailable,
+    GatewayTimeout,
+}
+
+impl Status {
+    pub fn code(self) -> u16 {
+        match self {
+            Status::Ok => 200,
+            Status::BadRequest => 400,
+            Status::NotFound => 404,
+            Status::MethodNotAllowed => 405,
+            Status::RequestTimeout => 408,
+            Status::LengthRequired => 411,
+            Status::PayloadTooLarge => 413,
+            Status::TooManyRequests => 429,
+            Status::InternalError => 500,
+            Status::ServiceUnavailable => 503,
+            Status::GatewayTimeout => 504,
+        }
+    }
+
+    pub fn reason(self) -> &'static str {
+        match self {
+            Status::Ok => "OK",
+            Status::BadRequest => "Bad Request",
+            Status::NotFound => "Not Found",
+            Status::MethodNotAllowed => "Method Not Allowed",
+            Status::RequestTimeout => "Request Timeout",
+            Status::LengthRequired => "Length Required",
+            Status::PayloadTooLarge => "Payload Too Large",
+            Status::TooManyRequests => "Too Many Requests",
+            Status::InternalError => "Internal Server Error",
+            Status::ServiceUnavailable => "Service Unavailable",
+            Status::GatewayTimeout => "Gateway Timeout",
+        }
+    }
+}
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// The raw request target (path + optional query).
+    pub target: String,
+    /// `HTTP/1.1` (keep-alive by default) vs `HTTP/1.0` (close by default).
+    pub http11: bool,
+    /// Header names lowercased, values trimmed.
+    headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First header value by (lowercase) name.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.iter().find(|(n, _)| n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// The target without its query string.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or(&self.target)
+    }
+
+    /// HTTP/1.1 persistence: keep alive unless `Connection: close` (or an
+    /// HTTP/1.0 peer that did not ask for keep-alive).
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection").map(str::to_ascii_lowercase) {
+            Some(v) if v == "close" => false,
+            Some(v) if v == "keep-alive" => true,
+            _ => self.http11,
+        }
+    }
+}
+
+/// Everything that can go wrong reading one request off the wire.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Clean EOF before any byte of a request — normal keep-alive close.
+    Closed,
+    /// Read deadline hit; `started` says whether any request bytes had
+    /// arrived (idle keep-alive timeouts close silently, mid-request ones
+    /// are a 408).
+    Timeout { started: bool },
+    /// Unparseable request line, headers or body framing.
+    Malformed(String),
+    /// Body-bearing method without a `Content-Length`.
+    LengthRequired,
+    /// Declared `Content-Length` above the configured cap.
+    TooLarge { limit: usize },
+    /// Transport error (peer reset, broken pipe, ...).
+    Io(std::io::Error),
+}
+
+impl ReadError {
+    /// The status code to answer with before closing; `None` means close
+    /// without a response (clean EOF, idle timeout, dead transport).
+    pub fn status(&self) -> Option<Status> {
+        match self {
+            ReadError::Closed | ReadError::Io(_) => None,
+            ReadError::Timeout { started: false } => None,
+            ReadError::Timeout { started: true } => Some(Status::RequestTimeout),
+            ReadError::Malformed(_) => Some(Status::BadRequest),
+            ReadError::LengthRequired => Some(Status::LengthRequired),
+            ReadError::TooLarge { .. } => Some(Status::PayloadTooLarge),
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            ReadError::Closed => "connection closed".into(),
+            ReadError::Timeout { .. } => "read deadline hit".into(),
+            ReadError::Malformed(m) => m.clone(),
+            ReadError::LengthRequired => "body-bearing request without Content-Length".into(),
+            ReadError::TooLarge { limit } => {
+                format!("declared body exceeds the {limit}-byte cap")
+            }
+            ReadError::Io(e) => format!("transport error: {e}"),
+        }
+    }
+}
+
+fn is_timeout(e: &std::io::Error) -> bool {
+    matches!(e.kind(), std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut)
+}
+
+/// Read one CRLF (or bare-LF) terminated line, charging its bytes against
+/// `budget` — over-budget input errors out *without* buffering the rest,
+/// so a newline-free flood cannot balloon memory. `Ok(None)` is EOF with
+/// nothing read on *this* line.
+fn read_line<R: BufRead>(
+    r: &mut R,
+    budget: &mut usize,
+    started: &mut bool,
+) -> Result<Option<String>, ReadError> {
+    let mut buf = Vec::new();
+    loop {
+        let available = match r.fill_buf() {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) if is_timeout(&e) => {
+                return Err(ReadError::Timeout { started: *started || !buf.is_empty() })
+            }
+            Err(e) => return Err(ReadError::Io(e)),
+        };
+        if available.is_empty() {
+            if buf.is_empty() {
+                return Ok(None);
+            }
+            return Err(ReadError::Malformed("connection closed mid-line".into()));
+        }
+        *started = true;
+        let nl = available.iter().position(|&b| b == b'\n');
+        let take = nl.map_or(available.len(), |i| i + 1);
+        if buf.len() + take > *budget {
+            return Err(ReadError::Malformed(format!(
+                "request head exceeds the {MAX_HEAD_BYTES}-byte cap"
+            )));
+        }
+        buf.extend_from_slice(&available[..take]);
+        r.consume(take);
+        if nl.is_some() {
+            *budget -= buf.len();
+            buf.pop(); // the \n
+            if buf.last() == Some(&b'\r') {
+                buf.pop();
+            }
+            return Ok(Some(String::from_utf8_lossy(&buf).into_owned()));
+        }
+    }
+}
+
+/// Parse one request: request line, headers, then exactly `Content-Length`
+/// body bytes (checked against `max_body` *before* reading them).
+pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Result<Request, ReadError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let mut started = false;
+    let line = match read_line(r, &mut budget, &mut started)? {
+        None => return Err(ReadError::Closed),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m.to_string(), t.to_string(), v),
+            _ => {
+                return Err(ReadError::Malformed(format!(
+                    "bad request line '{}'",
+                    line.chars().take(80).collect::<String>()
+                )))
+            }
+        };
+    let http11 = match version {
+        "HTTP/1.1" => true,
+        "HTTP/1.0" => false,
+        v => return Err(ReadError::Malformed(format!("unsupported protocol '{v}'"))),
+    };
+    if !target.starts_with('/') {
+        return Err(ReadError::Malformed(format!("bad request target '{target}'")));
+    }
+
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line(r, &mut budget, &mut started)? {
+            None => return Err(ReadError::Malformed("connection closed mid-headers".into())),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ReadError::Malformed(format!(
+                "bad header line '{}'",
+                line.chars().take(80).collect::<String>()
+            )));
+        };
+        if headers.len() >= MAX_HEADERS {
+            return Err(ReadError::Malformed(format!("more than {MAX_HEADERS} headers")));
+        }
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+
+    let mut req = Request { method, target, http11, headers, body: Vec::new() };
+    if req.header("transfer-encoding").is_some() {
+        return Err(ReadError::Malformed("chunked transfer encoding not supported".into()));
+    }
+    let body_len = match req.header("content-length") {
+        Some(v) => match v.parse::<usize>() {
+            Ok(n) => Some(n),
+            Err(_) => return Err(ReadError::Malformed(format!("bad Content-Length '{v}'"))),
+        },
+        None => None,
+    };
+    match body_len {
+        None if matches!(req.method.as_str(), "POST" | "PUT" | "PATCH") => {
+            return Err(ReadError::LengthRequired)
+        }
+        None | Some(0) => {}
+        Some(n) if n > max_body => return Err(ReadError::TooLarge { limit: max_body }),
+        Some(n) => {
+            let mut body = vec![0u8; n];
+            if let Err(e) = r.read_exact(&mut body) {
+                return Err(match e.kind() {
+                    std::io::ErrorKind::UnexpectedEof => {
+                        ReadError::Malformed("connection closed mid-body".into())
+                    }
+                    _ if is_timeout(&e) => ReadError::Timeout { started: true },
+                    _ => ReadError::Io(e),
+                });
+            }
+            req.body = body;
+        }
+    }
+    Ok(req)
+}
+
+/// One response, always a JSON body.
+#[derive(Debug)]
+pub struct Response {
+    pub status: Status,
+    pub body: String,
+    /// `Retry-After` seconds hint (the 429 path sets it).
+    pub retry_after: Option<u64>,
+}
+
+impl Response {
+    pub fn json(status: Status, body: &Json) -> Self {
+        Self { status, body: body.to_string(), retry_after: None }
+    }
+
+    /// An error body: `{"error": <reason>, "detail": <msg>}`.
+    pub fn error(status: Status, msg: impl Into<String>) -> Self {
+        let body = Json::obj(vec![
+            ("error", Json::str(status.reason())),
+            ("detail", Json::str(msg.into())),
+        ]);
+        Self::json(status, &body)
+    }
+
+    /// Serialize status line + headers + body; flushes the writer.
+    pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
+        write!(
+            w,
+            "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+            self.status.code(),
+            self.status.reason(),
+            self.body.len()
+        )?;
+        if let Some(secs) = self.retry_after {
+            write!(w, "retry-after: {secs}\r\n")?;
+        }
+        write!(w, "connection: {}\r\n\r\n", if keep_alive { "keep-alive" } else { "close" })?;
+        w.write_all(self.body.as_bytes())?;
+        w.flush()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side — what `cgmq load-bench`, the example and the tests drive the
+// server with. Deliberately the same parser discipline in the other
+// direction.
+// ---------------------------------------------------------------------------
+
+/// Cap on response bodies the client will read.
+pub const CLIENT_MAX_BODY: usize = 4 << 20;
+
+/// Read one response: status line, headers, `Content-Length` body.
+pub fn read_client_response<R: BufRead>(r: &mut R) -> Result<(u16, String), ReadError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let mut started = false;
+    let line = match read_line(r, &mut budget, &mut started)? {
+        None => return Err(ReadError::Closed),
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let status = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => code
+            .parse::<u16>()
+            .map_err(|_| ReadError::Malformed(format!("bad status line '{line}'")))?,
+        _ => return Err(ReadError::Malformed(format!("bad status line '{line}'"))),
+    };
+    let mut body_len = 0usize;
+    loop {
+        let line = match read_line(r, &mut budget, &mut started)? {
+            None => return Err(ReadError::Malformed("connection closed mid-headers".into())),
+            Some(l) => l,
+        };
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                body_len = value
+                    .trim()
+                    .parse()
+                    .map_err(|_| ReadError::Malformed(format!("bad Content-Length '{value}'")))?;
+            }
+        }
+    }
+    if body_len > CLIENT_MAX_BODY {
+        return Err(ReadError::TooLarge { limit: CLIENT_MAX_BODY });
+    }
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body).map_err(|e| {
+        if is_timeout(&e) {
+            ReadError::Timeout { started: true }
+        } else {
+            ReadError::Io(e)
+        }
+    })?;
+    String::from_utf8(body)
+        .map(|b| (status, b))
+        .map_err(|_| ReadError::Malformed("response body is not UTF-8".into()))
+}
+
+/// Write one request (request line, `host`, and — with a body —
+/// `content-type` + `content-length`) and flush.
+fn send_request(
+    stream: &mut TcpStream,
+    method: &str,
+    target: &str,
+    body: Option<&str>,
+) -> std::io::Result<()> {
+    write!(stream, "{method} {target} HTTP/1.1\r\nhost: cgmq\r\n")?;
+    match body {
+        Some(b) => write!(
+            stream,
+            "content-type: application/json\r\ncontent-length: {}\r\n\r\n{b}",
+            b.len()
+        )?,
+        None => write!(stream, "\r\n")?,
+    }
+    stream.flush()
+}
+
+/// A keep-alive HTTP/1.1 client over one `TcpStream`.
+///
+/// Reconnects and resends **only** when the request provably never
+/// reached the application: a write failure, or a clean connection close
+/// before any response byte (the idle keep-alive reap — the server always
+/// writes a response before closing a connection it read a request from).
+/// A failure *after* response bytes started, or a read timeout, is
+/// surfaced instead of blind-retried: `POST /infer` is not idempotent,
+/// and a resend would make the server count one request twice.
+pub struct HttpClient {
+    addr: String,
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl HttpClient {
+    /// Connect, retrying until `timeout` (covers the race against a server
+    /// that is still binding).
+    pub fn connect(addr: &str, timeout: Duration) -> Result<Self> {
+        let deadline = Instant::now() + timeout;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => return Self::over(stream, addr),
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(e).with_context(|| format!("connecting to {addr}"));
+                    }
+                    std::thread::sleep(Duration::from_millis(20));
+                }
+            }
+        }
+    }
+
+    fn over(stream: TcpStream, addr: &str) -> Result<Self> {
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Self { addr: addr.to_string(), stream, reader })
+    }
+
+    /// One request/response roundtrip; `body` is a JSON string. Retries
+    /// once, and only when the request provably went unprocessed (see the
+    /// type docs).
+    pub fn request(
+        &mut self,
+        method: &str,
+        target: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        match self.roundtrip(method, target, body) {
+            Ok(r) => Ok(r),
+            Err((true, _)) => {
+                let addr = self.addr.clone();
+                *self = Self::connect(&addr, Duration::from_secs(2))?;
+                self.roundtrip(method, target, body).map_err(|(_, e)| e)
+            }
+            Err((false, e)) => Err(e),
+        }
+    }
+
+    /// The error side carries `retry_safe`: true only when the server
+    /// cannot have processed the request.
+    fn roundtrip(
+        &mut self,
+        method: &str,
+        target: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String), (bool, anyhow::Error)> {
+        if let Err(e) = send_request(&mut self.stream, method, target, body) {
+            return Err((true, anyhow::anyhow!("sending {method} {target}: {e}")));
+        }
+        match read_client_response(&mut self.reader) {
+            Ok(r) => Ok(r),
+            // Clean close before any response byte: the keep-alive reap —
+            // a request the server read is always answered before close.
+            Err(ReadError::Closed) => Err((
+                true,
+                anyhow::anyhow!("connection closed before a response to {method} {target}"),
+            )),
+            Err(e) => Err((
+                false,
+                anyhow::anyhow!("reading response to {method} {target}: {}", e.message()),
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &str) -> Result<Request, ReadError> {
+        read_request(&mut Cursor::new(raw.as_bytes()), 1024)
+    }
+
+    #[test]
+    fn parses_get_and_post() {
+        let req = parse("GET /healthz HTTP/1.1\r\nhost: x\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path(), "/healthz");
+        assert!(req.keep_alive());
+        assert!(req.body.is_empty());
+
+        let req = parse(
+            "POST /v1/models/m/infer HTTP/1.1\r\ncontent-length: 9\r\n\r\n{\"x\":[1]}",
+        )
+        .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{\"x\":[1]}");
+        assert_eq!(req.header("content-length"), Some("9"));
+
+        // Query strings are split off by path().
+        let req = parse("GET /stats?verbose=1 HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.path(), "/stats");
+        assert_eq!(req.target, "/stats?verbose=1");
+    }
+
+    #[test]
+    fn keep_alive_semantics() {
+        let r = parse("GET / HTTP/1.1\r\nconnection: close\r\n\r\n").unwrap();
+        assert!(!r.keep_alive());
+        let r = parse("GET / HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!r.keep_alive(), "HTTP/1.0 defaults to close");
+        let r = parse("GET / HTTP/1.0\r\nconnection: keep-alive\r\n\r\n").unwrap();
+        assert!(r.keep_alive());
+    }
+
+    // The negative matrix: every way a request can be wrong maps to its
+    // documented status code — and none of them panic.
+    #[test]
+    fn clean_eof_is_closed_not_an_error_status() {
+        let e = parse("").unwrap_err();
+        assert!(matches!(e, ReadError::Closed));
+        assert_eq!(e.status(), None);
+    }
+
+    #[test]
+    fn truncated_request_line_is_400() {
+        for raw in ["GET /healthz", "GET /healthz HTTP/1.1", "POST", "GET /x HTTP/1.1\r\nhost"] {
+            let e = parse(raw).unwrap_err();
+            assert!(matches!(e, ReadError::Malformed(_)), "{raw:?}: {e:?}");
+            assert_eq!(e.status(), Some(Status::BadRequest), "{raw:?}");
+        }
+    }
+
+    #[test]
+    fn garbage_request_lines_are_400() {
+        for raw in [
+            "garbage\r\n\r\n",
+            "GET\r\n\r\n",
+            "GET /x HTTP/2\r\n\r\n",
+            "GET x HTTP/1.1\r\n\r\n",
+            "GET /x HTTP/1.1 extra\r\n\r\n",
+            "GET /x HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            "POST /x HTTP/1.1\r\ncontent-length: nope\r\n\r\n",
+            "POST /x HTTP/1.1\r\ntransfer-encoding: chunked\r\n\r\n",
+        ] {
+            let e = parse(raw).unwrap_err();
+            assert_eq!(e.status(), Some(Status::BadRequest), "{raw:?}: {e:?}");
+        }
+    }
+
+    #[test]
+    fn missing_content_length_on_post_is_411() {
+        let e = parse("POST /v1/models/m/infer HTTP/1.1\r\nhost: x\r\n\r\n").unwrap_err();
+        assert!(matches!(e, ReadError::LengthRequired));
+        assert_eq!(e.status(), Some(Status::LengthRequired));
+        // GET without a length is fine.
+        assert!(parse("GET / HTTP/1.1\r\n\r\n").is_ok());
+    }
+
+    #[test]
+    fn oversized_body_is_413_and_refused_before_reading() {
+        // Declared length over the cap fails even though no body bytes
+        // follow — the parser must not try to buffer it first.
+        let e = parse("POST /x HTTP/1.1\r\ncontent-length: 99999\r\n\r\n").unwrap_err();
+        assert!(matches!(e, ReadError::TooLarge { limit: 1024 }), "{e:?}");
+        assert_eq!(e.status(), Some(Status::PayloadTooLarge));
+    }
+
+    #[test]
+    fn premature_close_mid_body_is_400() {
+        let e = parse("POST /x HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc").unwrap_err();
+        assert!(matches!(e, ReadError::Malformed(_)), "{e:?}");
+        assert_eq!(e.status(), Some(Status::BadRequest));
+    }
+
+    #[test]
+    fn oversized_head_is_400() {
+        let raw = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_HEAD_BYTES));
+        let e = parse(&raw).unwrap_err();
+        assert_eq!(e.status(), Some(Status::BadRequest));
+    }
+
+    #[test]
+    fn pipelined_requests_parse_sequentially_and_garbage_after_is_400() {
+        let raw = "GET /healthz HTTP/1.1\r\n\r\nXYZ\r\n\r\n";
+        let mut cur = Cursor::new(raw.as_bytes());
+        let first = read_request(&mut cur, 1024).unwrap();
+        assert_eq!(first.path(), "/healthz");
+        let e = read_request(&mut cur, 1024).unwrap_err();
+        assert_eq!(e.status(), Some(Status::BadRequest), "{e:?}");
+    }
+
+    #[test]
+    fn response_wire_format_roundtrips_through_the_client_parser() {
+        let resp = Response::json(Status::Ok, &Json::obj(vec![("a", Json::num(1.0))]));
+        let mut wire = Vec::new();
+        resp.write_to(&mut wire, true).unwrap();
+        let (status, body) = read_client_response(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, "{\"a\":1}");
+
+        let mut shed = Response::error(Status::TooManyRequests, "shed");
+        shed.retry_after = Some(1);
+        let mut wire = Vec::new();
+        shed.write_to(&mut wire, false).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        assert!(text.contains("connection: close\r\n"), "{text}");
+        let (status, body) = read_client_response(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(status, 429);
+        assert!(body.contains("Too Many Requests"), "{body}");
+    }
+}

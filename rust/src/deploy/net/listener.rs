@@ -1,0 +1,180 @@
+//! Accept loop + connection workers for the HTTP front.
+//!
+//! One non-blocking `TcpListener` accept loop (non-blocking so a stop
+//! request is observed within milliseconds, not at the next connection),
+//! one `std` thread per live connection. A connection worker runs a
+//! keep-alive loop: parse request → hand to the [`Handler`] → write
+//! response → repeat, under a per-connection read deadline. The hardening
+//! contract — pinned by `tests/net_serve.rs` — is that *nothing a peer
+//! sends can take a worker down*: parse errors answer with their taxonomy
+//! status and close (after one framing error the byte stream is
+//! untrustworthy), idle keep-alive timeouts close silently, and a handler
+//! panic is caught and mapped to 500.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use super::http::{self, Request, Response, Status};
+use super::lock;
+
+/// What the server does with one parsed request.
+pub trait Handler: Send + Sync + 'static {
+    fn handle(&self, req: Request) -> Response;
+}
+
+/// Per-connection hardening limits.
+#[derive(Debug, Clone, Copy)]
+pub struct ConnLimits {
+    /// Bodies declaring more than this many bytes are refused with 413.
+    pub max_body: usize,
+    /// Read deadline: an idle keep-alive connection is reaped after this,
+    /// and a peer that stalls mid-request gets 408.
+    pub read_timeout: Duration,
+}
+
+impl Default for ConnLimits {
+    fn default() -> Self {
+        Self { max_body: 1 << 20, read_timeout: Duration::from_secs(5) }
+    }
+}
+
+/// The accept loop and its connection workers.
+pub struct Listener {
+    addr: SocketAddr,
+    running: Arc<AtomicBool>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl Listener {
+    /// Bind `addr` (`127.0.0.1:0` picks an ephemeral port) and start
+    /// accepting; every request goes to `handler`.
+    pub fn bind(addr: &str, handler: Arc<dyn Handler>, limits: ConnLimits) -> Result<Self> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let running = Arc::new(AtomicBool::new(true));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
+        let accept = std::thread::Builder::new()
+            .name("cgmq-http-accept".into())
+            .spawn({
+                let running = Arc::clone(&running);
+                let conns = Arc::clone(&conns);
+                move || accept_loop(listener, handler, limits, running, conns)
+            })
+            .context("spawning accept loop")?;
+        Ok(Self { addr, running, accept: Some(accept), conns })
+    }
+
+    /// The bound address (the actual port when an ephemeral one was asked).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the accept loop and every worker to wind down (non-blocking;
+    /// workers finish their current request first).
+    pub fn stop(&self) {
+        self.running.store(false, Ordering::SeqCst);
+    }
+
+    /// Stop accepting and join the accept loop plus every connection
+    /// worker. Workers blocked on an idle keep-alive connection exit at
+    /// the latest after the read deadline.
+    pub fn join(mut self) -> Result<()> {
+        self.stop();
+        if let Some(h) = self.accept.take() {
+            h.join().map_err(|_| anyhow!("accept loop panicked"))?;
+        }
+        let conns = std::mem::take(&mut *lock(&self.conns));
+        for c in conns {
+            let _ = c.join();
+        }
+        Ok(())
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    handler: Arc<dyn Handler>,
+    limits: ConnLimits,
+    running: Arc<AtomicBool>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+) {
+    let mut next_conn = 0u64;
+    while running.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                next_conn += 1;
+                let worker = std::thread::Builder::new()
+                    .name(format!("cgmq-http-{next_conn}"))
+                    .spawn({
+                        let handler = Arc::clone(&handler);
+                        let running = Arc::clone(&running);
+                        move || connection_loop(stream, handler, limits, running)
+                    });
+                if let Ok(handle) = worker {
+                    let mut conns = lock(&conns);
+                    conns.retain(|h| !h.is_finished());
+                    conns.push(handle);
+                }
+                // Spawn failure: the stream drops, the peer sees a closed
+                // connection and retries — better than taking down accept.
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+/// One connection: keep-alive request loop until close, error, deadline or
+/// server stop.
+fn connection_loop(
+    stream: TcpStream,
+    handler: Arc<dyn Handler>,
+    limits: ConnLimits,
+    running: Arc<AtomicBool>,
+) {
+    stream.set_nodelay(true).ok();
+    if stream.set_read_timeout(Some(limits.read_timeout)).is_err() {
+        return;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        match http::read_request(&mut reader, limits.max_body) {
+            Ok(req) => {
+                // A stopping server finishes this request but closes after
+                // it instead of idling on the keep-alive read.
+                let keep = req.keep_alive() && running.load(Ordering::SeqCst);
+                let resp = std::panic::catch_unwind(AssertUnwindSafe(|| handler.handle(req)))
+                    .unwrap_or_else(|_| {
+                        Response::error(Status::InternalError, "handler panicked")
+                    });
+                if resp.write_to(&mut writer, keep).is_err() || !keep {
+                    return;
+                }
+            }
+            Err(e) => {
+                // Taxonomy status if one applies (400/408/411/413), then
+                // close — after a framing error the stream is unreadable.
+                // Clean EOF / idle timeout / dead transport close silently.
+                if let Some(status) = e.status() {
+                    let _ = Response::error(status, e.message()).write_to(&mut writer, false);
+                }
+                return;
+            }
+        }
+    }
+}

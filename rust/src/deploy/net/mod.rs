@@ -1,0 +1,74 @@
+//! Network serving front: a dependency-free HTTP/1.1 listener over the
+//! [`Router`](super::Router).
+//!
+//! PRs 2–4 built the packed engine, the sharded worker pool and the
+//! bounded-admission multi-model router — but the front door was still an
+//! in-process function call. This module is the missing rung: a real
+//! network listener feeding the shard queues, with the router's typed
+//! overload signal mapped onto the HTTP status taxonomy a deployment
+//! expects. Everything is `std` (TCP + threads), matching the rest of the
+//! crate — no async runtime, no HTTP crate.
+//!
+//! ```text
+//!   clients ── TCP ──▶ listener (accept loop, non-blocking)
+//!                        │ one worker thread per connection
+//!                        ▼ keep-alive loop, read deadline, body cap
+//!                      http::read_request ── taxonomy ──▶ 400/404/405/411/413
+//!                        │
+//!                        ▼
+//!                      Server handler ── Mutex<Router>::try_submit
+//!                        │                  ├─ Accepted → wait on completion
+//!                        │                  └─ Shed     → 429 + Retry-After
+//!                        ▼
+//!                      completion pump (one thread) — drains
+//!                      Router::try_completions, wakes the waiting
+//!                      connection workers by (key, id)
+//! ```
+//!
+//! * [`http`] — the minimal HTTP/1.1 request parser / response writer and
+//!   its hardened error taxonomy: malformed request → 400, unknown route
+//!   or model key → 404, wrong method on a known route → 405, missing
+//!   `Content-Length` on a body-bearing method → 411, body over the cap →
+//!   413 (refused *before* reading), overload shed → 429 with a
+//!   `Retry-After` hint. Parse errors close the connection (framing is
+//!   unknown after one) but never panic the worker. Also carries the tiny
+//!   [`HttpClient`] the load generator and tests drive the server with.
+//! * [`listener`] — the accept loop (non-blocking `TcpListener`, so
+//!   shutdown is observed promptly) and per-connection worker threads:
+//!   keep-alive request loop, per-connection read deadline, handler
+//!   panics caught and mapped to 500.
+//! * [`server`] — the [`Server`]: the router behind a thread-safe front.
+//!   `Router::try_submit` takes `&mut self`, so submissions from N
+//!   connection threads serialize through one mutex — the single choke
+//!   point that keeps the `submitted == accepted + shed` accounting exact
+//!   across threads — while completions are pumped out by one background
+//!   thread and handed to the waiting connection workers. Endpoints:
+//!   `POST /v1/models/{key}/infer`, `GET /healthz`, `GET /stats`
+//!   (per-model [`RouteStats`](super::RouteStats) as JSON), `POST
+//!   /admin/shutdown` (graceful drain: stop accepting, finish every
+//!   accepted request, then shut the router down and verify nothing was
+//!   lost).
+//!
+//! `cgmq serve` binds a server from `.cgmqm` files; `cgmq load-bench` is
+//! the loopback load generator (open-loop client threads, 429-retry,
+//! bit-identity verification against a locally loaded engine);
+//! `tests/net_serve.rs` pins the HTTP path bit-for-bit to
+//! [`Engine::infer_batch`](super::Engine::infer_batch).
+
+pub mod http;
+pub mod listener;
+pub mod server;
+
+pub use http::{HttpClient, Request, Response, Status};
+pub use listener::{ConnLimits, Handler, Listener};
+pub use server::{Server, ServerConfig, ServerReport};
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering the guard if a panicking holder poisoned it
+/// (the protected state is counters + queues that stay valid line-by-line;
+/// refusing to serve after a poisoned lock would turn one bad request into
+/// a full outage).
+pub(crate) fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}

@@ -1,0 +1,526 @@
+//! The [`Server`]: the multi-model [`Router`] behind a thread-safe HTTP
+//! front.
+//!
+//! `Router::try_submit` takes `&mut self`, so the N connection workers
+//! cannot call it directly — the server fronts the router with one mutex,
+//! which is also what keeps the accounting exact across threads: every
+//! submission serializes through the pool's admission choke point, so
+//! `submitted == accepted + shed` holds under any interleaving and
+//! `/stats` can never tear a snapshot mid-update.
+//!
+//! Completions flow the other way through a single **pump** thread: it
+//! drains [`Router::try_completions`] for every key and hands each
+//! completion to the connection worker waiting on `(key, id)` via a shared
+//! map + condvar. Connection workers never hold the router lock while
+//! waiting, so submission stays live while responses are in flight.
+//!
+//! **Graceful drain** ([`Server::finish`], also what `POST
+//! /admin/shutdown` triggers via [`Server::run`]): stop accepting, join
+//! every connection worker (each finishes its in-flight request — the
+//! pump keeps running until nothing is outstanding), then shut the router
+//! down and report per-model stats. [`ServerReport::verify_drained`]
+//! checks the no-request-lost guarantee: per key, `completed == accepted`.
+
+use std::collections::{BTreeMap, HashMap, HashSet};
+use std::net::SocketAddr;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::deploy::engine::Engine;
+use crate::deploy::pool::{PoolCompletion, PoolConfig, Submission};
+use crate::deploy::router::{ModelReport, Router};
+use crate::util::json::{self, Json};
+
+use super::http::{Request, Response, Status};
+use super::listener::{ConnLimits, Handler, Listener};
+use super::lock;
+
+/// Server knobs on top of the pool policy.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Worker/batching/admission policy of every model's pool.
+    pub pool: PoolConfig,
+    /// Request bodies above this are refused with 413.
+    pub max_body: usize,
+    /// Per-connection read deadline (idle keep-alive reap / stalled-peer 408).
+    pub read_timeout: Duration,
+    /// How long a connection worker waits for its completion before
+    /// answering 504 (generous: it only fires if a worker wedges).
+    pub reply_timeout: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            pool: PoolConfig::default(),
+            max_body: 1 << 20,
+            read_timeout: Duration::from_secs(5),
+            reply_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+type CompKey = (String, u64);
+
+/// The thread-safe front over the router shared by every connection
+/// worker and the pump.
+struct Front {
+    /// `None` once the server has drained — late requests get 503.
+    router: Mutex<Option<Router>>,
+    /// Loaded model keys (fixed after bind; no HTTP route mutates the set).
+    keys: Vec<String>,
+    /// Completions delivered by the pump, keyed by `(model key, id)`.
+    done: Mutex<HashMap<CompKey, PoolCompletion>>,
+    /// Signals new entries in `done`.
+    arrived: Condvar,
+    /// Waiters that gave up (reply timeout); the pump discards their
+    /// completions instead of letting them sit in `done` forever.
+    abandoned: Mutex<HashSet<CompKey>>,
+    /// Accepted requests whose waiter has not been answered yet.
+    outstanding: AtomicU64,
+    /// 200s served on the infer route.
+    served: AtomicU64,
+    /// Graceful shutdown requested (`/admin/shutdown` or `finish`).
+    stop: AtomicBool,
+    /// Tells the pump to exit once nothing is outstanding.
+    pump_stop: AtomicBool,
+    reply_timeout: Duration,
+}
+
+/// Admission outcome as the HTTP layer sees it.
+enum SubmitOutcome {
+    Accepted { id: u64 },
+    Shed { queue_cap: usize },
+    UnknownKey,
+    BadInput(String),
+    /// Draining, or a pool whose workers are gone — a server-side 503
+    /// either way, never blamed on the client.
+    Unavailable(String),
+}
+
+impl Front {
+    fn submit(&self, key: &str, x: Vec<f32>) -> SubmitOutcome {
+        if !self.keys.iter().any(|k| k == key) {
+            return SubmitOutcome::UnknownKey;
+        }
+        let mut guard = lock(&self.router);
+        let Some(router) = guard.as_mut() else {
+            return SubmitOutcome::Unavailable("server is draining".into());
+        };
+        // Validate the request shape up front, so any Err from the
+        // submission path below is a server-side fault (dead worker), not
+        // a client one.
+        if let Ok(engine) = router.engine(key) {
+            if engine.input_len() != x.len() {
+                return SubmitOutcome::BadInput(format!(
+                    "request has {} values, model wants {}",
+                    x.len(),
+                    engine.input_len()
+                ));
+            }
+        }
+        match router.try_submit(key, x) {
+            Ok(Submission::Accepted { id, .. }) => {
+                self.outstanding.fetch_add(1, Ordering::SeqCst);
+                SubmitOutcome::Accepted { id }
+            }
+            Ok(Submission::Shed { queue_cap }) => SubmitOutcome::Shed { queue_cap },
+            Err(e) => SubmitOutcome::Unavailable(format!("{e:#}")),
+        }
+    }
+
+    /// Block until the pump delivers `(key, id)` or the reply timeout
+    /// passes (then the completion is marked abandoned so the pump can
+    /// discard it on arrival).
+    fn await_completion(&self, key: &str, id: u64) -> Option<PoolCompletion> {
+        let k: CompKey = (key.to_string(), id);
+        let deadline = Instant::now() + self.reply_timeout;
+        let mut done = lock(&self.done);
+        loop {
+            if let Some(c) = done.remove(&k) {
+                drop(done);
+                self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                self.served.fetch_add(1, Ordering::SeqCst);
+                return Some(c);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                drop(done);
+                // Same lock order as the pump (abandoned, then done), so a
+                // completion that raced in during the gap is still found.
+                let mut abandoned = lock(&self.abandoned);
+                let mut done = lock(&self.done);
+                if let Some(c) = done.remove(&k) {
+                    drop(done);
+                    drop(abandoned);
+                    self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                    self.served.fetch_add(1, Ordering::SeqCst);
+                    return Some(c);
+                }
+                abandoned.insert(k);
+                drop(done);
+                drop(abandoned);
+                self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                return None;
+            }
+            let (guard, _) = self
+                .arrived
+                .wait_timeout(done, deadline - now)
+                .unwrap_or_else(|e| e.into_inner());
+            done = guard;
+        }
+    }
+
+    /// One pump sweep: drain every key's completions and wake the waiting
+    /// workers. Returns how many completions were moved.
+    fn sweep(&self) -> usize {
+        let mut collected: Vec<(String, PoolCompletion)> = Vec::new();
+        {
+            let mut guard = lock(&self.router);
+            if let Some(router) = guard.as_mut() {
+                for key in &self.keys {
+                    if let Ok(comps) = router.try_completions(key) {
+                        collected.extend(comps.into_iter().map(|c| (key.clone(), c)));
+                    }
+                }
+            }
+        }
+        if collected.is_empty() {
+            return 0;
+        }
+        let n = collected.len();
+        let mut abandoned = lock(&self.abandoned);
+        let mut done = lock(&self.done);
+        for (key, c) in collected {
+            let k = (key, c.id);
+            if abandoned.remove(&k) {
+                continue; // its waiter already answered 504
+            }
+            done.insert(k, c);
+        }
+        drop(done);
+        drop(abandoned);
+        self.arrived.notify_all();
+        n
+    }
+}
+
+fn pump_loop(front: Arc<Front>) {
+    loop {
+        if front.sweep() == 0 {
+            if front.pump_stop.load(Ordering::SeqCst)
+                && front.outstanding.load(Ordering::SeqCst) == 0
+            {
+                return;
+            }
+            // Poll fast only while requests are actually in flight; an
+            // idle server backs off so the router mutex is not hammered
+            // for nothing (the first request after an idle stretch pays
+            // at most the long tick extra).
+            let idle = front.outstanding.load(Ordering::SeqCst) == 0;
+            std::thread::sleep(if idle {
+                Duration::from_millis(2)
+            } else {
+                Duration::from_micros(200)
+            });
+        }
+    }
+}
+
+/// Routes requests; all state lives in the shared [`Front`].
+struct NetHandler {
+    front: Arc<Front>,
+}
+
+impl NetHandler {
+    fn healthz(&self) -> Response {
+        Response::json(
+            Status::Ok,
+            &Json::obj(vec![
+                ("status", Json::str("ok")),
+                (
+                    "models",
+                    Json::Arr(self.front.keys.iter().map(|k| Json::str(k.as_str())).collect()),
+                ),
+                ("outstanding", Json::num(self.front.outstanding.load(Ordering::SeqCst) as f64)),
+            ]),
+        )
+    }
+
+    fn stats(&self) -> Response {
+        let guard = lock(&self.front.router);
+        let Some(router) = guard.as_ref() else {
+            return Response::error(Status::ServiceUnavailable, "server is draining");
+        };
+        let models: BTreeMap<String, Json> =
+            router.stats_all().into_iter().map(|(k, s)| (k, s.to_json())).collect();
+        drop(guard);
+        Response::json(
+            Status::Ok,
+            &Json::obj(vec![
+                ("served", Json::num(self.front.served.load(Ordering::SeqCst) as f64)),
+                ("models", Json::Obj(models)),
+            ]),
+        )
+    }
+
+    fn infer(&self, key: &str, body: &[u8]) -> Response {
+        let Ok(text) = std::str::from_utf8(body) else {
+            return Response::error(Status::BadRequest, "body is not UTF-8");
+        };
+        let parsed = match json::parse(text) {
+            Ok(v) => v,
+            Err(e) => {
+                return Response::error(Status::BadRequest, format!("body is not JSON: {e:#}"))
+            }
+        };
+        let x = match parsed.get("x").and_then(Json::as_f32_vec) {
+            Ok(x) => x,
+            Err(_) => {
+                return Response::error(
+                    Status::BadRequest,
+                    "body must be {\"x\": [<input floats>]}",
+                )
+            }
+        };
+        match self.front.submit(key, x) {
+            SubmitOutcome::Accepted { id } => match self.front.await_completion(key, id) {
+                Some(c) => Response::json(
+                    Status::Ok,
+                    &Json::obj(vec![
+                        ("key", Json::str(key)),
+                        ("id", Json::num(id as f64)),
+                        ("predicted", Json::num(c.predicted as f64)),
+                        ("logits", Json::arr_f32(&c.logits)),
+                        ("batch_size", Json::num(c.batch_size as f64)),
+                    ]),
+                ),
+                None => Response::error(Status::GatewayTimeout, "completion did not arrive"),
+            },
+            SubmitOutcome::Shed { queue_cap } => {
+                let mut resp = Response::json(
+                    Status::TooManyRequests,
+                    &Json::obj(vec![
+                        ("error", Json::str("shed")),
+                        ("queue_cap", Json::num(queue_cap as f64)),
+                    ]),
+                );
+                // Sub-second batching deadlines drain the queues quickly;
+                // 1s is the smallest honest Retry-After hint.
+                resp.retry_after = Some(1);
+                resp
+            }
+            SubmitOutcome::UnknownKey => Response::error(
+                Status::NotFound,
+                format!("no model behind key '{key}' (loaded: {})", self.front.keys.join(", ")),
+            ),
+            SubmitOutcome::BadInput(msg) => Response::error(Status::BadRequest, msg),
+            SubmitOutcome::Unavailable(msg) => Response::error(Status::ServiceUnavailable, msg),
+        }
+    }
+}
+
+impl Handler for NetHandler {
+    fn handle(&self, req: Request) -> Response {
+        let path = req.path().to_string();
+        let segments: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
+        match (req.method.as_str(), segments.as_slice()) {
+            ("GET", ["healthz"]) => self.healthz(),
+            ("GET", ["stats"]) => self.stats(),
+            ("POST", ["v1", "models", key, "infer"]) => self.infer(key, &req.body),
+            ("POST", ["admin", "shutdown"]) => {
+                self.front.stop.store(true, Ordering::SeqCst);
+                Response::json(Status::Ok, &Json::obj(vec![("status", Json::str("draining"))]))
+            }
+            (_, ["healthz"]) | (_, ["stats"]) => {
+                Response::error(Status::MethodNotAllowed, "route is GET-only")
+            }
+            (_, ["v1", "models", _, "infer"]) | (_, ["admin", "shutdown"]) => {
+                Response::error(Status::MethodNotAllowed, "route is POST-only")
+            }
+            _ => Response::error(
+                Status::NotFound,
+                format!(
+                    "no route '{path}' (routes: POST /v1/models/{{key}}/infer, GET /healthz, \
+                     GET /stats, POST /admin/shutdown)"
+                ),
+            ),
+        }
+    }
+}
+
+/// What a drained server reports: per-model router reports plus the served
+/// request count.
+#[derive(Debug)]
+pub struct ServerReport {
+    pub models: BTreeMap<String, ModelReport>,
+    /// 200s served on the infer route.
+    pub served: u64,
+}
+
+impl ServerReport {
+    /// The no-request-lost guarantee: per key, the accounting invariant
+    /// holds and every accepted request completed.
+    pub fn verify_drained(&self) -> Result<()> {
+        for (key, report) in &self.models {
+            let s = report.stats;
+            if !s.consistent() {
+                bail!("model '{key}' stats violate the routing invariant: {s:?}");
+            }
+            if s.completed != s.accepted {
+                bail!(
+                    "model '{key}' lost requests: accepted {} but completed {}",
+                    s.accepted,
+                    s.completed
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let models: BTreeMap<String, Json> = self
+            .models
+            .iter()
+            .map(|(k, report)| {
+                let mut j = report.stats.to_json();
+                if let Json::Obj(m) = &mut j {
+                    // Completions nobody waited for (0 in normal operation;
+                    // every HTTP-accepted request has a waiting worker).
+                    m.insert("uncollected".into(), Json::num(report.completions.len() as f64));
+                }
+                (k.clone(), j)
+            })
+            .collect();
+        Json::obj(vec![
+            ("served", Json::num(self.served as f64)),
+            ("models", Json::Obj(models)),
+        ])
+    }
+}
+
+/// The HTTP serving front: listener + router front + completion pump.
+pub struct Server {
+    front: Arc<Front>,
+    /// `Some` until [`finish`](Self::finish) takes it.
+    listener: Option<Listener>,
+    pump: Option<JoinHandle<()>>,
+}
+
+impl Drop for Server {
+    /// A server dropped without [`finish`](Self::finish) (early error
+    /// path, test panic) must not leak its threads: flag everything to
+    /// stop — the accept loop exits on its own, connection workers wind
+    /// down with their requests, and the pump exits once nothing is
+    /// outstanding. (No joins here; `finish` is the orderly path.)
+    fn drop(&mut self) {
+        self.front.stop.store(true, Ordering::SeqCst);
+        self.front.pump_stop.store(true, Ordering::SeqCst);
+        if let Some(listener) = &self.listener {
+            listener.stop();
+        }
+    }
+}
+
+impl Server {
+    /// Load `models` behind their keys and start serving on `addr`
+    /// (`127.0.0.1:0` picks an ephemeral port — read it back with
+    /// [`local_addr`](Self::local_addr)).
+    pub fn bind(
+        addr: &str,
+        models: Vec<(String, Arc<Engine>)>,
+        cfg: ServerConfig,
+    ) -> Result<Self> {
+        if models.is_empty() {
+            bail!("server needs at least one model");
+        }
+        let mut router = Router::new(cfg.pool);
+        let mut keys = Vec::with_capacity(models.len());
+        for (key, engine) in models {
+            router.add_model(key.clone(), engine)?;
+            keys.push(key);
+        }
+        let front = Arc::new(Front {
+            router: Mutex::new(Some(router)),
+            keys,
+            done: Mutex::new(HashMap::new()),
+            arrived: Condvar::new(),
+            abandoned: Mutex::new(HashSet::new()),
+            outstanding: AtomicU64::new(0),
+            served: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+            pump_stop: AtomicBool::new(false),
+            reply_timeout: cfg.reply_timeout,
+        });
+        let handler: Arc<dyn Handler> = Arc::new(NetHandler { front: Arc::clone(&front) });
+        let limits = ConnLimits { max_body: cfg.max_body, read_timeout: cfg.read_timeout };
+        let listener = Listener::bind(addr, handler, limits)?;
+        let pump = std::thread::Builder::new()
+            .name("cgmq-http-pump".into())
+            .spawn({
+                let front = Arc::clone(&front);
+                move || pump_loop(front)
+            })
+            .context("spawning completion pump");
+        let pump = match pump {
+            Ok(p) => p,
+            Err(e) => {
+                // Don't leak the accept loop holding the port.
+                listener.stop();
+                let _ = listener.join();
+                return Err(e);
+            }
+        };
+        Ok(Self { front, listener: Some(listener), pump: Some(pump) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.listener.as_ref().expect("listener present until finish").local_addr()
+    }
+
+    /// Whether a graceful shutdown has been requested (`/admin/shutdown`
+    /// or [`request_shutdown`](Self::request_shutdown)).
+    pub fn shutdown_requested(&self) -> bool {
+        self.front.stop.load(Ordering::SeqCst)
+    }
+
+    pub fn request_shutdown(&self) {
+        self.front.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Serve until a shutdown is requested, then drain gracefully.
+    pub fn run(self) -> Result<ServerReport> {
+        while !self.shutdown_requested() {
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.finish()
+    }
+
+    /// Graceful drain: stop accepting, finish every in-flight request,
+    /// stop the pump, shut the router down. The report's per-key stats
+    /// satisfy `completed == accepted` (checked by
+    /// [`ServerReport::verify_drained`]) unless something was genuinely
+    /// lost.
+    pub fn finish(mut self) -> Result<ServerReport> {
+        self.front.stop.store(true, Ordering::SeqCst);
+        // 1. Close the front door and wait out every connection worker —
+        //    each finishes its in-flight request (the pump is still
+        //    delivering completions underneath them).
+        let joined = self.listener.take().expect("listener present until finish").join();
+        // 2. Tell the pump to drain and exit *before* propagating a join
+        //    failure, so an accept-loop panic cannot leave it spinning.
+        self.front.pump_stop.store(true, Ordering::SeqCst);
+        joined?;
+        if let Some(pump) = self.pump.take() {
+            pump.join().map_err(|_| anyhow!("completion pump panicked"))?;
+        }
+        // 3. Drain the router itself.
+        let router = lock(&self.front.router).take().context("router already drained")?;
+        let models = router.shutdown()?;
+        Ok(ServerReport { models, served: self.front.served.load(Ordering::SeqCst) })
+    }
+}

@@ -37,10 +37,14 @@
 //! (incremented at the front, decremented by the worker as it forwards
 //! each completion), and [`WorkerPool::try_submit`] refuses new work with
 //! a typed [`Submission::Shed`] once every shard's depth has reached
-//! `queue_cap` — the load-shedding 429 a network front maps this to.
-//! [`WorkerPool::submit`] is the legacy uncapped path (benchmarks that
-//! want to measure the queue itself); admission-controlled serving goes
-//! through `try_submit`, as [`super::router::Router`] does.
+//! `queue_cap` — the load-shedding 429 the network front
+//! ([`super::net`]) maps this to. [`WorkerPool::submit`] is the uncapped
+//! path (benchmarks that want to measure the queue itself);
+//! admission-controlled serving goes through `try_submit`, as
+//! [`super::router::Router`] does. Both paths route through one private
+//! admission choke point that maintains the pool-level [`PoolStats`]
+//! (`submitted == accepted + shed` by construction), so stats readers
+//! cannot under-report submissions whichever path fed the pool.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -81,6 +85,31 @@ pub enum Submission {
     /// Every shard's in-flight depth was at `queue_cap`; nothing was
     /// enqueued. The caller decides the policy (429, retry, spill).
     Shed { queue_cap: usize },
+}
+
+/// Pool-level submission counters, maintained by the single admission
+/// choke point every submission path goes through ([`WorkerPool::submit`]
+/// and [`WorkerPool::try_submit`] both route via it), so a stats reader
+/// can never under-count `submitted` no matter which path fed the pool.
+///
+/// Invariant: `submitted == accepted + shed` — every call that passed
+/// validation was either enqueued or refused, never both, never neither.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PoolStats {
+    /// Submissions that passed validation (accepted + shed).
+    pub submitted: u64,
+    /// Requests enqueued on a shard (also the next request id).
+    pub accepted: u64,
+    /// Requests refused because every shard was at `queue_cap`.
+    pub shed: u64,
+}
+
+impl PoolStats {
+    /// The choke-point invariant; linear in every counter, so sums of
+    /// consistent stats stay consistent.
+    pub fn consistent(&self) -> bool {
+        self.submitted == self.accepted + self.shed
+    }
 }
 
 /// Default worker count: available cores, capped at 8 shards (beyond
@@ -127,7 +156,7 @@ pub struct WorkerPool {
     shards: Vec<Sender<Job>>,
     workers: Vec<JoinHandle<Result<BatcherStats>>>,
     completions: Receiver<PoolCompletion>,
-    next_id: u64,
+    stats: PoolStats,
     /// Per-shard in-flight depth (front increments, worker decrements as
     /// it forwards each completion). The admission-control signal.
     depth: Vec<Arc<AtomicUsize>>,
@@ -166,7 +195,15 @@ impl WorkerPool {
             depth.push(shard_depth);
         }
         let queue_cap = cfg.queue_cap;
-        Ok(Self { engine, shards, workers, completions, next_id: 0, depth, queue_cap })
+        Ok(Self {
+            engine,
+            shards,
+            workers,
+            completions,
+            stats: PoolStats::default(),
+            depth,
+            queue_cap,
+        })
     }
 
     /// Convenience: load a `.cgmqm` file and serve it pooled.
@@ -184,17 +221,17 @@ impl WorkerPool {
 
     /// Route one request round-robin to its shard; returns the global id
     /// its [`PoolCompletion`] will carry. Non-blocking and **uncapped** —
-    /// `queue_cap` is not consulted on this path (it still maintains the
-    /// depth counters, so mixing `submit` and [`try_submit`] stays
-    /// coherent). Admission-controlled serving uses `try_submit`.
+    /// `queue_cap` is not enforced on this path, but it goes through the
+    /// same private `admit` choke point as [`try_submit`], so the depth
+    /// counters *and* the [`PoolStats`] submission counters stay coherent
+    /// however the pool is fed.
     ///
     /// [`try_submit`]: Self::try_submit
     pub fn submit(&mut self, x: Vec<f32>) -> Result<u64> {
-        if x.len() != self.engine.input_len() {
-            bail!("request has {} values, model wants {}", x.len(), self.engine.input_len());
+        match self.admit(x, false)? {
+            Submission::Accepted { id, .. } => Ok(id),
+            Submission::Shed { .. } => unreachable!("uncapped admission never sheds"),
         }
-        let shard = (self.next_id % self.shards.len() as u64) as usize;
-        self.enqueue(shard, x)
     }
 
     /// Admission-controlled submission: route to the round-robin shard, or
@@ -203,40 +240,58 @@ impl WorkerPool {
     /// of enqueueing it ([`Submission::Shed`]). Input-length validation
     /// failures and a shut-down pool are `Err`, not sheds.
     pub fn try_submit(&mut self, x: Vec<f32>) -> Result<Submission> {
+        self.admit(x, true)
+    }
+
+    /// The single admission choke point both submission paths go through:
+    /// validates, picks the shard, enqueues or sheds, and maintains the
+    /// [`PoolStats`] counters — so `submitted == accepted + shed` holds by
+    /// construction for any mix of `submit` and `try_submit` calls.
+    /// Validation failures and a shut-down pool are `Err` and count as
+    /// nothing.
+    fn admit(&mut self, x: Vec<f32>, enforce_cap: bool) -> Result<Submission> {
         if x.len() != self.engine.input_len() {
             bail!("request has {} values, model wants {}", x.len(), self.engine.input_len());
         }
         let n = self.shards.len();
-        let start = (self.next_id % n as u64) as usize;
+        let start = (self.stats.accepted % n as u64) as usize;
         let shard = (0..n).map(|k| (start + k) % n).find(|&s| {
-            self.queue_cap == 0 || self.depth[s].load(Ordering::SeqCst) < self.queue_cap
+            !enforce_cap
+                || self.queue_cap == 0
+                || self.depth[s].load(Ordering::SeqCst) < self.queue_cap
         });
         match shard {
             Some(shard) => {
-                let id = self.enqueue(shard, x)?;
+                let id = self.stats.accepted;
+                self.depth[shard].fetch_add(1, Ordering::SeqCst);
+                if self.shards[shard].send(Job { id, x }).is_err() {
+                    self.depth[shard].fetch_sub(1, Ordering::SeqCst);
+                    bail!("serve worker {shard} has shut down");
+                }
+                self.stats.submitted += 1;
+                self.stats.accepted += 1;
                 Ok(Submission::Accepted { id, shard })
             }
-            None => Ok(Submission::Shed { queue_cap: self.queue_cap }),
+            None => {
+                self.stats.submitted += 1;
+                self.stats.shed += 1;
+                Ok(Submission::Shed { queue_cap: self.queue_cap })
+            }
         }
-    }
-
-    fn enqueue(&mut self, shard: usize, x: Vec<f32>) -> Result<u64> {
-        let id = self.next_id;
-        self.depth[shard].fetch_add(1, Ordering::SeqCst);
-        if self.shards[shard].send(Job { id, x }).is_err() {
-            self.depth[shard].fetch_sub(1, Ordering::SeqCst);
-            bail!("serve worker {shard} has shut down");
-        }
-        self.next_id += 1;
-        Ok(id)
     }
 
     /// Requests accepted so far (`submit` + admitted `try_submit` calls);
-    /// also the next global id. Shed counting is the caller's concern —
-    /// [`try_submit`](Self::try_submit) returns the outcome, and
-    /// [`super::router::RouteStats`] keeps the authoritative counters.
+    /// also the next global id.
     pub fn accepted(&self) -> u64 {
-        self.next_id
+        self.stats.accepted
+    }
+
+    /// The pool-level submission counters (see [`PoolStats`]). Readers
+    /// such as [`super::router::Router::stats`] fold these into their own
+    /// accounting instead of re-counting per call site, so no submission
+    /// path can escape the books.
+    pub fn stats(&self) -> PoolStats {
+        self.stats
     }
 
     /// Completions that have arrived so far (non-blocking).

@@ -46,7 +46,8 @@ use anyhow::{bail, Context, Result};
 
 use super::batch::BatcherStats;
 use super::engine::Engine;
-use super::pool::{PoolCompletion, PoolConfig, Submission, WorkerPool};
+use super::pool::{PoolCompletion, PoolConfig, PoolStats, Submission, WorkerPool};
+use crate::util::json::Json;
 
 /// Cumulative per-model routing statistics.
 ///
@@ -89,6 +90,28 @@ impl RouteStats {
             && self.completed <= self.accepted
             && self.batch.consistent()
     }
+
+    /// Fold a pool's choke-point counters into this snapshot.
+    fn add_pool(&mut self, p: PoolStats) {
+        self.submitted += p.submitted;
+        self.accepted += p.accepted;
+        self.shed += p.shed;
+    }
+
+    /// The wire form the `/stats` endpoint and the bench reports share.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::num(self.submitted as f64)),
+            ("accepted", Json::num(self.accepted as f64)),
+            ("completed", Json::num(self.completed as f64)),
+            ("shed", Json::num(self.shed as f64)),
+            ("shed_rate", Json::num(self.shed_rate())),
+            ("swaps", Json::num(self.swaps as f64)),
+            ("flushes", Json::num(self.batch.flushes as f64)),
+            ("engine_calls", Json::num(self.batch.engine_calls as f64)),
+            ("mean_batch", Json::num(self.batch.mean_batch())),
+        ])
+    }
 }
 
 /// Everything a drained model entry reports: the completions that were
@@ -105,6 +128,13 @@ struct ModelEntry {
     /// live pool's shard-local ids are offset by this so `(key, id)` stays
     /// unique across hot swaps.
     base: u64,
+    /// Routing stats *excluding* the live pool's submission counters:
+    /// `completed`/`swaps`/`batch` accrue here directly, while
+    /// `submitted`/`accepted`/`shed` are folded in from each pool's
+    /// [`PoolStats`] choke point when that pool is drained (swap/shutdown).
+    /// [`stats_now`](Self::stats_now) adds the live pool's counters, so a
+    /// reader always sees the authoritative totals — no per-call-site
+    /// bookkeeping that an uncapped submission path could bypass.
     stats: RouteStats,
     /// Completions drained from a swapped-out pool, ids already remapped;
     /// delivered ahead of live completions by `try_completions`.
@@ -112,9 +142,18 @@ struct ModelEntry {
 }
 
 impl ModelEntry {
+    /// The authoritative stats snapshot: drained-pool totals plus the live
+    /// pool's choke-point counters.
+    fn stats_now(&self) -> RouteStats {
+        let mut s = self.stats;
+        s.add_pool(self.pool.stats());
+        s
+    }
+
     /// Shut the live pool down and fold everything into a final report.
     fn drain(mut self) -> Result<ModelReport> {
         let base = self.base;
+        self.stats.add_pool(self.pool.stats());
         let (rest, shard_stats) = self.pool.shutdown()?;
         self.stats.batch.merge(&BatcherStats::merge_all(&shard_stats));
         let mut completions = std::mem::take(&mut self.carryover);
@@ -184,11 +223,21 @@ impl Router {
         Ok(self.entry(key)?.pool.engine())
     }
 
-    /// A snapshot of `key`'s routing statistics. `batch` covers only the
-    /// pools drained so far — the live pool's shard counters join at
-    /// shutdown/remove.
+    /// A snapshot of `key`'s routing statistics —
+    /// `submitted`/`accepted`/`shed` come from the pools' own admission
+    /// choke points (every drained pool plus the live one), so the totals
+    /// are authoritative whichever submission path fed them. `batch`
+    /// covers only the pools drained so far — the live pool's shard
+    /// counters join at shutdown/remove.
     pub fn stats(&self, key: &str) -> Result<RouteStats> {
-        Ok(self.entry(key)?.stats)
+        Ok(self.entry(key)?.stats_now())
+    }
+
+    /// Stats snapshots of every loaded model in one call — what the
+    /// `/stats` endpoint serves and the bench reports iterate, instead of
+    /// stitching `keys()` + `stats(key)` per model.
+    pub fn stats_all(&self) -> BTreeMap<String, RouteStats> {
+        self.models.iter().map(|(k, e)| (k.clone(), e.stats_now())).collect()
     }
 
     /// Route one request to the model behind `key`. Returns the admission
@@ -198,17 +247,13 @@ impl Router {
     /// inputs are `Err` (and are not counted as submitted).
     pub fn try_submit(&mut self, key: &str, x: Vec<f32>) -> Result<Submission> {
         let entry = self.entry_mut(key)?;
-        let outcome = entry.pool.try_submit(x)?;
-        entry.stats.submitted += 1;
-        match outcome {
+        // Counting happens inside the pool's admission choke point; the
+        // router only remaps the id into the per-key space.
+        match entry.pool.try_submit(x)? {
             Submission::Accepted { id, shard } => {
-                entry.stats.accepted += 1;
                 Ok(Submission::Accepted { id: entry.base + id, shard })
             }
-            shed @ Submission::Shed { .. } => {
-                entry.stats.shed += 1;
-                Ok(shed)
-            }
+            shed @ Submission::Shed { .. } => Ok(shed),
         }
     }
 
@@ -261,6 +306,7 @@ impl Router {
         let old_pool = std::mem::replace(&mut entry.pool, new_pool);
         let old_base = entry.base;
         entry.base += old_pool.accepted();
+        entry.stats.add_pool(old_pool.stats());
         let (rest, shard_stats) = old_pool.shutdown()?;
         entry.stats.batch.merge(&BatcherStats::merge_all(&shard_stats));
         let carried = rest.len();

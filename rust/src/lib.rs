@@ -51,10 +51,13 @@
 //! bit-for-bit; [`deploy::RequestBatcher`] batches single-sample `infer`
 //! requests, [`deploy::WorkerPool`] serves one shared `Arc<Engine>` from
 //! N sharded worker threads with bounded admission (`try_submit` sheds
-//! once the per-shard in-flight cap is hit), and [`deploy::Router`] runs
+//! once the per-shard in-flight cap is hit), [`deploy::Router`] runs
 //! several models/versions side by side with per-model stats and
-//! zero-downtime hot swap (`cgmq export --format packed`, `cgmq infer`,
-//! `cgmq serve-bench --workers N`, `cgmq route-bench --models ...`).
+//! zero-downtime hot swap, and [`deploy::net::Server`] exposes the router
+//! over a std-only HTTP/1.1 front — overload answered `429 Retry-After`,
+//! graceful drain on shutdown (`cgmq export --format packed`, `cgmq
+//! infer`, `cgmq serve-bench --workers N`, `cgmq route-bench --models
+//! ...`, `cgmq serve` + `cgmq load-bench`).
 //!
 //! ### Migrating from `Trainer`
 //!

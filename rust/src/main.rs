@@ -8,6 +8,8 @@
 //!   infer      run a packed .cgmqm model on IDX / synthetic inputs
 //!   serve-bench  throughput/latency of the batched serve path
 //!   route-bench  multi-model router: routing, bounded queues + shed, hot swap
+//!   serve      HTTP/1.1 network front over the router (429 on overload)
+//!   load-bench loopback load generator against a running `serve`
 //!   table1/2/3 regenerate the paper's tables
 //!   table-deploy packed-model size + engine throughput table
 //!   a2         penalty-method (DQ-style) tuning comparison
@@ -68,6 +70,24 @@ COMMANDS
              across keys through bounded per-shard queues — overload is
              shed, not queued; --swap hot-swaps every model mid-traffic;
              prints per-model throughput/shed/swap stats as JSON)
+  serve      --models <key=m.cgmqm,...> [--addr <host:port>] [--workers <n>]
+             [--batch <b>] [--deadline-us <d>] [--queue-cap <c>]
+             [--max-body-kib <k>] [--addr-file <path>]
+             (HTTP/1.1 front over the router: POST /v1/models/{key}/infer,
+             GET /healthz, GET /stats, POST /admin/shutdown; overload is
+             answered 429 + Retry-After; --addr 127.0.0.1:0 picks an
+             ephemeral port, written to --addr-file; on shutdown the
+             server drains, prints final stats JSON and exits non-zero if
+             any accepted request was lost)
+  load-bench --addr <host:port> [--key <k>] [--requests <n>] [--clients <n>]
+             [--rate <rps>] [--seed <s>] [--verify-model <m.cgmqm>]
+             [--min-shed <n>] [--shutdown]
+             (loopback load generator: open-loop client threads, 429s are
+             counted and retried until accepted; --verify-model pins every
+             HTTP response bit-identical to the direct engine output;
+             --min-shed asserts the burst saturated admission; --shutdown
+             drains the server afterwards; prints throughput/shed/latency
+             percentiles as JSON)
   fixed-qat  --bits <b> + config flags (uniform-bit QAT baseline)
   myqasr     config flags (heuristic baseline; layer granularity)
   table1     --config <toml>   (method comparison @ bound 0.40%)
@@ -112,6 +132,8 @@ fn run(argv: &[String]) -> Result<()> {
         "infer" => cmd_infer(&args),
         "serve-bench" => cmd_serve_bench(&args),
         "route-bench" => cmd_route_bench(&args),
+        "serve" => cmd_serve(&args),
+        "load-bench" => cmd_load_bench(&args),
         "fixed-qat" => cmd_fixed_qat(&args),
         "myqasr" => cmd_myqasr(&args),
         "table1" => cmd_table(&args, 1),
@@ -441,10 +463,9 @@ fn cmd_serve_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_route_bench(args: &Args) -> Result<()> {
-    let Some(spec) = args.get("models").map(str::to_string) else {
-        bail!("route-bench needs --models <key=m.cgmqm,key2=m2.cgmqm,...>")
-    };
+/// Parse a `--models key=a.cgmqm,key2=b.cgmqm,...` list (route-bench and
+/// serve share the grammar).
+fn parse_model_list(spec: &str) -> Result<Vec<(String, std::path::PathBuf)>> {
     let mut models: Vec<(String, std::path::PathBuf)> = Vec::new();
     for part in spec.split(',') {
         let Some((key, path)) = part.split_once('=') else {
@@ -459,6 +480,14 @@ fn cmd_route_bench(args: &Args) -> Result<()> {
         }
         models.push((key.to_string(), std::path::PathBuf::from(path)));
     }
+    Ok(models)
+}
+
+fn cmd_route_bench(args: &Args) -> Result<()> {
+    let Some(spec) = args.get("models").map(str::to_string) else {
+        bail!("route-bench needs --models <key=m.cgmqm,key2=m2.cgmqm,...>")
+    };
+    let models = parse_model_list(&spec)?;
     let requests = args.get_usize("requests")?.unwrap_or(256).max(1);
     let batch = args.get_usize("batch")?.unwrap_or(16).max(1);
     let deadline_us = args.get_usize("deadline-us")?.unwrap_or(200) as u64;
@@ -478,6 +507,92 @@ fn cmd_route_bench(args: &Args) -> Result<()> {
     };
     let report = bench_harness::router_bench_files(&models, swap, requests, pool, seed)?;
     println!("{report}");
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use cgmq::deploy::net::{Server, ServerConfig};
+    let Some(spec) = args.get("models").map(str::to_string) else {
+        bail!("serve needs --models <key=m.cgmqm,key2=m2.cgmqm,...>")
+    };
+    let models = parse_model_list(&spec)?;
+    let addr = args.get("addr").unwrap_or("127.0.0.1:8080").to_string();
+    let workers = args.get_usize("workers")?.unwrap_or_else(cgmq::deploy::default_workers).max(1);
+    let batch = args.get_usize("batch")?.unwrap_or(32).max(1);
+    let deadline_us = args.get_usize("deadline-us")?.unwrap_or(200) as u64;
+    // Per-shard in-flight cap; 0 = unbounded (no 429s).
+    let queue_cap = args.get_usize("queue-cap")?.unwrap_or(32);
+    let max_body_kib = args.get_usize("max-body-kib")?.unwrap_or(1024).max(1);
+    let addr_file = args.get("addr-file").map(str::to_string);
+    args.finish()?;
+    let mut engines = Vec::with_capacity(models.len());
+    for (key, path) in models {
+        engines.push((key, std::sync::Arc::new(cgmq::deploy::Engine::load(&path)?)));
+    }
+    let cfg = ServerConfig {
+        pool: cgmq::deploy::PoolConfig {
+            workers,
+            batch: cgmq::deploy::BatchConfig {
+                max_batch: batch,
+                max_delay: std::time::Duration::from_micros(deadline_us),
+            },
+            queue_cap,
+        },
+        max_body: max_body_kib << 10,
+        ..ServerConfig::default()
+    };
+    let keys: Vec<String> = engines.iter().map(|(k, _)| k.clone()).collect();
+    let server = Server::bind(&addr, engines, cfg)?;
+    let bound = server.local_addr();
+    eprintln!(
+        "listening on {bound} (models: {}; POST /v1/models/{{key}}/infer, GET /healthz, \
+         GET /stats, POST /admin/shutdown)",
+        keys.join(", ")
+    );
+    if let Some(path) = addr_file {
+        // Written after bind so a watcher reading it can connect at once.
+        std::fs::write(&path, bound.to_string())?;
+    }
+    // Serve until /admin/shutdown, then drain; exit non-zero if the drain
+    // lost an accepted request.
+    let report = server.run()?;
+    println!("{}", report.to_json());
+    report.verify_drained()?;
+    eprintln!("drained cleanly: every accepted request completed");
+    Ok(())
+}
+
+fn cmd_load_bench(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr").map(str::to_string) else {
+        bail!("load-bench needs --addr <host:port> (from `cgmq serve`)")
+    };
+    let key = args.get("key").unwrap_or("m").to_string();
+    let requests = args.get_usize("requests")?.unwrap_or(256).max(1);
+    let clients = args.get_usize("clients")?.unwrap_or(4).max(1);
+    let rate_rps = args.get_f64("rate")?.unwrap_or(0.0).max(0.0);
+    let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
+    let verify_model = args.get("verify-model").map(std::path::PathBuf::from);
+    let min_shed = args.get_usize("min-shed")?.unwrap_or(0) as u64;
+    let shutdown = args.get_bool("shutdown");
+    args.finish()?;
+    let spec = bench_harness::LoadBenchSpec {
+        addr,
+        key,
+        requests,
+        clients,
+        rate_rps,
+        seed,
+        verify_model,
+        shutdown,
+    };
+    let report = bench_harness::load_bench(&spec)?;
+    println!("{report}");
+    let shed = report.get("shed")?.as_f64()? as u64;
+    if shed < min_shed {
+        bail!(
+            "saturation check failed: observed {shed} shed (429) responses, --min-shed {min_shed}"
+        );
+    }
     Ok(())
 }
 

@@ -1,0 +1,380 @@
+//! Network serving front tests: the HTTP path is held **bit-identical** to
+//! direct `Engine::infer_batch` output, the parser's negative matrix maps
+//! to the documented status taxonomy without ever taking a connection
+//! worker (or the server) down, a saturating burst sheds with 429 while
+//! the `submitted == accepted + shed` accounting holds across the network
+//! layer, and a graceful shutdown drains every accepted request.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+use cgmq::bench_harness::{synthetic_deploy_state, DEPLOY_LEVELS};
+use cgmq::deploy::net::{HttpClient, Server, ServerConfig};
+use cgmq::deploy::{BatchConfig, Engine, PackedModel, PoolConfig};
+use cgmq::model::{mlp, ArchSpec};
+use cgmq::util::json::{self, Json};
+
+fn engine(arch: &ArchSpec, seed: u64) -> Arc<Engine> {
+    let s = synthetic_deploy_state(arch, &DEPLOY_LEVELS, seed);
+    let model = PackedModel::from_state(arch, &s.params, &s.betas_w, &s.betas_a, &s.gates).unwrap();
+    Arc::new(Engine::new(model).unwrap())
+}
+
+fn server_cfg(workers: usize, queue_cap: usize, max_batch: usize, delay: Duration) -> ServerConfig {
+    ServerConfig {
+        pool: PoolConfig {
+            workers,
+            batch: BatchConfig { max_batch, max_delay: delay },
+            queue_cap,
+        },
+        // Bound how long a dangling keep-alive connection can delay join.
+        read_timeout: Duration::from_secs(2),
+        ..ServerConfig::default()
+    }
+}
+
+fn infer_body(x: &[f32]) -> String {
+    Json::obj(vec![("x", Json::arr_f32(x))]).to_string()
+}
+
+/// Assert an HTTP 200 infer response carries exactly `expect_row`'s bits.
+fn assert_bit_identical(body: &str, expect_row: &[f32], ctx: &str) {
+    let parsed = json::parse(body).unwrap();
+    let logits = parsed.get("logits").unwrap().as_f32_vec().unwrap();
+    assert_eq!(logits.len(), expect_row.len(), "{ctx}: logit count");
+    for (j, (a, b)) in logits.iter().zip(expect_row).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{ctx}: logit {j} drifted over HTTP");
+    }
+}
+
+#[test]
+fn http_path_is_bit_identical_to_direct_engine() {
+    let arch = mlp();
+    let in_len = arch.input_len();
+    let requests = 24;
+    let data = cgmq::data::Dataset::synth(11, requests);
+    let eng = engine(&arch, 7);
+    let expect = eng.infer_batch(&data.images, requests).unwrap();
+    let c = expect.len() / requests;
+
+    let server = Server::bind(
+        "127.0.0.1:0",
+        vec![("m".to_string(), Arc::clone(&eng))],
+        server_cfg(2, 0, 4, Duration::from_millis(1)),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    let (status, body) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    assert!(body.contains("\"ok\"") && body.contains("\"m\""), "{body}");
+
+    for i in 0..requests {
+        let body = infer_body(&data.images[i * in_len..(i + 1) * in_len]);
+        let (status, text) = client.request("POST", "/v1/models/m/infer", Some(&body)).unwrap();
+        assert_eq!(status, 200, "request {i}: {text}");
+        let parsed = json::parse(&text).unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_usize().unwrap(), i, "sequential ids");
+        assert_bit_identical(&text, &expect[i * c..(i + 1) * c], &format!("request {i}"));
+        // predicted is the argmax the engine computed, not a re-derivation.
+        let predicted = parsed.get("predicted").unwrap().as_usize().unwrap();
+        assert!(predicted < c);
+    }
+
+    // Routing errors are clean statuses and do not count as submissions.
+    let x = data.images[..in_len].to_vec();
+    let (status, text) =
+        client.request("POST", "/v1/models/nope/infer", Some(&infer_body(&x))).unwrap();
+    assert_eq!(status, 404, "{text}");
+    assert!(text.contains('m'), "404 should list the loaded keys: {text}");
+    let (status, text) =
+        client.request("POST", "/v1/models/m/infer", Some(&infer_body(&x[..3]))).unwrap();
+    assert_eq!(status, 400, "wrong input length: {text}");
+
+    let (status, text) = client.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200, "{text}");
+    let stats = json::parse(&text).unwrap();
+    assert_eq!(stats.get("served").unwrap().as_usize().unwrap(), requests);
+    let m = stats.get("models").unwrap().get("m").unwrap().clone();
+    assert_eq!(m.get("submitted").unwrap().as_usize().unwrap(), requests);
+    assert_eq!(m.get("accepted").unwrap().as_usize().unwrap(), requests);
+    assert_eq!(m.get("shed").unwrap().as_usize().unwrap(), 0);
+
+    drop(client);
+    let report = server.finish().unwrap();
+    report.verify_drained().unwrap();
+    assert_eq!(report.served, requests as u64);
+    let s = report.models["m"].stats;
+    assert_eq!(s.accepted, requests as u64);
+    assert_eq!(s.completed, requests as u64);
+}
+
+/// Write raw bytes, close our write half, read whatever the server says
+/// until it closes. Returns the raw response text ("" if the server just
+/// closed).
+fn raw_exchange(addr: &str, payload: &[u8]) -> String {
+    let mut stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+    stream.write_all(payload).unwrap();
+    stream.shutdown(std::net::Shutdown::Write).unwrap();
+    let mut out = String::new();
+    let _ = stream.read_to_string(&mut out);
+    out
+}
+
+#[test]
+fn negative_matrix_maps_to_documented_statuses_and_keeps_serving() {
+    let arch = mlp();
+    let in_len = arch.input_len();
+    let eng = engine(&arch, 7);
+    let half = vec![0.5f32; in_len];
+    let expect = eng.infer_batch(&half, 1).unwrap();
+    let server = Server::bind(
+        "127.0.0.1:0",
+        vec![("m".to_string(), Arc::clone(&eng))],
+        server_cfg(1, 0, 4, Duration::from_millis(1)),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    let cases: &[(&str, &str)] = &[
+        // malformed request line
+        ("garbage\r\n\r\n", "HTTP/1.1 400 "),
+        // truncated request line, then premature close
+        ("GET /healthz", "HTTP/1.1 400 "),
+        // header line without a colon
+        ("GET /healthz HTTP/1.1\r\nno-colon\r\n\r\n", "HTTP/1.1 400 "),
+        // body-bearing method without Content-Length
+        ("POST /v1/models/m/infer HTTP/1.1\r\n\r\n", "HTTP/1.1 411 "),
+        // declared body over the cap (default 1 MiB) — refused up front
+        (
+            "POST /v1/models/m/infer HTTP/1.1\r\ncontent-length: 99999999\r\n\r\n",
+            "HTTP/1.1 413 ",
+        ),
+        // premature close mid-body
+        (
+            "POST /v1/models/m/infer HTTP/1.1\r\ncontent-length: 50\r\n\r\nabc",
+            "HTTP/1.1 400 ",
+        ),
+        // unknown route / unknown model key
+        ("GET /nope HTTP/1.1\r\n\r\n", "HTTP/1.1 404 "),
+        (
+            "POST /v1/models/nope/infer HTTP/1.1\r\ncontent-length: 9\r\n\r\n{\"x\":[1]}",
+            "HTTP/1.1 404 ",
+        ),
+        // wrong method on known routes
+        ("DELETE /healthz HTTP/1.1\r\n\r\n", "HTTP/1.1 405 "),
+        ("GET /v1/models/m/infer HTTP/1.1\r\n\r\n", "HTTP/1.1 405 "),
+        ("GET /admin/shutdown HTTP/1.1\r\n\r\n", "HTTP/1.1 405 "),
+        // body that is not JSON / not the documented shape
+        (
+            "POST /v1/models/m/infer HTTP/1.1\r\ncontent-length: 3\r\n\r\nxyz",
+            "HTTP/1.1 400 ",
+        ),
+        (
+            "POST /v1/models/m/infer HTTP/1.1\r\ncontent-length: 8\r\n\r\n{\"y\":[]}",
+            "HTTP/1.1 400 ",
+        ),
+    ];
+    for (payload, want) in cases {
+        let got = raw_exchange(&addr, payload.as_bytes());
+        assert!(got.starts_with(want), "payload {payload:?}: expected {want:?}, got {got:?}");
+    }
+
+    // Pipelined garbage after a valid request: first answered 200, the
+    // garbage 400, then the connection closes.
+    let got = raw_exchange(&addr, b"GET /healthz HTTP/1.1\r\n\r\nXYZ\r\n\r\n");
+    assert!(got.starts_with("HTTP/1.1 200 "), "{got:?}");
+    assert!(got.contains("HTTP/1.1 400 "), "{got:?}");
+
+    // A peer that connects and says nothing, then leaves.
+    drop(TcpStream::connect(&addr).unwrap());
+
+    // After the whole matrix the server still serves correct bits.
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+    let (status, _) = client.request("GET", "/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    let (status, text) =
+        client.request("POST", "/v1/models/m/infer", Some(&infer_body(&half))).unwrap();
+    assert_eq!(status, 200, "{text}");
+    assert_bit_identical(&text, &expect, "post-matrix request");
+
+    drop(client);
+    let report = server.finish().unwrap();
+    report.verify_drained().unwrap();
+    // Only the one well-formed infer request ever reached the router.
+    assert_eq!(report.models["m"].stats.submitted, 1);
+}
+
+/// POST `body` until it is accepted, counting 429s along the way; any
+/// other status panics.
+fn submit_until_accepted(client: &mut HttpClient, body: &str) -> (u64, String) {
+    let mut sheds = 0u64;
+    loop {
+        let (status, text) = client.request("POST", "/v1/models/m/infer", Some(body)).unwrap();
+        match status {
+            200 => return (sheds, text),
+            429 => {
+                assert!(text.contains("shed"), "{text}");
+                sheds += 1;
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            s => panic!("unexpected HTTP {s}: {text}"),
+        }
+    }
+}
+
+#[test]
+fn saturating_burst_sheds_with_429_and_accounting_holds() {
+    let arch = mlp();
+    let in_len = arch.input_len();
+    let requests = 8;
+    let data = cgmq::data::Dataset::synth(13, requests);
+    let eng = engine(&arch, 7);
+    let expect = eng.infer_batch(&data.images, requests).unwrap();
+    let c = expect.len() / requests;
+
+    // One worker, in-flight cap 1, max_batch above the cap and a 100ms
+    // deadline: whichever request is admitted holds the only slot until
+    // its deadline flush, so two submissions overlapping in that window
+    // cannot both be admitted first try — one of them MUST see a 429.
+    let server = Server::bind(
+        "127.0.0.1:0",
+        vec![("m".to_string(), Arc::clone(&eng))],
+        server_cfg(1, 1, 64, Duration::from_millis(100)),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let images = Arc::new(data.images);
+
+    // Two overlapping submissions into the single slot. The sleep makes
+    // the overlap overwhelmingly likely but the assertion does not depend
+    // on which side wins the slot — only that they overlapped.
+    let primer = std::thread::spawn({
+        let (addr, images) = (addr.clone(), Arc::clone(&images));
+        move || {
+            let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+            submit_until_accepted(&mut client, &infer_body(&images[..in_len]))
+        }
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    let mut main_client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+    let (main_sheds, text) =
+        submit_until_accepted(&mut main_client, &infer_body(&images[in_len..2 * in_len]));
+    assert_bit_identical(&text, &expect[c..2 * c], "sample 1");
+    let (primer_sheds, text) = primer.join().unwrap();
+    assert_bit_identical(&text, &expect[..c], "primer");
+    assert!(
+        main_sheds + primer_sheds >= 1,
+        "two submissions overlapping one in-flight slot must shed at least once"
+    );
+
+    // Now complete the remaining samples with 429-retry from two
+    // hammering clients.
+    let mut handles = Vec::new();
+    for t in 0..2 {
+        handles.push(std::thread::spawn({
+            let (addr, images) = (addr.clone(), Arc::clone(&images));
+            move || -> Vec<(usize, String)> {
+                let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+                let mut out = Vec::new();
+                let mut i = 2 + t; // samples 0 and 1 are already served
+                while i < requests {
+                    let body = infer_body(&images[i * in_len..(i + 1) * in_len]);
+                    let (_, text) = submit_until_accepted(&mut client, &body);
+                    out.push((i, text));
+                    i += 2;
+                }
+                out
+            }
+        }));
+    }
+    let mut done = 2; // primer + main
+    for handle in handles {
+        for (i, text) in handle.join().unwrap() {
+            assert_bit_identical(&text, &expect[i * c..(i + 1) * c], &format!("sample {i}"));
+            done += 1;
+        }
+    }
+    assert_eq!(done, requests);
+
+    // The accounting invariant held across the network layer.
+    let (status, text) = main_client.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200, "{text}");
+    let stats = json::parse(&text).unwrap();
+    let m = stats.get("models").unwrap().get("m").unwrap().clone();
+    let submitted = m.get("submitted").unwrap().as_usize().unwrap();
+    let accepted = m.get("accepted").unwrap().as_usize().unwrap();
+    let shed = m.get("shed").unwrap().as_usize().unwrap();
+    assert_eq!(submitted, accepted + shed, "submitted == accepted + shed over HTTP");
+    assert_eq!(accepted, requests, "every request eventually admitted");
+    assert!(shed >= 1, "the primed burst must have shed at least once");
+
+    drop(main_client);
+    let report = server.finish().unwrap();
+    report.verify_drained().unwrap();
+    let s = report.models["m"].stats;
+    assert_eq!(s.accepted, requests as u64);
+    assert_eq!(s.completed, requests as u64, "drain lost requests");
+    assert!(s.shed >= 1);
+}
+
+#[test]
+fn graceful_shutdown_drains_accepted_requests() {
+    let arch = mlp();
+    let in_len = arch.input_len();
+    let clients = 4;
+    let data = cgmq::data::Dataset::synth(17, clients);
+    let eng = engine(&arch, 7);
+    let expect = eng.infer_batch(&data.images, clients).unwrap();
+    let c = expect.len() / clients;
+
+    // A 150ms deadline and max_batch above the request count: every
+    // request sits queued when the shutdown lands, so the drain guarantee
+    // is actually exercised.
+    let server = Server::bind(
+        "127.0.0.1:0",
+        vec![("m".to_string(), Arc::clone(&eng))],
+        server_cfg(2, 0, 8, Duration::from_millis(150)),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let images = Arc::new(data.images);
+
+    let mut handles = Vec::new();
+    for i in 0..clients {
+        handles.push(std::thread::spawn({
+            let (addr, images) = (addr.clone(), Arc::clone(&images));
+            move || {
+                let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+                let body = infer_body(&images[i * in_len..(i + 1) * in_len]);
+                client.request("POST", "/v1/models/m/infer", Some(&body)).unwrap()
+            }
+        }));
+    }
+    // Let the requests reach the queues, then ask for a graceful drain
+    // the way an operator would: over HTTP.
+    std::thread::sleep(Duration::from_millis(40));
+    let mut admin = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+    let (status, text) = admin.request("POST", "/admin/shutdown", Some("{}")).unwrap();
+    assert_eq!(status, 200, "{text}");
+    assert!(text.contains("draining"), "{text}");
+    drop(admin);
+
+    // run() observes the shutdown request and drains: every in-flight
+    // request must still be answered 200 with the right bits.
+    let report = server.run().unwrap();
+    for (i, handle) in handles.into_iter().enumerate() {
+        let (status, text) = handle.join().unwrap();
+        assert_eq!(status, 200, "request {i} dropped by shutdown: {text}");
+        assert_bit_identical(&text, &expect[i * c..(i + 1) * c], &format!("request {i}"));
+    }
+    report.verify_drained().unwrap();
+    let s = report.models["m"].stats;
+    assert_eq!(s.accepted, clients as u64);
+    assert_eq!(s.completed, clients as u64, "graceful drain lost a request");
+    assert_eq!(report.served, clients as u64);
+}
