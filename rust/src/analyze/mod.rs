@@ -1,0 +1,177 @@
+//! `cgmq-analyze`: a std-only invariant lint pass over this crate's own
+//! source.
+//!
+//! The serving spine rests on hand-maintained concurrency invariants —
+//! `submitted == accepted + shed` through single choke points, the atomic
+//! orderings on in-flight depth counters, the one-mutex submission front,
+//! the documented HTTP status taxonomy. Nothing in the type system checks
+//! any of that, so this module does: [`analyze_crate`] token-scans
+//! `rust/src` and enforces the rule catalog in [`rules`] deny-by-default,
+//! with `analyze-allow: <rule> <reason>` comments as the only escape
+//! hatch (and `bad-allow` vetting the escapes themselves).
+//!
+//! The scanner ([`scan`]) is deliberately not a Rust parser: it
+//! understands strings, comments, braces, `#[cfg(test)]` blocks and `fn`
+//! names — enough to lint this crate reliably, with the fixture tests in
+//! `tests/analyze.rs` pinning exactly which shapes it gets right.
+//!
+//! Run it as `cgmq analyze [--root <repo>] [--json]`; `make analyze`
+//! wires it into `make ci`, and the GitHub workflow runs it on every
+//! push. The dynamic-analysis complements (ThreadSanitizer, Miri) live in
+//! the workflow's nightly jobs, not here.
+
+pub mod rules;
+pub mod scan;
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// One rule violation: where, what, and how to fix it.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Rule id (one of [`rules::ALL_RULES`]).
+    pub rule: &'static str,
+    /// Repo-relative path with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// What is wrong at that line.
+    pub message: String,
+    /// How to fix it (or how to allowlist it honestly).
+    pub hint: String,
+}
+
+impl Finding {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("rule", Json::str(self.rule)),
+            ("file", Json::str(self.file.as_str())),
+            ("line", Json::num(self.line as f64)),
+            ("message", Json::str(self.message.as_str())),
+            ("hint", Json::str(self.hint.as_str())),
+        ])
+    }
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let Self { rule, file, line, message, hint } = self;
+        write!(f, "{file}:{line} [{rule}] {message}\n    fix: {hint}")
+    }
+}
+
+/// The outcome of an analysis run.
+#[derive(Debug, Default)]
+pub struct Report {
+    /// Findings in (file, line) order.
+    pub findings: Vec<Finding>,
+    /// How many files were scanned.
+    pub files_scanned: usize,
+}
+
+impl Report {
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("findings", Json::Arr(self.findings.iter().map(Finding::to_json).collect())),
+            ("count", Json::num(self.findings.len() as f64)),
+            ("clean", Json::Bool(self.clean())),
+        ])
+    }
+
+    /// Human-readable rendering (one block per finding + a tally line).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for f in &self.findings {
+            out.push_str(&f.to_string());
+            out.push('\n');
+        }
+        if self.clean() {
+            out.push_str(&format!("analyze: clean ({} files scanned)\n", self.files_scanned));
+        } else {
+            out.push_str(&format!(
+                "analyze: {} finding(s) across {} files scanned\n",
+                self.findings.len(),
+                self.files_scanned
+            ));
+        }
+        out
+    }
+}
+
+/// Scan one source string under a virtual path and return its findings.
+/// This is the entry point the fixture tests drive; [`analyze_crate`] is
+/// the same thing over the real tree.
+pub fn analyze_source(path: &str, src: &str) -> Vec<Finding> {
+    rules::check_file(&scan::scan(path, src))
+}
+
+/// Analyze the crate rooted at `root` (the directory holding `Cargo.toml`,
+/// `rust/src` and `README.md`): every `.rs` file under `rust/src`, plus
+/// the README/taxonomy cross-check.
+pub fn analyze_crate(root: &Path) -> Result<Report> {
+    let src_root = root.join("rust").join("src");
+    let mut files = Vec::new();
+    collect_rs(&src_root, &mut files)
+        .with_context(|| format!("walking {}", src_root.display()))?;
+    files.sort();
+    let mut report = Report::default();
+    for path in &files {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let rel = rel_path(root, path);
+        report.findings.extend(analyze_source(&rel, &src));
+        report.files_scanned += 1;
+    }
+    // The taxonomy cross-check reads two specific files; their absence is
+    // itself a finding (a deleted README table must not pass silently).
+    let http_path = root.join("rust/src/deploy/net/http.rs");
+    let readme_path = root.join("README.md");
+    match (std::fs::read_to_string(&http_path), std::fs::read_to_string(&readme_path)) {
+        (Ok(http_src), Ok(readme_src)) => {
+            report.findings.extend(rules::check_taxonomy(
+                &rel_path(root, &http_path),
+                &http_src,
+                &rel_path(root, &readme_path),
+                &readme_src,
+            ));
+        }
+        _ => report.findings.push(Finding {
+            rule: rules::RULE_TAXONOMY,
+            file: "README.md".to_string(),
+            line: 1,
+            message: "cannot read http.rs + README.md for the taxonomy cross-check".to_string(),
+            hint: "run from the repo root or pass --root <repo>".to_string(),
+        }),
+    }
+    report.findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
+    Ok(report)
+}
+
+fn rel_path(root: &Path, path: &Path) -> String {
+    path.strip_prefix(root)
+        .unwrap_or(path)
+        .to_string_lossy()
+        .replace('\\', "/")
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}

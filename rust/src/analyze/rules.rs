@@ -1,0 +1,483 @@
+//! The rule families of `cgmq analyze`.
+//!
+//! Every rule is deny-by-default: a hit is a [`Finding`] unless the line
+//! carries an `analyze-allow: <rule-id> <reason>` annotation (same line or
+//! the comment run directly above). The catalog:
+//!
+//! * `panic-hygiene` — no `.unwrap()` / `.expect(` / `panic!` /
+//!   `unreachable!` / `todo!` / `unimplemented!` / `dbg!` in the serving
+//!   hot-path files under `src/deploy/` (everything except the load-time
+//!   `format.rs` and the test-oracle `reference.rs`). A connection worker,
+//!   batcher loop or engine forward that can panic turns one bad request
+//!   into a dead thread.
+//! * `atomic-ordering` — every `Ordering::` use, crate-wide, must carry an
+//!   `// ordering:` justification on the same line or directly above. The
+//!   choice of memory ordering is exactly the kind of invariant that looks
+//!   arbitrary to the next editor unless the reasoning is pinned to the
+//!   site.
+//! * `atomic-seqcst` — `Ordering::SeqCst` inside the named hot functions
+//!   of `src/deploy/` is flagged: on the per-request path the full fence
+//!   is either load-bearing (then it deserves an explicit allow with the
+//!   protocol written down) or an accidental default.
+//! * `lock-scope` — a lock-guard binding whose (linearly approximated)
+//!   scope also contains a blocking call or a second lock acquisition.
+//!   These are the deadlock / latency-collapse shapes the `Server` pump
+//!   and connection workers must never grow.
+//! * `counter-choke` — `fetch_add`/`fetch_sub` on the named stats counters
+//!   (`depth`, `outstanding`, `served`) outside their choke-point
+//!   functions. The `submitted == accepted + shed` accounting survives
+//!   only while every mutation goes through the single admission/delivery
+//!   sites.
+//! * `taxonomy-sync` — the non-200 status codes `deploy/net/http.rs` can
+//!   emit must match the machine-checked taxonomy table in README.md
+//!   (between the `analyze:taxonomy` markers).
+//! * `bad-allow` — an `analyze-allow:` annotation naming an unknown rule
+//!   or missing a reason (typo guard: a misspelled allow must not silently
+//!   disable nothing).
+
+use super::scan::{allowed, has_marker, parse_allows, ScannedFile, SourceLine};
+use super::Finding;
+
+/// Rule ids, as they appear in findings and allow annotations.
+pub const RULE_PANIC: &str = "panic-hygiene";
+pub const RULE_ORDERING: &str = "atomic-ordering";
+pub const RULE_SEQCST: &str = "atomic-seqcst";
+pub const RULE_LOCK: &str = "lock-scope";
+pub const RULE_COUNTER: &str = "counter-choke";
+pub const RULE_TAXONOMY: &str = "taxonomy-sync";
+pub const RULE_BAD_ALLOW: &str = "bad-allow";
+
+/// Every known rule id (what `bad-allow` validates against).
+pub const ALL_RULES: [&str; 7] = [
+    RULE_PANIC,
+    RULE_ORDERING,
+    RULE_SEQCST,
+    RULE_LOCK,
+    RULE_COUNTER,
+    RULE_TAXONOMY,
+    RULE_BAD_ALLOW,
+];
+
+/// Tokens the panic rule refuses in hot-path files.
+const PANIC_TOKENS: [&str; 7] = [
+    ".unwrap()",
+    ".expect(",
+    "panic!(",
+    "unreachable!(",
+    "todo!(",
+    "unimplemented!(",
+    "dbg!(",
+];
+
+/// Functions on the per-request path, where a `SeqCst` fence needs an
+/// explicit justification-by-allow rather than being the default.
+const HOT_FNS: [&str; 11] = [
+    "admit",
+    "worker_loop",
+    "connection_loop",
+    "accept_loop",
+    "sweep",
+    "pump_loop",
+    "await_completion",
+    "submit",
+    "run_flush",
+    "poll_at",
+    "submit_at",
+];
+
+/// Calls that block the current thread. A live lock guard over any of
+/// these is the latency/deadlock shape the rule exists for. Condvar
+/// `wait`/`wait_timeout` are deliberately absent: they release the guard.
+const BLOCKING_TOKENS: [&str; 7] = [
+    ".recv()",
+    ".recv(",
+    ".recv_timeout(",
+    ".accept(",
+    "read_to_end(",
+    "read_exact(",
+    "::sleep(",
+];
+
+/// The stats counters and the only functions allowed to mutate them.
+const COUNTER_CHOKES: [(&str, &[&str]); 3] = [
+    ("depth", &["admit", "worker_loop"]),
+    ("outstanding", &["submit", "await_completion"]),
+    ("served", &["await_completion"]),
+];
+
+fn in_deploy(path: &str) -> bool {
+    path.contains("src/deploy/")
+}
+
+fn panic_scope(path: &str) -> bool {
+    in_deploy(path) && !path.ends_with("format.rs") && !path.ends_with("reference.rs")
+}
+
+/// Run every per-file rule over one scanned file.
+pub fn check_file(file: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    out.extend(bad_allows(file));
+    out.extend(panic_hygiene(file));
+    out.extend(atomic_ordering(file));
+    out.extend(atomic_seqcst(file));
+    out.extend(lock_scope(file));
+    out.extend(counter_choke(file));
+    out
+}
+
+fn finding(
+    file: &ScannedFile,
+    line: &SourceLine,
+    rule: &'static str,
+    message: String,
+    hint: &str,
+) -> Finding {
+    Finding {
+        rule,
+        file: file.path.clone(),
+        line: line.number,
+        message,
+        hint: hint.to_string(),
+    }
+}
+
+fn bad_allows(file: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for line in &file.lines {
+        for (rule, reason) in parse_allows(&line.comment) {
+            if !ALL_RULES.contains(&rule.as_str()) {
+                out.push(finding(
+                    file,
+                    line,
+                    RULE_BAD_ALLOW,
+                    format!("analyze-allow names unknown rule '{rule}'"),
+                    "valid rules: panic-hygiene, atomic-ordering, atomic-seqcst, \
+                     lock-scope, counter-choke, taxonomy-sync",
+                ));
+            } else if reason.is_empty() {
+                out.push(finding(
+                    file,
+                    line,
+                    RULE_BAD_ALLOW,
+                    format!("analyze-allow for '{rule}' has no reason"),
+                    "write `// analyze-allow: <rule> <why this site is exempt>`",
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn panic_hygiene(file: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !panic_scope(&file.path) {
+        return out;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for token in PANIC_TOKENS {
+            if line.code.contains(token) && !allowed(&file.lines, idx, RULE_PANIC) {
+                out.push(finding(
+                    file,
+                    line,
+                    RULE_PANIC,
+                    format!("'{token}' in a deploy hot path"),
+                    "return a typed error (bail!/ok_or_else) so one bad request \
+                     cannot kill a serving thread, or allowlist with a reason",
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn atomic_ordering(file: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test || !line.code.contains("Ordering::") {
+            continue;
+        }
+        if has_marker(&file.lines, idx, "ordering:")
+            || allowed(&file.lines, idx, RULE_ORDERING)
+        {
+            continue;
+        }
+        out.push(finding(
+            file,
+            line,
+            RULE_ORDERING,
+            "atomic access without an `// ordering:` justification".to_string(),
+            "state why this memory ordering is correct on the same line or \
+             the comment directly above (e.g. `// ordering: relaxed — pure \
+             counter, no synchronization edge`)",
+        ));
+    }
+    out
+}
+
+fn atomic_seqcst(file: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_deploy(&file.path) {
+        return out;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test || !line.code.contains("Ordering::SeqCst") {
+            continue;
+        }
+        let hot = line.fn_name.as_deref().map(|f| HOT_FNS.contains(&f)).unwrap_or(false);
+        if !hot || allowed(&file.lines, idx, RULE_SEQCST) {
+            continue;
+        }
+        let f = line.fn_name.as_deref().unwrap_or("?");
+        out.push(finding(
+            file,
+            line,
+            RULE_SEQCST,
+            format!("SeqCst on the hot path (fn {f})"),
+            "use Relaxed/Acquire/Release with an `// ordering:` argument, or \
+             allowlist with the protocol that needs the full fence",
+        ));
+    }
+    out
+}
+
+/// A guard the lock rule is tracking.
+struct Guard {
+    name: String,
+    depth: usize,
+    line: usize,
+}
+
+fn lock_scope(file: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_deploy(&file.path) {
+        return out;
+    }
+    let mut guards: Vec<Guard> = Vec::new();
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        // `drop(name)` ends a guard's scope on the spot.
+        guards.retain(|g| !line.code.contains(&format!("drop({})", g.name)));
+        let has_lock = line.code.contains("lock(") || line.code.contains(".lock()");
+        if let Some(oldest) = guards.first() {
+            if has_lock && !allowed(&file.lines, idx, RULE_LOCK) {
+                out.push(finding(
+                    file,
+                    line,
+                    RULE_LOCK,
+                    format!(
+                        "second lock acquisition while guard '{}' (line {}) is live",
+                        oldest.name, oldest.line
+                    ),
+                    "nested locks deadlock the moment another path takes them \
+                     in the other order; drop the first guard, or allowlist \
+                     with the documented acquisition order",
+                ));
+            }
+            for token in BLOCKING_TOKENS {
+                if line.code.contains(token) && !allowed(&file.lines, idx, RULE_LOCK) {
+                    out.push(finding(
+                        file,
+                        line,
+                        RULE_LOCK,
+                        format!(
+                            "blocking call '{token}' while guard '{}' (line {}) is live",
+                            oldest.name, oldest.line
+                        ),
+                        "blocking under a lock stalls every other thread on \
+                         that mutex; move the call outside the guard's scope",
+                    ));
+                    break;
+                }
+            }
+        }
+        if let Some(name) = lock_binding(&line.code) {
+            guards.push(Guard { name, depth: line.depth_after, line: line.number });
+        }
+        // Block exit closes every guard declared deeper than where we are.
+        guards.retain(|g| g.depth <= line.depth_after);
+    }
+    out
+}
+
+/// `let [mut] <name> = ...lock(...)...;` on one line. A linear
+/// approximation: the guard is assumed live until `drop(<name>)` or the
+/// end of its block, whichever the scan sees first.
+fn lock_binding(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    let rest = t.strip_prefix("let ")?;
+    let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+    let name: String =
+        rest.chars().take_while(|c| c.is_alphanumeric() || *c == '_').collect();
+    if name.is_empty() {
+        return None;
+    }
+    let rhs = code.split_once('=').map(|(_, r)| r)?;
+    if rhs.contains("lock(") || rhs.contains(".lock()") {
+        Some(name)
+    } else {
+        None
+    }
+}
+
+fn counter_choke(file: &ScannedFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !in_deploy(&file.path) {
+        return out;
+    }
+    for (idx, line) in file.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for op in [".fetch_add(", ".fetch_sub("] {
+            let Some(pos) = line.code.find(op) else { continue };
+            let receiver = receiver_before(&line.code, pos);
+            for (counter, allowed_fns) in COUNTER_CHOKES {
+                if !receiver.contains(counter) {
+                    continue;
+                }
+                let ok = line
+                    .fn_name
+                    .as_deref()
+                    .map(|f| allowed_fns.contains(&f))
+                    .unwrap_or(false);
+                if ok || allowed(&file.lines, idx, RULE_COUNTER) {
+                    continue;
+                }
+                out.push(finding(
+                    file,
+                    line,
+                    RULE_COUNTER,
+                    format!(
+                        "direct {} on counter '{counter}' outside {:?} (in fn {})",
+                        op.trim_matches(|c| c == '.' || c == '('),
+                        allowed_fns,
+                        line.fn_name.as_deref().unwrap_or("?"),
+                    ),
+                    "stats counters are only coherent because every mutation \
+                     goes through the admission/delivery choke points; route \
+                     this update through them instead of a new call site",
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// The dotted receiver expression ending right before byte `pos`.
+fn receiver_before(code: &str, pos: usize) -> &str {
+    let bytes = code.as_bytes();
+    let mut start = pos;
+    while start > 0 {
+        let c = bytes[start - 1] as char;
+        if c.is_alphanumeric() || matches!(c, '_' | '.' | '[' | ']') {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    &code[start..pos]
+}
+
+// ---------------------------------------------------------------------------
+// taxonomy-sync
+// ---------------------------------------------------------------------------
+
+/// Begin/end markers of the machine-checked README taxonomy table.
+pub const TAXONOMY_BEGIN: &str = "<!-- analyze:taxonomy:begin -->";
+pub const TAXONOMY_END: &str = "<!-- analyze:taxonomy:end -->";
+
+/// Compare the non-200 status codes `http.rs` can emit (the `Status::code`
+/// match arms) against the codes the README taxonomy table documents
+/// (`**NNN**` between the markers). Either direction of drift is a
+/// finding.
+pub fn check_taxonomy(
+    http_path: &str,
+    http_src: &str,
+    readme_path: &str,
+    readme_src: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut emitted: Vec<(u16, usize)> = Vec::new();
+    for (idx, line) in http_src.lines().enumerate() {
+        if !line.contains("Status::") || !line.contains("=>") {
+            continue;
+        }
+        if let Some(code) = trailing_code(line) {
+            if code != 200 && !emitted.iter().any(|(c, _)| *c == code) {
+                emitted.push((code, idx + 1));
+            }
+        }
+    }
+    let begin = readme_src.find(TAXONOMY_BEGIN);
+    let end = readme_src.find(TAXONOMY_END);
+    let (Some(begin), Some(end)) = (begin, end) else {
+        out.push(Finding {
+            rule: RULE_TAXONOMY,
+            file: readme_path.to_string(),
+            line: 1,
+            message: format!(
+                "README has no '{TAXONOMY_BEGIN}' ... '{TAXONOMY_END}' block"
+            ),
+            hint: "wrap the status-code taxonomy table in the analyze markers \
+                   so it stays machine-checked against http.rs"
+                .to_string(),
+        });
+        return out;
+    };
+    let marker_line = readme_src[..begin].lines().count() + 1;
+    let mut documented: Vec<u16> = Vec::new();
+    let table = &readme_src[begin..end];
+    let bytes = table.as_bytes();
+    let mut i = 0;
+    while let Some(pos) = table[i..].find("**") {
+        let at = i + pos + 2;
+        let digits: String = table[at..].chars().take_while(|c| c.is_ascii_digit()).collect();
+        if digits.len() == 3 && table[at + 3..].starts_with("**") {
+            if let Ok(code) = digits.parse::<u16>() {
+                if !documented.contains(&code) {
+                    documented.push(code);
+                }
+            }
+        }
+        i = at.min(bytes.len());
+    }
+    for (code, line) in &emitted {
+        if !documented.contains(code) {
+            out.push(Finding {
+                rule: RULE_TAXONOMY,
+                file: http_path.to_string(),
+                line: *line,
+                message: format!("status {code} is emitted but absent from the README taxonomy"),
+                hint: format!("add a **{code}** row to the table between the analyze markers"),
+            });
+        }
+    }
+    for code in &documented {
+        if !emitted.iter().any(|(c, _)| c == code) {
+            out.push(Finding {
+                rule: RULE_TAXONOMY,
+                file: readme_path.to_string(),
+                line: marker_line,
+                message: format!("README documents status {code} but http.rs never emits it"),
+                hint: "remove the stale row (or wire the status into Status::code)".to_string(),
+            });
+        }
+    }
+    out
+}
+
+/// The integer right after `=> ` on a `Status::X => NNN,` match-arm line.
+fn trailing_code(line: &str) -> Option<u16> {
+    let after = line.split("=>").nth(1)?.trim();
+    let digits: String = after.chars().take_while(|c| c.is_ascii_digit()).collect();
+    if digits.len() == 3 {
+        digits.parse().ok()
+    } else {
+        None
+    }
+}

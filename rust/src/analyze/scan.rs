@@ -1,0 +1,324 @@
+//! Lexical line scanner for the analyzer.
+//!
+//! The rules in [`super::rules`] are token scans, so all they need from a
+//! source file is, per line: the code with string-literal *contents*
+//! blanked (so `"panic!("` in a message can never trip the panic rule),
+//! the comment text (where `ordering:` justifications and
+//! `analyze-allow:` annotations live), the brace depth, whether the line
+//! sits inside a `#[cfg(test)]` block, and the name of the enclosing
+//! function. This is deliberately not a Rust parser — it is a few hundred
+//! lines that understand strings, comments and braces well enough to lint
+//! this crate, and the fixture tests in `tests/analyze.rs` pin exactly
+//! which shapes it gets right.
+
+/// One source line, split into its analyzable parts.
+#[derive(Debug, Clone)]
+pub struct SourceLine {
+    /// 1-based line number.
+    pub number: usize,
+    /// Code with string/char-literal contents replaced by spaces and
+    /// comments removed.
+    pub code: String,
+    /// Comment text on this line (line comments and block-comment
+    /// content), without the `//` / `/*` markers.
+    pub comment: String,
+    /// Brace depth before the first character of this line.
+    pub depth_before: usize,
+    /// Brace depth after the last character of this line.
+    pub depth_after: usize,
+    /// Inside a `#[cfg(test)]`-gated block (or the attribute line itself).
+    pub in_test: bool,
+    /// Name of the innermost enclosing `fn`, if any.
+    pub fn_name: Option<String>,
+}
+
+/// A scanned file: the virtual path rules use for scoping, plus its lines.
+#[derive(Debug)]
+pub struct ScannedFile {
+    /// Path with `/` separators, as given by the caller (relative to the
+    /// repo root for real scans, a virtual path for fixture tests).
+    pub path: String,
+    pub lines: Vec<SourceLine>,
+}
+
+/// Lexer state that survives line breaks.
+enum Mode {
+    Code,
+    /// Inside a string literal; `raw_hashes` is `Some(n)` for `r#"`-style
+    /// raw strings (closed by `"` + n `#`s), `None` for normal strings.
+    Str { raw_hashes: Option<usize> },
+    /// Inside a (possibly nested) block comment; the value is the depth.
+    BlockComment(usize),
+}
+
+/// Split `src` into per-line code and comment parts (first pass), then
+/// annotate depth / test scope / enclosing fn (second pass).
+pub fn scan(path: &str, src: &str) -> ScannedFile {
+    let mut lines = split_lines(src);
+    annotate(&mut lines);
+    ScannedFile { path: path.replace('\\', "/"), lines }
+}
+
+fn split_lines(src: &str) -> Vec<SourceLine> {
+    let mut lines = Vec::new();
+    let mut mode = Mode::Code;
+    for (idx, raw) in src.lines().enumerate() {
+        let mut code = String::with_capacity(raw.len());
+        let mut comment = String::new();
+        let chars: Vec<char> = raw.chars().collect();
+        let mut i = 0;
+        while i < chars.len() {
+            match mode {
+                Mode::Code => {
+                    let c = chars[i];
+                    if c == '/' && chars.get(i + 1) == Some(&'/') {
+                        // Line comment: the rest of the line is comment.
+                        comment.push_str(&chars[i + 2..].iter().collect::<String>());
+                        i = chars.len();
+                    } else if c == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::BlockComment(1);
+                        i += 2;
+                    } else if c == '"' {
+                        code.push('"');
+                        mode = Mode::Str { raw_hashes: None };
+                        i += 1;
+                    } else if c == 'r' && is_raw_string_start(&chars, i) {
+                        let hashes = count_hashes(&chars, i + 1);
+                        code.push('"');
+                        mode = Mode::Str { raw_hashes: Some(hashes) };
+                        i += 1 + hashes + 1; // r, hashes, opening quote
+                    } else if c == '\'' {
+                        i = skip_char_or_lifetime(&chars, i, &mut code);
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                Mode::Str { raw_hashes } => match raw_hashes {
+                    None => {
+                        let c = chars[i];
+                        if c == '\\' {
+                            code.push(' ');
+                            i += 2; // the escape and its target
+                        } else if c == '"' {
+                            code.push('"');
+                            mode = Mode::Code;
+                            i += 1;
+                        } else {
+                            code.push(' ');
+                            i += 1;
+                        }
+                    }
+                    Some(n) => {
+                        if chars[i] == '"' && count_hashes(&chars, i + 1) >= n {
+                            code.push('"');
+                            mode = Mode::Code;
+                            i += 1 + n;
+                        } else {
+                            code.push(' ');
+                            i += 1;
+                        }
+                    }
+                },
+                Mode::BlockComment(depth) => {
+                    if chars[i] == '*' && chars.get(i + 1) == Some(&'/') {
+                        mode = if depth == 1 {
+                            Mode::Code
+                        } else {
+                            Mode::BlockComment(depth - 1)
+                        };
+                        i += 2;
+                    } else if chars[i] == '/' && chars.get(i + 1) == Some(&'*') {
+                        mode = Mode::BlockComment(depth + 1);
+                        i += 2;
+                    } else {
+                        comment.push(chars[i]);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        lines.push(SourceLine {
+            number: idx + 1,
+            code,
+            comment,
+            depth_before: 0,
+            depth_after: 0,
+            in_test: false,
+            fn_name: None,
+        });
+    }
+    lines
+}
+
+/// `r"`, `r#"`, `r##"`, ... at `chars[i]` (the `r`). A plain identifier
+/// containing `r` does not match because the caller only probes at an `r`
+/// and we require the quote right after the hashes.
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    // Reject the middle of an identifier: `for`, `ptr`, `&str` names...
+    if i > 0 {
+        let prev = chars[i - 1];
+        if prev.is_alphanumeric() || prev == '_' {
+            return false;
+        }
+    }
+    let hashes = count_hashes(chars, i + 1);
+    chars.get(i + 1 + hashes) == Some(&'"')
+}
+
+fn count_hashes(chars: &[char], from: usize) -> usize {
+    chars[from.min(chars.len())..].iter().take_while(|&&c| c == '#').count()
+}
+
+/// Skip a `'x'` / `'\n'` char literal (blanking its content) or a `'a`
+/// lifetime (kept as-is, it contains no braces/quotes). Returns the next
+/// index to process.
+fn skip_char_or_lifetime(chars: &[char], i: usize, code: &mut String) -> usize {
+    if chars.get(i + 1) == Some(&'\\') {
+        // Escaped char literal: the char after the backslash is consumed
+        // unconditionally (it may itself be a quote, as in '\''), then
+        // everything up to the closing quote.
+        code.push('\'');
+        code.push(' ');
+        let mut j = i + 3;
+        while j < chars.len() && chars[j] != '\'' {
+            code.push(' ');
+            j += 1;
+        }
+        code.push('\'');
+        j + 1
+    } else if chars.get(i + 2) == Some(&'\'') {
+        // Plain one-char literal, '{' included.
+        code.push('\'');
+        code.push(' ');
+        code.push('\'');
+        i + 3
+    } else {
+        // A lifetime (or a stray quote): keep the tick, move on.
+        code.push('\'');
+        i + 1
+    }
+}
+
+/// Second pass: brace depth, `#[cfg(test)]` scope, enclosing fn.
+fn annotate(lines: &mut [SourceLine]) {
+    let mut depth = 0usize;
+    // (name, depth the fn body's brace opened at)
+    let mut fn_stack: Vec<(String, usize)> = Vec::new();
+    let mut pending_fn: Option<String> = None;
+    let mut pending_test = false;
+    let mut test_depth: Option<usize> = None;
+    for line in lines.iter_mut() {
+        line.depth_before = depth;
+        if line.code.contains("#[cfg(test)]") {
+            pending_test = true;
+        }
+        line.in_test = test_depth.is_some() || pending_test;
+        if let Some(name) = find_fn_name(&line.code) {
+            pending_fn = Some(name);
+        }
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    if pending_test {
+                        test_depth = Some(depth);
+                        pending_test = false;
+                    }
+                    if let Some(name) = pending_fn.take() {
+                        fn_stack.push((name, depth));
+                    }
+                    depth += 1;
+                }
+                '}' => {
+                    depth = depth.saturating_sub(1);
+                    if fn_stack.last().map(|(_, d)| *d == depth).unwrap_or(false) {
+                        fn_stack.pop();
+                    }
+                    if test_depth == Some(depth) {
+                        test_depth = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        line.depth_after = depth;
+        line.fn_name = fn_stack.last().map(|(n, _)| n.clone());
+    }
+}
+
+/// The identifier after a word-boundary `fn ` on this line, if any.
+fn find_fn_name(code: &str) -> Option<String> {
+    let bytes = code.as_bytes();
+    let mut from = 0;
+    while let Some(pos) = code[from..].find("fn ") {
+        let at = from + pos;
+        let boundary = at == 0 || {
+            let prev = bytes[at - 1];
+            !prev.is_ascii_alphanumeric() && prev != b'_'
+        };
+        if boundary {
+            let name: String = code[at + 3..]
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some(name);
+            }
+        }
+        from = at + 3;
+    }
+    None
+}
+
+/// `analyze-allow: <rule-id> <reason>` annotations in a comment. Returns
+/// `(rule, reason)` pairs; a missing reason comes back empty (the
+/// `bad-allow` check rejects it).
+pub fn parse_allows(comment: &str) -> Vec<(String, String)> {
+    const MARKER: &str = "analyze-allow:";
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(pos) = comment[from..].find(MARKER) {
+        let rest = comment[from + pos + MARKER.len()..].trim_start();
+        let rule: String =
+            rest.chars().take_while(|c| c.is_alphanumeric() || *c == '-').collect();
+        // No rule name at all (e.g. prose quoting the marker syntax) is not
+        // an annotation; `bad-allow` only vets real attempts.
+        if !rule.is_empty() {
+            let reason = rest[rule.len()..].trim().to_string();
+            out.push((rule, reason));
+        }
+        from += pos + MARKER.len();
+    }
+    out
+}
+
+/// Is `rule` allowlisted for line index `idx` — by a same-line annotation
+/// or one in the contiguous run of comment-only lines directly above?
+pub fn allowed(lines: &[SourceLine], idx: usize, rule: &str) -> bool {
+    comment_run(lines, idx).any(|c| parse_allows(c).iter().any(|(r, _)| r == rule))
+}
+
+/// Does line `idx` carry `marker` in its own comment or in the contiguous
+/// comment-only run directly above? (The `// ordering:` justification
+/// lookup.)
+pub fn has_marker(lines: &[SourceLine], idx: usize, marker: &str) -> bool {
+    comment_run(lines, idx).any(|c| c.contains(marker))
+}
+
+/// The line's own comment plus the comment-only lines immediately above.
+fn comment_run<'a>(
+    lines: &'a [SourceLine],
+    idx: usize,
+) -> impl Iterator<Item = &'a str> + 'a {
+    let mut start = idx;
+    while start > 0 {
+        let above = &lines[start - 1];
+        if above.code.trim().is_empty() && !above.comment.trim().is_empty() {
+            start -= 1;
+        } else {
+            break;
+        }
+    }
+    lines[start..=idx].iter().map(|l| l.comment.as_str())
+}

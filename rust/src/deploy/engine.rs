@@ -107,7 +107,10 @@ impl Engine {
         }
         let w = self.model.decode_weights(li)?;
         let _ = self.cache[li].set(w);
-        Ok(self.cache[li].get().expect("slot filled above").as_slice())
+        match self.cache[li].get() {
+            Some(w) => Ok(w.as_slice()),
+            None => bail!("layer {li}: weight cache slot empty right after set"),
+        }
     }
 
     pub fn mode(&self) -> DecodeMode {
@@ -129,6 +132,8 @@ impl Engine {
 
     /// Logit count (output units of the last layer).
     pub fn num_classes(&self) -> usize {
+        // analyze-allow: panic-hygiene infallible signature; a layerless
+        // arch is rejected by PackedModel verification at load time
         self.arch.layers.last().expect("arch has layers").n_units()
     }
 
@@ -211,7 +216,9 @@ impl Engine {
                 dims = vec![c, hh / layer.pool, ww / layer.pool];
             }
         }
-        unreachable!("loop returns at the output layer");
+        // Only reachable when the model has zero layers, which load-time
+        // verification rejects — but a serving thread must not panic on it.
+        bail!("packed model has no layers");
     }
 
     /// Predicted class per sample (argmax over logits).

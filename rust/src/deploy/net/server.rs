@@ -125,7 +125,10 @@ impl Front {
         }
         match router.try_submit(key, x) {
             Ok(Submission::Accepted { id, .. }) => {
-                self.outstanding.fetch_add(1, Ordering::SeqCst);
+                // ordering: relaxed — the increment happens under the router
+                // mutex and only gates the pump's exit/backoff polling; the
+                // completion data itself synchronizes through `done`.
+                self.outstanding.fetch_add(1, Ordering::Relaxed);
                 SubmitOutcome::Accepted { id }
             }
             Ok(Submission::Shed { queue_cap }) => SubmitOutcome::Shed { queue_cap },
@@ -143,8 +146,12 @@ impl Front {
         loop {
             if let Some(c) = done.remove(&k) {
                 drop(done);
-                self.outstanding.fetch_sub(1, Ordering::SeqCst);
-                self.served.fetch_add(1, Ordering::SeqCst);
+                // ordering: relaxed — decremented after the `done` mutex
+                // already ordered the handoff; pump staleness only costs an
+                // extra poll tick, never a lost completion.
+                self.outstanding.fetch_sub(1, Ordering::Relaxed);
+                // ordering: relaxed — display-only counter.
+                self.served.fetch_add(1, Ordering::Relaxed);
                 return Some(c);
             }
             let now = Instant::now();
@@ -153,18 +160,23 @@ impl Front {
                 // Same lock order as the pump (abandoned, then done), so a
                 // completion that raced in during the gap is still found.
                 let mut abandoned = lock(&self.abandoned);
+                // analyze-allow: lock-scope intentional abandoned->done
+                // nesting, same acquisition order as the pump's sweep
                 let mut done = lock(&self.done);
                 if let Some(c) = done.remove(&k) {
                     drop(done);
                     drop(abandoned);
-                    self.outstanding.fetch_sub(1, Ordering::SeqCst);
-                    self.served.fetch_add(1, Ordering::SeqCst);
+                    // ordering: relaxed — see the fast path above.
+                    self.outstanding.fetch_sub(1, Ordering::Relaxed);
+                    // ordering: relaxed — display-only counter.
+                    self.served.fetch_add(1, Ordering::Relaxed);
                     return Some(c);
                 }
                 abandoned.insert(k);
                 drop(done);
                 drop(abandoned);
-                self.outstanding.fetch_sub(1, Ordering::SeqCst);
+                // ordering: relaxed — see the fast path above.
+                self.outstanding.fetch_sub(1, Ordering::Relaxed);
                 return None;
             }
             let (guard, _) = self
@@ -194,6 +206,8 @@ impl Front {
         }
         let n = collected.len();
         let mut abandoned = lock(&self.abandoned);
+        // analyze-allow: lock-scope intentional abandoned->done nesting,
+        // same acquisition order as await_completion's timeout path
         let mut done = lock(&self.done);
         for (key, c) in collected {
             let k = (key, c.id);
@@ -212,17 +226,22 @@ impl Front {
 fn pump_loop(front: Arc<Front>) {
     loop {
         if front.sweep() == 0 {
-            if front.pump_stop.load(Ordering::SeqCst)
-                && front.outstanding.load(Ordering::SeqCst) == 0
-            {
+            // ordering: relaxed — a stale false only delays exit by one
+            // poll tick; `finish` sets the flag after the listener joined.
+            let stop = front.pump_stop.load(Ordering::Relaxed);
+            // ordering: relaxed — once pump_stop is set every waiter has
+            // returned (listener joined first), so the counter is
+            // quiescent: a stale read of 0 implies a real 0. Before that,
+            // staleness only mistunes the backoff below.
+            let outstanding = front.outstanding.load(Ordering::Relaxed);
+            if stop && outstanding == 0 {
                 return;
             }
             // Poll fast only while requests are actually in flight; an
             // idle server backs off so the router mutex is not hammered
             // for nothing (the first request after an idle stretch pays
             // at most the long tick extra).
-            let idle = front.outstanding.load(Ordering::SeqCst) == 0;
-            std::thread::sleep(if idle {
+            std::thread::sleep(if outstanding == 0 {
                 Duration::from_millis(2)
             } else {
                 Duration::from_micros(200)
@@ -246,7 +265,8 @@ impl NetHandler {
                     "models",
                     Json::Arr(self.front.keys.iter().map(|k| Json::str(k.as_str())).collect()),
                 ),
-                ("outstanding", Json::num(self.front.outstanding.load(Ordering::SeqCst) as f64)),
+                // ordering: relaxed — display-only snapshot for /healthz.
+                ("outstanding", Json::num(self.front.outstanding.load(Ordering::Relaxed) as f64)),
             ]),
         )
     }
@@ -262,7 +282,8 @@ impl NetHandler {
         Response::json(
             Status::Ok,
             &Json::obj(vec![
-                ("served", Json::num(self.front.served.load(Ordering::SeqCst) as f64)),
+                // ordering: relaxed — display-only snapshot for /stats.
+                ("served", Json::num(self.front.served.load(Ordering::Relaxed) as f64)),
                 ("models", Json::Obj(models)),
             ]),
         )
@@ -333,6 +354,8 @@ impl Handler for NetHandler {
             ("GET", ["stats"]) => self.stats(),
             ("POST", ["v1", "models", key, "infer"]) => self.infer(key, &req.body),
             ("POST", ["admin", "shutdown"]) => {
+                // ordering: seqcst — one-shot control-plane flag, off the
+                // request fast path; the strongest order costs nothing here.
                 self.front.stop.store(true, Ordering::SeqCst);
                 Response::json(Status::Ok, &Json::obj(vec![("status", Json::str("draining"))]))
             }
@@ -409,6 +432,9 @@ pub struct Server {
     /// `Some` until [`finish`](Self::finish) takes it.
     listener: Option<Listener>,
     pump: Option<JoinHandle<()>>,
+    /// Captured at bind time so [`local_addr`](Self::local_addr) stays
+    /// infallible for the whole lifetime of the value.
+    addr: SocketAddr,
 }
 
 impl Drop for Server {
@@ -418,7 +444,9 @@ impl Drop for Server {
     /// down with their requests, and the pump exits once nothing is
     /// outstanding. (No joins here; `finish` is the orderly path.)
     fn drop(&mut self) {
+        // ordering: seqcst — cold teardown flags; strongest order, no cost.
         self.front.stop.store(true, Ordering::SeqCst);
+        // ordering: seqcst — as above.
         self.front.pump_stop.store(true, Ordering::SeqCst);
         if let Some(listener) = &self.listener {
             listener.stop();
@@ -475,20 +503,23 @@ impl Server {
                 return Err(e);
             }
         };
-        Ok(Self { front, listener: Some(listener), pump: Some(pump) })
+        let addr = listener.local_addr();
+        Ok(Self { front, listener: Some(listener), pump: Some(pump), addr })
     }
 
     pub fn local_addr(&self) -> SocketAddr {
-        self.listener.as_ref().expect("listener present until finish").local_addr()
+        self.addr
     }
 
     /// Whether a graceful shutdown has been requested (`/admin/shutdown`
     /// or [`request_shutdown`](Self::request_shutdown)).
     pub fn shutdown_requested(&self) -> bool {
+        // ordering: seqcst — cold 20ms control poll in `run`; no cost.
         self.front.stop.load(Ordering::SeqCst)
     }
 
     pub fn request_shutdown(&self) {
+        // ordering: seqcst — one-shot control-plane flag; no cost.
         self.front.stop.store(true, Ordering::SeqCst);
     }
 
@@ -506,13 +537,19 @@ impl Server {
     /// [`ServerReport::verify_drained`]) unless something was genuinely
     /// lost.
     pub fn finish(mut self) -> Result<ServerReport> {
+        // ordering: seqcst — cold teardown flag; no cost.
         self.front.stop.store(true, Ordering::SeqCst);
         // 1. Close the front door and wait out every connection worker —
         //    each finishes its in-flight request (the pump is still
         //    delivering completions underneath them).
-        let joined = self.listener.take().expect("listener present until finish").join();
+        let Some(listener) = self.listener.take() else {
+            bail!("server listener already taken: finish ran twice");
+        };
+        let joined = listener.join();
         // 2. Tell the pump to drain and exit *before* propagating a join
         //    failure, so an accept-loop panic cannot leave it spinning.
+        // ordering: seqcst — cold teardown flag; the pump reading it late
+        // only costs one extra poll tick.
         self.front.pump_stop.store(true, Ordering::SeqCst);
         joined?;
         if let Some(pump) = self.pump.take() {
@@ -521,6 +558,8 @@ impl Server {
         // 3. Drain the router itself.
         let router = lock(&self.front.router).take().context("router already drained")?;
         let models = router.shutdown()?;
-        Ok(ServerReport { models, served: self.front.served.load(Ordering::SeqCst) })
+        // ordering: relaxed — every writer thread joined above, so the
+        // counter is quiescent; any ordering reads the final value.
+        Ok(ServerReport { models, served: self.front.served.load(Ordering::Relaxed) })
     }
 }

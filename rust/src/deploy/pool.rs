@@ -230,7 +230,7 @@ impl WorkerPool {
     pub fn submit(&mut self, x: Vec<f32>) -> Result<u64> {
         match self.admit(x, false)? {
             Submission::Accepted { id, .. } => Ok(id),
-            Submission::Shed { .. } => unreachable!("uncapped admission never sheds"),
+            Submission::Shed { .. } => bail!("uncapped admission unexpectedly shed a request"),
         }
     }
 
@@ -256,16 +256,24 @@ impl WorkerPool {
         let n = self.shards.len();
         let start = (self.stats.accepted % n as u64) as usize;
         let shard = (0..n).map(|k| (start + k) % n).find(|&s| {
-            !enforce_cap
-                || self.queue_cap == 0
-                || self.depth[s].load(Ordering::SeqCst) < self.queue_cap
+            if !enforce_cap || self.queue_cap == 0 {
+                return true;
+            }
+            // ordering: relaxed — admission is the only incrementer (the
+            // pool front takes &mut self), so a stale worker decrement can
+            // only make this shed early, never over-admit past the cap.
+            self.depth[s].load(Ordering::Relaxed) < self.queue_cap
         });
         match shard {
             Some(shard) => {
                 let id = self.stats.accepted;
-                self.depth[shard].fetch_add(1, Ordering::SeqCst);
+                // ordering: relaxed — see the cap check above; the job
+                // itself rides the channel, which orders the handoff.
+                self.depth[shard].fetch_add(1, Ordering::Relaxed);
                 if self.shards[shard].send(Job { id, x }).is_err() {
-                    self.depth[shard].fetch_sub(1, Ordering::SeqCst);
+                    // ordering: relaxed — undo on a dead shard; nothing
+                    // raced the slot (the send failed).
+                    self.depth[shard].fetch_sub(1, Ordering::Relaxed);
                     bail!("serve worker {shard} has shut down");
                 }
                 self.stats.submitted += 1;
@@ -338,7 +346,9 @@ fn worker_loop(
     let forward = |comps: Vec<Completion>, ids: &mut VecDeque<u64>| -> Result<()> {
         let completed_at = Instant::now();
         for c in comps {
-            let id = ids.pop_front().expect("one pending global id per completion");
+            let id = ids
+                .pop_front()
+                .ok_or_else(|| anyhow!("shard {shard}: completion without a pending global id"))?;
             done.send(PoolCompletion {
                 id,
                 shard,
@@ -350,7 +360,9 @@ fn worker_loop(
             })
             .map_err(|_| anyhow!("completion receiver dropped"))?;
             // Forwarded = no longer in flight: free a slot for admission.
-            depth.fetch_sub(1, Ordering::SeqCst);
+            // ordering: relaxed — the admission side tolerates staleness
+            // (sheds early at worst); the completion rides the channel.
+            depth.fetch_sub(1, Ordering::Relaxed);
         }
         Ok(())
     };

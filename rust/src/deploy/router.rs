@@ -349,7 +349,10 @@ impl Router {
         if !self.models.contains_key(key) {
             bail!("no model behind key '{key}' (loaded: {})", self.key_list());
         }
-        Ok(self.models.get_mut(key).expect("checked above"))
+        match self.models.get_mut(key) {
+            Some(e) => Ok(e),
+            None => bail!("model behind key '{key}' vanished mid-lookup"),
+        }
     }
 
     fn key_list(&self) -> String {

@@ -75,6 +75,7 @@
 //! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for the
 //! paper-vs-measured results.
 
+pub mod analyze;
 pub mod baselines;
 pub mod bench_harness;
 pub mod checkpoint;

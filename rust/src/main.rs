@@ -10,6 +10,7 @@
 //!   route-bench  multi-model router: routing, bounded queues + shed, hot swap
 //!   serve      HTTP/1.1 network front over the router (429 on overload)
 //!   load-bench loopback load generator against a running `serve`
+//!   analyze    static-analysis gate over the crate's own source
 //!   table1/2/3 regenerate the paper's tables
 //!   table-deploy packed-model size + engine throughput table
 //!   a2         penalty-method (DQ-style) tuning comparison
@@ -88,6 +89,13 @@ COMMANDS
              --min-shed asserts the burst saturated admission; --shutdown
              drains the server afterwards; prints throughput/shed/latency
              percentiles as JSON)
+  analyze    [--root <repo>] [--json]
+             (static-analysis gate over the crate's own source: panic
+             hygiene in deploy/ hot paths, atomic-ordering justifications,
+             SeqCst-on-hot-path, lock scopes containing blocking calls or
+             nested locks, stats-counter choke points, README status
+             taxonomy sync; exits non-zero on any finding; allowlist a
+             site with `// analyze-allow: <rule> <reason>`)
   fixed-qat  --bits <b> + config flags (uniform-bit QAT baseline)
   myqasr     config flags (heuristic baseline; layer granularity)
   table1     --config <toml>   (method comparison @ bound 0.40%)
@@ -134,6 +142,7 @@ fn run(argv: &[String]) -> Result<()> {
         "route-bench" => cmd_route_bench(&args),
         "serve" => cmd_serve(&args),
         "load-bench" => cmd_load_bench(&args),
+        "analyze" => cmd_analyze(&args),
         "fixed-qat" => cmd_fixed_qat(&args),
         "myqasr" => cmd_myqasr(&args),
         "table1" => cmd_table(&args, 1),
@@ -592,6 +601,22 @@ fn cmd_load_bench(args: &Args) -> Result<()> {
         bail!(
             "saturation check failed: observed {shed} shed (429) responses, --min-shed {min_shed}"
         );
+    }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let root = args.get("root").unwrap_or(".").to_string();
+    let json = args.get_bool("json");
+    args.finish()?;
+    let report = cgmq::analyze::analyze_crate(Path::new(&root))?;
+    if json {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render());
+    }
+    if !report.clean() {
+        bail!("analyze: {} finding(s)", report.findings.len());
     }
     Ok(())
 }

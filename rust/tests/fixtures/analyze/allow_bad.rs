@@ -1,0 +1,8 @@
+// Fixture: bad-allow positive cases — an annotation naming an unknown
+// rule (typo) and one with no reason. Neither suppresses anything real;
+// both must be reported so a typo cannot silently disable a rule.
+pub fn admit(x: Option<u32>) -> u32 {
+    // analyze-allow: panick-hygiene typo in the rule id
+    // analyze-allow: panic-hygiene
+    x.unwrap_or(0)
+}

@@ -1,0 +1,9 @@
+// Fixture: counter-choke positive case — a stats counter mutated outside
+// its choke-point functions (`outstanding` belongs to submit /
+// await_completion, not sweep). The ordering marker isolates the rule.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn sweep(outstanding: &AtomicU64) {
+    // ordering: relaxed — counter only.
+    outstanding.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,15 @@
+// Fixture: counter-choke negative case — every counter mutation sits in
+// one of its named choke-point functions.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn submit(outstanding: &AtomicU64) {
+    // ordering: relaxed — counter only.
+    outstanding.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn await_completion(outstanding: &AtomicU64, served: &AtomicU64) {
+    // ordering: relaxed — counter only.
+    outstanding.fetch_sub(1, Ordering::Relaxed);
+    // ordering: relaxed — counter only.
+    served.fetch_add(1, Ordering::Relaxed);
+}

@@ -1,0 +1,16 @@
+// Fixture: lock-scope positive cases — a blocking call under a live
+// guard, and a second lock acquisition under a live guard.
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+pub fn pump_loop(m: &Mutex<u32>, rx: &Receiver<u32>) -> u32 {
+    let guard = m.lock().unwrap_or_else(|e| e.into_inner());
+    let v = rx.recv().unwrap_or(0);
+    *guard + v
+}
+
+pub fn sweep(a: &Mutex<u32>, b: &Mutex<u32>) -> u32 {
+    let first = a.lock().unwrap_or_else(|e| e.into_inner());
+    let second = b.lock().unwrap_or_else(|e| e.into_inner());
+    *first + *second
+}

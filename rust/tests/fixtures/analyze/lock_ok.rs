@@ -1,0 +1,29 @@
+// Fixture: lock-scope negative cases — the guard is dropped before the
+// blocking call, a multi-line guard scope is closed by its block before
+// the blocking call, and a documented double-lock is allowlisted.
+use std::sync::mpsc::Receiver;
+use std::sync::Mutex;
+
+pub fn pump_loop(m: &Mutex<u32>, rx: &Receiver<u32>) -> u32 {
+    let guard = m.lock().unwrap_or_else(|e| e.into_inner());
+    let held = *guard;
+    drop(guard);
+    held + rx.recv().unwrap_or(0)
+}
+
+pub fn accept_loop(m: &Mutex<u32>) -> u32 {
+    let mut total = 0;
+    {
+        let guard = m.lock().unwrap_or_else(|e| e.into_inner());
+        total += *guard;
+    }
+    std::thread::sleep(std::time::Duration::from_millis(1));
+    total
+}
+
+pub fn sweep(a: &Mutex<u32>, b: &Mutex<u32>) -> u32 {
+    let first = a.lock().unwrap_or_else(|e| e.into_inner());
+    // analyze-allow: lock-scope documented acquisition order a before b
+    let second = b.lock().unwrap_or_else(|e| e.into_inner());
+    *first + *second
+}

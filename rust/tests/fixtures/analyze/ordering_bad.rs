@@ -1,0 +1,7 @@
+// Fixture: atomic-ordering positive case — an Ordering:: use with no
+// `ordering:` justification anywhere near it.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn count(c: &AtomicU64) -> u64 {
+    c.load(Ordering::Relaxed)
+}

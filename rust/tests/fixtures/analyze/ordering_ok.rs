@@ -1,0 +1,20 @@
+// Fixture: atomic-ordering negative case — same-line justification, a
+// justification directly above, and one at the top of a multi-line
+// comment run.
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub fn count(c: &AtomicU64) -> u64 {
+    c.load(Ordering::Relaxed) // ordering: relaxed — display-only counter
+}
+
+pub fn count_above(c: &AtomicU64) -> u64 {
+    // ordering: relaxed — no synchronization edge rides on this value.
+    c.load(Ordering::Relaxed)
+}
+
+pub fn count_run(c: &AtomicU64) -> u64 {
+    // ordering: relaxed — staleness is tolerated by the caller, which
+    // treats the value as a hint and re-checks under the mutex; this
+    // comment run spans several lines on purpose.
+    c.load(Ordering::Relaxed)
+}

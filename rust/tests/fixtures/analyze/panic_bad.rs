@@ -1,0 +1,4 @@
+// Fixture: panic-hygiene positive case — an unwrap in a deploy hot path.
+pub fn connection_loop(x: Option<u32>) -> u32 {
+    x.unwrap()
+}

@@ -1,0 +1,9 @@
+// Fixture: atomic-seqcst positive case — SeqCst inside a named hot
+// function. The `ordering:` marker is present so only the SeqCst rule
+// fires, isolating it from atomic-ordering.
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+pub fn admit(depth: &AtomicUsize) -> usize {
+    // ordering: seqcst — because it was the default
+    depth.load(Ordering::SeqCst)
+}

@@ -1,0 +1,20 @@
+// Fixture: atomic-seqcst negative case — SeqCst in a cold function,
+// Relaxed in a hot one, and an allowlisted load-bearing fence in a hot
+// one.
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+pub fn stop(flag: &AtomicBool) {
+    // ordering: seqcst — cold control-plane flag; no cost.
+    flag.store(true, Ordering::SeqCst);
+}
+
+pub fn admit(depth: &AtomicUsize) -> usize {
+    // ordering: relaxed — staleness sheds early at worst.
+    depth.load(Ordering::Relaxed)
+}
+
+pub fn worker_loop(flag: &AtomicBool) -> bool {
+    // ordering: seqcst — pairs with the store in stop() across threads.
+    // analyze-allow: atomic-seqcst the full fence is load-bearing here
+    flag.load(Ordering::SeqCst)
+}

@@ -1,0 +1,16 @@
+// Fixture: a minimal Status::code mirror for the taxonomy-sync rule.
+pub enum Status {
+    Ok,
+    BadRequest,
+    TooManyRequests,
+}
+
+impl Status {
+    pub fn code(self) -> u16 {
+        match self {
+            Status::Ok => 200,
+            Status::BadRequest => 400,
+            Status::TooManyRequests => 429,
+        }
+    }
+}
