@@ -3,9 +3,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt fmt-fix clippy analyze bench-smoke serve-smoke route-smoke net-smoke artifacts bench clean
+.PHONY: ci build test fmt fmt-fix clippy analyze bench-smoke serve-smoke route-smoke net-smoke metrics-smoke artifacts bench clean
 
-ci: build test fmt clippy analyze bench-smoke serve-smoke route-smoke net-smoke
+ci: build test fmt clippy analyze bench-smoke serve-smoke route-smoke net-smoke metrics-smoke
 
 build:
 	$(CARGO) build --release
@@ -26,7 +26,7 @@ clippy:
 # The repo's own invariant lint pass (see README "Static analysis"):
 # panic hygiene in deploy/ hot paths, atomic-ordering justifications,
 # SeqCst on hot paths, lock scopes, counter choke points, README status
-# taxonomy sync. Exits non-zero on any finding.
+# taxonomy + metric-name sync. Exits non-zero on any finding.
 analyze: build
 	./target/release/cgmq analyze --root .
 
@@ -82,6 +82,27 @@ net-smoke: build
 	if ! ./target/release/cgmq load-bench --addr $$(cat runs/net-smoke.addr) --key m \
 		--requests 96 --clients 4 --verify-model runs/net-smoke.cgmqm \
 		--min-shed 1 --shutdown; then \
+		kill $$pid 2>/dev/null; wait $$pid; exit 1; \
+	fi; \
+	wait $$pid
+
+# Telemetry smoke: same loopback shape as net-smoke, but the point is the
+# observability spine — after the saturating burst `cgmq load-bench`
+# scrapes GET /metrics and exits non-zero unless the server-side
+# accepted/shed counters match its own client-observed totals bit-exactly
+# and (--require-stages) every pipeline stage histogram recorded samples.
+metrics-smoke: build
+	mkdir -p runs
+	./target/release/cgmq export --synth --arch mlp --out runs/metrics-smoke.cgmqm
+	rm -f runs/metrics-smoke.addr; \
+	./target/release/cgmq serve --models m=runs/metrics-smoke.cgmqm --addr 127.0.0.1:0 \
+		--workers 1 --queue-cap 1 --batch 64 --deadline-us 5000 \
+		--addr-file runs/metrics-smoke.addr & \
+	pid=$$!; \
+	i=0; while [ ! -s runs/metrics-smoke.addr ] && [ $$i -lt 100 ]; do sleep 0.1; i=$$((i+1)); done; \
+	if [ ! -s runs/metrics-smoke.addr ]; then echo "cgmq serve did not come up"; kill $$pid 2>/dev/null; exit 1; fi; \
+	if ! ./target/release/cgmq load-bench --addr $$(cat runs/metrics-smoke.addr) --key m \
+		--requests 96 --clients 4 --min-shed 1 --require-stages --shutdown; then \
 		kill $$pid 2>/dev/null; wait $$pid; exit 1; \
 	fi; \
 	wait $$pid

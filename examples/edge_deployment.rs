@@ -300,12 +300,28 @@ fn main() -> anyhow::Result<()> {
     }
     let (status, stats_body) = client.request("GET", "/stats", None)?;
     anyhow::ensure!(status == 200, "HTTP {status}: {stats_body}");
+    // The telemetry spine exposes the same counters as a Prometheus
+    // scrape; the request series must already account for every infer.
+    let (status, metrics_body) = client.request("GET", "/metrics", None)?;
+    anyhow::ensure!(status == 200, "HTTP {status}: {metrics_body}");
+    let series = cgmq::bench_harness::parse_prometheus(&metrics_body);
+    let ok_requests = series
+        .get("cgmq_requests_total{model=\"tight\",status=\"200\"}")
+        .copied()
+        .unwrap_or(0.0) as usize;
+    anyhow::ensure!(
+        ok_requests == n_http,
+        "/metrics counted {ok_requests} OK requests, expected {n_http}"
+    );
     drop(client);
     let net_report = server.finish()?;
     net_report.verify_drained()?;
     println!(
         "network front on {addr}: {} requests served over HTTP, bit-exact, drained cleanly",
         net_report.served
+    );
+    println!(
+        "  /metrics agrees: cgmq_requests_total{{model=\"tight\",status=\"200\"}} = {ok_requests}"
     );
 
     println!("\nwrote {}/deploy.json, deploy.ckpt and deploy.cgmqm", out_dir);

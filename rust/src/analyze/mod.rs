@@ -152,6 +152,27 @@ pub fn analyze_crate(root: &Path) -> Result<Report> {
             hint: "run from the repo root or pass --root <repo>".to_string(),
         }),
     }
+    // Same contract for the metric names: the telemetry module and the
+    // README table must agree, and a missing file is itself a finding.
+    let telemetry_path = root.join("rust/src/deploy/telemetry.rs");
+    match (std::fs::read_to_string(&telemetry_path), std::fs::read_to_string(&readme_path)) {
+        (Ok(telemetry_src), Ok(readme_src)) => {
+            report.findings.extend(rules::check_metrics(
+                &rel_path(root, &telemetry_path),
+                &telemetry_src,
+                &rel_path(root, &readme_path),
+                &readme_src,
+            ));
+        }
+        _ => report.findings.push(Finding {
+            rule: rules::RULE_METRICS,
+            file: "README.md".to_string(),
+            line: 1,
+            message: "cannot read telemetry.rs + README.md for the metrics cross-check"
+                .to_string(),
+            hint: "run from the repo root or pass --root <repo>".to_string(),
+        }),
+    }
     report.findings.sort_by(|a, b| (&a.file, a.line).cmp(&(&b.file, b.line)));
     Ok(report)
 }

@@ -31,6 +31,11 @@
 //! * `taxonomy-sync` — the non-200 status codes `deploy/net/http.rs` can
 //!   emit must match the machine-checked taxonomy table in README.md
 //!   (between the `analyze:taxonomy` markers).
+//! * `metrics-name-sync` — the `cgmq_*` metric names
+//!   `deploy/telemetry.rs` emits on `/metrics` must match the
+//!   machine-checked table in README.md (between the `analyze:metrics`
+//!   markers); both drift directions are findings, same contract as
+//!   `taxonomy-sync`.
 //! * `bad-allow` — an `analyze-allow:` annotation naming an unknown rule
 //!   or missing a reason (typo guard: a misspelled allow must not silently
 //!   disable nothing).
@@ -45,16 +50,18 @@ pub const RULE_SEQCST: &str = "atomic-seqcst";
 pub const RULE_LOCK: &str = "lock-scope";
 pub const RULE_COUNTER: &str = "counter-choke";
 pub const RULE_TAXONOMY: &str = "taxonomy-sync";
+pub const RULE_METRICS: &str = "metrics-name-sync";
 pub const RULE_BAD_ALLOW: &str = "bad-allow";
 
 /// Every known rule id (what `bad-allow` validates against).
-pub const ALL_RULES: [&str; 7] = [
+pub const ALL_RULES: [&str; 8] = [
     RULE_PANIC,
     RULE_ORDERING,
     RULE_SEQCST,
     RULE_LOCK,
     RULE_COUNTER,
     RULE_TAXONOMY,
+    RULE_METRICS,
     RULE_BAD_ALLOW,
 ];
 
@@ -99,10 +106,19 @@ const BLOCKING_TOKENS: [&str; 7] = [
 ];
 
 /// The stats counters and the only functions allowed to mutate them.
-const COUNTER_CHOKES: [(&str, &[&str]); 3] = [
+/// The telemetry counters (`cells` through `req_seq`) are the spine of
+/// the `/metrics` accounting — same single-mutation-site contract as the
+/// routing counters above them.
+const COUNTER_CHOKES: [(&str, &[&str]); 9] = [
     ("depth", &["admit", "worker_loop"]),
     ("outstanding", &["submit", "await_completion"]),
     ("served", &["await_completion"]),
+    ("cells", &["record"]),
+    ("recorded", &["record"]),
+    ("sum_us", &["record"]),
+    ("slots", &["observe"]),
+    ("connections", &["count_connection"]),
+    ("req_seq", &["next_request_id"]),
 ];
 
 fn in_deploy(path: &str) -> bool {
@@ -152,7 +168,7 @@ fn bad_allows(file: &ScannedFile) -> Vec<Finding> {
                     RULE_BAD_ALLOW,
                     format!("analyze-allow names unknown rule '{rule}'"),
                     "valid rules: panic-hygiene, atomic-ordering, atomic-seqcst, \
-                     lock-scope, counter-choke, taxonomy-sync",
+                     lock-scope, counter-choke, taxonomy-sync, metrics-name-sync",
                 ));
             } else if reason.is_empty() {
                 out.push(finding(
@@ -480,4 +496,102 @@ fn trailing_code(line: &str) -> Option<u16> {
     } else {
         None
     }
+}
+
+// ---------------------------------------------------------------------------
+// metrics-name-sync
+// ---------------------------------------------------------------------------
+
+/// Begin/end markers of the machine-checked README metric-name table.
+pub const METRICS_BEGIN: &str = "<!-- analyze:metrics:begin -->";
+pub const METRICS_END: &str = "<!-- analyze:metrics:end -->";
+
+/// Maximal `cgmq_[a-z0-9_]+` runs in `text`, first-occurrence line
+/// numbers attached, deduplicated. With `strip_comments`, everything from
+/// the first `//` of a line on is ignored — on the source side the metric
+/// names live in string literals, and prose mentioning a retired name
+/// must not keep it alive.
+fn metric_names(text: &str, strip_comments: bool) -> Vec<(String, usize)> {
+    let mut out: Vec<(String, usize)> = Vec::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let line = if strip_comments {
+            raw.split("//").next().unwrap_or(raw)
+        } else {
+            raw
+        };
+        let mut i = 0;
+        while let Some(pos) = line[i..].find("cgmq_") {
+            let at = i + pos;
+            let name: String = line[at..]
+                .chars()
+                .take_while(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || *c == '_')
+                .collect();
+            i = at + name.len().max(1);
+            if name.len() > "cgmq_".len() && !out.iter().any(|(n, _)| *n == name) {
+                out.push((name, idx + 1));
+            }
+        }
+    }
+    out
+}
+
+/// Compare the `cgmq_*` metric names `telemetry.rs` defines (each name is
+/// a single string literal by construction; `_bucket`/`_sum`/`_count`
+/// suffixes are appended via format interpolation and never appear as
+/// literals) against the names the README table documents between the
+/// `analyze:metrics` markers. Either direction of drift is a finding.
+pub fn check_metrics(
+    telemetry_path: &str,
+    telemetry_src: &str,
+    readme_path: &str,
+    readme_src: &str,
+) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let emitted = metric_names(telemetry_src, true);
+    let begin = readme_src.find(METRICS_BEGIN);
+    let end = readme_src.find(METRICS_END);
+    let (Some(begin), Some(end)) = (begin, end) else {
+        out.push(Finding {
+            rule: RULE_METRICS,
+            file: readme_path.to_string(),
+            line: 1,
+            message: format!("README has no '{METRICS_BEGIN}' ... '{METRICS_END}' block"),
+            hint: "wrap the metric-name table in the analyze markers so it \
+                   stays machine-checked against telemetry.rs"
+                .to_string(),
+        });
+        return out;
+    };
+    let marker_line = readme_src[..begin].lines().count() + 1;
+    let documented = metric_names(&readme_src[begin..end], false);
+    for (name, line) in &emitted {
+        if !documented.iter().any(|(n, _)| n == name) {
+            out.push(Finding {
+                rule: RULE_METRICS,
+                file: telemetry_path.to_string(),
+                line: *line,
+                message: format!(
+                    "metric '{name}' is emitted but absent from the README table"
+                ),
+                hint: format!(
+                    "add a `{name}` row to the table between the analyze markers"
+                ),
+            });
+        }
+    }
+    for (name, _) in &documented {
+        if !emitted.iter().any(|(n, _)| n == name) {
+            out.push(Finding {
+                rule: RULE_METRICS,
+                file: readme_path.to_string(),
+                line: marker_line,
+                message: format!(
+                    "README documents metric '{name}' but telemetry.rs never defines it"
+                ),
+                hint: "remove the stale row (or define the metric name in telemetry.rs)"
+                    .to_string(),
+            });
+        }
+    }
+    out
 }

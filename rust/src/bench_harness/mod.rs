@@ -418,7 +418,18 @@ pub fn pool_bench_engine(
         ("flushes", Json::num(stats.flushes as f64)),
         ("engine_calls", Json::num(stats.engine_calls as f64)),
         ("mean_batch", Json::num(stats.mean_batch())),
+        ("queue_wait_mean_us", Json::num(mean_wait_us(&stats))),
+        ("queue_wait_max_us", Json::num(stats.queue_wait_max_us() as f64)),
     ]))
+}
+
+/// Mean enqueue-to-flush wait per completed request (µs).
+fn mean_wait_us(stats: &crate::deploy::BatcherStats) -> f64 {
+    if stats.completed == 0 {
+        0.0
+    } else {
+        stats.queue_wait_us() as f64 / stats.completed as f64
+    }
 }
 
 /// One model behind the router in a [`router_bench`] run.
@@ -637,8 +648,42 @@ pub struct LoadBenchSpec {
     ///
     /// [`Engine::infer_batch`]: crate::deploy::Engine::infer_batch
     pub verify_model: Option<PathBuf>,
+    /// Additionally require every pipeline stage histogram on `/metrics`
+    /// to have recorded samples during the run (the smoke test's "the
+    /// telemetry spine is actually wired" assertion).
+    pub require_stages: bool,
     /// `POST /admin/shutdown` after the run (graceful server drain).
     pub shutdown: bool,
+}
+
+/// Parse a Prometheus text exposition into a `series -> value` map, keyed
+/// by the full series string including labels (comments and `# HELP`/`#
+/// TYPE` lines skipped).
+pub fn parse_prometheus(text: &str) -> std::collections::BTreeMap<String, f64> {
+    let mut out = std::collections::BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some((series, value)) = line.rsplit_once(' ') {
+            if let Ok(v) = value.parse::<f64>() {
+                out.insert(series.to_string(), v);
+            }
+        }
+    }
+    out
+}
+
+/// `GET /metrics` from `addr`, parsed.
+fn scrape_metrics(addr: &str) -> Result<std::collections::BTreeMap<String, f64>> {
+    use crate::deploy::net::HttpClient;
+    let mut client = HttpClient::connect(addr, std::time::Duration::from_secs(5))?;
+    let (status, text) = client.request("GET", "/metrics", None)?;
+    if status != 200 {
+        anyhow::bail!("GET /metrics: unexpected HTTP {status}: {text}");
+    }
+    Ok(parse_prometheus(&text))
 }
 
 /// What one load-bench client thread brings home.
@@ -656,8 +701,11 @@ struct LoadClientOut {
 /// `spec.clients` threads. A 429 is counted as a shed and the request is
 /// retried with backoff until accepted — so every request finishes, and
 /// with `verify_model` every response is held to bit-identity against the
-/// locally loaded engine. Returns throughput / shed rate / latency
-/// percentiles as JSON.
+/// locally loaded engine. `/metrics` is scraped before and after the run
+/// and the server-side accept/shed counter deltas must equal the client
+/// tallies bit-exactly (bails otherwise — the non-zero exit of `cgmq
+/// load-bench`). Returns throughput / shed rate / latency percentiles /
+/// server-side counts as JSON.
 pub fn load_bench(spec: &LoadBenchSpec) -> Result<Json> {
     use std::sync::Arc;
     use std::time::{Duration, Instant};
@@ -686,6 +734,12 @@ pub fn load_bench(spec: &LoadBenchSpec) -> Result<Json> {
         None => None,
     };
     let images = Arc::new(ds.images);
+
+    // Scrape `/metrics` before and after the run: the *deltas* of the
+    // server-side accept/shed counters must match what the clients
+    // observed, bit-exactly — the end-to-end proof that the telemetry
+    // spine counts the same events the HTTP responses report.
+    let before = scrape_metrics(&spec.addr)?;
 
     let target = format!("/v1/models/{}/infer", spec.key);
     let (requests, clients, rate) = (spec.requests, spec.clients, spec.rate_rps);
@@ -764,6 +818,45 @@ pub fn load_bench(spec: &LoadBenchSpec) -> Result<Json> {
     if lat.iter().any(|d| d.is_nan()) {
         anyhow::bail!("load bench lost requests (client thread under-reported)");
     }
+    let after = scrape_metrics(&spec.addr)?;
+    let key = &spec.key;
+    let delta = |name: &str| -> u64 {
+        let series = format!("{name}{{model=\"{key}\"}}");
+        let b = before.get(&series).copied().unwrap_or(0.0) as u64;
+        let a = after.get(&series).copied().unwrap_or(0.0) as u64;
+        a.saturating_sub(b)
+    };
+    let server_accepted = delta(crate::deploy::telemetry::M_ACCEPTED);
+    let server_shed = delta(crate::deploy::telemetry::M_SHED);
+    if server_accepted != requests as u64 {
+        anyhow::bail!(
+            "/metrics accept drift: server counted {server_accepted} accepted, \
+             clients completed {requests}"
+        );
+    }
+    if server_shed != shed {
+        anyhow::bail!(
+            "/metrics shed drift: server counted {server_shed} sheds, \
+             clients observed {shed} 429s"
+        );
+    }
+    if spec.require_stages {
+        for stage in crate::deploy::telemetry::Stage::ALL {
+            let s = stage.as_str();
+            let series = format!(
+                "{}_count{{model=\"{key}\",stage=\"{s}\"}}",
+                crate::deploy::telemetry::M_STAGE_SECONDS
+            );
+            let b = before.get(&series).copied().unwrap_or(0.0) as u64;
+            let a = after.get(&series).copied().unwrap_or(0.0) as u64;
+            if a <= b {
+                anyhow::bail!(
+                    "stage histogram '{s}' recorded no samples during the run \
+                     (the telemetry spine is not wired through this stage)"
+                );
+            }
+        }
+    }
     if spec.shutdown {
         let mut client = HttpClient::connect(&spec.addr, Duration::from_secs(5))?;
         let (status, text) = client.request("POST", "/admin/shutdown", Some("{}"))?;
@@ -782,6 +875,8 @@ pub fn load_bench(spec: &LoadBenchSpec) -> Result<Json> {
         ("throughput_rps", Json::num(requests as f64 / wall)),
         ("attempts", Json::num(attempts as f64)),
         ("shed", Json::num(shed as f64)),
+        ("server_accepted", Json::num(server_accepted as f64)),
+        ("server_shed", Json::num(server_shed as f64)),
         ("shed_rate", Json::num(if attempts == 0 { 0.0 } else { shed as f64 / attempts as f64 })),
         ("p50_ms", Json::num(p50)),
         ("p90_ms", Json::num(p90)),
@@ -813,6 +908,7 @@ pub fn net_bench(
         rate_rps: 0.0,
         seed,
         verify_model: None,
+        require_stages: false,
         shutdown: false,
     };
     let bench = load_bench(&spec);
@@ -912,6 +1008,8 @@ pub fn serve_bench_engines(
                 ("flushes", Json::num(stats.flushes as f64)),
                 ("engine_calls", Json::num(stats.engine_calls as f64)),
                 ("mean_batch", Json::num(stats.mean_batch())),
+                ("queue_wait_mean_us", Json::num(mean_wait_us(&stats))),
+                ("queue_wait_max_us", Json::num(stats.queue_wait_max_us() as f64)),
             ]),
         ),
         ("speedup", Json::num(batched_rps / single_rps)),
@@ -975,10 +1073,10 @@ pub fn deploy_table(
          ({requests} requests, batch {batch}, {workers} workers).\n"
     ));
     out.push_str(
-        "| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup | Pool x1 req/s | Pool xN req/s | Pool gain | Route req/s | Shed % | Net req/s | Net shed % |\n",
+        "| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup | Pool x1 req/s | Pool xN req/s | Pool gain | Q-wait µs | Route req/s | Shed % | Net req/s | Net shed % |\n",
     );
     out.push_str(
-        "|--------|------------|----------|--------------|---------------|---------|---------------|---------------|-----------|-------------|--------|-----------|------------|\n",
+        "|--------|------------|----------|--------------|---------------|---------|---------------|---------------|-----------|-----------|-------------|--------|-----------|------------|\n",
     );
     let mut rows = Vec::new();
     let bcfg = BatchConfig { max_batch: batch, max_delay: std::time::Duration::from_micros(200) };
@@ -1031,12 +1129,16 @@ pub fn deploy_table(
         let batched_rps = bench.get("batched")?.get("throughput_rps")?.as_f64()?;
         let pool1_rps = pool.get("one_worker")?.get("throughput_rps")?.as_f64()?;
         let pool_n_rps = pool.get("n_workers")?.get("throughput_rps")?.as_f64()?;
+        // Stage breakdown: mean enqueue-to-flush wait inside the N-worker
+        // pool's shard batchers (the dominant server-side latency stage
+        // under load).
+        let qwait_us = pool.get("n_workers")?.get("queue_wait_mean_us")?.as_f64()?;
         let route_rps = route.get("throughput_rps")?.as_f64()?;
         let shed_rate = route.get("shed_rate")?.as_f64()?;
         let net_rps = net.get("throughput_rps")?.as_f64()?;
         let net_shed_rate = net.get("shed_rate")?.as_f64()?;
         out.push_str(&format!(
-            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x | {:13.1} | {:13.1} | {:8.2}x | {:11.1} | {:5.1}% | {:9.1} | {:9.1}% |\n",
+            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x | {:13.1} | {:13.1} | {:8.2}x | {:9.1} | {:11.1} | {:5.1}% | {:9.1} | {:9.1}% |\n",
             arch.name,
             packed_bytes as f64 / 1024.0,
             fp32_bytes as f64 / 1024.0,
@@ -1046,6 +1148,7 @@ pub fn deploy_table(
             pool1_rps,
             pool_n_rps,
             pool_n_rps / pool1_rps,
+            qwait_us,
             route_rps,
             100.0 * shed_rate,
             net_rps,

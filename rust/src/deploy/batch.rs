@@ -20,8 +20,12 @@
 //! take the caller's `Instant`, so tests drive time explicitly and the
 //! serve loop passes `Instant::now()`. Completions preserve submission
 //! order (FIFO, like `data::Batcher::sequential`), and every completion
-//! reports its queue delay and the batch size it rode in — the raw
-//! material for `serve-bench`'s latency percentiles.
+//! reports its queue delay, chunk batch-wait, engine compute time, and
+//! the batch size it rode in — the raw material for `serve-bench`'s
+//! latency percentiles and the telemetry spine's stage histograms.
+//! [`BatcherStats`] additionally accrues enqueue-to-flush wait (sum +
+//! max, per flush reason), the arrival-rate signal adaptive batching
+//! will tune against.
 //!
 //! The batcher holds its engine behind an [`Arc`], so several batchers —
 //! the per-shard queues of [`super::pool::WorkerPool`] — can share one
@@ -60,6 +64,12 @@ pub struct Completion {
     pub predicted: usize,
     /// Time spent queued before its batch was flushed.
     pub queue_delay: Duration,
+    /// Flush start → this request's engine invocation starting. Zero for
+    /// the first `max_batch` chunk; later chunks of a large drain wait
+    /// behind the earlier chunks' engine calls.
+    pub batch_wait: Duration,
+    /// Wall-clock duration of the engine invocation this request rode in.
+    pub compute: Duration,
     /// Size of the engine invocation this request rode in.
     pub batch_size: usize,
 }
@@ -85,6 +95,20 @@ pub struct BatcherStats {
     pub drain_flushes: u64,
     /// `Engine::infer_batch` invocations across all flushes.
     pub engine_calls: u64,
+    /// Summed enqueue-to-flush waits (µs) of requests released by
+    /// size-triggered flushes — with the matching flush counter this is
+    /// the observed arrival-rate signal adaptive batching tunes against.
+    pub size_wait_us: u64,
+    /// Largest single enqueue-to-flush wait (µs) in any size flush.
+    pub size_wait_max_us: u64,
+    /// Summed enqueue-to-flush waits (µs) released by deadline flushes.
+    pub deadline_wait_us: u64,
+    /// Largest single enqueue-to-flush wait (µs) in any deadline flush.
+    pub deadline_wait_max_us: u64,
+    /// Summed enqueue-to-flush waits (µs) released by drain flushes.
+    pub drain_wait_us: u64,
+    /// Largest single enqueue-to-flush wait (µs) in any drain flush.
+    pub drain_wait_max_us: u64,
 }
 
 impl BatcherStats {
@@ -97,12 +121,41 @@ impl BatcherStats {
         }
     }
 
+    /// Total enqueue-to-flush wait (µs) across every flush reason.
+    pub fn queue_wait_us(&self) -> u64 {
+        self.size_wait_us + self.deadline_wait_us + self.drain_wait_us
+    }
+
+    /// Largest single enqueue-to-flush wait (µs) across every reason.
+    pub fn queue_wait_max_us(&self) -> u64 {
+        self.size_wait_max_us
+            .max(self.deadline_wait_max_us)
+            .max(self.drain_wait_max_us)
+    }
+
+    /// Per-reason wait invariant: no flushes of a reason means no wait
+    /// accrued under it, and a max never exceeds its sum.
+    fn wait_consistent(flushes: u64, sum_us: u64, max_us: u64) -> bool {
+        (flushes > 0 || (sum_us == 0 && max_us == 0)) && max_us <= sum_us
+    }
+
     /// The counter invariant; asserted by tests, cheap enough to check in
     /// debug servers.
     pub fn consistent(&self) -> bool {
         self.flushes == self.size_flushes + self.deadline_flushes + self.drain_flushes
             && self.engine_calls >= self.flushes
             && self.completed <= self.submitted
+            && Self::wait_consistent(self.size_flushes, self.size_wait_us, self.size_wait_max_us)
+            && Self::wait_consistent(
+                self.deadline_flushes,
+                self.deadline_wait_us,
+                self.deadline_wait_max_us,
+            )
+            && Self::wait_consistent(
+                self.drain_flushes,
+                self.drain_wait_us,
+                self.drain_wait_max_us,
+            )
     }
 
     /// Fold another shard's counters into this one (pool-wide totals).
@@ -117,6 +170,15 @@ impl BatcherStats {
         self.deadline_flushes += other.deadline_flushes;
         self.drain_flushes += other.drain_flushes;
         self.engine_calls += other.engine_calls;
+        // Wait sums add; maxes take the max. `a_max <= a_sum` on both
+        // sides gives `max(a_max, b_max) <= a_sum + b_sum`, so merged
+        // stats stay `consistent()`.
+        self.size_wait_us += other.size_wait_us;
+        self.size_wait_max_us = self.size_wait_max_us.max(other.size_wait_max_us);
+        self.deadline_wait_us += other.deadline_wait_us;
+        self.deadline_wait_max_us = self.deadline_wait_max_us.max(other.deadline_wait_max_us);
+        self.drain_wait_us += other.drain_wait_us;
+        self.drain_wait_max_us = self.drain_wait_max_us.max(other.drain_wait_max_us);
     }
 
     /// Fold a whole set of shard stats (a pool's, or every drained pool of
@@ -134,6 +196,15 @@ struct Pending {
     id: u64,
     x: Vec<f32>,
     enqueued: Instant,
+}
+
+/// Which trigger fired a flush — routes the queue-wait accrual to the
+/// matching per-reason counters.
+#[derive(Debug, Clone, Copy)]
+enum FlushKind {
+    Size,
+    Deadline,
+    Drain,
 }
 
 /// Aggregates single-sample requests into batched engine invocations.
@@ -174,7 +245,7 @@ impl RequestBatcher {
         if self.queue.len() >= self.cfg.max_batch {
             self.stats.flushes += 1;
             self.stats.size_flushes += 1;
-            return self.run_flush(now);
+            return self.run_flush(now, FlushKind::Size);
         }
         Ok(Vec::new())
     }
@@ -186,7 +257,7 @@ impl RequestBatcher {
             Some(p) if now.duration_since(p.enqueued) >= self.cfg.max_delay => {
                 self.stats.flushes += 1;
                 self.stats.deadline_flushes += 1;
-                self.run_flush(now)
+                self.run_flush(now, FlushKind::Deadline)
             }
             _ => Ok(Vec::new()),
         }
@@ -201,13 +272,20 @@ impl RequestBatcher {
         }
         self.stats.flushes += 1;
         self.stats.drain_flushes += 1;
-        self.run_flush(now)
+        self.run_flush(now, FlushKind::Drain)
     }
 
     /// One flush event: drain the whole queue in `max_batch`-sized engine
     /// invocations. Trigger counters are the caller's job; this counts
-    /// only `engine_calls` and `completed`.
-    fn run_flush(&mut self, now: Instant) -> Result<Vec<Completion>> {
+    /// `engine_calls`, `completed`, and the per-reason queue-wait accrual.
+    ///
+    /// Queue delays use the injected `now` (deterministic under test
+    /// clocks); the `batch_wait`/`compute` spans time real engine work, so
+    /// they read the wall clock directly.
+    fn run_flush(&mut self, now: Instant, kind: FlushKind) -> Result<Vec<Completion>> {
+        let flush_started = Instant::now();
+        let mut wait_sum_us = 0u64;
+        let mut wait_max_us = 0u64;
         let mut out = Vec::with_capacity(self.queue.len());
         while !self.queue.is_empty() {
             let take = self.queue.len().min(self.cfg.max_batch);
@@ -217,19 +295,43 @@ impl RequestBatcher {
             for p in &batch {
                 xs.extend_from_slice(&p.x);
             }
+            let call_started = Instant::now();
+            let batch_wait = call_started.duration_since(flush_started);
             let logits = self.engine.infer_batch(&xs, take)?;
+            let compute = call_started.elapsed();
             let c = self.engine.num_classes();
             self.stats.engine_calls += 1;
             self.stats.completed += take as u64;
             for (k, p) in batch.into_iter().enumerate() {
                 let row = logits[k * c..(k + 1) * c].to_vec();
+                let queue_delay = now.duration_since(p.enqueued);
+                let us = queue_delay.as_micros() as u64;
+                wait_sum_us += us;
+                wait_max_us = wait_max_us.max(us);
                 out.push(Completion {
                     id: p.id,
                     predicted: argmax(&row),
                     logits: row,
-                    queue_delay: now.duration_since(p.enqueued),
+                    queue_delay,
+                    batch_wait,
+                    compute,
                     batch_size: take,
                 });
+            }
+        }
+        match kind {
+            FlushKind::Size => {
+                self.stats.size_wait_us += wait_sum_us;
+                self.stats.size_wait_max_us = self.stats.size_wait_max_us.max(wait_max_us);
+            }
+            FlushKind::Deadline => {
+                self.stats.deadline_wait_us += wait_sum_us;
+                self.stats.deadline_wait_max_us =
+                    self.stats.deadline_wait_max_us.max(wait_max_us);
+            }
+            FlushKind::Drain => {
+                self.stats.drain_wait_us += wait_sum_us;
+                self.stats.drain_wait_max_us = self.stats.drain_wait_max_us.max(wait_max_us);
             }
         }
         Ok(out)

@@ -98,6 +98,13 @@ impl Engine {
         Ok(())
     }
 
+    /// How many layers currently sit decoded in the unpack cache — the
+    /// `cgmq_engine_decoded_layers` telemetry gauge. Equal to the layer
+    /// count after [`preload`](Self::preload); 0 in `Streaming` mode.
+    pub fn decoded_layers(&self) -> usize {
+        self.cache.iter().filter(|c| c.get().is_some()).count()
+    }
+
     /// The decoded dense weights of layer `li`, filling the slot on first
     /// use. A lost `set` race means another thread stored the identical
     /// decode first; its value is returned.

@@ -28,9 +28,14 @@
 //!   that drains the old pool without losing a request.
 //! * [`net`] — the network front: a dependency-free HTTP/1.1 server
 //!   ([`Server`]) exposing the router over TCP — `POST
-//!   /v1/models/{key}/infer`, `GET /healthz`, `GET /stats` — mapping
-//!   [`Submission::Shed`] to `429 Retry-After` and draining gracefully on
-//!   shutdown so no accepted request is dropped.
+//!   /v1/models/{key}/infer`, `GET /healthz`, `GET /stats`, `GET /metrics`
+//!   — mapping [`Submission::Shed`] to `429 Retry-After` and draining
+//!   gracefully on shutdown so no accepted request is dropped.
+//! * [`telemetry`] — the deploy-side observability spine: log₂
+//!   stage-latency [`Histogram`]s over relaxed atomics, per-request
+//!   [`Trace`]s via an injectable [`Clock`] (deterministic in tests), and
+//!   per-model × per-status counters, rendered as Prometheus text on
+//!   `GET /metrics` and JSON on `GET /stats`.
 //! * [`reference`] — the host fake-quant forward mirroring the eval graph;
 //!   the engine is held to bit-for-bit agreement with it (the cross-path
 //!   golden test in `tests/deploy_roundtrip.rs`).
@@ -57,6 +62,7 @@ pub mod net;
 pub mod pool;
 pub mod reference;
 pub mod router;
+pub mod telemetry;
 
 pub use batch::{BatchConfig, BatcherStats, Completion, RequestBatcher};
 pub use engine::{DecodeMode, Engine};
@@ -64,3 +70,7 @@ pub use format::{PackedLayer, PackedModel, WidthStream};
 pub use net::{Server, ServerConfig, ServerReport};
 pub use pool::{default_workers, PoolCompletion, PoolConfig, PoolStats, Submission, WorkerPool};
 pub use router::{ModelReport, RouteStats, Router};
+pub use telemetry::{
+    Clock, Histogram, HistogramSnapshot, ManualClock, ModelSnapshot, RealClock, ServerTelemetry,
+    SpanRecorder, Stage, TelemetrySnapshot, Trace,
+};

@@ -95,6 +95,13 @@ pub struct Request {
     /// Header names lowercased, values trimmed.
     headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// When the request line had been read off the wire — the start stamp
+    /// of the telemetry `accept` span. `None` only for requests built
+    /// outside [`read_request`].
+    pub first_byte: Option<Instant>,
+    /// When the request (headers + body) was fully parsed — the end stamp
+    /// of the `accept` span.
+    pub parsed: Option<Instant>,
 }
 
 impl Request {
@@ -225,6 +232,10 @@ pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Result<Request, R
         None => return Err(ReadError::Closed),
         Some(l) => l,
     };
+    // Stamp *after* the request line arrived, not at call time — between
+    // keep-alive requests this function sits in read_line waiting, and
+    // that idle time must not be charged to the accept span.
+    let first_byte = Instant::now();
     let mut parts = line.split_whitespace();
     let (method, target, version) =
         match (parts.next(), parts.next(), parts.next(), parts.next()) {
@@ -266,7 +277,15 @@ pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Result<Request, R
         headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
     }
 
-    let mut req = Request { method, target, http11, headers, body: Vec::new() };
+    let mut req = Request {
+        method,
+        target,
+        http11,
+        headers,
+        body: Vec::new(),
+        first_byte: Some(first_byte),
+        parsed: None,
+    };
     if req.header("transfer-encoding").is_some() {
         return Err(ReadError::Malformed("chunked transfer encoding not supported".into()));
     }
@@ -297,21 +316,45 @@ pub fn read_request<R: BufRead>(r: &mut R, max_body: usize) -> Result<Request, R
             req.body = body;
         }
     }
+    req.parsed = Some(Instant::now());
     Ok(req)
 }
 
-/// One response, always a JSON body.
+/// One response — JSON by default, plain text for the Prometheus
+/// `/metrics` exposition.
 #[derive(Debug)]
 pub struct Response {
     pub status: Status,
     pub body: String,
     /// `Retry-After` seconds hint (the 429 path sets it).
     pub retry_after: Option<u64>,
+    /// `Content-Type` header value.
+    pub content_type: &'static str,
+    /// Server-assigned request id, echoed as `X-Request-Id` so a
+    /// client-observed latency can be joined to its server-side trace.
+    pub request_id: Option<u64>,
 }
 
 impl Response {
     pub fn json(status: Status, body: &Json) -> Self {
-        Self { status, body: body.to_string(), retry_after: None }
+        Self {
+            status,
+            body: body.to_string(),
+            retry_after: None,
+            content_type: "application/json",
+            request_id: None,
+        }
+    }
+
+    /// A plain-text body (the Prometheus text exposition).
+    pub fn text(status: Status, body: String) -> Self {
+        Self {
+            status,
+            body,
+            retry_after: None,
+            content_type: "text/plain; version=0.0.4",
+            request_id: None,
+        }
     }
 
     /// An error body: `{"error": <reason>, "detail": <msg>}`.
@@ -327,13 +370,17 @@ impl Response {
     pub fn write_to(&self, w: &mut impl Write, keep_alive: bool) -> std::io::Result<()> {
         write!(
             w,
-            "HTTP/1.1 {} {}\r\ncontent-type: application/json\r\ncontent-length: {}\r\n",
+            "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\n",
             self.status.code(),
             self.status.reason(),
+            self.content_type,
             self.body.len()
         )?;
         if let Some(secs) = self.retry_after {
             write!(w, "retry-after: {secs}\r\n")?;
+        }
+        if let Some(id) = self.request_id {
+            write!(w, "x-request-id: {id}\r\n")?;
         }
         write!(w, "connection: {}\r\n\r\n", if keep_alive { "keep-alive" } else { "close" })?;
         w.write_all(self.body.as_bytes())?;
@@ -626,12 +673,24 @@ mod tests {
 
     #[test]
     fn response_wire_format_roundtrips_through_the_client_parser() {
-        let resp = Response::json(Status::Ok, &Json::obj(vec![("a", Json::num(1.0))]));
+        let mut resp = Response::json(Status::Ok, &Json::obj(vec![("a", Json::num(1.0))]));
+        resp.request_id = Some(42);
         let mut wire = Vec::new();
         resp.write_to(&mut wire, true).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.contains("content-type: application/json\r\n"), "{text}");
+        assert!(text.contains("x-request-id: 42\r\n"), "{text}");
         let (status, body) = read_client_response(&mut Cursor::new(&wire)).unwrap();
         assert_eq!(status, 200);
         assert_eq!(body, "{\"a\":1}");
+
+        // The Prometheus route answers text/plain, no request id.
+        let metrics = Response::text(Status::Ok, "cgmq_served_total 0\n".into());
+        let mut wire = Vec::new();
+        metrics.write_to(&mut wire, true).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.contains("content-type: text/plain; version=0.0.4\r\n"), "{text}");
+        assert!(!text.contains("x-request-id:"), "{text}");
 
         let mut shed = Response::error(Status::TooManyRequests, "shed");
         shed.retry_after = Some(1);

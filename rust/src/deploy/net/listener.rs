@@ -21,6 +21,7 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
+use super::super::telemetry::ServerTelemetry;
 use super::http::{self, Request, Response, Status};
 use super::lock;
 
@@ -55,8 +56,14 @@ pub struct Listener {
 
 impl Listener {
     /// Bind `addr` (`127.0.0.1:0` picks an ephemeral port) and start
-    /// accepting; every request goes to `handler`.
-    pub fn bind(addr: &str, handler: Arc<dyn Handler>, limits: ConnLimits) -> Result<Self> {
+    /// accepting; every request goes to `handler`. Accepted connections
+    /// and every written response status are counted on `telemetry`.
+    pub fn bind(
+        addr: &str,
+        handler: Arc<dyn Handler>,
+        limits: ConnLimits,
+        telemetry: Arc<ServerTelemetry>,
+    ) -> Result<Self> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -67,7 +74,7 @@ impl Listener {
             .spawn({
                 let running = Arc::clone(&running);
                 let conns = Arc::clone(&conns);
-                move || accept_loop(listener, handler, limits, running, conns)
+                move || accept_loop(listener, handler, limits, running, conns, telemetry)
             })
             .context("spawning accept loop")?;
         Ok(Self { addr, running, accept: Some(accept), conns })
@@ -107,6 +114,7 @@ fn accept_loop(
     limits: ConnLimits,
     running: Arc<AtomicBool>,
     conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    telemetry: Arc<ServerTelemetry>,
 ) {
     let mut next_conn = 0u64;
     // ordering: relaxed — a stale true costs at most one extra 2ms accept
@@ -115,12 +123,14 @@ fn accept_loop(
         match listener.accept() {
             Ok((stream, _peer)) => {
                 next_conn += 1;
+                telemetry.count_connection();
                 let worker = std::thread::Builder::new()
                     .name(format!("cgmq-http-{next_conn}"))
                     .spawn({
                         let handler = Arc::clone(&handler);
                         let running = Arc::clone(&running);
-                        move || connection_loop(stream, handler, limits, running)
+                        let telemetry = Arc::clone(&telemetry);
+                        move || connection_loop(stream, handler, limits, running, telemetry)
                     });
                 if let Ok(handle) = worker {
                     let mut conns = lock(&conns);
@@ -145,6 +155,7 @@ fn connection_loop(
     handler: Arc<dyn Handler>,
     limits: ConnLimits,
     running: Arc<AtomicBool>,
+    telemetry: Arc<ServerTelemetry>,
 ) {
     stream.set_nodelay(true).ok();
     if stream.set_read_timeout(Some(limits.read_timeout)).is_err() {
@@ -168,6 +179,10 @@ fn connection_loop(
                     .unwrap_or_else(|_| {
                         Response::error(Status::InternalError, "handler panicked")
                     });
+                // Count at the single write point, so the responses-by-
+                // status series covers every route *and* the panic->500
+                // path.
+                telemetry.observe_http_status(resp.status.code());
                 if resp.write_to(&mut writer, keep).is_err() || !keep {
                     return;
                 }
@@ -177,6 +192,7 @@ fn connection_loop(
                 // close — after a framing error the stream is unreadable.
                 // Clean EOF / idle timeout / dead transport close silently.
                 if let Some(status) = e.status() {
+                    telemetry.observe_http_status(status.code());
                     let _ = Response::error(status, e.message()).write_to(&mut writer, false);
                 }
                 return;

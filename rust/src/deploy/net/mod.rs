@@ -44,10 +44,13 @@
 //!   across threads — while completions are pumped out by one background
 //!   thread and handed to the waiting connection workers. Endpoints:
 //!   `POST /v1/models/{key}/infer`, `GET /healthz`, `GET /stats`
-//!   (per-model [`RouteStats`](super::RouteStats) as JSON), `POST
-//!   /admin/shutdown` (graceful drain: stop accepting, finish every
-//!   accepted request, then shut the router down and verify nothing was
-//!   lost).
+//!   (per-model [`RouteStats`](super::RouteStats) plus telemetry as
+//!   JSON), `GET /metrics` (the same counters as Prometheus text — see
+//!   [`telemetry`](super::telemetry)), `POST /admin/shutdown` (graceful
+//!   drain: stop accepting, finish every accepted request, then shut the
+//!   router down and verify nothing was lost). Every infer response
+//!   carries an `X-Request-Id` header joinable to the server-side trace
+//!   ring.
 //!
 //! `cgmq serve` binds a server from `.cgmqm` files; `cgmq load-bench` is
 //! the loopback load generator (open-loop client threads, 429-retry,

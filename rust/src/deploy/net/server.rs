@@ -20,6 +20,15 @@
 //! pump keeps running until nothing is outstanding), then shut the router
 //! down and report per-model stats. [`ServerReport::verify_drained`]
 //! checks the no-request-lost guarantee: per key, `completed == accepted`.
+//!
+//! **Observability**: every infer request gets a server-unique id (echoed
+//! back as `X-Request-Id`) and a per-stage [`SpanRecorder`] trace;
+//! counters and stage histograms aggregate in the shared
+//! [`ServerTelemetry`] and are exposed as Prometheus text on `GET
+//! /metrics` and as JSON on `GET /stats`. Both surfaces (and the final
+//! [`ServerReport`]) read the same counters, so they agree bit-exactly
+//! whenever the server is quiescent — which is what `cgmq load-bench`
+//! cross-checks against its client-side tallies.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::net::SocketAddr;
@@ -33,6 +42,10 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::deploy::engine::Engine;
 use crate::deploy::pool::{PoolCompletion, PoolConfig, Submission};
 use crate::deploy::router::{ModelReport, Router};
+use crate::deploy::telemetry::{
+    self, HistogramSnapshot, RealClock, ServerTelemetry, SpanRecorder, Stage, TelemetrySnapshot,
+    STAGES, STATUS_CODES,
+};
 use crate::util::json::{self, Json};
 
 use super::http::{Request, Response, Status};
@@ -51,6 +64,9 @@ pub struct ServerConfig {
     /// How long a connection worker waits for its completion before
     /// answering 504 (generous: it only fires if a worker wedges).
     pub reply_timeout: Duration,
+    /// Completed [`Trace`](crate::deploy::telemetry::Trace)s kept in the
+    /// telemetry ring for inspection (0 disables trace retention).
+    pub trace_ring: usize,
 }
 
 impl Default for ServerConfig {
@@ -60,6 +76,7 @@ impl Default for ServerConfig {
             max_body: 1 << 20,
             read_timeout: Duration::from_secs(5),
             reply_timeout: Duration::from_secs(30),
+            trace_ring: 256,
         }
     }
 }
@@ -89,6 +106,8 @@ struct Front {
     /// Tells the pump to exit once nothing is outstanding.
     pump_stop: AtomicBool,
     reply_timeout: Duration,
+    /// Stage histograms, per-model/status counters, request ids, traces.
+    telemetry: Arc<ServerTelemetry>,
 }
 
 /// Admission outcome as the HTTP layer sees it.
@@ -276,20 +295,69 @@ impl NetHandler {
         let Some(router) = guard.as_ref() else {
             return Response::error(Status::ServiceUnavailable, "server is draining");
         };
-        let models: BTreeMap<String, Json> =
-            router.stats_all().into_iter().map(|(k, s)| (k, s.to_json())).collect();
+        let stats = router.stats_all();
         drop(guard);
+        let snap = self.front.telemetry.snapshot();
+        let models: BTreeMap<String, Json> = stats
+            .into_iter()
+            .map(|(k, s)| {
+                let mut j = s.to_json();
+                if let (Json::Obj(m), Some(ms)) = (&mut j, snap.models.get(&k)) {
+                    m.insert("statuses".into(), statuses_json(&ms.by_status));
+                    m.insert("stages".into(), stages_json(&ms.stages));
+                }
+                (k, j)
+            })
+            .collect();
         Response::json(
             Status::Ok,
             &Json::obj(vec![
                 // ordering: relaxed — display-only snapshot for /stats.
                 ("served", Json::num(self.front.served.load(Ordering::Relaxed) as f64)),
+                ("connections", Json::num(snap.connections as f64)),
+                ("http_responses", statuses_json(&snap.http_status)),
                 ("models", Json::Obj(models)),
             ]),
         )
     }
 
-    fn infer(&self, key: &str, body: &[u8]) -> Response {
+    /// `GET /metrics`: Prometheus text exposition. Reads the same router
+    /// stats and telemetry counters `/stats` serializes, so the two
+    /// surfaces agree bit-exactly at any quiescent point.
+    fn metrics(&self) -> Response {
+        let guard = lock(&self.front.router);
+        let Some(router) = guard.as_ref() else {
+            return Response::error(Status::ServiceUnavailable, "server is draining");
+        };
+        let routes = router.stats_all();
+        let decoded = router.decoded_layers_all();
+        drop(guard);
+        let snap = self.front.telemetry.snapshot();
+        // ordering: relaxed — display-only snapshot for /metrics.
+        let served = self.front.served.load(Ordering::Relaxed);
+        Response::text(
+            Status::Ok,
+            telemetry::render_prometheus(&snap, served, &routes, &decoded),
+        )
+    }
+
+    /// The infer route's telemetry shell: allocates the request id, seeds
+    /// the span recorder with the wire-level accept span, and records the
+    /// finished trace whatever the outcome.
+    fn infer(&self, key: &str, req: &Request) -> Response {
+        let tel = &self.front.telemetry;
+        let request_id = tel.next_request_id();
+        let mut rec = SpanRecorder::start(tel.clock());
+        if let (Some(first), Some(parsed)) = (req.first_byte, req.parsed) {
+            rec.set(Stage::Accept, parsed.saturating_duration_since(first));
+        }
+        let mut resp = self.infer_inner(key, &req.body, &mut rec);
+        resp.request_id = Some(request_id);
+        tel.record(rec, key, request_id, resp.status.code());
+        resp
+    }
+
+    fn infer_inner(&self, key: &str, body: &[u8], rec: &mut SpanRecorder) -> Response {
         let Ok(text) = std::str::from_utf8(body) else {
             return Response::error(Status::BadRequest, "body is not UTF-8");
         };
@@ -308,18 +376,33 @@ impl NetHandler {
                 )
             }
         };
-        match self.front.submit(key, x) {
+        rec.mark(Stage::Parse);
+        let outcome = self.front.submit(key, x);
+        rec.mark(Stage::Admit);
+        match outcome {
             SubmitOutcome::Accepted { id } => match self.front.await_completion(key, id) {
-                Some(c) => Response::json(
-                    Status::Ok,
-                    &Json::obj(vec![
-                        ("key", Json::str(key)),
-                        ("id", Json::num(id as f64)),
-                        ("predicted", Json::num(c.predicted as f64)),
-                        ("logits", Json::arr_f32(&c.logits)),
-                        ("batch_size", Json::num(c.batch_size as f64)),
-                    ]),
-                ),
+                Some(c) => {
+                    // Server-side stage durations measured by the batcher
+                    // and the pool; the wall time this worker spent blocked
+                    // in await_completion is covered by their sum.
+                    rec.set(Stage::QueueWait, c.queue_delay);
+                    rec.set(Stage::BatchWait, c.batch_wait);
+                    rec.set(Stage::Compute, c.compute);
+                    let resp = Response::json(
+                        Status::Ok,
+                        &Json::obj(vec![
+                            ("key", Json::str(key)),
+                            ("id", Json::num(id as f64)),
+                            ("predicted", Json::num(c.predicted as f64)),
+                            ("logits", Json::arr_f32(&c.logits)),
+                            ("batch_size", Json::num(c.batch_size as f64)),
+                        ]),
+                    );
+                    // Reply span: completion ready → response serialized
+                    // (includes the pump handoff + JSON encoding above).
+                    rec.set(Stage::Reply, c.completed_at.elapsed());
+                    resp
+                }
                 None => Response::error(Status::GatewayTimeout, "completion did not arrive"),
             },
             SubmitOutcome::Shed { queue_cap } => {
@@ -352,14 +435,15 @@ impl Handler for NetHandler {
         match (req.method.as_str(), segments.as_slice()) {
             ("GET", ["healthz"]) => self.healthz(),
             ("GET", ["stats"]) => self.stats(),
-            ("POST", ["v1", "models", key, "infer"]) => self.infer(key, &req.body),
+            ("GET", ["metrics"]) => self.metrics(),
+            ("POST", ["v1", "models", key, "infer"]) => self.infer(key, &req),
             ("POST", ["admin", "shutdown"]) => {
                 // ordering: seqcst — one-shot control-plane flag, off the
                 // request fast path; the strongest order costs nothing here.
                 self.front.stop.store(true, Ordering::SeqCst);
                 Response::json(Status::Ok, &Json::obj(vec![("status", Json::str("draining"))]))
             }
-            (_, ["healthz"]) | (_, ["stats"]) => {
+            (_, ["healthz"]) | (_, ["stats"]) | (_, ["metrics"]) => {
                 Response::error(Status::MethodNotAllowed, "route is GET-only")
             }
             (_, ["v1", "models", _, "infer"]) | (_, ["admin", "shutdown"]) => {
@@ -369,20 +453,56 @@ impl Handler for NetHandler {
                 Status::NotFound,
                 format!(
                     "no route '{path}' (routes: POST /v1/models/{{key}}/infer, GET /healthz, \
-                     GET /stats, POST /admin/shutdown)"
+                     GET /stats, GET /metrics, POST /admin/shutdown)"
                 ),
             ),
         }
     }
 }
 
+/// `{"200": n, ...}` over the full status taxonomy, zeros included, so the
+/// three exposition surfaces (`/stats`, `/metrics`, [`ServerReport`]) stay
+/// shape-stable and bit-comparable.
+fn statuses_json(counts: &[u64; STATUS_CODES.len()]) -> Json {
+    let mut m = BTreeMap::new();
+    for (i, code) in STATUS_CODES.iter().enumerate() {
+        m.insert(code.to_string(), Json::num(counts[i] as f64));
+    }
+    Json::Obj(m)
+}
+
+/// Per-stage histogram summary: count/sum/max plus p50/p99 upper bounds
+/// from the log₂ buckets.
+fn stages_json(stages: &[HistogramSnapshot; STAGES]) -> Json {
+    let mut m = BTreeMap::new();
+    for stage in Stage::ALL {
+        let h = &stages[stage as usize];
+        let p50 = h.quantile_bounds(0.50).map_or(0, |(_, hi)| hi);
+        let p99 = h.quantile_bounds(0.99).map_or(0, |(_, hi)| hi);
+        m.insert(
+            stage.as_str().to_string(),
+            Json::obj(vec![
+                ("count", Json::num(h.count as f64)),
+                ("sum_us", Json::num(h.sum_us as f64)),
+                ("max_us", Json::num(h.max_us as f64)),
+                ("p50_us_le", Json::num(p50 as f64)),
+                ("p99_us_le", Json::num(p99 as f64)),
+            ]),
+        );
+    }
+    Json::Obj(m)
+}
+
 /// What a drained server reports: per-model router reports plus the served
-/// request count.
+/// request count and the final telemetry snapshot.
 #[derive(Debug)]
 pub struct ServerReport {
     pub models: BTreeMap<String, ModelReport>,
     /// 200s served on the infer route.
     pub served: u64,
+    /// Telemetry captured after every worker joined — quiescent, so it is
+    /// bit-comparable with the last `/metrics` or `/stats` scrape.
+    pub telemetry: TelemetrySnapshot,
 }
 
 impl ServerReport {
@@ -415,12 +535,18 @@ impl ServerReport {
                     // Completions nobody waited for (0 in normal operation;
                     // every HTTP-accepted request has a waiting worker).
                     m.insert("uncollected".into(), Json::num(report.completions.len() as f64));
+                    if let Some(ms) = self.telemetry.models.get(k) {
+                        m.insert("statuses".into(), statuses_json(&ms.by_status));
+                        m.insert("stages".into(), stages_json(&ms.stages));
+                    }
                 }
                 (k.clone(), j)
             })
             .collect();
         Json::obj(vec![
             ("served", Json::num(self.served as f64)),
+            ("connections", Json::num(self.telemetry.connections as f64)),
+            ("http_responses", statuses_json(&self.telemetry.http_status)),
             ("models", Json::Obj(models)),
         ])
     }
@@ -472,6 +598,11 @@ impl Server {
             router.add_model(key.clone(), engine)?;
             keys.push(key);
         }
+        let telemetry = Arc::new(ServerTelemetry::new(
+            &keys,
+            Arc::new(RealClock::default()),
+            cfg.trace_ring,
+        ));
         let front = Arc::new(Front {
             router: Mutex::new(Some(router)),
             keys,
@@ -483,10 +614,11 @@ impl Server {
             stop: AtomicBool::new(false),
             pump_stop: AtomicBool::new(false),
             reply_timeout: cfg.reply_timeout,
+            telemetry: Arc::clone(&telemetry),
         });
         let handler: Arc<dyn Handler> = Arc::new(NetHandler { front: Arc::clone(&front) });
         let limits = ConnLimits { max_body: cfg.max_body, read_timeout: cfg.read_timeout };
-        let listener = Listener::bind(addr, handler, limits)?;
+        let listener = Listener::bind(addr, handler, limits, telemetry)?;
         let pump = std::thread::Builder::new()
             .name("cgmq-http-pump".into())
             .spawn({
@@ -509,6 +641,11 @@ impl Server {
 
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The live telemetry spine (counters, stage histograms, trace ring).
+    pub fn telemetry(&self) -> Arc<ServerTelemetry> {
+        Arc::clone(&self.front.telemetry)
     }
 
     /// Whether a graceful shutdown has been requested (`/admin/shutdown`
@@ -558,8 +695,13 @@ impl Server {
         // 3. Drain the router itself.
         let router = lock(&self.front.router).take().context("router already drained")?;
         let models = router.shutdown()?;
-        // ordering: relaxed — every writer thread joined above, so the
-        // counter is quiescent; any ordering reads the final value.
-        Ok(ServerReport { models, served: self.front.served.load(Ordering::Relaxed) })
+        Ok(ServerReport {
+            models,
+            // ordering: relaxed — every writer thread joined above, so
+            // the counter is quiescent and this reads the final value.
+            served: self.front.served.load(Ordering::Relaxed),
+            // Quiescent for the same reason: every recorder joined.
+            telemetry: self.front.telemetry.snapshot(),
+        })
     }
 }

@@ -136,6 +136,11 @@ pub struct PoolCompletion {
     pub predicted: usize,
     /// Time spent queued in the shard before its batch was flushed.
     pub queue_delay: Duration,
+    /// Flush start → this request's engine invocation starting (chunk
+    /// wait inside a multi-call flush).
+    pub batch_wait: Duration,
+    /// Wall-clock duration of the engine invocation this request rode in.
+    pub compute: Duration,
     /// Size of the engine invocation this request rode in.
     pub batch_size: usize,
     /// Instant the worker forwarded this completion — the end stamp for
@@ -355,6 +360,8 @@ fn worker_loop(
                 logits: c.logits,
                 predicted: c.predicted,
                 queue_delay: c.queue_delay,
+                batch_wait: c.batch_wait,
+                compute: c.compute,
                 batch_size: c.batch_size,
                 completed_at,
             })

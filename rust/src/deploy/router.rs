@@ -110,6 +110,18 @@ impl RouteStats {
             ("flushes", Json::num(self.batch.flushes as f64)),
             ("engine_calls", Json::num(self.batch.engine_calls as f64)),
             ("mean_batch", Json::num(self.batch.mean_batch())),
+            // Queue-wait accounting (µs) from the drained shards' batcher
+            // counters — the arrival-rate signal, per flush reason.
+            (
+                "queue_wait",
+                Json::obj(vec![
+                    ("total_us", Json::num(self.batch.queue_wait_us() as f64)),
+                    ("max_us", Json::num(self.batch.queue_wait_max_us() as f64)),
+                    ("size_us", Json::num(self.batch.size_wait_us as f64)),
+                    ("deadline_us", Json::num(self.batch.deadline_wait_us as f64)),
+                    ("drain_us", Json::num(self.batch.drain_wait_us as f64)),
+                ]),
+            ),
         ])
     }
 }
@@ -238,6 +250,15 @@ impl Router {
     /// stitching `keys()` + `stats(key)` per model.
     pub fn stats_all(&self) -> BTreeMap<String, RouteStats> {
         self.models.iter().map(|(k, e)| (k.clone(), e.stats_now())).collect()
+    }
+
+    /// Per-model decoded-weight-cache fill (layers decoded / preloaded) —
+    /// the `cgmq_engine_decoded_layers` gauge on `/metrics`.
+    pub fn decoded_layers_all(&self) -> BTreeMap<String, u64> {
+        self.models
+            .iter()
+            .map(|(k, e)| (k.clone(), e.pool.engine().decoded_layers() as u64))
+            .collect()
     }
 
     /// Route one request to the model behind `key`. Returns the admission

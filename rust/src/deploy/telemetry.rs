@@ -1,0 +1,849 @@
+//! Deploy-side telemetry: stage-latency histograms, per-request traces,
+//! and per-model × per-status counters behind the `/metrics` and `/stats`
+//! exposition routes.
+//!
+//! Design constraints, in order:
+//!
+//! - **std-only, allocation-free on the hot path.** [`Histogram::record`]
+//!   and [`StatusCounters::observe`] are a handful of relaxed atomic adds
+//!   — no locks, no heap. Allocation happens only when a completed
+//!   request's [`Trace`] is assembled and pushed onto the bounded ring,
+//!   i.e. once per *reply*, never per atomic sample.
+//! - **Deterministic in tests.** All wall-clock reads go through the
+//!   [`Clock`] trait: [`RealClock`] in production, [`ManualClock`] in
+//!   tests so span math is exact.
+//! - **Analyzer-clean.** Every atomic mutation lives in a designated
+//!   choke function (`record`, `observe`, `count_connection`,
+//!   `next_request_id`) enforced by `cgmq analyze`'s counter-choke rule,
+//!   every `Ordering::` carries an `// ordering:` justification, and the
+//!   metric names emitted here are kept in sync with the README table by
+//!   the `metrics-name-sync` rule.
+//!
+//! The histogram is log₂-bucketed over microseconds: bucket 0 holds
+//! `0..=1µs`, bucket `b` holds `(2^(b-1), 2^b]` µs. Powers of two land
+//! exactly on their bucket's upper bound, which is what the property
+//! tests pin down. Quantile queries return `(lo, hi)` *bounds* using the
+//! same nearest-rank convention as the exact
+//! [`percentiles_ms`](crate::bench_harness::percentiles_ms) oracle
+//! (0-based index `ceil((count - 1) * q)` of the sorted samples), so the
+//! exact percentile provably lies inside the returned bracket.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::router::RouteStats;
+
+// ---------------------------------------------------------------------------
+// Clock
+// ---------------------------------------------------------------------------
+
+/// Monotonic time source for trace timestamps and span marks.
+///
+/// Production uses [`RealClock`]; tests use [`ManualClock`] and advance it
+/// explicitly, making every span in a [`Trace`] a deterministic number.
+pub trait Clock: Send + Sync {
+    /// Monotonic time elapsed since the clock's epoch.
+    fn now(&self) -> Duration;
+}
+
+/// [`Clock`] backed by [`Instant`]; epoch is the moment of construction.
+#[derive(Debug)]
+pub struct RealClock {
+    epoch: Instant,
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        RealClock { epoch: Instant::now() }
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+}
+
+/// Test [`Clock`]: starts at zero, moves only when told to.
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    now_us: AtomicU64,
+}
+
+impl ManualClock {
+    /// Advance the clock by `d` (truncated to whole microseconds).
+    pub fn advance(&self, d: Duration) {
+        // ordering: relaxed — test-only clock; tests sequence advance()
+        // and now() on the same thread or across a join, never racing.
+        self.now_us.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Duration {
+        // ordering: relaxed — see advance(); reads are test-sequenced.
+        Duration::from_micros(self.now_us.load(Ordering::Relaxed))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Stages
+// ---------------------------------------------------------------------------
+
+/// Number of [`Stage`]s — the length of every per-stage array.
+pub const STAGES: usize = 7;
+
+/// The deploy pipeline stages a request passes through, in order.
+///
+/// | stage | measures |
+/// |---|---|
+/// | `Accept` | first request-line byte → request fully parsed off the wire |
+/// | `Parse` | JSON body decode + input validation |
+/// | `Admit` | router admission (`try_submit`), including the shed decision |
+/// | `QueueWait` | enqueue → flush start inside the shard batcher |
+/// | `BatchWait` | flush start → this request's engine call starts |
+/// | `Compute` | the engine forward pass for the batch chunk |
+/// | `Reply` | completion handed back → HTTP response serialized |
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    Accept,
+    Parse,
+    Admit,
+    QueueWait,
+    BatchWait,
+    Compute,
+    Reply,
+}
+
+impl Stage {
+    /// Every stage, in pipeline order (also the array index order).
+    pub const ALL: [Stage; STAGES] = [
+        Stage::Accept,
+        Stage::Parse,
+        Stage::Admit,
+        Stage::QueueWait,
+        Stage::BatchWait,
+        Stage::Compute,
+        Stage::Reply,
+    ];
+
+    /// Stable label used in `/metrics` and `/stats`.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Parse => "parse",
+            Stage::Admit => "admit",
+            Stage::QueueWait => "queue_wait",
+            Stage::BatchWait => "batch_wait",
+            Stage::Compute => "compute",
+            Stage::Reply => "reply",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Histogram
+// ---------------------------------------------------------------------------
+
+/// Number of log₂ buckets. The top bucket's nominal upper bound is
+/// `2^39 µs` ≈ 6.4 days; anything slower clamps into it.
+pub const BUCKETS: usize = 40;
+
+/// Upper bound of bucket `b` in microseconds (`1` for bucket 0, else
+/// `2^b`). Bucket `b` covers `(2^(b-1), 2^b]` µs.
+pub fn bucket_upper_us(b: usize) -> u64 {
+    1u64 << b.min(BUCKETS - 1)
+}
+
+fn bucket_index(us: u64) -> usize {
+    if us <= 1 {
+        0
+    } else {
+        // Smallest b with 2^b >= us, i.e. the bucket whose upper bound
+        // is the first power of two at or above the sample.
+        let b = 64 - (us - 1).leading_zeros() as usize;
+        b.min(BUCKETS - 1)
+    }
+}
+
+/// Fixed-bucket log₂ latency histogram over relaxed atomics.
+///
+/// Concurrent [`record`](Histogram::record) calls never block; a
+/// [`snapshot`](Histogram::snapshot) taken mid-record may be torn by a
+/// few in-flight samples (`count` vs the bucket sum), which is fine for
+/// display and exact once the recorders are quiescent (post-drain).
+pub struct Histogram {
+    cells: [AtomicU64; BUCKETS],
+    recorded: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            cells: std::array::from_fn(|_| AtomicU64::new(0)),
+            recorded: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    /// Record one sample. Sole mutation point of the histogram counters
+    /// (`cgmq analyze` counter-choke enforced).
+    pub fn record(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let b = bucket_index(us);
+        // ordering: relaxed — independent monotonic counters; nothing is
+        // published under them, readers only snapshot for display.
+        self.cells[b].fetch_add(1, Ordering::Relaxed);
+        // ordering: relaxed — same monotonic-counter contract as cells.
+        self.recorded.fetch_add(1, Ordering::Relaxed);
+        // ordering: relaxed — same monotonic-counter contract as cells.
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        // ordering: relaxed — lossy running max, display only.
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    /// Copy the current counters out (display read; see type docs for
+    /// the mid-record tearing caveat).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (i, c) in self.cells.iter().enumerate() {
+            // ordering: relaxed — display read of a monotonic counter.
+            counts[i] = c.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot {
+            counts,
+            // ordering: relaxed — display read of a monotonic counter.
+            count: self.recorded.load(Ordering::Relaxed),
+            // ordering: relaxed — display read of a monotonic counter.
+            sum_us: self.sum_us.load(Ordering::Relaxed),
+            // ordering: relaxed — display read of a monotonic counter.
+            max_us: self.max_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value copy of a [`Histogram`], mergeable and queryable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket sample counts (NOT cumulative; see [`bucket_upper_us`]).
+    pub counts: [u64; BUCKETS],
+    /// Total samples recorded.
+    pub count: u64,
+    /// Sum of all samples in microseconds.
+    pub sum_us: u64,
+    /// Largest sample in microseconds.
+    pub max_us: u64,
+}
+
+impl Default for HistogramSnapshot {
+    fn default() -> Self {
+        HistogramSnapshot { counts: [0; BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl HistogramSnapshot {
+    /// Fold `other` into `self`. Associative and commutative: merging is
+    /// bucket-wise addition plus a max, so shard histograms can be
+    /// combined in any grouping.
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    /// Mean sample in microseconds (0 when empty).
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us as f64 / self.count as f64
+        }
+    }
+
+    /// Bounded `q`-quantile estimate: `Some((lo_us, hi_us))` such that
+    /// the exact nearest-rank percentile — the convention of the exact
+    /// oracle [`percentiles_ms`](crate::bench_harness::percentiles_ms),
+    /// 0-based index `ceil((count - 1) * q)` of the sorted samples —
+    /// satisfies `lo <= p <= hi`. `None` when empty.
+    pub fn quantile_bounds(&self, q: f64) -> Option<(u64, u64)> {
+        if self.count == 0 {
+            return None;
+        }
+        let idx = ((self.count - 1) as f64 * q.clamp(0.0, 1.0)).ceil() as u64;
+        let rank = idx.min(self.count - 1) + 1; // 1-based rank in sorted order
+        let mut cum = 0u64;
+        for (b, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let lo = if b == 0 { 0 } else { bucket_upper_us(b - 1) };
+                // The rank bucket holds >= 1 sample, all <= max_us, so
+                // capping by the global max only ever tightens the bound.
+                let hi = bucket_upper_us(b).min(self.max_us);
+                return Some((lo, hi.max(lo)));
+            }
+        }
+        // Torn snapshot (count ahead of the cells): fall back to the
+        // loosest correct bracket instead of panicking in deploy code.
+        Some((0, self.max_us))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Status counters
+// ---------------------------------------------------------------------------
+
+/// The closed set of status codes the HTTP front can emit — mirrors
+/// `net::http::Status` (the analyzer's taxonomy-sync rule keeps that enum
+/// and the README table aligned; this array indexes the counters).
+pub const STATUS_CODES: [u16; 11] =
+    [200, 400, 404, 405, 408, 411, 413, 429, 500, 503, 504];
+
+/// One relaxed counter per taxonomy status code.
+pub struct StatusCounters {
+    slots: [AtomicU64; STATUS_CODES.len()],
+}
+
+impl Default for StatusCounters {
+    fn default() -> Self {
+        StatusCounters { slots: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+impl StatusCounters {
+    /// Count one response with `code`. Sole mutation point of the status
+    /// slots (counter-choke enforced); codes outside the taxonomy are
+    /// ignored (unreachable while `Status` stays closed).
+    pub fn observe(&self, code: u16) {
+        if let Some(i) = STATUS_CODES.iter().position(|&c| c == code) {
+            // ordering: relaxed — monotonic display counter; no data is
+            // published under it.
+            self.slots[i].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Copy the counters out, index-aligned with [`STATUS_CODES`].
+    pub fn snapshot(&self) -> [u64; STATUS_CODES.len()] {
+        let mut out = [0u64; STATUS_CODES.len()];
+        for (i, s) in self.slots.iter().enumerate() {
+            // ordering: relaxed — display read of a monotonic counter.
+            out[i] = s.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traces
+// ---------------------------------------------------------------------------
+
+/// Per-request span recorder. Created when the request is picked up,
+/// fed marks/durations as the request moves through the pipeline, and
+/// finished into a [`Trace`].
+///
+/// [`mark`](SpanRecorder::mark) charges the time since the previous mark
+/// (or start) to a stage via the injected [`Clock`];
+/// [`set`](SpanRecorder::set) stores a duration measured elsewhere
+/// (batcher queue delay, engine compute) without touching the clock.
+pub struct SpanRecorder {
+    clock: Arc<dyn Clock>,
+    started: Duration,
+    last: Duration,
+    spans: [u64; STAGES],
+    touched: [bool; STAGES],
+}
+
+impl SpanRecorder {
+    /// Start recording now (per the injected clock).
+    pub fn start(clock: Arc<dyn Clock>) -> Self {
+        let t0 = clock.now();
+        SpanRecorder {
+            clock,
+            started: t0,
+            last: t0,
+            spans: [0; STAGES],
+            touched: [false; STAGES],
+        }
+    }
+
+    /// Charge the time since the previous mark (or start) to `stage`.
+    pub fn mark(&mut self, stage: Stage) {
+        let t = self.clock.now();
+        let d = t.saturating_sub(self.last);
+        self.last = t;
+        self.spans[stage as usize] += d.as_micros() as u64;
+        self.touched[stage as usize] = true;
+    }
+
+    /// Store an externally measured duration for `stage` (additive, so
+    /// repeated sets accumulate like marks do).
+    pub fn set(&mut self, stage: Stage, d: Duration) {
+        self.spans[stage as usize] += d.as_micros() as u64;
+        self.touched[stage as usize] = true;
+    }
+
+    /// Freeze into a [`Trace`].
+    pub fn finish(self, request_id: u64, key: &str, status: u16) -> Trace {
+        Trace {
+            request_id,
+            key: key.to_string(),
+            status,
+            started_us: self.started.as_micros() as u64,
+            spans: self.spans,
+            touched: self.touched,
+        }
+    }
+}
+
+/// One completed request's stage timings, joinable to the client-side
+/// latency via the `X-Request-Id` response header.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Trace {
+    /// Server-assigned id, echoed to the client as `X-Request-Id`.
+    pub request_id: u64,
+    /// Model key the request targeted.
+    pub key: String,
+    /// Final HTTP status.
+    pub status: u16,
+    /// Microseconds since the telemetry clock's epoch at request start.
+    pub started_us: u64,
+    /// Per-stage microseconds, indexed by `Stage as usize`.
+    pub spans: [u64; STAGES],
+    /// Which stages actually ran (a shed request never reaches compute;
+    /// untouched stages are excluded from the stage histograms).
+    pub touched: [bool; STAGES],
+}
+
+impl Trace {
+    /// Sum of all recorded spans in microseconds.
+    pub fn total_us(&self) -> u64 {
+        self.spans.iter().sum()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-model and server-wide aggregation
+// ---------------------------------------------------------------------------
+
+/// Per-model counters: responses by status + one histogram per stage.
+pub struct ModelTelemetry {
+    by_status: StatusCounters,
+    stages: [Histogram; STAGES],
+}
+
+impl Default for ModelTelemetry {
+    fn default() -> Self {
+        ModelTelemetry {
+            by_status: StatusCounters::default(),
+            stages: std::array::from_fn(|_| Histogram::default()),
+        }
+    }
+}
+
+impl ModelTelemetry {
+    /// Copy this model's counters out.
+    pub fn snapshot(&self) -> ModelSnapshot {
+        ModelSnapshot {
+            by_status: self.by_status.snapshot(),
+            stages: std::array::from_fn(|i| self.stages[i].snapshot()),
+        }
+    }
+}
+
+/// The server's telemetry spine: one instance per
+/// [`Server`](crate::deploy::net::Server), shared by the listener, the
+/// connection threads, and the request handler.
+///
+/// The model set is fixed at construction (the router's keys), so the
+/// hot path never locks a map — per-model lookup is a read of an
+/// immutable `BTreeMap`.
+pub struct ServerTelemetry {
+    clock: Arc<dyn Clock>,
+    connections: AtomicU64,
+    http_status: StatusCounters,
+    req_seq: AtomicU64,
+    models: BTreeMap<String, ModelTelemetry>,
+    ring: Mutex<VecDeque<Trace>>,
+    ring_cap: usize,
+}
+
+impl ServerTelemetry {
+    /// Build a telemetry spine for `keys`, keeping the last `ring_cap`
+    /// completed traces.
+    pub fn new(keys: &[String], clock: Arc<dyn Clock>, ring_cap: usize) -> Self {
+        ServerTelemetry {
+            clock,
+            connections: AtomicU64::new(0),
+            http_status: StatusCounters::default(),
+            req_seq: AtomicU64::new(0),
+            models: keys.iter().map(|k| (k.clone(), ModelTelemetry::default())).collect(),
+            ring: Mutex::new(VecDeque::new()),
+            ring_cap,
+        }
+    }
+
+    /// The clock spans are measured against.
+    pub fn clock(&self) -> Arc<dyn Clock> {
+        Arc::clone(&self.clock)
+    }
+
+    /// Count one accepted TCP connection. Sole mutation point of the
+    /// connection counter (counter-choke enforced).
+    pub fn count_connection(&self) {
+        // ordering: relaxed — monotonic display counter.
+        self.connections.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Count one written HTTP response (any route, including read-error
+    /// replies) — the server-wide responses-by-status series.
+    pub fn observe_http_status(&self, code: u16) {
+        self.http_status.observe(code);
+    }
+
+    /// Allocate a fresh request id (1-based, unique per server). Sole
+    /// mutation point of the id sequence (counter-choke enforced).
+    pub fn next_request_id(&self) -> u64 {
+        // ordering: relaxed — unique-id allocator; ids only need to be
+        // distinct, not ordered with any other data.
+        self.req_seq.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Record a finished infer-route request: per-model status counter,
+    /// stage histograms (touched stages only), and the trace ring.
+    /// Unknown keys (404s) have no per-model slot and are dropped here;
+    /// they are still counted by
+    /// [`observe_http_status`](ServerTelemetry::observe_http_status).
+    pub fn record(&self, rec: SpanRecorder, key: &str, request_id: u64, status: u16) {
+        let Some(model) = self.models.get(key) else { return };
+        model.by_status.observe(status);
+        let trace = rec.finish(request_id, key, status);
+        for (i, h) in model.stages.iter().enumerate() {
+            if trace.touched[i] {
+                h.record(Duration::from_micros(trace.spans[i]));
+            }
+        }
+        self.push_trace(trace);
+    }
+
+    fn push_trace(&self, t: Trace) {
+        if self.ring_cap == 0 {
+            return;
+        }
+        let mut ring = super::net::lock(&self.ring);
+        if ring.len() == self.ring_cap {
+            ring.pop_front();
+        }
+        ring.push_back(t);
+    }
+
+    /// The last N completed traces, oldest first.
+    pub fn recent_traces(&self) -> Vec<Trace> {
+        super::net::lock(&self.ring).iter().cloned().collect()
+    }
+
+    /// Copy every counter out for exposition.
+    pub fn snapshot(&self) -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            // ordering: relaxed — display read of a monotonic counter.
+            connections: self.connections.load(Ordering::Relaxed),
+            http_status: self.http_status.snapshot(),
+            models: self.models.iter().map(|(k, m)| (k.clone(), m.snapshot())).collect(),
+        }
+    }
+}
+
+/// Plain-value copy of a [`ServerTelemetry`] at one instant.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct TelemetrySnapshot {
+    /// TCP connections accepted since start.
+    pub connections: u64,
+    /// Responses written by status, index-aligned with [`STATUS_CODES`].
+    pub http_status: [u64; STATUS_CODES.len()],
+    /// Per-model counters, keyed by model key.
+    pub models: BTreeMap<String, ModelSnapshot>,
+}
+
+/// Plain-value copy of one model's [`ModelTelemetry`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSnapshot {
+    /// Infer-route responses by status, index-aligned with
+    /// [`STATUS_CODES`].
+    pub by_status: [u64; STATUS_CODES.len()],
+    /// One histogram per [`Stage`], indexed by `Stage as usize`.
+    pub stages: [HistogramSnapshot; STAGES],
+}
+
+impl Default for ModelSnapshot {
+    fn default() -> Self {
+        ModelSnapshot {
+            by_status: [0; STATUS_CODES.len()],
+            stages: [HistogramSnapshot::default(); STAGES],
+        }
+    }
+}
+
+impl ModelSnapshot {
+    /// Total infer-route responses across every status.
+    pub fn total(&self) -> u64 {
+        self.by_status.iter().sum()
+    }
+
+    /// Count for one status code (0 for codes outside the taxonomy).
+    pub fn status_count(&self, code: u16) -> u64 {
+        STATUS_CODES
+            .iter()
+            .position(|&c| c == code)
+            .map_or(0, |i| self.by_status[i])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Prometheus text exposition
+// ---------------------------------------------------------------------------
+//
+// Metric names are defined once here and mirrored by the marker-wrapped
+// table in README "Observability"; `cgmq analyze`'s metrics-name-sync
+// rule fails the build when either side drifts.
+
+/// `counter` — TCP connections accepted by the listener.
+pub const M_CONNECTIONS: &str = "cgmq_connections_total";
+/// `counter` — HTTP responses written, by status (every route, including
+/// parse-error replies).
+pub const M_HTTP_RESPONSES: &str = "cgmq_http_responses_total";
+/// `counter` — infer responses delivered to a waiting client (the
+/// server's `served` drain invariant counter).
+pub const M_SERVED: &str = "cgmq_served_total";
+/// `counter` — infer-route requests by model and status.
+pub const M_REQUESTS: &str = "cgmq_requests_total";
+/// `counter` — requests submitted to a model's pool (accepted + shed).
+pub const M_SUBMITTED: &str = "cgmq_submitted_total";
+/// `counter` — requests admitted past the depth cap.
+pub const M_ACCEPTED: &str = "cgmq_accepted_total";
+/// `counter` — completions returned by a model's pool.
+pub const M_COMPLETED: &str = "cgmq_completed_total";
+/// `counter` — requests shed at admission (HTTP 429).
+pub const M_SHED: &str = "cgmq_shed_total";
+/// `counter` — zero-downtime model swaps.
+pub const M_SWAPS: &str = "cgmq_swaps_total";
+/// `counter` — batcher flushes (size + deadline + drain).
+pub const M_FLUSHES: &str = "cgmq_batch_flushes_total";
+/// `counter` — engine forward calls (>= flushes; chunked by max_batch).
+pub const M_ENGINE_CALLS: &str = "cgmq_engine_calls_total";
+/// `gauge` — engine layers whose weights are decoded into the unpack
+/// cache.
+pub const M_DECODED_LAYERS: &str = "cgmq_engine_decoded_layers";
+/// `histogram` — per-stage request latency in seconds, labelled by model
+/// and stage.
+pub const M_STAGE_SECONDS: &str = "cgmq_stage_duration_seconds";
+
+fn esc_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn header(out: &mut String, name: &str, kind: &str, help: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push('\n');
+    out.push_str("# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(kind);
+    out.push('\n');
+}
+
+/// Render the Prometheus text exposition (`GET /metrics`).
+///
+/// Counter series are emitted for every taxonomy code and every model —
+/// zeros included — so scrapers and the `load-bench` cross-check always
+/// find a stable series set. Histogram buckets follow the Prometheus
+/// convention: cumulative counts with `le` upper bounds in *seconds*
+/// (the underlying buckets are log₂ microseconds).
+pub fn render_prometheus(
+    snap: &TelemetrySnapshot,
+    served: u64,
+    routes: &BTreeMap<String, RouteStats>,
+    decoded: &BTreeMap<String, u64>,
+) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(4096);
+
+    header(&mut out, M_CONNECTIONS, "counter", "TCP connections accepted");
+    let _ = writeln!(out, "{M_CONNECTIONS} {}", snap.connections);
+
+    header(&mut out, M_HTTP_RESPONSES, "counter", "HTTP responses written, by status");
+    for (i, &code) in STATUS_CODES.iter().enumerate() {
+        let _ = writeln!(out, "{M_HTTP_RESPONSES}{{status=\"{code}\"}} {}", snap.http_status[i]);
+    }
+
+    header(&mut out, M_SERVED, "counter", "infer responses delivered to a waiting client");
+    let _ = writeln!(out, "{M_SERVED} {served}");
+
+    header(&mut out, M_REQUESTS, "counter", "infer-route requests by model and status");
+    for (key, m) in &snap.models {
+        let k = esc_label(key);
+        for (i, &code) in STATUS_CODES.iter().enumerate() {
+            let _ = writeln!(
+                out,
+                "{M_REQUESTS}{{model=\"{k}\",status=\"{code}\"}} {}",
+                m.by_status[i]
+            );
+        }
+    }
+
+    let route_counters: [(&str, &str, fn(&RouteStats) -> u64); 7] = [
+        (M_SUBMITTED, "requests submitted to the model's pool", |r| r.submitted),
+        (M_ACCEPTED, "requests admitted past the depth cap", |r| r.accepted),
+        (M_COMPLETED, "completions returned by the model's pool", |r| r.completed),
+        (M_SHED, "requests shed at admission (HTTP 429)", |r| r.shed),
+        (M_SWAPS, "zero-downtime model swaps", |r| r.swaps),
+        (M_FLUSHES, "batcher flushes across the model's shards", |r| r.batch.flushes),
+        (M_ENGINE_CALLS, "engine forward calls across the model's shards", |r| {
+            r.batch.engine_calls
+        }),
+    ];
+    for (name, help, get) in route_counters {
+        header(&mut out, name, "counter", help);
+        for (key, r) in routes {
+            let _ = writeln!(out, "{name}{{model=\"{}\"}} {}", esc_label(key), get(r));
+        }
+    }
+
+    header(&mut out, M_DECODED_LAYERS, "gauge", "engine layers decoded into the unpack cache");
+    for (key, n) in decoded {
+        let _ = writeln!(out, "{M_DECODED_LAYERS}{{model=\"{}\"}} {n}", esc_label(key));
+    }
+
+    header(
+        &mut out,
+        M_STAGE_SECONDS,
+        "histogram",
+        "per-stage request latency in seconds, by model and stage",
+    );
+    for (key, m) in &snap.models {
+        let k = esc_label(key);
+        for stage in Stage::ALL {
+            let h = &m.stages[stage as usize];
+            let s = stage.as_str();
+            let mut cum = 0u64;
+            for (b, &c) in h.counts.iter().enumerate() {
+                cum += c;
+                let le = bucket_upper_us(b) as f64 / 1e6;
+                let _ = writeln!(
+                    out,
+                    "{M_STAGE_SECONDS}_bucket{{model=\"{k}\",stage=\"{s}\",le=\"{le}\"}} {cum}"
+                );
+            }
+            let _ = writeln!(
+                out,
+                "{M_STAGE_SECONDS}_bucket{{model=\"{k}\",stage=\"{s}\",le=\"+Inf\"}} {}",
+                h.count
+            );
+            let _ = writeln!(
+                out,
+                "{M_STAGE_SECONDS}_sum{{model=\"{k}\",stage=\"{s}\"}} {}",
+                h.sum_us as f64 / 1e6
+            );
+            let _ = writeln!(
+                out,
+                "{M_STAGE_SECONDS}_count{{model=\"{k}\",stage=\"{s}\"}} {}",
+                h.count
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_places_powers_of_two_on_their_upper_bound() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        for b in 1..BUCKETS - 1 {
+            let edge = 1u64 << b;
+            assert_eq!(bucket_index(edge), b, "2^{b} must land in bucket {b}");
+            assert_eq!(bucket_index(edge + 1), b + 1, "2^{b}+1 must spill over");
+        }
+        // Clamp: beyond the top bucket's range everything lands in it.
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn manual_clock_is_deterministic() {
+        let c = ManualClock::default();
+        assert_eq!(c.now(), Duration::ZERO);
+        c.advance(Duration::from_micros(250));
+        c.advance(Duration::from_micros(750));
+        assert_eq!(c.now(), Duration::from_micros(1000));
+    }
+
+    #[test]
+    fn recorder_charges_inter_mark_time_to_stages() {
+        let clock = Arc::new(ManualClock::default());
+        let mut rec = SpanRecorder::start(clock.clone());
+        clock.advance(Duration::from_micros(10));
+        rec.mark(Stage::Parse);
+        clock.advance(Duration::from_micros(5));
+        rec.mark(Stage::Admit);
+        rec.set(Stage::QueueWait, Duration::from_micros(40));
+        let t = rec.finish(7, "m", 200);
+        assert_eq!(t.spans[Stage::Parse as usize], 10);
+        assert_eq!(t.spans[Stage::Admit as usize], 5);
+        assert_eq!(t.spans[Stage::QueueWait as usize], 40);
+        assert!(!t.touched[Stage::Compute as usize]);
+        assert_eq!(t.total_us(), 55);
+        assert_eq!(t.request_id, 7);
+    }
+
+    #[test]
+    fn ring_keeps_only_the_last_n() {
+        let tel = ServerTelemetry::new(
+            &["m".to_string()],
+            Arc::new(ManualClock::default()),
+            3,
+        );
+        for i in 0..5u64 {
+            let rec = SpanRecorder::start(tel.clock());
+            tel.record(rec, "m", i + 1, 200);
+        }
+        let traces = tel.recent_traces();
+        assert_eq!(traces.len(), 3);
+        assert_eq!(traces[0].request_id, 3);
+        assert_eq!(traces[2].request_id, 5);
+    }
+
+    #[test]
+    fn unknown_key_is_dropped_not_counted() {
+        let tel = ServerTelemetry::new(
+            &["m".to_string()],
+            Arc::new(ManualClock::default()),
+            8,
+        );
+        let rec = SpanRecorder::start(tel.clock());
+        tel.record(rec, "ghost", 1, 404);
+        assert!(tel.recent_traces().is_empty());
+        assert_eq!(tel.snapshot().models["m"].total(), 0);
+    }
+}

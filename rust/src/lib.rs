@@ -59,6 +59,12 @@
 //! infer`, `cgmq serve-bench --workers N`, `cgmq route-bench --models
 //! ...`, `cgmq serve` + `cgmq load-bench`).
 //!
+//! Training-side visibility goes through [`session::Observer`]s on the
+//! event bus; the deploy-side equivalent is [`deploy::telemetry`]: every
+//! server carries per-request stage traces (`X-Request-Id`), log₂
+//! latency histograms and per-model × per-status counters, exposed as
+//! Prometheus text at `GET /metrics` and as enriched `GET /stats` JSON.
+//!
 //! ### Migrating from `Trainer`
 //!
 //! The old monolithic `coordinator::Trainer` remains as a thin shim that

@@ -75,27 +75,32 @@ COMMANDS
              [--batch <b>] [--deadline-us <d>] [--queue-cap <c>]
              [--max-body-kib <k>] [--addr-file <path>]
              (HTTP/1.1 front over the router: POST /v1/models/{key}/infer,
-             GET /healthz, GET /stats, POST /admin/shutdown; overload is
-             answered 429 + Retry-After; --addr 127.0.0.1:0 picks an
-             ephemeral port, written to --addr-file; on shutdown the
-             server drains, prints final stats JSON and exits non-zero if
-             any accepted request was lost)
+             GET /healthz, GET /stats, GET /metrics (Prometheus text),
+             POST /admin/shutdown; overload is answered 429 + Retry-After;
+             every infer response carries X-Request-Id; --addr 127.0.0.1:0
+             picks an ephemeral port, written to --addr-file; on shutdown
+             the server drains, prints final stats JSON and exits non-zero
+             if any accepted request was lost)
   load-bench --addr <host:port> [--key <k>] [--requests <n>] [--clients <n>]
              [--rate <rps>] [--seed <s>] [--verify-model <m.cgmqm>]
-             [--min-shed <n>] [--shutdown]
+             [--min-shed <n>] [--require-stages] [--shutdown]
              (loopback load generator: open-loop client threads, 429s are
              counted and retried until accepted; --verify-model pins every
              HTTP response bit-identical to the direct engine output;
-             --min-shed asserts the burst saturated admission; --shutdown
-             drains the server afterwards; prints throughput/shed/latency
-             percentiles as JSON)
+             --min-shed asserts the burst saturated admission; scrapes
+             /metrics and exits non-zero unless the server-side accept/shed
+             counters match the client tallies bit-exactly;
+             --require-stages additionally asserts every stage histogram
+             recorded samples; --shutdown drains the server afterwards;
+             prints throughput/shed/latency percentiles as JSON)
   analyze    [--root <repo>] [--json]
              (static-analysis gate over the crate's own source: panic
              hygiene in deploy/ hot paths, atomic-ordering justifications,
              SeqCst-on-hot-path, lock scopes containing blocking calls or
              nested locks, stats-counter choke points, README status
-             taxonomy sync; exits non-zero on any finding; allowlist a
-             site with `// analyze-allow: <rule> <reason>`)
+             taxonomy sync, /metrics metric-name sync; exits non-zero on
+             any finding; allowlist a site with
+             `// analyze-allow: <rule> <reason>`)
   fixed-qat  --bits <b> + config flags (uniform-bit QAT baseline)
   myqasr     config flags (heuristic baseline; layer granularity)
   table1     --config <toml>   (method comparison @ bound 0.40%)
@@ -555,7 +560,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let bound = server.local_addr();
     eprintln!(
         "listening on {bound} (models: {}; POST /v1/models/{{key}}/infer, GET /healthz, \
-         GET /stats, POST /admin/shutdown)",
+         GET /stats, GET /metrics, POST /admin/shutdown)",
         keys.join(", ")
     );
     if let Some(path) = addr_file {
@@ -582,6 +587,7 @@ fn cmd_load_bench(args: &Args) -> Result<()> {
     let seed = args.get_usize("seed")?.unwrap_or(42) as u64;
     let verify_model = args.get("verify-model").map(std::path::PathBuf::from);
     let min_shed = args.get_usize("min-shed")?.unwrap_or(0) as u64;
+    let require_stages = args.get_bool("require-stages");
     let shutdown = args.get_bool("shutdown");
     args.finish()?;
     let spec = bench_harness::LoadBenchSpec {
@@ -592,6 +598,7 @@ fn cmd_load_bench(args: &Args) -> Result<()> {
         rate_rps,
         seed,
         verify_model,
+        require_stages,
         shutdown,
     };
     let report = bench_harness::load_bench(&spec)?;

@@ -201,6 +201,55 @@ fn taxonomy_missing_markers_is_flagged() {
     assert!(findings[0].message.contains("analyze:taxonomy"), "{}", findings[0].message);
 }
 
+// -------------------------------------------------------------- metrics
+
+#[test]
+fn metrics_in_sync_is_clean() {
+    let findings = rules::check_metrics(
+        "telemetry.rs",
+        include_str!("fixtures/analyze/metrics_src.rs"),
+        "README.md",
+        include_str!("fixtures/analyze/metrics_readme_ok.md"),
+    );
+    assert!(findings.is_empty(), "{findings:#?}");
+}
+
+#[test]
+fn metrics_drift_is_flagged_both_directions() {
+    let findings = rules::check_metrics(
+        "telemetry.rs",
+        include_str!("fixtures/analyze/metrics_src.rs"),
+        "README.md",
+        include_str!("fixtures/analyze/metrics_readme_bad.md"),
+    );
+    assert_eq!(
+        rule_ids(&findings),
+        vec![rules::RULE_METRICS, rules::RULE_METRICS],
+        "{findings:#?}"
+    );
+    // Emitted but undocumented: reported against the source, at the line
+    // defining the name (comment-stripped, so the retired name in the
+    // fixture's prose comment does not also fire).
+    assert!(findings[0].message.contains("cgmq_requests_total"), "{}", findings[0].message);
+    assert_eq!(findings[0].file, "telemetry.rs");
+    assert_eq!(findings[0].line, 4);
+    // Documented but never emitted: reported against the README table.
+    assert!(findings[1].message.contains("cgmq_latency_seconds"), "{}", findings[1].message);
+    assert_eq!(findings[1].file, "README.md");
+}
+
+#[test]
+fn metrics_missing_markers_is_flagged() {
+    let findings = rules::check_metrics(
+        "telemetry.rs",
+        include_str!("fixtures/analyze/metrics_src.rs"),
+        "README.md",
+        "# README without the analyze markers\n",
+    );
+    assert_eq!(rule_ids(&findings), vec![rules::RULE_METRICS], "{findings:#?}");
+    assert!(findings[0].message.contains("analyze:metrics"), "{}", findings[0].message);
+}
+
 // ----------------------------------------------------------- self-check
 
 #[test]

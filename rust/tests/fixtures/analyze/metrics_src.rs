@@ -1,0 +1,6 @@
+//! Fixture: metric-name definitions as `metrics-name-sync` sees them.
+
+pub const M_CONNECTIONS: &str = "cgmq_connections_total";
+pub const M_REQUESTS: &str = "cgmq_requests_total";
+// Prose naming a retired metric must not keep it alive: cgmq_retired_total
+pub const M_STAGE_SECONDS: &str = "cgmq_stage_duration_seconds";

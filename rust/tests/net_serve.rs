@@ -3,7 +3,9 @@
 //! to the documented status taxonomy without ever taking a connection
 //! worker (or the server) down, a saturating burst sheds with 429 while
 //! the `submitted == accepted + shed` accounting holds across the network
-//! layer, and a graceful shutdown drains every accepted request.
+//! layer, a graceful shutdown drains every accepted request, and the
+//! three telemetry surfaces (`/metrics`, `/stats`, the final
+//! `ServerReport`) expose one bit-exact truth.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -377,4 +379,103 @@ fn graceful_shutdown_drains_accepted_requests() {
     assert_eq!(s.accepted, clients as u64);
     assert_eq!(s.completed, clients as u64, "graceful drain lost a request");
     assert_eq!(report.served, clients as u64);
+}
+
+#[test]
+fn metrics_stats_and_report_expose_one_bit_exact_truth() {
+    use cgmq::bench_harness::parse_prometheus;
+    use cgmq::deploy::telemetry::{M_REQUESTS, M_SERVED, STATUS_CODES};
+
+    let arch = mlp();
+    let in_len = arch.input_len();
+    let requests = 6;
+    let data = cgmq::data::Dataset::synth(29, requests);
+    let eng = engine(&arch, 7);
+
+    // Same single-slot shape as the saturating test, so at least one 429
+    // lands in the status counters.
+    let server = Server::bind(
+        "127.0.0.1:0",
+        vec![("m".to_string(), Arc::clone(&eng))],
+        server_cfg(1, 1, 64, Duration::from_millis(100)),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let images = Arc::new(data.images);
+
+    // The infer response carries the server-assigned trace id, so a
+    // client can join its own latency numbers to the server-side trace.
+    let body = infer_body(&images[..in_len]);
+    let raw = raw_exchange(
+        &addr,
+        format!(
+            "POST /v1/models/m/infer HTTP/1.1\r\ncontent-length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .as_bytes(),
+    );
+    assert!(raw.starts_with("HTTP/1.1 200 "), "{raw:?}");
+    assert!(raw.contains("\r\nx-request-id: "), "{raw:?}");
+
+    // Two submissions overlapping the single in-flight slot force at
+    // least one shed; then drain the remaining samples, plus one 400 and
+    // one 404 so the non-200 rows are exercised too.
+    let primer = std::thread::spawn({
+        let (addr, images) = (addr.clone(), Arc::clone(&images));
+        move || {
+            let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+            submit_until_accepted(&mut client, &infer_body(&images[in_len..2 * in_len])).0
+        }
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+    let mut sheds =
+        submit_until_accepted(&mut client, &infer_body(&images[2 * in_len..3 * in_len])).0;
+    sheds += primer.join().unwrap();
+    for i in 3..requests {
+        let body = infer_body(&images[i * in_len..(i + 1) * in_len]);
+        sheds += submit_until_accepted(&mut client, &body).0;
+    }
+    assert!(sheds >= 1, "the overlapping submissions must shed at least once");
+    let (status, _) = client.request("POST", "/v1/models/m/infer", Some("{\"x\":[1]}")).unwrap();
+    assert_eq!(status, 400);
+    let (status, _) = client
+        .request("POST", "/v1/models/nope/infer", Some(&infer_body(&images[..in_len])))
+        .unwrap();
+    assert_eq!(status, 404);
+
+    // Every infer is answered (submit_until_accepted returns on its 200),
+    // so the infer-route counters are quiescent: the scrape, the JSON
+    // stats, and the post-drain report must agree bit-exactly.
+    let (status, metrics_text) = client.request("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200, "{metrics_text}");
+    let series = parse_prometheus(&metrics_text);
+    let (status, stats_text) = client.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200, "{stats_text}");
+    let stats = json::parse(&stats_text).unwrap();
+    let stat_statuses =
+        stats.get("models").unwrap().get("m").unwrap().get("statuses").unwrap().clone();
+
+    drop(client);
+    let report = server.finish().unwrap();
+    report.verify_drained().unwrap();
+    let rep_m = &report.telemetry.models["m"];
+
+    for &code in STATUS_CODES.iter() {
+        let key = format!("{M_REQUESTS}{{model=\"m\",status=\"{code}\"}}");
+        let prom = series[&key] as u64;
+        let stat =
+            stat_statuses.get(code.to_string().as_str()).unwrap().as_usize().unwrap() as u64;
+        assert_eq!(prom, stat, "/metrics vs /stats drifted for status {code}");
+        assert_eq!(prom, rep_m.status_count(code), "/metrics vs report drifted for {code}");
+    }
+    assert_eq!(rep_m.status_count(200), requests as u64);
+    assert_eq!(rep_m.status_count(429), sheds, "every client-observed shed is counted");
+    assert_eq!(rep_m.status_count(400), 1);
+    assert_eq!(rep_m.status_count(404), 0, "unknown keys have no per-model slot");
+
+    // `served` agrees across all three surfaces as well.
+    assert_eq!(series[M_SERVED] as u64, requests as u64);
+    assert_eq!(stats.get("served").unwrap().as_usize().unwrap(), requests);
+    assert_eq!(report.served, requests as u64);
 }

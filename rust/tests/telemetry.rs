@@ -1,0 +1,201 @@
+//! Property tests for the deploy telemetry spine: the log₂ histogram
+//! places powers of two exactly on their bucket's upper bound, snapshot
+//! merging is associative/commutative and equivalent to recording the
+//! union, and `quantile_bounds` brackets the *exact* nearest-rank
+//! percentile computed by the `percentiles_ms` oracle on the same
+//! samples. Trace span math is pinned with a [`ManualClock`] so every
+//! asserted number is deterministic.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use cgmq::bench_harness::percentiles_ms;
+use cgmq::deploy::telemetry::{bucket_upper_us, BUCKETS};
+use cgmq::deploy::{Histogram, HistogramSnapshot, ManualClock, ServerTelemetry, SpanRecorder, Stage};
+
+/// Deterministic xorshift64* so the sample sets are seeded, not random.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+}
+
+/// Seeded latency samples in µs spanning several orders of magnitude
+/// (sub-µs ties, mid-range bulk, a heavy tail) — the shape a real serve
+/// latency distribution has.
+fn seeded_samples(seed: u64, n: usize) -> Vec<u64> {
+    let mut rng = Rng(seed | 1);
+    (0..n)
+        .map(|i| {
+            let r = rng.next();
+            match i % 4 {
+                0 => r % 2,                  // 0..=1 µs: the shared bucket 0
+                1 => 2 + r % 1_000,          // O(ms) bulk
+                2 => 1_000 + r % 100_000,    // slow requests
+                _ => 100_000 + r % 5_000_000, // tail, up to seconds
+            }
+        })
+        .collect()
+}
+
+fn recorded(samples: &[u64]) -> HistogramSnapshot {
+    let h = Histogram::default();
+    for &us in samples {
+        h.record(Duration::from_micros(us));
+    }
+    h.snapshot()
+}
+
+#[test]
+fn powers_of_two_land_exactly_on_their_bucket_upper_bound() {
+    // One sample at every bucket's upper bound: exactly one count per
+    // bucket, no spill in either direction.
+    let h = Histogram::default();
+    for b in 0..BUCKETS {
+        h.record(Duration::from_micros(bucket_upper_us(b)));
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.counts, [1u64; BUCKETS], "upper bounds must be inclusive");
+    assert_eq!(snap.count, BUCKETS as u64);
+
+    // One past each upper bound spills into the next bucket (the top
+    // bucket clamps).
+    let h = Histogram::default();
+    for b in 0..BUCKETS - 1 {
+        h.record(Duration::from_micros(bucket_upper_us(b) + 1));
+    }
+    let snap = h.snapshot();
+    assert_eq!(snap.counts[0], 0, "upper_bound+1 must not stay in its bucket");
+    for b in 1..BUCKETS {
+        assert_eq!(snap.counts[b], 1, "2^{}+1 must land in bucket {b}", b - 1);
+    }
+}
+
+#[test]
+fn merge_is_associative_commutative_and_matches_recording_the_union() {
+    let s1 = seeded_samples(11, 257);
+    let s2 = seeded_samples(23, 128);
+    let s3 = seeded_samples(47, 63);
+    let (a, b, c) = (recorded(&s1), recorded(&s2), recorded(&s3));
+
+    // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c)
+    let mut left = a;
+    left.merge(&b);
+    left.merge(&c);
+    let mut bc = b;
+    bc.merge(&c);
+    let mut right = a;
+    right.merge(&bc);
+    assert_eq!(left, right, "merge must be associative");
+
+    // a ⊕ b == b ⊕ a
+    let mut ab = a;
+    ab.merge(&b);
+    let mut ba = b;
+    ba.merge(&a);
+    assert_eq!(ab, ba, "merge must be commutative");
+
+    // Merging shard snapshots == recording every sample into one
+    // histogram (how per-stage totals are assembled across shards).
+    let mut union: Vec<u64> = s1.clone();
+    union.extend_from_slice(&s2);
+    union.extend_from_slice(&s3);
+    assert_eq!(left, recorded(&union), "merge must equal the union recording");
+    assert_eq!(left.count, (s1.len() + s2.len() + s3.len()) as u64);
+}
+
+#[test]
+fn quantile_bounds_bracket_the_exact_percentiles_ms_oracle() {
+    for seed in [3u64, 19, 101, 977] {
+        for n in [1usize, 2, 17, 500] {
+            let samples = seeded_samples(seed, n);
+            let snap = recorded(&samples);
+
+            // The exact oracle: same samples, seconds in, ms out.
+            let mut durs: Vec<f64> = samples.iter().map(|&us| us as f64 * 1e-6).collect();
+            let (p50, p90, p99) = percentiles_ms(&mut durs);
+
+            for (q, p_ms) in [(0.50, p50), (0.90, p90), (0.99, p99)] {
+                let exact_us = (p_ms * 1e3).round() as u64;
+                let (lo, hi) = snap
+                    .quantile_bounds(q)
+                    .expect("non-empty histogram has quantile bounds");
+                assert!(
+                    lo <= exact_us && exact_us <= hi,
+                    "seed {seed} n {n} q {q}: exact {exact_us}µs outside [{lo}, {hi}]"
+                );
+                assert!(hi <= snap.max_us, "upper bound must not exceed the max sample");
+            }
+
+            // q = 1.0 picks the bucket holding the max, and the max caps
+            // the bracket — the estimate degrades gracefully to exact.
+            let (lo, hi) = snap.quantile_bounds(1.0).unwrap();
+            assert_eq!(hi, snap.max_us);
+            assert!(lo <= snap.max_us);
+        }
+    }
+
+    // Empty histograms answer None, not a fake zero percentile.
+    assert_eq!(HistogramSnapshot::default().quantile_bounds(0.5), None);
+    assert_eq!(HistogramSnapshot::default().mean_us(), 0.0);
+}
+
+#[test]
+fn manual_clock_traces_are_deterministic_end_to_end() {
+    let clock = Arc::new(ManualClock::default());
+    let tel = ServerTelemetry::new(&["m".to_string()], clock.clone(), 2);
+
+    // Three requests with known span patterns; the ring keeps the last 2.
+    for (i, (parse_us, admit_us, status)) in
+        [(100u64, 7u64, 200u16), (250, 3, 429), (40, 9, 200)].into_iter().enumerate()
+    {
+        let id = tel.next_request_id();
+        assert_eq!(id, i as u64 + 1, "request ids are a 1-based sequence");
+        let mut rec = SpanRecorder::start(tel.clock());
+        clock.advance(Duration::from_micros(parse_us));
+        rec.mark(Stage::Parse);
+        clock.advance(Duration::from_micros(admit_us));
+        rec.mark(Stage::Admit);
+        if status == 200 {
+            rec.set(Stage::Compute, Duration::from_micros(500));
+        }
+        tel.record(rec, "m", id, status);
+    }
+
+    let snap = tel.snapshot();
+    let m = &snap.models["m"];
+    assert_eq!(m.status_count(200), 2);
+    assert_eq!(m.status_count(429), 1);
+    assert_eq!(m.total(), 3);
+
+    // Stage histograms saw exactly the recorded spans: sums and counts
+    // are exact integers under the manual clock.
+    let parse = &m.stages[Stage::Parse as usize];
+    assert_eq!((parse.count, parse.sum_us, parse.max_us), (3, 390, 250));
+    let admit = &m.stages[Stage::Admit as usize];
+    assert_eq!((admit.count, admit.sum_us, admit.max_us), (3, 19, 9));
+    // The shed request never touched compute: only the two 200s recorded.
+    let compute = &m.stages[Stage::Compute as usize];
+    assert_eq!((compute.count, compute.sum_us), (2, 1000));
+    let accept = &m.stages[Stage::Accept as usize];
+    assert_eq!(accept.count, 0, "untouched stages must not record zeros");
+
+    // Ring cap 2: the oldest trace fell off; spans survive verbatim.
+    let traces = tel.recent_traces();
+    assert_eq!(traces.len(), 2);
+    assert_eq!(traces[0].request_id, 2);
+    assert_eq!(traces[0].status, 429);
+    assert_eq!(traces[1].request_id, 3);
+    assert_eq!(traces[1].spans[Stage::Parse as usize], 40);
+    assert_eq!(traces[1].total_us(), 40 + 9 + 500);
+    // started_us is the manual clock's reading when the span opened:
+    // request 3 started after the first two requests' 360µs of advances.
+    assert_eq!(traces[1].started_us, 360);
+}
