@@ -3,9 +3,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt fmt-fix clippy analyze bench-smoke serve-smoke route-smoke net-smoke metrics-smoke artifacts bench clean
+.PHONY: ci build test fmt fmt-fix clippy analyze kernel-smoke bench-smoke serve-smoke route-smoke net-smoke metrics-smoke artifacts bench clean
 
-ci: build test fmt clippy analyze bench-smoke serve-smoke route-smoke net-smoke metrics-smoke
+ci: build test fmt clippy analyze kernel-smoke serve-smoke route-smoke net-smoke metrics-smoke
 
 build:
 	$(CARGO) build --release
@@ -30,10 +30,15 @@ clippy:
 analyze: build
 	./target/release/cgmq analyze --root .
 
-# Compile + execute the deploy engine hot path (tiny iteration counts and
-# the cross-path golden assertion) on every PR.
-bench-smoke:
+# Compile + execute the deploy engine hot path (tiny iteration counts)
+# on every PR: the blocked-GEMM == naive-oracle bit-equality, both
+# cross-path goldens (mlp dense AND the lenet5 im2col+GEMM conv path),
+# and the per-op compute split rows.
+kernel-smoke:
 	$(CARGO) bench --bench bench_deploy -- --smoke
+
+# Back-compat alias for the pre-kernel-layer target name.
+bench-smoke: kernel-smoke
 
 # End-to-end serve smoke: export a packed model, run it on synthetic
 # inputs, then drive the pooled serve bench (1 vs 4 workers). A *trained*

@@ -1,10 +1,13 @@
-//! Deploy-path microbenchmarks: bit-packing, weight decode, and the packed
-//! inference engine (the new serve hot path).
+//! Deploy-path microbenchmarks: bit-packing, weight decode, the kernel
+//! layer (blocked GEMM vs the naive oracle), and the packed inference
+//! engine (the new serve hot path) with its per-op compute split.
 //!
 //!     cargo bench --bench bench_deploy
 //!     cargo bench --bench bench_deploy -- --smoke   # CI: tiny iteration
 //!                                                   # counts, asserts the
-//!                                                   # cross-path golden
+//!                                                   # cross-path goldens
+//!                                                   # (mlp AND the lenet5
+//!                                                   # conv path)
 //!
 //! Hand-rolled harness (no criterion in the offline vendor set), same
 //! reporting as bench_hot_paths: warmup, then timed repetitions with
@@ -82,6 +85,53 @@ fn main() {
             fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &data.images, 64);
         std::hint::black_box(logits.unwrap());
     });
+
+    // --- the kernel layer: blocked GEMM vs the naive oracle. The timing
+    // gap is the blocking win; the bit-equality assert is the accumulation
+    // -order contract (one accumulator per output, k ascending, never
+    // split) that keeps every cross-path golden alive. fc2-of-lenet5
+    // shape: 50 x 500 weights against a 64-wide panel.
+    {
+        use cgmq::deploy::kernels::{gemm, gemm_naive};
+        let (m, k, n) = (50, 500, 64);
+        let mut st = 0x243F_6A88_85A3_08D3u64;
+        let mut next = move || {
+            st ^= st << 13;
+            st ^= st >> 7;
+            st ^= st << 17;
+            (st.wrapping_mul(0x2545_F491_4F6C_DD1D) >> 40) as f32 / 16_777_216.0 - 0.5
+        };
+        let a: Vec<f32> = (0..m * k).map(|_| next()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| next()).collect();
+        let mut c_blocked = vec![0.0f32; m * n];
+        let mut c_naive = vec![0.0f32; m * n];
+        bench("kernels: gemm blocked 50x500x64", 20 * scale, || {
+            gemm(&a, &b, &mut c_blocked, m, k, n);
+            std::hint::black_box(&c_blocked);
+        });
+        bench("kernels: gemm naive   50x500x64", 20 * scale, || {
+            gemm_naive(&a, &b, &mut c_naive, m, k, n);
+            std::hint::black_box(&c_naive);
+        });
+        assert!(
+            c_blocked.iter().zip(&c_naive).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "blocked GEMM drifted from the naive oracle"
+        );
+        println!("kernels: blocked gemm == naive oracle (bit-for-bit) ✓");
+    }
+
+    // --- per-op compute split of the warm engine (the baseline integer
+    // SWAR kernels have to beat; decode ~0 after preload) ---
+    cached.preload().unwrap();
+    let (_, prof) = cached.profile_batch(&data.images, 64).unwrap();
+    println!(
+        "deploy: per-op split b=64 (mlp)              matmul {:>5.1}% | im2col {:>5.1}% | \
+         elem {:>5.1}% | decode {:>5.1}%",
+        prof.share_pct(prof.matmul),
+        prof.share_pct(prof.im2col),
+        prof.share_pct(prof.elementwise),
+        prof.share_pct(prof.decode)
+    );
 
     // --- the batched serve path ---
     let mut batcher = RequestBatcher::new(
@@ -167,16 +217,37 @@ fn main() {
     );
     println!("\ncross-path golden: engine logits == fake-quant reference (bit-for-bit) ✓");
 
-    if !smoke {
-        // The conv path at full scale.
+    // --- the conv path (lenet5): runs in smoke too (tiny batch) so the
+    // im2col + GEMM lowering is timed and golden-anchored in CI ---
+    {
         let arch = lenet5();
         let s = synthetic_deploy_state(&arch, &DEPLOY_LEVELS, 7);
         let model =
             PackedModel::from_state(&arch, &s.params, &s.betas_w, &s.betas_a, &s.gates).unwrap();
         let engine = Engine::new(model).unwrap();
-        let data = cgmq::data::Dataset::synth(5, 8);
-        bench("deploy: Engine::infer_batch b=8 (lenet5)", 5, || {
-            std::hint::black_box(engine.infer_batch(&data.images, 8).unwrap());
+        engine.preload().unwrap();
+        let nb = if smoke { 2 } else { 8 };
+        let data = cgmq::data::Dataset::synth(5, nb);
+        bench(&format!("deploy: Engine::infer_batch b={nb} (lenet5)"), 2 * scale, || {
+            std::hint::black_box(engine.infer_batch(&data.images, nb).unwrap());
         });
+        let (logits, prof) = engine.profile_batch(&data.images, nb).unwrap();
+        let want = fake_quant_logits(
+            &arch, &s.params, &s.betas_w, &s.betas_a, &s.gates, &data.images, nb,
+        )
+        .unwrap();
+        assert!(
+            logits.iter().zip(&want).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "lenet5 conv engine drifted from the fake-quant reference"
+        );
+        println!(
+            "deploy: per-op split b={nb} (lenet5)           matmul {:>5.1}% | im2col {:>5.1}% | \
+             elem {:>5.1}% | decode {:>5.1}%",
+            prof.share_pct(prof.matmul),
+            prof.share_pct(prof.im2col),
+            prof.share_pct(prof.elementwise),
+            prof.share_pct(prof.decode)
+        );
+        println!("cross-path golden: lenet5 conv engine == reference (bit-for-bit) ✓");
     }
 }

@@ -6,10 +6,12 @@
 //!
 //! * `panic-hygiene` — no `.unwrap()` / `.expect(` / `panic!` /
 //!   `unreachable!` / `todo!` / `unimplemented!` / `dbg!` in the serving
-//!   hot-path files under `src/deploy/` (everything except the load-time
-//!   `format.rs` and the test-oracle `reference.rs`). A connection worker,
-//!   batcher loop or engine forward that can panic turns one bad request
-//!   into a dead thread.
+//!   hot-path files under `src/deploy/` — the engine, the compiled
+//!   `plan.rs`, every kernel under `kernels/`, the batcher/pool/router
+//!   and the network front; everything except the load-time `format.rs`
+//!   and the test-oracle `reference.rs`. A connection worker, batcher
+//!   loop, plan build or GEMM inner loop that can panic turns one bad
+//!   request into a dead thread.
 //! * `atomic-ordering` — every `Ordering::` use, crate-wide, must carry an
 //!   `// ordering:` justification on the same line or directly above. The
 //!   choice of memory ordering is exactly the kind of invariant that looks

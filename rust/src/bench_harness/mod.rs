@@ -1056,9 +1056,11 @@ pub fn synthetic_deploy_state(
 /// The deploy rows: per arch, packed artifact size vs fp32, the
 /// single-vs-batched engine throughput, the sharded pool at 1 vs
 /// `workers` workers (throughput + tail latency), the two-variant
-/// router front with a bounded queue (throughput + shed rate), and the
+/// router front with a bounded queue (throughput + shed rate), the
 /// loopback HTTP front ([`net_bench`]: throughput + client-observed 429
-/// rate), on deterministic synthetic snapshots. Writes
+/// rate), and the warm engine's per-op compute split
+/// ([`Engine::profile_batch`]: MatMul / Im2col / Elem shares of one
+/// batched forward), on deterministic synthetic snapshots. Writes
 /// `table_deploy.json` next to the text table.
 pub fn deploy_table(
     base: &Config,
@@ -1073,10 +1075,10 @@ pub fn deploy_table(
          ({requests} requests, batch {batch}, {workers} workers).\n"
     ));
     out.push_str(
-        "| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup | Pool x1 req/s | Pool xN req/s | Pool gain | Q-wait µs | Route req/s | Shed % | Net req/s | Net shed % |\n",
+        "| Arch   | Packed KiB | FP32 KiB | Single req/s | Batched req/s | Speedup | Pool x1 req/s | Pool xN req/s | Pool gain | Q-wait µs | Route req/s | Shed % | Net req/s | Net shed % | MatMul % | Im2col % | Elem % |\n",
     );
     out.push_str(
-        "|--------|------------|----------|--------------|---------------|---------|---------------|---------------|-----------|-----------|-------------|--------|-----------|------------|\n",
+        "|--------|------------|----------|--------------|---------------|---------|---------------|---------------|-----------|-----------|-------------|--------|-----------|------------|----------|----------|--------|\n",
     );
     let mut rows = Vec::new();
     let bcfg = BatchConfig { max_batch: batch, max_delay: std::time::Duration::from_micros(200) };
@@ -1089,6 +1091,19 @@ pub fn deploy_table(
         let batcher = RequestBatcher::new(Engine::new(model.clone())?, bcfg)?;
         let bench = serve_bench_engines(single, batcher, requests, base.seed)?;
         let shared = std::sync::Arc::new(Engine::new(model.clone())?);
+        // Per-op compute split of one warm batched forward (cache filled
+        // by preload, so the decode span is ~0 and the MatMul / Im2col /
+        // Elem shares describe the steady serve state).
+        shared.preload()?;
+        let in_len = shared.input_len();
+        let xs: Vec<f32> =
+            (0..batch.max(1) * in_len).map(|i| (i % 251) as f32 / 251.0 - 0.5).collect();
+        let (_, prof) = shared.profile_batch(&xs, batch.max(1))?;
+        let (mm_pct, im_pct, el_pct) = (
+            prof.share_pct(prof.matmul),
+            prof.share_pct(prof.im2col),
+            prof.share_pct(prof.elementwise),
+        );
         let pool =
             pool_comparison(std::sync::Arc::clone(&shared), requests, workers, bcfg, base.seed)?;
         // Net row: the same shared engine behind the loopback HTTP front,
@@ -1138,7 +1153,7 @@ pub fn deploy_table(
         let net_rps = net.get("throughput_rps")?.as_f64()?;
         let net_shed_rate = net.get("shed_rate")?.as_f64()?;
         out.push_str(&format!(
-            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x | {:13.1} | {:13.1} | {:8.2}x | {:9.1} | {:11.1} | {:5.1}% | {:9.1} | {:9.1}% |\n",
+            "| {:<6} | {:10.1} | {:8.1} | {:12.1} | {:13.1} | {:6.2}x | {:13.1} | {:13.1} | {:8.2}x | {:9.1} | {:11.1} | {:5.1}% | {:9.1} | {:9.1}% | {:7.1}% | {:7.1}% | {:5.1}% |\n",
             arch.name,
             packed_bytes as f64 / 1024.0,
             fp32_bytes as f64 / 1024.0,
@@ -1152,7 +1167,10 @@ pub fn deploy_table(
             route_rps,
             100.0 * shed_rate,
             net_rps,
-            100.0 * net_shed_rate
+            100.0 * net_shed_rate,
+            mm_pct,
+            im_pct,
+            el_pct
         ));
         let mut j = bench;
         if let Json::Obj(m) = &mut j {
@@ -1162,6 +1180,15 @@ pub fn deploy_table(
             m.insert("pool".into(), pool);
             m.insert("router".into(), route);
             m.insert("net".into(), net);
+            m.insert(
+                "op_shares".into(),
+                Json::obj(vec![
+                    ("decode_pct", Json::num(prof.share_pct(prof.decode))),
+                    ("matmul_pct", Json::num(mm_pct)),
+                    ("im2col_pct", Json::num(im_pct)),
+                    ("elementwise_pct", Json::num(el_pct)),
+                ]),
+            );
         }
         rows.push(j);
     }

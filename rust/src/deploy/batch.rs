@@ -29,7 +29,11 @@
 //!
 //! The batcher holds its engine behind an [`Arc`], so several batchers —
 //! the per-shard queues of [`super::pool::WorkerPool`] — can share one
-//! engine and its decoded-weight cache.
+//! engine and its decoded-weight cache. Each batcher also owns a
+//! [`Scratch`] plus input/logits buffers that persist across flushes, so
+//! a warm flush invokes the engine through
+//! [`Engine::infer_batch_into`](super::Engine::infer_batch_into) with
+//! zero heap allocations inside the engine.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -37,7 +41,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use super::engine::{argmax, Engine};
+use super::engine::Engine;
+use super::kernels::argmax;
+use super::plan::Scratch;
 
 /// Flush policy of a [`RequestBatcher`].
 #[derive(Debug, Clone, Copy)]
@@ -214,6 +220,13 @@ pub struct RequestBatcher {
     queue: VecDeque<Pending>,
     next_id: u64,
     stats: BatcherStats,
+    /// Engine working memory, reused across flushes (grown to the plan's
+    /// maxima on the first full batch, never shrunk).
+    scratch: Scratch,
+    /// Gathered batch input, reused across flushes.
+    xbuf: Vec<f32>,
+    /// Engine output buffer, reused across flushes.
+    logits_buf: Vec<f32>,
 }
 
 impl RequestBatcher {
@@ -229,6 +242,9 @@ impl RequestBatcher {
             queue: VecDeque::new(),
             next_id: 0,
             stats: BatcherStats::default(),
+            scratch: Scratch::new(),
+            xbuf: Vec::new(),
+            logits_buf: Vec::new(),
         })
     }
 
@@ -290,20 +306,24 @@ impl RequestBatcher {
         while !self.queue.is_empty() {
             let take = self.queue.len().min(self.cfg.max_batch);
             let batch: Vec<Pending> = self.queue.drain(..take).collect();
-            let in_len = self.engine.input_len();
-            let mut xs = Vec::with_capacity(take * in_len);
+            self.xbuf.clear();
             for p in &batch {
-                xs.extend_from_slice(&p.x);
+                self.xbuf.extend_from_slice(&p.x);
             }
             let call_started = Instant::now();
             let batch_wait = call_started.duration_since(flush_started);
-            let logits = self.engine.infer_batch(&xs, take)?;
+            self.engine.infer_batch_into(
+                &self.xbuf,
+                take,
+                &mut self.scratch,
+                &mut self.logits_buf,
+            )?;
             let compute = call_started.elapsed();
             let c = self.engine.num_classes();
             self.stats.engine_calls += 1;
             self.stats.completed += take as u64;
             for (k, p) in batch.into_iter().enumerate() {
-                let row = logits[k * c..(k + 1) * c].to_vec();
+                let row = self.logits_buf[k * c..(k + 1) * c].to_vec();
                 let queue_delay = now.duration_since(p.enqueued);
                 let us = queue_delay.as_micros() as u64;
                 wait_sum_us += us;

@@ -1,20 +1,23 @@
-//! The packed-model inference engine: the deploy-path hot loop.
+//! The packed-model inference engine: a thin executor over the compiled
+//! [`ExecPlan`] and the shared kernel layer.
 //!
-//! Runs a [`PackedModel`] forward on the host — dense, conv (NCHW/OIHW,
-//! valid padding, stride 1), ReLU, max-pool — decoding the bit-packed
-//! integer weight codes back to their fake-quantized f32 values via the
-//! per-gate scales, and fake-quantizing activations per unit exactly as the
-//! training-path eval graph does (unsigned grid on `[0, beta_a]` after
-//! ReLU, pooling *after* activation quantization, 8-bit input
-//! quantization, float logits).
+//! Construction verifies the packed model (checksum + arch drift, in
+//! `PackedModel::verify`) and compiles the [`ExecPlan`]: every geometry
+//! check resolved once, `Dense` and `Conv` lowered onto the unified
+//! blocked GEMM ([`super::kernels`]), each op's kernel chosen by the
+//! [`KernelSelector`](super::plan::KernelSelector) from its packed
+//! bit-widths. The forward pass is then straight-line plan execution:
+//! no shape `bail!`s, and — through the plan's precomputed [`Scratch`]
+//! layout (two ping-pong activation buffers + one im2col buffer) — a
+//! fixed handful of heap allocations per [`infer_batch`](Engine::infer_batch)
+//! call, or **zero** for a warm [`infer_batch_into`](Engine::infer_batch_into).
 //!
 //! Two decode modes:
 //!
-//! * [`DecodeMode::Streaming`] — decode every layer's weights on the fly,
-//!   per call, into a scratch buffer that is dropped afterwards. Minimal
-//!   resident memory (the packed codes stay packed); the decode cost is
-//!   paid on every call. This is the honest single-request deployment
-//!   baseline `serve-bench` measures.
+//! * [`DecodeMode::Streaming`] — decode every layer's weights per call
+//!   into the scratch decode buffer. Minimal resident memory (the packed
+//!   codes stay packed); the decode cost is paid on every call. This is
+//!   the honest single-request deployment baseline `serve-bench` measures.
 //! * [`DecodeMode::UnpackOnce`] — decode each layer once, cache the dense
 //!   f32 weights, and reuse them for every subsequent call. The batched
 //!   serve path ([`super::batch::RequestBatcher`]) uses this mode so the
@@ -22,35 +25,78 @@
 //!
 //! Both modes produce bit-identical logits (same kernels, same decoded
 //! values), and both match the host fake-quant reference forward
-//! ([`super::reference`]) bit-for-bit — the cross-path golden test in
-//! `tests/deploy_roundtrip.rs` pins all three.
+//! ([`super::reference`]) bit-for-bit — the reference routes through the
+//! *same* kernel layer, and the GEMM's accumulation order is fixed and
+//! batch-size-independent, so the cross-path golden test in
+//! `tests/deploy_roundtrip.rs` compares quantization fidelity, never
+//! summation order.
 //!
 //! The engine is **shared state**: inference takes `&self`, the decoded
 //! weight cache lives in per-layer [`OnceLock`] slots, and the packed
-//! model behind them is immutable, so one `Arc<Engine>` serves any number
-//! of threads concurrently ([`super::pool::WorkerPool`]). The hot path is
+//! model and plan behind them are immutable, so one `Arc<Engine>` serves
+//! any number of threads ([`super::pool::WorkerPool`]). The hot path is
 //! lock-free — a filled slot costs one atomic load; a decode race on a
 //! cold slot wastes at most one redundant decode (both threads compute
-//! the same bytes, the first `set` wins).
+//! the same bytes, the first fill wins).
 
+use std::mem;
 use std::path::Path;
 use std::sync::OnceLock;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::model::{ArchSpec, LayerKind};
+use crate::model::ArchSpec;
 use crate::quant::quantize;
 
-use super::format::{PackedAct, PackedModel};
+use super::format::PackedModel;
+use super::kernels::{
+    add_bias_cols, add_bias_rows, argmax, gemm, im2col, maxpool_into, quantize_activations,
+    relu_inplace,
+};
+use super::plan::{ExecPlan, Kernel, Lowering, Scratch};
 
 /// Weight decode strategy of an [`Engine`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum DecodeMode {
-    /// Decode per call; drop the dense weights afterwards.
+    /// Decode per call into scratch; drop the dense weights afterwards.
     Streaming,
     /// Decode each layer once and cache the dense f32 weights.
     #[default]
     UnpackOnce,
+}
+
+/// Per-op-kind wall-clock breakdown of one profiled forward pass
+/// ([`Engine::profile_batch`]) — the baseline the per-bit-width integer
+/// kernels have to beat, reported by `bench_deploy` and `table-deploy`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct OpProfile {
+    /// Packed-weight handling: streaming decode, or the unpack-cache
+    /// fill/load.
+    pub decode: Duration,
+    /// GEMM time including the bias epilogues (both lowerings).
+    pub matmul: Duration,
+    /// Conv column scatter.
+    pub im2col: Duration,
+    /// Input quantization, ReLU, activation fake-quant, max-pool.
+    pub elementwise: Duration,
+}
+
+impl OpProfile {
+    /// Sum of every accounted span.
+    pub fn total(&self) -> Duration {
+        self.decode + self.matmul + self.im2col + self.elementwise
+    }
+
+    /// `part` as a percentage of [`total`](Self::total) (0 when empty).
+    pub fn share_pct(&self, part: Duration) -> f64 {
+        let t = self.total().as_secs_f64();
+        if t == 0.0 {
+            0.0
+        } else {
+            100.0 * part.as_secs_f64() / t
+        }
+    }
 }
 
 /// Packed-model inference engine. Immutable after construction: `infer*`
@@ -58,6 +104,7 @@ pub enum DecodeMode {
 pub struct Engine {
     model: PackedModel,
     arch: ArchSpec,
+    plan: ExecPlan,
     mode: DecodeMode,
     /// Per-layer dense weight cache (`UnpackOnce` mode), filled lazily and
     /// at most once; `OnceLock::get` on the hot path is a single atomic
@@ -66,11 +113,13 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Wrap an already-verified packed model (default `UnpackOnce` mode).
+    /// Verify a packed model and compile its execution plan (default
+    /// `UnpackOnce` mode).
     pub fn new(model: PackedModel) -> Result<Self> {
         let arch = model.verify()?;
+        let plan = ExecPlan::build(&model)?;
         let cache = (0..model.layers.len()).map(|_| OnceLock::new()).collect();
-        Ok(Self { model, arch, mode: DecodeMode::default(), cache })
+        Ok(Self { model, arch, plan, mode: DecodeMode::default(), cache })
     }
 
     /// Load a `.cgmqm` file (checksum + arch verification included).
@@ -79,7 +128,11 @@ impl Engine {
         Self::new(model)
     }
 
-    /// Select the weight decode strategy (resets the cache).
+    /// Select the weight decode strategy. Always resets the decoded-weight
+    /// cache: a preloaded engine switched to `Streaming` (and back) must
+    /// not keep stale decoded layers observable via
+    /// [`decoded_layers`](Self::decoded_layers) — pinned by
+    /// `tests/deploy_roundtrip.rs`.
     pub fn with_mode(mut self, mode: DecodeMode) -> Self {
         self.mode = mode;
         self.cache = (0..self.model.layers.len()).map(|_| OnceLock::new()).collect();
@@ -106,18 +159,15 @@ impl Engine {
     }
 
     /// The decoded dense weights of layer `li`, filling the slot on first
-    /// use. A lost `set` race means another thread stored the identical
-    /// decode first; its value is returned.
+    /// use. The decode runs *before* `get_or_init` so its error stays a
+    /// typed `Result`; a lost fill race means another thread stored the
+    /// identical decode first, and its value is returned.
     fn cached_weights(&self, li: usize) -> Result<&[f32]> {
         if let Some(w) = self.cache[li].get() {
             return Ok(w);
         }
         let w = self.model.decode_weights(li)?;
-        let _ = self.cache[li].set(w);
-        match self.cache[li].get() {
-            Some(w) => Ok(w.as_slice()),
-            None => bail!("layer {li}: weight cache slot empty right after set"),
-        }
+        Ok(self.cache[li].get_or_init(|| w).as_slice())
     }
 
     pub fn mode(&self) -> DecodeMode {
@@ -132,16 +182,20 @@ impl Engine {
         &self.model
     }
 
-    /// Per-sample input element count.
-    pub fn input_len(&self) -> usize {
-        self.model.input_len()
+    /// The compiled execution plan (geometry, lowerings, kernel choices).
+    pub fn plan(&self) -> &ExecPlan {
+        &self.plan
     }
 
-    /// Logit count (output units of the last layer).
+    /// Per-sample input element count.
+    pub fn input_len(&self) -> usize {
+        self.plan.input_len
+    }
+
+    /// Logit count — the last op's output units, read from the verified
+    /// plan (a built plan always has a last op).
     pub fn num_classes(&self) -> usize {
-        // analyze-allow: panic-hygiene infallible signature; a layerless
-        // arch is rejected by PackedModel verification at load time
-        self.arch.layers.last().expect("arch has layers").n_units()
+        self.plan.num_classes
     }
 
     /// Run one sample; returns its logits.
@@ -151,81 +205,152 @@ impl Engine {
 
     /// Run `n` samples (row-major, `n * input_len` values); returns the
     /// flattened `n x num_classes` logits. Takes `&self`: safe to call
-    /// from many threads over one shared engine.
+    /// from many threads over one shared engine. Allocates one fresh
+    /// [`Scratch`] + output — a fixed handful of allocations however deep
+    /// the model; callers on the hot serve path keep their own scratch
+    /// and use [`infer_batch_into`](Self::infer_batch_into) instead.
     pub fn infer_batch(&self, xs: &[f32], n: usize) -> Result<Vec<f32>> {
-        let in_len = self.model.input_len();
+        let mut scratch = Scratch::new();
+        let mut out = Vec::new();
+        self.infer_batch_into(xs, n, &mut scratch, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`infer_batch`](Self::infer_batch) into caller-owned buffers:
+    /// `out` receives the flattened `n x num_classes` logits. Once
+    /// `scratch` and `out` have seen a batch of `n` samples, repeated
+    /// calls at sizes `<= n` perform **zero** heap allocations — the
+    /// batcher's per-flush path.
+    pub fn infer_batch_into(
+        &self,
+        xs: &[f32],
+        n: usize,
+        scratch: &mut Scratch,
+        out: &mut Vec<f32>,
+    ) -> Result<()> {
+        let mut prof = OpProfile::default();
+        self.run_plan::<false>(xs, n, scratch, out, &mut prof)
+    }
+
+    /// One instrumented forward pass: the logits (bit-identical to
+    /// [`infer_batch`](Self::infer_batch)) plus the per-op-kind timing
+    /// breakdown. Timer reads sit inside the loop, so profile a warm
+    /// engine and treat the shares, not the totals, as the signal.
+    pub fn profile_batch(&self, xs: &[f32], n: usize) -> Result<(Vec<f32>, OpProfile)> {
+        let mut scratch = Scratch::new();
+        let mut out = Vec::new();
+        let mut prof = OpProfile::default();
+        self.run_plan::<true>(xs, n, &mut scratch, &mut out, &mut prof)?;
+        Ok((out, prof))
+    }
+
+    /// Plan execution. `PROF` gates the `Instant` reads at compile time:
+    /// the unprofiled hot path carries no timing code at all.
+    fn run_plan<const PROF: bool>(
+        &self,
+        xs: &[f32],
+        n: usize,
+        scratch: &mut Scratch,
+        out: &mut Vec<f32>,
+        prof: &mut OpProfile,
+    ) -> Result<()> {
         if n == 0 {
             bail!("infer_batch needs at least one sample");
         }
+        let plan = &self.plan;
+        let in_len = plan.input_len;
         if xs.len() != n * in_len {
             bail!("input has {} values, {} samples x {} want {}", xs.len(), n, in_len, n * in_len);
         }
+        scratch.ensure(plan, n, self.mode == DecodeMode::Streaming);
+        let Scratch { a, b, col, wdec } = scratch;
+        let (mut cur, mut nxt) = (a, b);
         // Fixed input quantization (mirror of quantizer.quantize_input).
-        let input_bits = self.model.input_bits;
-        let mut h: Vec<f32> = xs.iter().map(|&v| quantize(v, input_bits, 1.0, true)).collect();
-        let mut dims: Vec<usize> = self.model.input_shape.clone();
-        let n_layers = self.model.layers.len();
-        for li in 0..n_layers {
-            let scratch;
+        let t = PROF.then(Instant::now);
+        for (dst, &v) in cur.iter_mut().zip(xs) {
+            *dst = quantize(v, plan.input_bits, 1.0, true);
+        }
+        if let Some(t) = t {
+            prof.elementwise += t.elapsed();
+        }
+        let last = plan.ops.len() - 1;
+        for (oi, op) in plan.ops.iter().enumerate() {
+            let layer = &self.model.layers[op.layer];
+            let t = PROF.then(Instant::now);
             let wq: &[f32] = match self.mode {
-                DecodeMode::UnpackOnce => self.cached_weights(li)?,
+                DecodeMode::UnpackOnce => self.cached_weights(op.layer)?,
                 DecodeMode::Streaming => {
-                    scratch = self.model.decode_weights(li)?;
-                    &scratch
+                    layer.decode_weights_into(wdec)?;
+                    wdec.as_slice()
                 }
             };
-            let layer = &self.model.layers[li];
-            match layer.kind {
-                LayerKind::Dense => {
-                    let d_in = layer.w_shape[0];
-                    let d_out = layer.w_shape[1];
-                    let flat: usize = dims.iter().product();
-                    if flat != d_in {
-                        bail!(
-                            "layer {}: input {} features, weights want {}",
-                            layer.name,
-                            flat,
-                            d_in
-                        );
-                    }
-                    h = dense(&h, wq, &layer.bias, n, d_in, d_out);
-                    dims = vec![d_out];
-                }
-                LayerKind::Conv => {
-                    if dims.len() != 3 {
-                        bail!("layer {}: conv wants CHW input, got {:?}", layer.name, dims);
-                    }
-                    let (ci, hi, wi) = (dims[0], dims[1], dims[2]);
-                    let (o, wc, kh, kw) =
-                        (layer.w_shape[0], layer.w_shape[1], layer.w_shape[2], layer.w_shape[3]);
-                    if wc != ci || hi < kh || wi < kw {
-                        bail!(
-                            "layer {}: input {:?} incompatible with kernel {:?}",
-                            layer.name,
-                            dims,
-                            layer.w_shape
-                        );
-                    }
-                    h = conv2d_valid(&h, wq, &layer.bias, n, ci, hi, wi, o, kh, kw);
-                    dims = vec![o, hi - kh + 1, wi - kw + 1];
-                }
+            if let Some(t) = t {
+                prof.decode += t.elapsed();
             }
-            if li == n_layers - 1 {
-                return Ok(h); // output layer: float logits, no activation FQ
+            match op.kernel {
+                Kernel::F32Gemm => match op.lowering {
+                    Lowering::Dense { d_in, d_out } => {
+                        let t = PROF.then(Instant::now);
+                        let c = &mut nxt[..n * d_out];
+                        gemm(&cur[..n * d_in], wq, c, n, d_in, d_out);
+                        add_bias_cols(c, &layer.bias, n, d_out);
+                        if let Some(t) = t {
+                            prof.matmul += t.elapsed();
+                        }
+                    }
+                    Lowering::Conv { ci, hi, wi, o, kh, kw, ho, wo } => {
+                        let kdim = ci * kh * kw;
+                        let p = ho * wo;
+                        let cols = &mut col[..kdim * p];
+                        for s in 0..n {
+                            let t = PROF.then(Instant::now);
+                            let img = &cur[s * ci * hi * wi..(s + 1) * ci * hi * wi];
+                            im2col(img, ci, hi, wi, kh, kw, cols);
+                            if let Some(t) = t {
+                                prof.im2col += t.elapsed();
+                            }
+                            let t = PROF.then(Instant::now);
+                            let planes = &mut nxt[s * o * p..(s + 1) * o * p];
+                            gemm(wq, cols, planes, o, kdim, p);
+                            add_bias_rows(planes, &layer.bias, o, p);
+                            if let Some(t) = t {
+                                prof.matmul += t.elapsed();
+                            }
+                        }
+                    }
+                },
             }
-            relu_inplace(&mut h);
+            mem::swap(&mut cur, &mut nxt);
+            if oi == last {
+                out.clear();
+                out.extend_from_slice(&cur[..n * op.out_elems]);
+                return Ok(()); // output layer: float logits, no activation FQ
+            }
+            let t = PROF.then(Instant::now);
+            let h = &mut cur[..n * op.out_elems];
+            relu_inplace(h);
             if let Some(act) = &layer.act {
-                quantize_activations(&mut h, act, n);
+                quantize_activations(h, act, n);
             }
-            if layer.pool > 1 {
-                let (c, hh, ww) = (dims[0], dims[1], dims[2]);
-                h = maxpool(&h, n, c, hh, ww, layer.pool);
-                dims = vec![c, hh / layer.pool, ww / layer.pool];
+            if let Some(pg) = op.pool {
+                maxpool_into(
+                    &cur[..n * pg.c * pg.h * pg.w],
+                    &mut nxt[..n * op.final_elems],
+                    n,
+                    pg.c,
+                    pg.h,
+                    pg.w,
+                    pg.k,
+                );
+                mem::swap(&mut cur, &mut nxt);
+            }
+            if let Some(t) = t {
+                prof.elementwise += t.elapsed();
             }
         }
-        // Only reachable when the model has zero layers, which load-time
-        // verification rejects — but a serving thread must not panic on it.
-        bail!("packed model has no layers");
+        // Only reachable with a zero-op plan, which `ExecPlan::build`
+        // rejects — but a serving thread must not panic on it.
+        bail!("exec plan has no ops")
     }
 
     /// Predicted class per sample (argmax over logits).
@@ -242,185 +367,3 @@ const _: fn() = || {
     fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<Engine>();
 };
-
-/// Argmax index of a non-empty slice (first max wins, like
-/// `Tensor::argmax_rows`).
-pub fn argmax(row: &[f32]) -> usize {
-    let mut best = 0;
-    for j in 1..row.len() {
-        if row[j] > row[best] {
-            best = j;
-        }
-    }
-    best
-}
-
-// ---------------------------------------------------------------------------
-// Kernels (shared with the fake-quant reference path so the cross-path
-// golden compares quantization fidelity, not summation order)
-// ---------------------------------------------------------------------------
-
-/// Per-unit activation fake quantization: ReLU output on the unsigned grid
-/// `[0, beta_a]` at that unit's trained bit-width (0 = pruned unit).
-pub(super) fn quantize_activations(h: &mut [f32], act: &PackedAct, n: usize) {
-    let units = h.len() / n;
-    for s in 0..n {
-        let block = &mut h[s * units..(s + 1) * units];
-        for (u, v) in block.iter_mut().enumerate() {
-            *v = match act.a_bits.get(u) {
-                0 => 0.0,
-                bits => quantize(*v, bits, act.beta_a, false),
-            };
-        }
-    }
-}
-
-/// `out[s] = h[s] @ w + bias` for row-major `h (n, d_in)`, `w (d_in, d_out)`.
-pub(super) fn dense(
-    h: &[f32],
-    w: &[f32],
-    bias: &[f32],
-    n: usize,
-    d_in: usize,
-    d_out: usize,
-) -> Vec<f32> {
-    let mut out = vec![0.0f32; n * d_out];
-    for s in 0..n {
-        let hrow = &h[s * d_in..(s + 1) * d_in];
-        let orow = &mut out[s * d_out..(s + 1) * d_out];
-        for (i, &hv) in hrow.iter().enumerate() {
-            let wrow = &w[i * d_out..(i + 1) * d_out];
-            for (o, &wv) in orow.iter_mut().zip(wrow) {
-                *o += hv * wv;
-            }
-        }
-        for (o, &b) in orow.iter_mut().zip(bias) {
-            *o += b;
-        }
-    }
-    out
-}
-
-/// Valid-padding stride-1 conv, NCHW input, OIHW weights, then bias.
-#[allow(clippy::too_many_arguments)]
-pub(super) fn conv2d_valid(
-    h: &[f32],
-    w: &[f32],
-    bias: &[f32],
-    n: usize,
-    ci: usize,
-    hi: usize,
-    wi: usize,
-    o: usize,
-    kh: usize,
-    kw: usize,
-) -> Vec<f32> {
-    let ho = hi - kh + 1;
-    let wo = wi - kw + 1;
-    let mut out = vec![0.0f32; n * o * ho * wo];
-    for s in 0..n {
-        let img = &h[s * ci * hi * wi..(s + 1) * ci * hi * wi];
-        for oc in 0..o {
-            let kernel = &w[oc * ci * kh * kw..(oc + 1) * ci * kh * kw];
-            let b = bias[oc];
-            let plane = &mut out[(s * o + oc) * ho * wo..(s * o + oc + 1) * ho * wo];
-            for oy in 0..ho {
-                for ox in 0..wo {
-                    let mut acc = 0.0f32;
-                    for ic in 0..ci {
-                        let ch = &img[ic * hi * wi..(ic + 1) * hi * wi];
-                        let kc = &kernel[ic * kh * kw..(ic + 1) * kh * kw];
-                        for ky in 0..kh {
-                            let irow = &ch[(oy + ky) * wi + ox..(oy + ky) * wi + ox + kw];
-                            let krow = &kc[ky * kw..(ky + 1) * kw];
-                            for (iv, kv) in irow.iter().zip(krow) {
-                                acc += iv * kv;
-                            }
-                        }
-                    }
-                    plane[oy * wo + ox] = acc + b;
-                }
-            }
-        }
-    }
-    out
-}
-
-pub(super) fn relu_inplace(h: &mut [f32]) {
-    for v in h.iter_mut() {
-        *v = v.max(0.0);
-    }
-}
-
-/// Non-overlapping `k x k` max pooling over NCHW, window == stride.
-/// Assumes `k` divides both spatial dims — inputs where it doesn't are
-/// rejected up front by `PackedModel::verify`'s geometry walk (the floor
-/// division here would otherwise silently drop edge rows/cols).
-pub(super) fn maxpool(h: &[f32], n: usize, c: usize, hh: usize, ww: usize, k: usize) -> Vec<f32> {
-    let ho = hh / k;
-    let wo = ww / k;
-    let mut out = vec![f32::NEG_INFINITY; n * c * ho * wo];
-    for sc in 0..n * c {
-        let plane = &h[sc * hh * ww..(sc + 1) * hh * ww];
-        let oplane = &mut out[sc * ho * wo..(sc + 1) * ho * wo];
-        for oy in 0..ho {
-            for ox in 0..wo {
-                let mut m = f32::NEG_INFINITY;
-                for ky in 0..k {
-                    for kx in 0..k {
-                        m = m.max(plane[(oy * k + ky) * ww + ox * k + kx]);
-                    }
-                }
-                oplane[oy * wo + ox] = m;
-            }
-        }
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn dense_matches_hand_computation() {
-        // h (1, 2) @ w (2, 3) + b
-        let h = [1.0, 2.0];
-        let w = [1.0, 0.0, -1.0, 0.5, 2.0, 1.0];
-        let b = [10.0, 20.0, 30.0];
-        let out = dense(&h, &w, &b, 1, 2, 3);
-        assert_eq!(out, vec![1.0 + 1.0 + 10.0, 4.0 + 20.0, -1.0 + 2.0 + 30.0]);
-    }
-
-    #[test]
-    fn conv_identity_kernel() {
-        // 1x1 kernel with weight 1 is a passthrough plus bias.
-        let h: Vec<f32> = (0..9).map(|v| v as f32).collect();
-        let out = conv2d_valid(&h, &[1.0], &[0.5], 1, 1, 3, 3, 1, 1, 1);
-        let expect: Vec<f32> = (0..9).map(|v| v as f32 + 0.5).collect();
-        assert_eq!(out, expect);
-    }
-
-    #[test]
-    fn conv_sums_window() {
-        // 2x2 all-ones kernel over a 3x3 ramp.
-        let h: Vec<f32> = (0..9).map(|v| v as f32).collect();
-        let out = conv2d_valid(&h, &[1.0; 4], &[0.0], 1, 1, 3, 3, 1, 2, 2);
-        let expect = [0. + 1. + 3. + 4., 1. + 2. + 4. + 5., 3. + 4. + 6. + 7., 4. + 5. + 7. + 8.];
-        assert_eq!(out, expect);
-    }
-
-    #[test]
-    fn maxpool_2x2() {
-        let h =
-            [1.0, 2.0, 3.0, 4.0, 8.0, 7.0, 6.0, 5.0, 0.0, -1.0, -2.0, -3.0, 4.0, 4.0, 4.0, 4.0];
-        let out = maxpool(&h, 1, 1, 4, 4, 2);
-        assert_eq!(out, [8.0, 6.0, 4.0, 4.0]);
-    }
-
-    #[test]
-    fn argmax_first_max_wins() {
-        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
-        assert_eq!(argmax(&[5.0]), 0);
-    }
-}

@@ -325,8 +325,19 @@ impl PackedLayer {
 
     /// Decode the packed codes back to the fake-quantized f32 weights.
     pub fn decode_weights(&self) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.decode_weights_into(&mut out)?;
+        Ok(out)
+    }
+
+    /// [`decode_weights`](Self::decode_weights) into a caller-owned
+    /// buffer (cleared first). A buffer that has already seen this
+    /// layer's length decodes with no allocation — the streaming
+    /// engine's per-call path.
+    pub fn decode_weights_into(&self, out: &mut Vec<f32>) -> Result<()> {
         let n = self.w_len();
-        let mut out = Vec::with_capacity(n);
+        out.clear();
+        out.reserve(n);
         let mut br = BitReader::new(&self.codes);
         for i in 0..n {
             let width = self.w_bits.get(i);
@@ -340,7 +351,7 @@ impl PackedLayer {
             };
             out.push(v);
         }
-        Ok(out)
+        Ok(())
     }
 }
 
@@ -674,7 +685,7 @@ impl PackedModel {
     /// Walk the recorded geometry (input shape through conv/dense/pool)
     /// and reject anything the engine's kernels would mishandle —
     /// foremost a max-pool window that does not divide the spatial dims:
-    /// `engine::maxpool` floor-divides, so a non-divisible window would
+    /// `kernels::maxpool` floor-divides, so a non-divisible window would
     /// *silently drop* edge rows/cols instead of pooling them.
     fn verify_geometry(&self) -> Result<()> {
         let mut dims = self.input_shape.clone();

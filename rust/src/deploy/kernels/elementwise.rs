@@ -1,0 +1,119 @@
+//! The non-matmul kernels: ReLU, per-unit activation fake quantization,
+//! non-overlapping max-pool, argmax. Moved out of the engine so both
+//! forward paths (packed engine and fake-quant reference) run the exact
+//! same element-wise code, and so the per-op profile can report their
+//! share of compute separately from the GEMMs.
+
+use crate::deploy::format::PackedAct;
+use crate::quant::quantize;
+
+pub fn relu_inplace(h: &mut [f32]) {
+    for v in h.iter_mut() {
+        *v = v.max(0.0);
+    }
+}
+
+/// Per-unit activation fake quantization: ReLU output on the unsigned grid
+/// `[0, beta_a]` at that unit's trained bit-width (0 = pruned unit).
+pub fn quantize_activations(h: &mut [f32], act: &PackedAct, n: usize) {
+    let units = h.len() / n;
+    for s in 0..n {
+        let block = &mut h[s * units..(s + 1) * units];
+        for (u, v) in block.iter_mut().enumerate() {
+            *v = match act.a_bits.get(u) {
+                0 => 0.0,
+                bits => quantize(*v, bits, act.beta_a, false),
+            };
+        }
+    }
+}
+
+/// Non-overlapping `k x k` max pooling over NCHW, window == stride,
+/// written into the first `n·c·(hh/k)·(ww/k)` elements of `dst` (scratch
+/// reuse: `dst` may be longer). Assumes `k` divides both spatial dims —
+/// inputs where it doesn't are rejected up front by `PackedModel::verify`'s
+/// geometry walk and again by `ExecPlan::build` (the floor division here
+/// would otherwise silently drop edge rows/cols).
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool_into(
+    src: &[f32],
+    dst: &mut [f32],
+    n: usize,
+    c: usize,
+    hh: usize,
+    ww: usize,
+    k: usize,
+) {
+    let ho = hh / k;
+    let wo = ww / k;
+    for sc in 0..n * c {
+        let plane = &src[sc * hh * ww..(sc + 1) * hh * ww];
+        let oplane = &mut dst[sc * ho * wo..(sc + 1) * ho * wo];
+        for oy in 0..ho {
+            for ox in 0..wo {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        m = m.max(plane[(oy * k + ky) * ww + ox * k + kx]);
+                    }
+                }
+                oplane[oy * wo + ox] = m;
+            }
+        }
+    }
+}
+
+/// Allocating [`maxpool_into`] (reference path and tests).
+pub fn maxpool(h: &[f32], n: usize, c: usize, hh: usize, ww: usize, k: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * c * (hh / k) * (ww / k)];
+    maxpool_into(h, &mut out, n, c, hh, ww, k);
+    out
+}
+
+/// Argmax index of a non-empty slice (first max wins, like
+/// `Tensor::argmax_rows`).
+pub fn argmax(row: &[f32]) -> usize {
+    let mut best = 0;
+    for j in 1..row.len() {
+        if row[j] > row[best] {
+            best = j;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_2x2() {
+        let h =
+            [1.0, 2.0, 3.0, 4.0, 8.0, 7.0, 6.0, 5.0, 0.0, -1.0, -2.0, -3.0, 4.0, 4.0, 4.0, 4.0];
+        let out = maxpool(&h, 1, 1, 4, 4, 2);
+        assert_eq!(out, [8.0, 6.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn maxpool_into_writes_only_the_output_prefix() {
+        let h = [1.0, 2.0, 3.0, 4.0];
+        let mut dst = [0.0f32; 3];
+        dst[1] = -7.0;
+        dst[2] = 9.0;
+        maxpool_into(&h, &mut dst, 1, 1, 2, 2, 2);
+        assert_eq!(dst, [4.0, -7.0, 9.0]);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+    }
+
+    #[test]
+    fn relu_clamps_negatives() {
+        let mut h = [-1.0, 0.0, 2.5, -0.0];
+        relu_inplace(&mut h);
+        assert_eq!(h, [0.0, 0.0, 2.5, 0.0]);
+    }
+}

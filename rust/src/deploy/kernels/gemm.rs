@@ -1,0 +1,204 @@
+//! Register-blocked, cache-tiled f32 GEMM — the unified matmul every
+//! lowered layer dispatches to ([`Kernel::F32Gemm`](super::super::plan::Kernel)).
+//!
+//! `C = A · B` over row-major slices: `A (m × k)`, `B (k × n)`,
+//! `C (m × n)`, every element of `C` overwritten. Bias is *not* fused —
+//! the dense lowering broadcasts it per column
+//! ([`add_bias_cols`]) and the conv lowering per output-channel row
+//! ([`add_bias_rows`]), both after the matmul, exactly where the old
+//! naive loops added it.
+//!
+//! **Accumulation order is part of the contract.** Each output element
+//! owns exactly one f32 accumulator, swept over `p = 0..k` strictly
+//! ascending, and `k` is never split into panels — so the float
+//! summation chain per element is identical to the seed's naive triple
+//! loop regardless of the register/cache blocking around it, and
+//! identical for a sample alone or inside any batch (rows are
+//! independent). That is what keeps the engine ↔ reference cross-path
+//! goldens *bit-for-bit* (`tests/deploy_roundtrip.rs`) and lets
+//! `tests/kernels.rs` assert exact equality against the naive oracle
+//! instead of a 1-ulp band. Blocking only reorders *which* elements are
+//! computed when: an `MR × NR` register tile keeps `MR·NR` accumulators
+//! live across the shared k sweep (each `a` and `b` load feeds several
+//! multiplies), and an outer column block keeps the touched stripe of
+//! `B` cache-resident across row tiles.
+
+/// Register-tile rows: accumulators kept live per micro-kernel call.
+pub const MR: usize = 4;
+/// Register-tile columns (one `B` row segment reused across `MR` rows).
+pub const NR: usize = 8;
+/// Cache block over `C`/`B` columns (multiple of `NR`): the stripe of
+/// `B` a full sweep of row tiles keeps hot.
+const NC: usize = 256;
+
+/// `C = A · B` (row-major, all elements of `C` overwritten). The blocked
+/// hot path of both lowerings; bit-identical to [`gemm_naive`].
+pub fn gemm(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    let mut jc = 0;
+    while jc < n {
+        let jw = (n - jc).min(NC);
+        column_block(a, b, c, m, k, n, jc, jw);
+        jc += jw;
+    }
+}
+
+/// All row tiles over one cache-resident column stripe `[j0, j0 + jw)`.
+#[allow(clippy::too_many_arguments)]
+fn column_block(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    j0: usize,
+    jw: usize,
+) {
+    let mut i = 0;
+    while i + MR <= m {
+        let mut j = j0;
+        while j + NR <= j0 + jw {
+            micro_tile(a, b, c, i, j, k, n);
+            j += NR;
+        }
+        if j < j0 + jw {
+            scalar_block(a, b, c, i, i + MR, j, j0 + jw, k, n);
+        }
+        i += MR;
+    }
+    if i < m {
+        scalar_block(a, b, c, i, m, j0, j0 + jw, k, n);
+    }
+}
+
+/// The `MR × NR` register tile at `(i0, j0)`: `MR·NR` accumulators, one
+/// shared strictly-ascending k sweep.
+fn micro_tile(a: &[f32], b: &[f32], c: &mut [f32], i0: usize, j0: usize, k: usize, n: usize) {
+    let mut acc = [[0.0f32; NR]; MR];
+    let rows = [
+        &a[i0 * k..(i0 + 1) * k],
+        &a[(i0 + 1) * k..(i0 + 2) * k],
+        &a[(i0 + 2) * k..(i0 + 3) * k],
+        &a[(i0 + 3) * k..(i0 + 4) * k],
+    ];
+    for p in 0..k {
+        let brow = &b[p * n + j0..p * n + j0 + NR];
+        for (accr, arow) in acc.iter_mut().zip(rows) {
+            let av = arow[p];
+            for (x, &bv) in accr.iter_mut().zip(brow) {
+                *x += av * bv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        c[(i0 + r) * n + j0..(i0 + r) * n + j0 + NR].copy_from_slice(accr);
+    }
+}
+
+/// Remainder path for the rows/columns a full tile does not cover: one
+/// accumulator per element, the same ascending k sweep.
+#[allow(clippy::too_many_arguments)]
+fn scalar_block(
+    a: &[f32],
+    b: &[f32],
+    c: &mut [f32],
+    i0: usize,
+    i1: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    n: usize,
+) {
+    for i in i0..i1 {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in j0..j1 {
+            let mut acc = 0.0f32;
+            for (p, &av) in arow.iter().enumerate() {
+                acc += av * b[p * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// The unblocked triple-loop oracle the property tests and the
+/// `bench_deploy` sanity row hold [`gemm`] to, bit-for-bit. Not used on
+/// any serving path.
+pub fn gemm_naive(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for (p, &av) in arow.iter().enumerate() {
+                acc += av * b[p * n + j];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// `c[i][j] += bias[j]` — the dense epilogue (bias per output feature).
+pub fn add_bias_cols(c: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    for row in c.chunks_exact_mut(n).take(m) {
+        for (v, &b) in row.iter_mut().zip(bias) {
+            *v += b;
+        }
+    }
+}
+
+/// `c[i][j] += bias[i]` — the conv epilogue (bias per output channel,
+/// broadcast over the `ho·wo` positions of row `i`).
+pub fn add_bias_rows(c: &mut [f32], bias: &[f32], m: usize, n: usize) {
+    for (row, &b) in c.chunks_exact_mut(n).zip(bias).take(m) {
+        for v in row.iter_mut() {
+            *v += b;
+        }
+    }
+}
+
+/// `out[s] = h[s] @ w + bias` for row-major `h (n, d_in)`, `w (d_in,
+/// d_out)` — the dense layer as one batched GEMM. Allocating
+/// convenience used by the reference path and tests; the engine runs
+/// the same two calls into plan scratch.
+pub fn dense(h: &[f32], w: &[f32], bias: &[f32], n: usize, d_in: usize, d_out: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n * d_out];
+    gemm(h, w, &mut out, n, d_in, d_out);
+    add_bias_cols(&mut out, bias, n, d_out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_matches_hand_computation() {
+        // h (1, 2) @ w (2, 3) + b
+        let h = [1.0, 2.0];
+        let w = [1.0, 0.0, -1.0, 0.5, 2.0, 1.0];
+        let b = [10.0, 20.0, 30.0];
+        let out = dense(&h, &w, &b, 1, 2, 3);
+        assert_eq!(out, vec![1.0 + 1.0 + 10.0, 4.0 + 20.0, -1.0 + 2.0 + 30.0]);
+    }
+
+    #[test]
+    fn gemm_overwrites_stale_output() {
+        // Scratch reuse hands gemm a dirty output buffer; every element
+        // must be written, none accumulated into.
+        let a = [1.0, 2.0, 3.0, 4.0];
+        let b = [1.0, 0.0, 0.0, 1.0];
+        let mut c = [f32::NAN; 4];
+        gemm(&a, &b, &mut c, 2, 2, 2);
+        assert_eq!(c, [1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn bias_epilogues_broadcast_on_the_right_axis() {
+        let mut c = [0.0f32; 6];
+        add_bias_cols(&mut c, &[1.0, 2.0, 3.0], 2, 3);
+        assert_eq!(c, [1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        let mut c = [0.0f32; 6];
+        add_bias_rows(&mut c, &[1.0, 2.0], 2, 3);
+        assert_eq!(c, [1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,120 @@
+//! Valid-padding stride-1 im2col: lower one CHW image to the column
+//! matrix that turns conv into a single GEMM.
+//!
+//! Row `(ic, ky, kx)` of the output holds the input values that kernel
+//! tap multiplies at every output position, laid out `(oy, ox)`
+//! row-major — so the column matrix is `(ci·kh·kw) × (ho·wo)` and the
+//! conv becomes `weights (o × ci·kh·kw) · col`, whose output *is* the
+//! NCHW result plane, no reshuffle. Two orders are load-bearing:
+//!
+//! * rows ascend `(ic, ky, kx)` — exactly the OIHW weight memory order,
+//!   so the GEMM's ascending k sweep replays the seed conv's
+//!   `ic → ky → kx` accumulation chain bit-for-bit;
+//! * each row is filled with `wo`-length contiguous `copy_from_slice`
+//!   runs (one per output row), not per-element gathers.
+
+use super::gemm::{add_bias_rows, gemm};
+
+/// Scatter one `ci × hi × wi` image into `col` (`ci·kh·kw` rows of
+/// `ho·wo`), which must be at least that long; only that prefix is
+/// written.
+#[allow(clippy::too_many_arguments)]
+pub fn im2col(
+    img: &[f32],
+    ci: usize,
+    hi: usize,
+    wi: usize,
+    kh: usize,
+    kw: usize,
+    col: &mut [f32],
+) {
+    let ho = hi - kh + 1;
+    let wo = wi - kw + 1;
+    let p = ho * wo;
+    let mut row = 0;
+    for ic in 0..ci {
+        let ch = &img[ic * hi * wi..(ic + 1) * hi * wi];
+        for ky in 0..kh {
+            for kx in 0..kw {
+                let dst = &mut col[row * p..(row + 1) * p];
+                for oy in 0..ho {
+                    let src = &ch[(oy + ky) * wi + kx..(oy + ky) * wi + kx + wo];
+                    dst[oy * wo..(oy + 1) * wo].copy_from_slice(src);
+                }
+                row += 1;
+            }
+        }
+    }
+}
+
+/// Valid-padding stride-1 conv (NCHW input, OIHW weights, bias per
+/// output channel) via im2col + GEMM. Allocating convenience used by
+/// the reference path and tests; the engine runs the same calls into
+/// plan scratch.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    h: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    ci: usize,
+    hi: usize,
+    wi: usize,
+    o: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let ho = hi - kh + 1;
+    let wo = wi - kw + 1;
+    let kdim = ci * kh * kw;
+    let p = ho * wo;
+    let mut col = vec![0.0f32; kdim * p];
+    let mut out = vec![0.0f32; n * o * p];
+    for s in 0..n {
+        let img = &h[s * ci * hi * wi..(s + 1) * ci * hi * wi];
+        im2col(img, ci, hi, wi, kh, kw, &mut col);
+        let planes = &mut out[s * o * p..(s + 1) * o * p];
+        gemm(w, &col, planes, o, kdim, p);
+        add_bias_rows(planes, bias, o, p);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn im2col_rows_are_shifted_windows() {
+        // 3x3 ramp, 2x2 kernel: row (ky, kx) holds the image shifted by
+        // (ky, kx), flattened over the 2x2 output positions.
+        let img: Vec<f32> = (0..9).map(|v| v as f32).collect();
+        let mut col = vec![0.0f32; 4 * 4];
+        im2col(&img, 1, 3, 3, 2, 2, &mut col);
+        let want = [
+            0.0, 1.0, 3.0, 4.0, // (ky 0, kx 0)
+            1.0, 2.0, 4.0, 5.0, // (ky 0, kx 1)
+            3.0, 4.0, 6.0, 7.0, // (ky 1, kx 0)
+            4.0, 5.0, 7.0, 8.0, // (ky 1, kx 1)
+        ];
+        assert_eq!(col, want);
+    }
+
+    #[test]
+    fn conv_identity_kernel() {
+        // 1x1 kernel with weight 1 is a passthrough plus bias.
+        let h: Vec<f32> = (0..9).map(|v| v as f32).collect();
+        let out = conv2d(&h, &[1.0], &[0.5], 1, 1, 3, 3, 1, 1, 1);
+        let expect: Vec<f32> = (0..9).map(|v| v as f32 + 0.5).collect();
+        assert_eq!(out, expect);
+    }
+
+    #[test]
+    fn conv_sums_window() {
+        // 2x2 all-ones kernel over a 3x3 ramp.
+        let h: Vec<f32> = (0..9).map(|v| v as f32).collect();
+        let out = conv2d(&h, &[1.0; 4], &[0.0], 1, 1, 3, 3, 1, 2, 2);
+        let expect = [0. + 1. + 3. + 4., 1. + 2. + 4. + 5., 3. + 4. + 6. + 7., 4. + 5. + 7. + 8.];
+        assert_eq!(out, expect);
+    }
+}

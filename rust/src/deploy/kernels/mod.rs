@@ -1,0 +1,35 @@
+//! The shared kernel layer of the deploy forward pass.
+//!
+//! Every lowered op the [`ExecPlan`](super::plan::ExecPlan) emits
+//! executes through the functions here, and the fake-quant reference
+//! ([`super::reference`]) routes through the *same* functions — so the
+//! engine ↔ reference cross-path golden compares quantization fidelity,
+//! never summation order. Three families:
+//!
+//! * [`gemm`] — the register-blocked, cache-tiled f32 GEMM (plus the
+//!   naive oracle and the bias epilogues). Accumulation order is fixed
+//!   and batch-size-independent: one accumulator per output element,
+//!   k swept ascending and never split, so blocked == naive == seed
+//!   loops *bit-for-bit*.
+//! * [`im2col`] — valid-padding stride-1 conv lowering: scatter the
+//!   image into `(ci·kh·kw) × (ho·wo)` columns whose row order matches
+//!   OIHW weight memory, then conv is one GEMM per sample.
+//! * [`elementwise`] — ReLU, per-unit activation fake quantization,
+//!   non-overlapping max-pool, argmax.
+//!
+//! Everything is `panic-hygiene` scoped (`cgmq analyze`): no
+//! unwrap/expect/panic! outside `#[cfg(test)]` — a malformed shape must
+//! surface as a typed error at plan build, never as a dead serving
+//! thread mid-GEMM. Integer SWAR kernels (dot products directly on
+//! packed 2/4/8-bit code words) will live beside `gemm.rs` and be
+//! chosen per op by the
+//! [`KernelSelector`](super::plan::KernelSelector); the f32 kernels
+//! stay as the bit-identity oracle.
+
+pub mod elementwise;
+pub mod gemm;
+pub mod im2col;
+
+pub use elementwise::{argmax, maxpool, maxpool_into, quantize_activations, relu_inplace};
+pub use gemm::{add_bias_cols, add_bias_rows, dense, gemm, gemm_naive, MR, NR};
+pub use im2col::{conv2d, im2col};

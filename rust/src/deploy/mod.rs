@@ -9,10 +9,21 @@
 //!   weight codes bit-packed at their trained bit-widths, plus ranges,
 //!   signs, biases and the arch fingerprint, behind a checksummed header
 //!   and a loader that fails fast on architecture drift.
-//! * [`Engine`] — the integer-domain forward pass (dense, conv, ReLU,
-//!   max-pool) decoding packed weights through the per-gate scales, with a
-//!   streaming mode (decode per call) and an unpack-once mode that caches
-//!   dense weights for batched serving.
+//! * [`plan`] — the compiled [`ExecPlan`]: every geometry check resolved
+//!   once at engine construction, dense and conv lowered onto one unified
+//!   matmul (conv via im2col), per-op kernel choice recorded by the
+//!   [`KernelSelector`] from the packed bit-widths (the seam for SWAR
+//!   integer kernels), and the [`Scratch`] layout precomputed so a warm
+//!   forward pass allocates nothing.
+//! * [`kernels`] — the shared kernel layer: register-blocked cache-tiled
+//!   f32 GEMM with a fixed batch-size-independent accumulation order,
+//!   im2col, and the element-wise ops. Both the engine and the reference
+//!   forward run through these.
+//! * [`Engine`] — plan execution + the decoded-weight cache: packed
+//!   weights decoded through the per-gate scales, with a streaming mode
+//!   (decode per call) and an unpack-once mode that caches dense weights
+//!   for batched serving; [`Engine::profile_batch`] reports the per-op
+//!   compute split ([`OpProfile`]).
 //! * [`RequestBatcher`] — aggregates single-sample `infer` requests into
 //!   batched engine invocations (size- and deadline-triggered flush) so
 //!   the unpack cost and the batched matmuls amortize across requests.
@@ -58,15 +69,18 @@
 pub mod batch;
 pub mod engine;
 pub mod format;
+pub mod kernels;
 pub mod net;
+pub mod plan;
 pub mod pool;
 pub mod reference;
 pub mod router;
 pub mod telemetry;
 
 pub use batch::{BatchConfig, BatcherStats, Completion, RequestBatcher};
-pub use engine::{DecodeMode, Engine};
+pub use engine::{DecodeMode, Engine, OpProfile};
 pub use format::{PackedLayer, PackedModel, WidthStream};
+pub use plan::{ExecPlan, Kernel, KernelSelector, Lowering, PlannedOp, PoolGeom, Scratch};
 pub use net::{Server, ServerConfig, ServerReport};
 pub use pool::{default_workers, PoolCompletion, PoolConfig, PoolStats, Submission, WorkerPool};
 pub use router::{ModelReport, RouteStats, Router};

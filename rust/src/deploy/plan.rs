@@ -1,0 +1,310 @@
+//! The compiled execution plan: every geometry decision of the forward
+//! pass, resolved once at [`Engine`](super::Engine) construction.
+//!
+//! [`ExecPlan::build`] walks the packed model's layers with the same
+//! shape checks the old hot loop re-ran per call — conv wants CHW, the
+//! kernel must fit, dense input features must match, pool windows must
+//! divide — and bakes the answers into a flat op list, so
+//! `infer_batch` executes straight-line with no `bail!` left on the
+//! hot path. Both layer kinds lower onto one unified matmul:
+//!
+//! * `Dense` → a single `(n × d_in) · (d_in × d_out)` GEMM per batch;
+//! * `Conv`  → an [`Im2col`](super::kernels::im2col) step per sample,
+//!   then a `(o × ci·kh·kw) · (ci·kh·kw × ho·wo)` GEMM whose output is
+//!   already the NCHW result plane.
+//!
+//! Each op records the [`Kernel`] the [`KernelSelector`] chose for its
+//! packed bit-widths — today always [`Kernel::F32Gemm`] (decode codes
+//! to f32, run the blocked GEMM); this enum + selector pair is the seam
+//! where per-width SWAR integer kernels plug in without another engine
+//! rewrite. The plan also precomputes the [`Scratch`] layout: two
+//! ping-pong activation buffers plus one im2col buffer (and, in
+//! streaming mode, one decode buffer), each sized to the plan-wide
+//! maximum, so a warm `infer_batch_into` call performs **zero** heap
+//! allocations and `infer_batch` a fixed handful.
+
+use anyhow::{bail, Result};
+
+use crate::model::LayerKind;
+
+use super::format::{PackedModel, WidthStream};
+
+/// Kernel implementations a lowered matmul can dispatch to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kernel {
+    /// Decode packed codes to f32, run the blocked f32 GEMM
+    /// ([`super::kernels::gemm`]). The only kernel today, and forever
+    /// the bit-identity reference the integer kernels are held to.
+    F32Gemm,
+}
+
+/// Chooses the kernel for one lowered matmul, keyed on the widest
+/// packed weight code in the layer — the dispatch seam for
+/// bitwidth-specialized kernels. A 2/4/8-bit SWAR path will branch here
+/// on `max_width` (and fall back to [`Kernel::F32Gemm`] for 16/32-bit
+/// or mixed streams it cannot accelerate).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct KernelSelector;
+
+impl KernelSelector {
+    /// Select the kernel for a layer whose widest weight code is
+    /// `max_width` bits (0 = fully pruned layer).
+    pub fn select(&self, _max_width: u32) -> Kernel {
+        Kernel::F32Gemm
+    }
+}
+
+/// How one layer's linear op lowers onto the unified matmul.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Lowering {
+    /// One batched GEMM: activations `(n × d_in)` · weights `(d_in × d_out)`.
+    Dense { d_in: usize, d_out: usize },
+    /// Per sample: im2col to `(ci·kh·kw) × (ho·wo)`, then weights
+    /// `(o × ci·kh·kw)` · columns — output is the NCHW plane directly.
+    Conv {
+        ci: usize,
+        hi: usize,
+        wi: usize,
+        o: usize,
+        kh: usize,
+        kw: usize,
+        ho: usize,
+        wo: usize,
+    },
+}
+
+/// Geometry of a max-pool step baked into an op (`None` = no pool).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolGeom {
+    /// Channels of the pooled NCHW tensor.
+    pub c: usize,
+    /// Input spatial dims (divisible by `k`, verified at build).
+    pub h: usize,
+    pub w: usize,
+    /// Window == stride.
+    pub k: usize,
+}
+
+/// One fully resolved step of the compiled forward: which packed layer,
+/// how it lowers, which kernel runs it, and the element counts every
+/// buffer slice is cut to.
+#[derive(Debug, Clone)]
+pub struct PlannedOp {
+    /// Index into `PackedModel::layers`.
+    pub layer: usize,
+    pub lowering: Lowering,
+    /// Kernel chosen by the [`KernelSelector`] for this op.
+    pub kernel: Kernel,
+    /// Widest packed weight code in the layer (the selector's key).
+    pub max_width: u32,
+    /// Per-sample elements produced by the matmul (pre-pool).
+    pub out_elems: usize,
+    /// Max-pool step after activation quantization, if any.
+    pub pool: Option<PoolGeom>,
+    /// Per-sample elements this op hands to the next (post-pool).
+    pub final_elems: usize,
+}
+
+/// The compiled forward: ops plus the scratch-sizing maxima. Built once
+/// per engine; immutable and `Sync` afterwards.
+#[derive(Debug, Clone)]
+pub struct ExecPlan {
+    pub ops: Vec<PlannedOp>,
+    /// Per-sample input element count.
+    pub input_len: usize,
+    /// Input quantization width (mirror of the trainer's input grid).
+    pub input_bits: u32,
+    /// Output units of the last op — the logit count. Reading it here
+    /// (a verified plan always has a last op) is what lets the engine
+    /// drop its `expect` on `arch.layers.last()`.
+    pub num_classes: usize,
+    /// Per-sample peak of any activation buffer the plan touches
+    /// (input included) — each ping-pong buffer holds `n ×` this.
+    pub act_elems: usize,
+    /// Peak per-sample im2col footprint (`ci·kh·kw × ho·wo`, maxed over
+    /// conv ops); 0 for an all-dense plan.
+    pub col_elems: usize,
+    /// Largest decoded weight tensor (streaming-mode decode buffer).
+    pub max_w_len: usize,
+}
+
+impl ExecPlan {
+    /// Resolve every layer's geometry and kernel choice up front. All
+    /// the shape `bail!`s of the old per-call loop live here now; an
+    /// engine holding a built plan runs its hot path check-free.
+    pub fn build(model: &PackedModel) -> Result<Self> {
+        if model.layers.is_empty() {
+            bail!("packed model has no layers");
+        }
+        let selector = KernelSelector;
+        let input_len = model.input_len();
+        let mut dims = model.input_shape.clone();
+        let mut act_elems = input_len;
+        let mut col_elems = 0usize;
+        let mut max_w_len = 0usize;
+        let mut ops = Vec::with_capacity(model.layers.len());
+        for (li, layer) in model.layers.iter().enumerate() {
+            let flat: usize = dims.iter().product();
+            let lowering = match layer.kind {
+                LayerKind::Dense => {
+                    if layer.w_shape.len() != 2 {
+                        bail!(
+                            "layer {}: dense weight shape {:?} is not 2-D",
+                            layer.name,
+                            layer.w_shape
+                        );
+                    }
+                    let (d_in, d_out) = (layer.w_shape[0], layer.w_shape[1]);
+                    if flat != d_in {
+                        bail!(
+                            "layer {}: input {} features, weights want {}",
+                            layer.name,
+                            flat,
+                            d_in
+                        );
+                    }
+                    dims = vec![d_out];
+                    Lowering::Dense { d_in, d_out }
+                }
+                LayerKind::Conv => {
+                    if layer.w_shape.len() != 4 {
+                        bail!(
+                            "layer {}: conv weight shape {:?} is not OIHW",
+                            layer.name,
+                            layer.w_shape
+                        );
+                    }
+                    if dims.len() != 3 {
+                        bail!("layer {}: conv wants CHW input, got {:?}", layer.name, dims);
+                    }
+                    let (ci, hi, wi) = (dims[0], dims[1], dims[2]);
+                    let (o, wc, kh, kw) =
+                        (layer.w_shape[0], layer.w_shape[1], layer.w_shape[2], layer.w_shape[3]);
+                    if wc != ci || hi < kh || wi < kw {
+                        bail!(
+                            "layer {}: input {:?} incompatible with kernel {:?}",
+                            layer.name,
+                            dims,
+                            layer.w_shape
+                        );
+                    }
+                    let (ho, wo) = (hi - kh + 1, wi - kw + 1);
+                    dims = vec![o, ho, wo];
+                    col_elems = col_elems.max(ci * kh * kw * ho * wo);
+                    Lowering::Conv { ci, hi, wi, o, kh, kw, ho, wo }
+                }
+            };
+            let out_elems: usize = dims.iter().product();
+            let pool = if layer.pool > 1 {
+                if dims.len() != 3 {
+                    bail!("layer {}: max-pool on a non-spatial output {:?}", layer.name, dims);
+                }
+                let (c, h, w) = (dims[0], dims[1], dims[2]);
+                if h % layer.pool != 0 || w % layer.pool != 0 {
+                    bail!(
+                        "layer {}: {h}x{w} output is not divisible by max-pool window {}",
+                        layer.name,
+                        layer.pool
+                    );
+                }
+                dims = vec![c, h / layer.pool, w / layer.pool];
+                Some(PoolGeom { c, h, w, k: layer.pool })
+            } else {
+                None
+            };
+            let final_elems: usize = dims.iter().product();
+            act_elems = act_elems.max(out_elems);
+            max_w_len = max_w_len.max(layer.w_len());
+            let max_width = max_stream_width(&layer.w_bits, layer.w_len());
+            ops.push(PlannedOp {
+                layer: li,
+                lowering,
+                kernel: selector.select(max_width),
+                max_width,
+                out_elems,
+                pool,
+                final_elems,
+            });
+        }
+        // ok_or-style read instead of unwrap: ops is provably non-empty,
+        // but a serving-path file must not carry a panic site.
+        let num_classes = match ops.last() {
+            Some(op) => op.final_elems,
+            None => bail!("packed model has no layers"),
+        };
+        Ok(Self {
+            ops,
+            input_len,
+            input_bits: model.input_bits,
+            num_classes,
+            act_elems,
+            col_elems,
+            max_w_len,
+        })
+    }
+}
+
+/// Widest code in a weight width stream (the kernel-selector key).
+fn max_stream_width(ws: &WidthStream, n: usize) -> u32 {
+    match ws {
+        WidthStream::Uniform(w) => *w,
+        WidthStream::PerElement(v) => v.iter().take(n).copied().max().unwrap_or(0),
+    }
+}
+
+/// Reusable per-call working memory, laid out by the plan: two
+/// ping-pong activation buffers (`a`/`b`), one im2col buffer (`col`),
+/// and the streaming-mode weight decode buffer (`wdec`). Buffers grow
+/// to the plan-wide maxima on first use and never shrink, so repeated
+/// [`Engine::infer_batch_into`](super::Engine::infer_batch_into) calls
+/// at a seen batch size allocate nothing — the property the
+/// scratch-reuse tests pin via [`base_ptrs`](Self::base_ptrs) /
+/// [`capacities`](Self::capacities).
+#[derive(Debug, Default)]
+pub struct Scratch {
+    pub(super) a: Vec<f32>,
+    pub(super) b: Vec<f32>,
+    pub(super) col: Vec<f32>,
+    pub(super) wdec: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Grow every buffer to the plan's requirement for an `n`-sample
+    /// batch. Amortized free: a no-op once the buffers have seen `n`.
+    pub(super) fn ensure(&mut self, plan: &ExecPlan, n: usize, streaming: bool) {
+        grow(&mut self.a, n * plan.act_elems);
+        grow(&mut self.b, n * plan.act_elems);
+        grow(&mut self.col, plan.col_elems);
+        if streaming {
+            grow(&mut self.wdec, plan.max_w_len);
+        }
+    }
+
+    /// Current capacities of (activation-a, activation-b, im2col,
+    /// decode) — with [`base_ptrs`](Self::base_ptrs), the observable
+    /// the O(1)-allocation tests assert stays fixed across calls.
+    pub fn capacities(&self) -> [usize; 4] {
+        [self.a.capacity(), self.b.capacity(), self.col.capacity(), self.wdec.capacity()]
+    }
+
+    /// Base addresses of the four buffers; unchanged addresses across
+    /// calls prove no buffer was reallocated.
+    pub fn base_ptrs(&self) -> [usize; 4] {
+        [
+            self.a.as_ptr() as usize,
+            self.b.as_ptr() as usize,
+            self.col.as_ptr() as usize,
+            self.wdec.as_ptr() as usize,
+        ]
+    }
+}
+
+fn grow(v: &mut Vec<f32>, len: usize) {
+    if v.len() < len {
+        v.resize(len, 0.0);
+    }
+}

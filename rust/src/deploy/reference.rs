@@ -11,10 +11,11 @@
 //!
 //! The packed [`Engine`](super::Engine) must agree with this function
 //! *bit-for-bit* on every layer at every bit-width — that is the property
-//! `tests/deploy_roundtrip.rs` pins. The two paths share the linear-algebra
-//! kernels (`engine::dense` / `conv2d_valid` / `maxpool`) so the comparison
-//! isolates exactly what deployment changes: fake-quantized f32 weights vs
-//! bit-packed integer codes decoded through per-gate scales.
+//! `tests/deploy_roundtrip.rs` pins. The two paths share the kernel layer
+//! ([`super::kernels`]: the same blocked GEMM behind `dense` / `conv2d`,
+//! the same `maxpool`) so the comparison isolates exactly what deployment
+//! changes: fake-quantized f32 weights vs bit-packed integer codes decoded
+//! through per-gate scales — never summation order.
 
 use anyhow::{bail, Result};
 
@@ -23,7 +24,7 @@ use crate::model::{ArchSpec, LayerKind};
 use crate::quant::{gated_quantize, quantize};
 use crate::tensor::Tensor;
 
-use super::engine::{conv2d_valid, dense, maxpool, relu_inplace};
+use super::kernels::{conv2d, dense, maxpool, relu_inplace};
 
 /// Fake-quant forward over `n` samples; returns flattened
 /// `n x num_classes` logits. This is the eval-graph semantics computed on
@@ -67,7 +68,7 @@ pub fn fake_quant_logits(
             LayerKind::Conv => {
                 let (ci, hi, wi) = (dims[0], dims[1], dims[2]);
                 let (o, kh, kw) = (spec.w_shape[0], spec.w_shape[2], spec.w_shape[3]);
-                h = conv2d_valid(&h, &wq, bias, n, ci, hi, wi, o, kh, kw);
+                h = conv2d(&h, &wq, bias, n, ci, hi, wi, o, kh, kw);
                 dims = vec![o, hi - kh + 1, wi - kw + 1];
             }
         }

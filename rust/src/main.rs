@@ -107,7 +107,8 @@ COMMANDS
   table2     --config <toml>   (bound sweep, layer gates)
   table3     --config <toml>   (bound sweep, individual gates)
   table-deploy [--requests <n>] [--batch <b>] [--workers <n>]
-             (deploy engine bench rows incl. the 1-vs-N-worker pool)
+             (deploy engine bench rows incl. the 1-vs-N-worker pool
+              and the per-op compute split: MatMul / Im2col / Elem %)
   a2         --config <toml> [--lambdas 0.001,0.01,...]
   info       [--config <toml>]
 
@@ -413,7 +414,7 @@ fn cmd_infer(args: &Args) -> Result<()> {
         }
         let x = &images[i * sample_len..(i + 1) * sample_len];
         let logits = engine.infer(x)?;
-        let pred = cgmq::deploy::engine::argmax(&logits);
+        let pred = cgmq::deploy::kernels::argmax(&logits);
         let mut fields = vec![
             ("model", Json::str(model_path)),
             ("index", Json::num(i as f64)),

@@ -33,6 +33,25 @@ fn panic_hygiene_flags_unwrap_in_deploy() {
 }
 
 #[test]
+fn panic_hygiene_covers_the_kernel_and_plan_layer() {
+    // The compiled-plan + shared-kernel files are serving hot path: a
+    // planted unwrap at those paths must be caught exactly like one in
+    // the network front.
+    let src = include_str!("fixtures/analyze/panic_bad.rs");
+    for path in [
+        "rust/src/deploy/plan.rs",
+        "rust/src/deploy/kernels/gemm.rs",
+        "rust/src/deploy/kernels/im2col.rs",
+        "rust/src/deploy/kernels/elementwise.rs",
+    ] {
+        let findings = analyze_source(path, src);
+        assert_eq!(rule_ids(&findings), vec![rules::RULE_PANIC], "{path}: {findings:#?}");
+        assert_eq!(findings[0].file, path);
+        assert_eq!(findings[0].line, 3);
+    }
+}
+
+#[test]
 fn panic_hygiene_is_scoped_to_deploy() {
     // The same source outside deploy/ (and in the load-time/oracle files)
     // is out of scope.

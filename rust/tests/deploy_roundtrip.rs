@@ -13,7 +13,8 @@ use cgmq::config::Config;
 use cgmq::deploy::format::{sign_extend, BitReader, BitWriter, PackedAct, PackedLayer};
 use cgmq::deploy::reference::fake_quant_logits;
 use cgmq::deploy::{
-    BatchConfig, BatcherStats, DecodeMode, Engine, PackedModel, RequestBatcher, WidthStream,
+    BatchConfig, BatcherStats, DecodeMode, Engine, PackedModel, RequestBatcher, Scratch,
+    WidthStream,
 };
 use cgmq::gates::{GateSet, Granularity};
 use cgmq::model::{lenet5, mlp, ArchSpec, LayerKind};
@@ -201,6 +202,100 @@ fn cross_path_golden_mlp() {
 #[test]
 fn cross_path_golden_lenet5() {
     golden_for(lenet5(), 2);
+}
+
+// ---------------------------------------------------------------------------
+// Mode switches and the decoded-weight cache
+// ---------------------------------------------------------------------------
+
+#[test]
+fn with_mode_resets_the_decoded_weight_cache() {
+    let arch = mlp();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Layer, 9);
+    let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    let n_layers = arch.layers.len();
+    let mut rng = SplitMix64::new(23);
+    let in_len = arch.input_len();
+    let xs: Vec<f32> = (0..2 * in_len).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let want = fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &xs, 2).unwrap();
+
+    let engine = Engine::new(model).unwrap();
+    engine.preload().unwrap();
+    assert_eq!(engine.decoded_layers(), n_layers);
+
+    // A preloaded engine switched to Streaming must not keep the stale
+    // decoded layers observable — and streaming inference must not
+    // repopulate the cache.
+    let streaming = engine.with_mode(DecodeMode::Streaming);
+    assert_eq!(streaming.decoded_layers(), 0);
+    let got = streaming.infer_batch(&xs, 2).unwrap();
+    for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "streaming logit {i}");
+    }
+    assert_eq!(streaming.decoded_layers(), 0);
+
+    // Switching back starts cold too (no resurrected fills), then warms
+    // lazily through inference — bit-identical throughout.
+    let back = streaming.with_mode(DecodeMode::UnpackOnce);
+    assert_eq!(back.decoded_layers(), 0);
+    let got = back.infer_batch(&xs, 2).unwrap();
+    for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "unpack-once logit {i}");
+    }
+    assert_eq!(back.decoded_layers(), n_layers);
+}
+
+// ---------------------------------------------------------------------------
+// Scratch reuse: the warm forward pass allocates nothing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn warm_infer_batch_into_reuses_every_buffer_in_place() {
+    // lenet5 so the im2col buffer participates; both modes so the
+    // streaming decode buffer does too. After the first full-size batch,
+    // repeated calls (same n, then smaller n) must leave every scratch
+    // buffer's base address and capacity — and the output buffer's —
+    // untouched: the engine's warm path performs zero heap allocations.
+    let arch = lenet5();
+    let (params, betas_w, betas_a, gates) = mixed_state(&arch, Granularity::Individual, 5);
+    let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    let in_len = arch.input_len();
+    let n = 3;
+    let mut rng = SplitMix64::new(31);
+    let xs: Vec<f32> = (0..n * in_len).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    for mode in [DecodeMode::Streaming, DecodeMode::UnpackOnce] {
+        let engine = Engine::new(model.clone()).unwrap().with_mode(mode);
+        let want = engine.infer_batch(&xs, n).unwrap();
+        let classes = engine.num_classes();
+
+        let mut scratch = Scratch::new();
+        let mut out = Vec::new();
+        engine.infer_batch_into(&xs, n, &mut scratch, &mut out).unwrap();
+        for (i, (&a, &b)) in out.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} warmup logit {i}");
+        }
+        let caps = scratch.capacities();
+        let ptrs = scratch.base_ptrs();
+        let out_ptr = out.as_ptr() as usize;
+        let out_cap = out.capacity();
+
+        for round in 0..3 {
+            engine.infer_batch_into(&xs, n, &mut scratch, &mut out).unwrap();
+            for (i, (&a, &b)) in out.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} round {round} logit {i}");
+            }
+            // A smaller batch rides the same buffers.
+            engine.infer_batch_into(&xs[..in_len], 1, &mut scratch, &mut out).unwrap();
+            assert_eq!(out.len(), classes);
+            for (i, (&a, &b)) in out.iter().zip(&want[..classes]).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} round {round} single logit {i}");
+            }
+            assert_eq!(scratch.capacities(), caps, "{mode:?} round {round}: scratch regrew");
+            assert_eq!(scratch.base_ptrs(), ptrs, "{mode:?} round {round}: scratch reallocated");
+            assert_eq!(out.capacity(), out_cap, "{mode:?} round {round}: output regrew");
+            assert_eq!(out.as_ptr() as usize, out_ptr, "{mode:?} round {round}: output moved");
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------

@@ -1,0 +1,220 @@
+//! Property tests of the shared kernel layer (`cgmq::deploy::kernels`)
+//! against naive oracles, on seeded deterministic inputs.
+//!
+//! The contract under test is *stronger* than numerical closeness: the
+//! blocked GEMM must equal the naive triple loop **bit-for-bit** on every
+//! shape, because the engine ↔ reference cross-path goldens (and the HTTP
+//! bit-identity check in `load-bench --verify-model`) ride on the kernels
+//! producing exactly the seed implementation's float sums. That holds by
+//! construction — one accumulator per output element, k swept ascending
+//! and never split — and these tests pin it across awkward tile
+//! remainders: dims of 1, the register tile edges (MR±1, NR±1), primes
+//! past the cache block, and everything in between.
+
+use cgmq::deploy::kernels::{
+    add_bias_cols, add_bias_rows, conv2d, dense, gemm, gemm_naive, im2col, MR, NR,
+};
+
+/// Deterministic xorshift64* so the matrices are seeded, not random.
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> u64 {
+        let mut x = self.0;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.0 = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform-ish f32 in [-0.5, 0.5) — exercises cancellation without
+    /// overflow, like normalized activations/weights.
+    fn f32(&mut self) -> f32 {
+        (self.next() >> 40) as f32 / 16_777_216.0 - 0.5
+    }
+
+    fn vec(&mut self, n: usize) -> Vec<f32> {
+        (0..n).map(|_| self.f32()).collect()
+    }
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}: element {i}: got {g}, want {w}");
+    }
+}
+
+// ------------------------------------------------------------- gemm
+
+/// Awkward dims around every blocking boundary: 1, the MR=4 / NR=8
+/// register tile edges, primes, and primes past the NC=256 cache block.
+const DIMS: [usize; 8] = [1, 2, MR - 1, MR + 1, NR - 1, NR + 1, 13, 37];
+
+#[test]
+fn blocked_gemm_is_bitwise_equal_to_the_naive_oracle() {
+    let mut rng = Rng(0x9E37_79B9_7F4A_7C15);
+    for &m in &DIMS {
+        for &k in &DIMS {
+            for &n in &DIMS {
+                let a = rng.vec(m * k);
+                let b = rng.vec(k * n);
+                let mut c = vec![f32::NAN; m * n]; // stale garbage must be overwritten
+                let mut c_ref = vec![0.0f32; m * n];
+                gemm(&a, &b, &mut c, m, k, n);
+                gemm_naive(&a, &b, &mut c_ref, m, k, n);
+                assert_bits_eq(&c, &c_ref, &format!("gemm {m}x{k}x{n}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn blocked_gemm_crosses_the_cache_column_block() {
+    // n = 257 and 263 straddle the NC = 256 column block; k = 131 is a
+    // prime that leaves every register-tile remainder shape live at once.
+    let mut rng = Rng(7);
+    for (m, k, n) in [(5, 131, 257), (MR, 64, 263), (17, 3, 256)] {
+        let a = rng.vec(m * k);
+        let b = rng.vec(k * n);
+        let mut c = vec![f32::NAN; m * n];
+        let mut c_ref = vec![0.0f32; m * n];
+        gemm(&a, &b, &mut c, m, k, n);
+        gemm_naive(&a, &b, &mut c_ref, m, k, n);
+        assert_bits_eq(&c, &c_ref, &format!("gemm {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn gemm_zero_k_writes_zeros_over_stale_output() {
+    // k = 0: an empty reduction must still overwrite the whole output.
+    let mut c = vec![f32::NAN; 6];
+    gemm(&[], &[], &mut c, 2, 0, 3);
+    assert!(c.iter().all(|v| v.to_bits() == 0.0f32.to_bits()), "{c:?}");
+}
+
+#[test]
+fn gemm_is_deterministic_across_repeated_calls() {
+    let mut rng = Rng(42);
+    let (m, k, n) = (NR + 1, 37, NC_PROBE);
+    let a = rng.vec(m * k);
+    let b = rng.vec(k * n);
+    let mut first = vec![0.0f32; m * n];
+    gemm(&a, &b, &mut first, m, k, n);
+    for _ in 0..3 {
+        let mut again = vec![f32::NAN; m * n];
+        gemm(&a, &b, &mut again, m, k, n);
+        assert_bits_eq(&again, &first, "repeated gemm");
+    }
+}
+
+/// A column count that exercises one full cache block plus a remainder.
+const NC_PROBE: usize = 300;
+
+// ------------------------------------------------------------ dense
+
+#[test]
+fn dense_single_rows_equal_the_batched_result_bitwise() {
+    // The accumulation order is batch-size-independent: running each
+    // sample alone must reproduce the batched rows bit-for-bit. This is
+    // what makes serve-path batching invisible to the HTTP bit-identity
+    // check.
+    let mut rng = Rng(0xDEAD_BEEF);
+    let (n_samples, d_in, d_out) = (7, 29, NR + 3);
+    let h = rng.vec(n_samples * d_in);
+    let w = rng.vec(d_in * d_out);
+    let bias = rng.vec(d_out);
+    let batched = dense(&h, &w, &bias, n_samples, d_in, d_out);
+    for s in 0..n_samples {
+        let one = dense(&h[s * d_in..(s + 1) * d_in], &w, &bias, 1, d_in, d_out);
+        assert_bits_eq(&one, &batched[s * d_out..(s + 1) * d_out], &format!("sample {s}"));
+    }
+}
+
+#[test]
+fn bias_epilogues_match_hand_expansion() {
+    // 2x3: cols broadcast per output column, rows per output row.
+    let mut c = vec![0.0f32; 6];
+    add_bias_cols(&mut c, &[1.0, 2.0, 3.0], 2, 3);
+    assert_eq!(c, [1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    let mut c = vec![0.0f32; 6];
+    add_bias_rows(&mut c, &[1.0, 2.0], 2, 3);
+    assert_eq!(c, [1.0, 1.0, 1.0, 2.0, 2.0, 2.0]);
+}
+
+// ------------------------------------------------------------- conv
+
+/// Naive 6-loop valid conv oracle (NCHW / OIHW), accumulation ascending
+/// (ic, ky, kx) — the seed engine's exact summation order.
+#[allow(clippy::too_many_arguments)]
+fn conv_oracle(
+    h: &[f32],
+    w: &[f32],
+    bias: &[f32],
+    n: usize,
+    ci: usize,
+    hi: usize,
+    wi: usize,
+    o: usize,
+    kh: usize,
+    kw: usize,
+) -> Vec<f32> {
+    let (ho, wo) = (hi - kh + 1, wi - kw + 1);
+    let mut out = vec![0.0f32; n * o * ho * wo];
+    for s in 0..n {
+        for oc in 0..o {
+            for oy in 0..ho {
+                for ox in 0..wo {
+                    let mut acc = 0.0f32;
+                    for ic in 0..ci {
+                        for ky in 0..kh {
+                            for kx in 0..kw {
+                                let iv = h[((s * ci + ic) * hi + oy + ky) * wi + ox + kx];
+                                let wv = w[((oc * ci + ic) * kh + ky) * kw + kx];
+                                acc += iv * wv;
+                            }
+                        }
+                    }
+                    out[((s * o + oc) * ho + oy) * wo + ox] = acc + bias[oc];
+                }
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn im2col_gemm_conv_is_bitwise_equal_to_the_six_loop_oracle() {
+    let mut rng = Rng(0x5EED);
+    // (ci, hi, wi, o, kh, kw): 1x1 kernels, full-image kernels, tall
+    // kernels, multi-channel, multi-output — every im2col edge.
+    let shapes = [
+        (1, 1, 1, 1, 1, 1),
+        (1, 5, 5, 3, 3, 3),
+        (2, 4, 6, 5, 3, 2),
+        (3, 7, 7, 4, 7, 7),
+        (4, 6, 5, NR + 1, 2, 3),
+        (5, 9, 8, 2, 1, 5),
+    ];
+    for (ci, hi, wi, o, kh, kw) in shapes {
+        for n in [1, 3] {
+            let h = rng.vec(n * ci * hi * wi);
+            let w = rng.vec(o * ci * kh * kw);
+            let bias = rng.vec(o);
+            let got = conv2d(&h, &w, &bias, n, ci, hi, wi, o, kh, kw);
+            let want = conv_oracle(&h, &w, &bias, n, ci, hi, wi, o, kh, kw);
+            assert_bits_eq(&got, &want, &format!("conv {ci}x{hi}x{wi} o={o} k={kh}x{kw} n={n}"));
+        }
+    }
+}
+
+#[test]
+fn im2col_fills_only_the_declared_prefix() {
+    // A scratch buffer longer than ci·kh·kw × ho·wo keeps its tail.
+    let img: Vec<f32> = (0..9).map(|v| v as f32).collect();
+    let mut col = vec![f32::NAN; 4 * 4 + 5];
+    im2col(&img, 1, 3, 3, 2, 2, &mut col);
+    assert!(col[..16].iter().all(|v| !v.is_nan()));
+    assert!(col[16..].iter().all(|v| v.is_nan()));
+}
