@@ -33,7 +33,12 @@ analyze: build
 # Compile + execute the deploy engine hot path (tiny iteration counts)
 # on every PR: the blocked-GEMM == naive-oracle bit-equality, both
 # cross-path goldens (mlp dense AND the lenet5 im2col+GEMM conv path),
-# and the per-op compute split rows.
+# the per-op compute split rows, and the SWAR width sweep — synthetic
+# uniform 2/4/8-bit exports on both archs, plan-introspected (every op
+# must select its Swar{2,4,8} kernel; the forced baseline must stay
+# F32Gemm) and golden-anchored bit-for-bit against the fake-quant
+# reference. Speedups are printed in smoke; the 1.5x floor on uniform
+# 4-bit mlp is asserted by the full `make bench` run.
 kernel-smoke:
 	$(CARGO) bench --bench bench_deploy -- --smoke
 
@@ -123,6 +128,7 @@ artifacts:
 bench:
 	$(CARGO) bench --bench bench_hot_paths
 	$(CARGO) bench --bench bench_tables
+	$(CARGO) bench --bench bench_deploy
 
 clean:
 	$(CARGO) clean

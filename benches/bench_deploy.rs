@@ -250,4 +250,103 @@ fn main() {
         );
         println!("cross-path golden: lenet5 conv engine == reference (bit-for-bit) ✓");
     }
+
+    // --- SWAR integer kernels vs the forced-f32 baseline. Same packed
+    // model, same plan geometry — only the kernel differs
+    // (`KernelSelector { force_f32 }` pins the baseline) — so the ratio
+    // is the integer-native win. Each width is golden-anchored against
+    // the fake-quant reference and plan-introspected, so the sweep
+    // doubles as the CI width-sweep smoke (`make kernel-smoke`).
+    {
+        use cgmq::bench_harness::uniform_deploy_state;
+        use cgmq::deploy::{Kernel, KernelSelector};
+
+        println!("\n== SWAR integer kernels on packed code words ==\n");
+        let time_mean = |iters: usize, f: &mut dyn FnMut()| -> f64 {
+            for _ in 0..iters.div_ceil(10).max(1) {
+                f();
+            }
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            t0.elapsed().as_secs_f64() / iters as f64
+        };
+        let mut mlp4_speedup = None;
+        for (arch, nb) in [(mlp(), 64usize), (lenet5(), if smoke { 2 } else { 8 })] {
+            let data = cgmq::data::Dataset::synth(29, nb);
+            for bits in [2u32, 4, 8] {
+                let s = uniform_deploy_state(&arch, bits, 19);
+                let model =
+                    PackedModel::from_state(&arch, &s.params, &s.betas_w, &s.betas_a, &s.gates)
+                        .unwrap();
+                let swar = Engine::new(model.clone()).unwrap();
+                let f32e = Engine::new_with_selector(
+                    model,
+                    KernelSelector { force_f32: true },
+                )
+                .unwrap();
+                swar.preload().unwrap();
+                f32e.preload().unwrap();
+                // Plan introspection: the sweep must actually exercise the
+                // width's SWAR kernel (and the baseline must not).
+                let expect = match bits {
+                    2 => Kernel::Swar2,
+                    4 => Kernel::Swar4,
+                    _ => Kernel::Swar8,
+                };
+                for (op, fop) in swar.plan().ops.iter().zip(&f32e.plan().ops) {
+                    assert_eq!(op.kernel, expect, "{} {bits}-bit layer {}", arch.name, op.layer);
+                    assert_eq!(fop.kernel, Kernel::F32Gemm, "baseline must stay f32");
+                }
+                // Golden anchor: both paths vs the fake-quant reference —
+                // the SWAR path bit-for-bit (the reference mirrors the
+                // default selection), the f32 baseline by prediction only
+                // (different summation algebra).
+                let want = fake_quant_logits(
+                    &arch, &s.params, &s.betas_w, &s.betas_a, &s.gates, &data.images, nb,
+                )
+                .unwrap();
+                let got = swar.infer_batch(&data.images, nb).unwrap();
+                assert!(
+                    got.iter().zip(&want).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "{} {bits}-bit SWAR engine drifted from the reference",
+                    arch.name
+                );
+                let iters = (5 * scale).max(3);
+                let t_swar =
+                    time_mean(iters, &mut || {
+                        std::hint::black_box(swar.infer_batch(&data.images, nb).unwrap());
+                    });
+                let t_f32 =
+                    time_mean(iters, &mut || {
+                        std::hint::black_box(f32e.infer_batch(&data.images, nb).unwrap());
+                    });
+                let speedup = t_f32 / t_swar;
+                println!(
+                    "swar: {:<7} {bits}-bit b={nb:<3} Swar{bits} {:>9.3} ms | F32Gemm {:>9.3} ms \
+                     | speedup {speedup:>5.2}x",
+                    arch.name,
+                    1e3 * t_swar,
+                    1e3 * t_f32,
+                );
+                if arch.name == "mlp" && bits == 4 {
+                    mlp4_speedup = Some(speedup);
+                }
+            }
+            println!("swar: {} width sweep golden vs reference (bit-for-bit) ✓", arch.name);
+        }
+        let headline = mlp4_speedup.expect("the sweep always times uniform 4-bit mlp");
+        // The acceptance line: integer-native 4-bit beats decoded f32 by
+        // >= 1.5x on the uniform mlp. Asserted only in the full run —
+        // smoke iteration counts are too small for a stable ratio there
+        // (the smoke run still prints it).
+        if !smoke {
+            assert!(
+                headline >= 1.5,
+                "uniform 4-bit mlp SWAR speedup {headline:.2}x fell below the 1.5x floor"
+            );
+        }
+        println!("swar: headline uniform 4-bit mlp speedup      {headline:>5.2}x");
+    }
 }

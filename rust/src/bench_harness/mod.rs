@@ -1053,6 +1053,35 @@ pub fn synthetic_deploy_state(
     SyntheticDeployState { params, betas_w, betas_a, gates }
 }
 
+/// A deterministic synthetic *uniform-width* snapshot state: every
+/// weight and activation gate pinned to one `T(g)` level at `Layer`
+/// granularity — the SWAR-eligible counterpart of
+/// [`synthetic_deploy_state`] (whose per-element level cycle
+/// deliberately mixes widths and therefore pins the `F32Gemm`
+/// fallback). The kernel width sweep and the SWAR speedup benches
+/// export these.
+pub fn uniform_deploy_state(
+    arch: &crate::model::ArchSpec,
+    bits: u32,
+    seed: u64,
+) -> SyntheticDeployState {
+    use crate::quant::gate_for_bits;
+    let params = arch.init_params(seed);
+    let n_layers = arch.layers.len();
+    let mut betas_w = crate::tensor::Tensor::zeros(&[n_layers]);
+    for li in 0..n_layers {
+        betas_w.data_mut()[li] = params[2 * li].abs_max().max(1e-3);
+    }
+    let betas_a = crate::tensor::Tensor::full(&[arch.n_quant_act()], 6.0);
+    let mut gates = crate::gates::GateSet::new(arch, crate::gates::Granularity::Layer);
+    for t in gates.gates_w.iter_mut().chain(gates.gates_a.iter_mut()) {
+        for g in t.data_mut().iter_mut() {
+            *g = gate_for_bits(bits);
+        }
+    }
+    SyntheticDeployState { params, betas_w, betas_a, gates }
+}
+
 /// The deploy rows: per arch, packed artifact size vs fp32, the
 /// single-vs-batched engine throughput, the sharded pool at 1 vs
 /// `workers` workers (throughput + tail latency), the two-variant

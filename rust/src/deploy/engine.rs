@@ -23,13 +23,16 @@
 //!   serve path ([`super::batch::RequestBatcher`]) uses this mode so the
 //!   unpack cost amortizes across aggregated requests.
 //!
-//! Both modes produce bit-identical logits (same kernels, same decoded
-//! values), and both match the host fake-quant reference forward
-//! ([`super::reference`]) bit-for-bit — the reference routes through the
-//! *same* kernel layer, and the GEMM's accumulation order is fixed and
-//! batch-size-independent, so the cross-path golden test in
-//! `tests/deploy_roundtrip.rs` compares quantization fidelity, never
-//! summation order.
+//! Both modes produce bit-identical logits (same kernels, same code
+//! streams), and both match the host fake-quant reference forward
+//! ([`super::reference`]) bit-for-bit: f32 ops route through the *same*
+//! kernel layer with a fixed batch-size-independent accumulation order,
+//! and SWAR ops ([`Kernel::Swar2`]/`Swar4`/`Swar8` — integer dot
+//! products directly on the packed code words, cached as a packed-lane
+//! repack beside the f32 cache) are exact integer arithmetic the
+//! reference reproduces with an independent naive `i64` oracle. The
+//! cross-path golden test in `tests/deploy_roundtrip.rs` therefore
+//! compares quantization fidelity, never summation order.
 //!
 //! The engine is **shared state**: inference takes `&self`, the decoded
 //! weight cache lives in per-layer [`OnceLock`] slots, and the packed
@@ -51,10 +54,11 @@ use crate::quant::quantize;
 
 use super::format::PackedModel;
 use super::kernels::{
-    add_bias_cols, add_bias_rows, argmax, gemm, im2col, maxpool_into, quantize_activations,
-    relu_inplace,
+    add_bias_cols, add_bias_rows, argmax, encode_scalar_rows, gemm, im2col, maxpool_into,
+    pack_conv_weights, pack_dense_weights, pack_lane_cols, quantize_activations, relu_inplace,
+    swar_gemm,
 };
-use super::plan::{ExecPlan, Kernel, Lowering, Scratch};
+use super::plan::{ExecPlan, Kernel, KernelSelector, Lowering, PlannedOp, Scratch};
 
 /// Weight decode strategy of an [`Engine`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -71,8 +75,8 @@ pub enum DecodeMode {
 /// kernels have to beat, reported by `bench_deploy` and `table-deploy`.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct OpProfile {
-    /// Packed-weight handling: streaming decode, or the unpack-cache
-    /// fill/load.
+    /// Packed-weight handling: streaming decode/repack, or the
+    /// unpack-cache fill/load (f32 decode and SWAR repack alike).
     pub decode: Duration,
     /// GEMM time including the bias epilogues (both lowerings).
     pub matmul: Duration,
@@ -99,6 +103,19 @@ impl OpProfile {
     }
 }
 
+/// One layer's cached SWAR repack — the packed-weight cache variant
+/// that lives beside the decoded-f32 cache. A SWAR op never touches the
+/// f32 weights; it consumes the integer codes in the layout its lowering
+/// wants, plus the offset-correction sums.
+enum SwarWeights {
+    /// Dense lowering: weights are the lane side — the stripe panel plus
+    /// per-output-feature lane sums.
+    DensePanel { words: Vec<u64>, sums: Vec<i64> },
+    /// Conv lowering: weights are the scalar side — offset `u16` codes in
+    /// `o × ci·kh·kw` row-major plus per-output-channel row sums.
+    ConvCodes { codes: Vec<u16>, sums: Vec<i64> },
+}
+
 /// Packed-model inference engine. Immutable after construction: `infer*`
 /// take `&self`, so an `Arc<Engine>` is safely shared across threads.
 pub struct Engine {
@@ -110,16 +127,30 @@ pub struct Engine {
     /// at most once; `OnceLock::get` on the hot path is a single atomic
     /// load, no lock.
     cache: Vec<OnceLock<Vec<f32>>>,
+    /// Per-layer packed-domain cache (`UnpackOnce` mode, SWAR ops): the
+    /// lane panel / scalar codes repack, same fill discipline as `cache`.
+    swar_cache: Vec<OnceLock<SwarWeights>>,
+}
+
+fn empty_caches(n: usize) -> (Vec<OnceLock<Vec<f32>>>, Vec<OnceLock<SwarWeights>>) {
+    ((0..n).map(|_| OnceLock::new()).collect(), (0..n).map(|_| OnceLock::new()).collect())
 }
 
 impl Engine {
     /// Verify a packed model and compile its execution plan (default
     /// `UnpackOnce` mode).
     pub fn new(model: PackedModel) -> Result<Self> {
+        Self::new_with_selector(model, KernelSelector::default())
+    }
+
+    /// [`new`](Self::new) with an explicit [`KernelSelector`] — how the
+    /// bench harness builds the forced-`F32Gemm` baseline engine it
+    /// measures SWAR speedups against.
+    pub fn new_with_selector(model: PackedModel, selector: KernelSelector) -> Result<Self> {
         let arch = model.verify()?;
-        let plan = ExecPlan::build(&model)?;
-        let cache = (0..model.layers.len()).map(|_| OnceLock::new()).collect();
-        Ok(Self { model, arch, plan, mode: DecodeMode::default(), cache })
+        let plan = ExecPlan::build_with(&model, selector)?;
+        let (cache, swar_cache) = empty_caches(model.layers.len());
+        Ok(Self { model, arch, plan, mode: DecodeMode::default(), cache, swar_cache })
     }
 
     /// Load a `.cgmqm` file (checksum + arch verification included).
@@ -135,27 +166,43 @@ impl Engine {
     /// `tests/deploy_roundtrip.rs`.
     pub fn with_mode(mut self, mode: DecodeMode) -> Self {
         self.mode = mode;
-        self.cache = (0..self.model.layers.len()).map(|_| OnceLock::new()).collect();
+        let (cache, swar_cache) = empty_caches(self.model.layers.len());
+        self.cache = cache;
+        self.swar_cache = swar_cache;
         self
     }
 
-    /// Eagerly decode every layer into the cache (`UnpackOnce` mode), so a
-    /// worker pool pays the unpack cost once up front instead of racing on
-    /// the first requests. No-op in `Streaming` mode (the cache is unread).
+    /// Eagerly fill every layer's cache (`UnpackOnce` mode) — the f32
+    /// decode for `F32Gemm`/`Pruned` ops, the packed-domain repack for
+    /// SWAR ops — so a worker pool pays the unpack cost once up front
+    /// instead of racing on the first requests. No-op in `Streaming`
+    /// mode (both caches are unread).
     pub fn preload(&self) -> Result<()> {
         if self.mode == DecodeMode::UnpackOnce {
-            for li in 0..self.model.layers.len() {
-                self.cached_weights(li)?;
+            for op in &self.plan.ops {
+                match op.kernel {
+                    Kernel::F32Gemm | Kernel::Pruned => {
+                        self.cached_weights(op.layer)?;
+                    }
+                    Kernel::Swar2 | Kernel::Swar4 | Kernel::Swar8 => {
+                        self.swar_cached(op)?;
+                    }
+                }
             }
         }
         Ok(())
     }
 
-    /// How many layers currently sit decoded in the unpack cache — the
-    /// `cgmq_engine_decoded_layers` telemetry gauge. Equal to the layer
-    /// count after [`preload`](Self::preload); 0 in `Streaming` mode.
+    /// How many layers currently sit unpacked in a cache — f32 decode or
+    /// SWAR repack — the `cgmq_engine_decoded_layers` telemetry gauge.
+    /// Equal to the layer count after [`preload`](Self::preload); 0 in
+    /// `Streaming` mode.
     pub fn decoded_layers(&self) -> usize {
-        self.cache.iter().filter(|c| c.get().is_some()).count()
+        self.cache
+            .iter()
+            .zip(&self.swar_cache)
+            .filter(|(f, s)| f.get().is_some() || s.get().is_some())
+            .count()
     }
 
     /// The decoded dense weights of layer `li`, filling the slot on first
@@ -168,6 +215,39 @@ impl Engine {
         }
         let w = self.model.decode_weights(li)?;
         Ok(self.cache[li].get_or_init(|| w).as_slice())
+    }
+
+    /// The cached SWAR repack of `op`'s layer, same fill discipline as
+    /// [`cached_weights`](Self::cached_weights).
+    fn swar_cached(&self, op: &PlannedOp) -> Result<&SwarWeights> {
+        let li = op.layer;
+        if let Some(w) = self.swar_cache[li].get() {
+            return Ok(w);
+        }
+        let w = self.build_swar_weights(op)?;
+        Ok(self.swar_cache[li].get_or_init(|| w))
+    }
+
+    /// Repack one SWAR op's weights from the packed code stream into the
+    /// layout its lowering consumes (no f32 round trip).
+    fn build_swar_weights(&self, op: &PlannedOp) -> Result<SwarWeights> {
+        let layer = &self.model.layers[op.layer];
+        let prm = match &op.swar {
+            Some(p) => p,
+            None => bail!("layer {}: SWAR kernel without plan parameters", layer.name),
+        };
+        match op.lowering {
+            Lowering::Dense { d_in, d_out } => {
+                let (mut words, mut sums) = (Vec::new(), Vec::new());
+                pack_dense_weights(layer, d_in, d_out, prm, &mut words, &mut sums)?;
+                Ok(SwarWeights::DensePanel { words, sums })
+            }
+            Lowering::Conv { ci, o, kh, kw, .. } => {
+                let (mut codes, mut sums) = (Vec::new(), Vec::new());
+                pack_conv_weights(layer, o, ci * kh * kw, prm, &mut codes, &mut sums)?;
+                Ok(SwarWeights::ConvCodes { codes, sums })
+            }
+        }
     }
 
     pub fn mode(&self) -> DecodeMode {
@@ -263,7 +343,7 @@ impl Engine {
             bail!("input has {} values, {} samples x {} want {}", xs.len(), n, in_len, n * in_len);
         }
         scratch.ensure(plan, n, self.mode == DecodeMode::Streaming);
-        let Scratch { a, b, col, wdec } = scratch;
+        let Scratch { a, b, col, wdec, codes16, lanes, sums_s, sums_l } = scratch;
         let (mut cur, mut nxt) = (a, b);
         // Fixed input quantization (mirror of quantizer.quantize_input).
         let t = PROF.then(Instant::now);
@@ -276,49 +356,185 @@ impl Engine {
         let last = plan.ops.len() - 1;
         for (oi, op) in plan.ops.iter().enumerate() {
             let layer = &self.model.layers[op.layer];
-            let t = PROF.then(Instant::now);
-            let wq: &[f32] = match self.mode {
-                DecodeMode::UnpackOnce => self.cached_weights(op.layer)?,
-                DecodeMode::Streaming => {
-                    layer.decode_weights_into(wdec)?;
-                    wdec.as_slice()
-                }
-            };
-            if let Some(t) = t {
-                prof.decode += t.elapsed();
-            }
             match op.kernel {
-                Kernel::F32Gemm => match op.lowering {
-                    Lowering::Dense { d_in, d_out } => {
-                        let t = PROF.then(Instant::now);
-                        let c = &mut nxt[..n * d_out];
-                        gemm(&cur[..n * d_in], wq, c, n, d_in, d_out);
-                        add_bias_cols(c, &layer.bias, n, d_out);
-                        if let Some(t) = t {
-                            prof.matmul += t.elapsed();
+                Kernel::F32Gemm => {
+                    let t = PROF.then(Instant::now);
+                    let wq: &[f32] = match self.mode {
+                        DecodeMode::UnpackOnce => self.cached_weights(op.layer)?,
+                        DecodeMode::Streaming => {
+                            layer.decode_weights_into(wdec)?;
+                            wdec.as_slice()
                         }
+                    };
+                    if let Some(t) = t {
+                        prof.decode += t.elapsed();
                     }
-                    Lowering::Conv { ci, hi, wi, o, kh, kw, ho, wo } => {
-                        let kdim = ci * kh * kw;
-                        let p = ho * wo;
-                        let cols = &mut col[..kdim * p];
-                        for s in 0..n {
+                    match op.lowering {
+                        Lowering::Dense { d_in, d_out } => {
                             let t = PROF.then(Instant::now);
-                            let img = &cur[s * ci * hi * wi..(s + 1) * ci * hi * wi];
-                            im2col(img, ci, hi, wi, kh, kw, cols);
-                            if let Some(t) = t {
-                                prof.im2col += t.elapsed();
-                            }
-                            let t = PROF.then(Instant::now);
-                            let planes = &mut nxt[s * o * p..(s + 1) * o * p];
-                            gemm(wq, cols, planes, o, kdim, p);
-                            add_bias_rows(planes, &layer.bias, o, p);
+                            let c = &mut nxt[..n * d_out];
+                            gemm(&cur[..n * d_in], wq, c, n, d_in, d_out);
+                            add_bias_cols(c, &layer.bias, n, d_out);
                             if let Some(t) = t {
                                 prof.matmul += t.elapsed();
                             }
                         }
+                        Lowering::Conv { ci, hi, wi, o, kh, kw, ho, wo } => {
+                            let kdim = ci * kh * kw;
+                            let p = ho * wo;
+                            let cols = &mut col[..kdim * p];
+                            for s in 0..n {
+                                let t = PROF.then(Instant::now);
+                                let img = &cur[s * ci * hi * wi..(s + 1) * ci * hi * wi];
+                                im2col(img, ci, hi, wi, kh, kw, cols);
+                                if let Some(t) = t {
+                                    prof.im2col += t.elapsed();
+                                }
+                                let t = PROF.then(Instant::now);
+                                let planes = &mut nxt[s * o * p..(s + 1) * o * p];
+                                gemm(wq, cols, planes, o, kdim, p);
+                                add_bias_rows(planes, &layer.bias, o, p);
+                                if let Some(t) = t {
+                                    prof.matmul += t.elapsed();
+                                }
+                            }
+                        }
                     }
-                },
+                }
+                // Fully pruned layer: every weight is 0.0, so the matmul
+                // output is all `+0.0` (any finite activation times 0.0
+                // sums to +0.0 under round-to-nearest) — zero-fill and
+                // run only the bias epilogue, bit-identical to the f32
+                // GEMM over the all-zero decode.
+                Kernel::Pruned => {
+                    let t = PROF.then(Instant::now);
+                    match op.lowering {
+                        Lowering::Dense { d_out, .. } => {
+                            let c = &mut nxt[..n * d_out];
+                            c.fill(0.0);
+                            add_bias_cols(c, &layer.bias, n, d_out);
+                        }
+                        Lowering::Conv { o, ho, wo, .. } => {
+                            let p = ho * wo;
+                            let c = &mut nxt[..n * o * p];
+                            c.fill(0.0);
+                            for s in 0..n {
+                                add_bias_rows(&mut c[s * o * p..(s + 1) * o * p], &layer.bias, o, p);
+                            }
+                        }
+                    }
+                    if let Some(t) = t {
+                        prof.matmul += t.elapsed();
+                    }
+                }
+                Kernel::Swar2 | Kernel::Swar4 | Kernel::Swar8 => {
+                    let prm = match &op.swar {
+                        Some(p) => p,
+                        None => bail!("layer {}: SWAR kernel without plan parameters", layer.name),
+                    };
+                    match op.lowering {
+                        Lowering::Dense { d_in, d_out } => {
+                            // Lane side = weights: cached repack, or a
+                            // per-call repack into scratch (streaming
+                            // keeps nothing resident, same as the f32
+                            // path's per-call decode).
+                            let t = PROF.then(Instant::now);
+                            let (wwords, wsums): (&[u64], &[i64]) = match self.mode {
+                                DecodeMode::UnpackOnce => match self.swar_cached(op)? {
+                                    SwarWeights::DensePanel { words, sums } => (words, sums),
+                                    SwarWeights::ConvCodes { .. } => {
+                                        bail!("layer {}: SWAR cache kind mismatch", layer.name)
+                                    }
+                                },
+                                DecodeMode::Streaming => {
+                                    pack_dense_weights(layer, d_in, d_out, prm, lanes, sums_l)?;
+                                    (lanes.as_slice(), sums_l.as_slice())
+                                }
+                            };
+                            if let Some(t) = t {
+                                prof.decode += t.elapsed();
+                            }
+                            let t = PROF.then(Instant::now);
+                            // Scalar side = the batch's activation codes,
+                            // recovered exactly from the on-grid f32s.
+                            encode_scalar_rows(&cur[..n * d_in], n, d_in, prm, codes16, sums_s);
+                            let c = &mut nxt[..n * d_out];
+                            swar_gemm(
+                                codes16,
+                                sums_s,
+                                wwords,
+                                wsums,
+                                c,
+                                n,
+                                d_in,
+                                d_out,
+                                prm,
+                                prm.a_off,
+                                prm.w_off,
+                                prm.combined_scale,
+                            );
+                            add_bias_cols(c, &layer.bias, n, d_out);
+                            if let Some(t) = t {
+                                prof.matmul += t.elapsed();
+                            }
+                        }
+                        Lowering::Conv { ci, hi, wi, o, kh, kw, ho, wo } => {
+                            let kdim = ci * kh * kw;
+                            let p = ho * wo;
+                            // Scalar side = weights: cached codes, or a
+                            // per-call re-encode into scratch.
+                            let t = PROF.then(Instant::now);
+                            let (wcodes, wsums): (&[u16], &[i64]) = match self.mode {
+                                DecodeMode::UnpackOnce => match self.swar_cached(op)? {
+                                    SwarWeights::ConvCodes { codes, sums } => (codes, sums),
+                                    SwarWeights::DensePanel { .. } => {
+                                        bail!("layer {}: SWAR cache kind mismatch", layer.name)
+                                    }
+                                },
+                                DecodeMode::Streaming => {
+                                    pack_conv_weights(layer, o, kdim, prm, codes16, sums_s)?;
+                                    (codes16.as_slice(), sums_s.as_slice())
+                                }
+                            };
+                            if let Some(t) = t {
+                                prof.decode += t.elapsed();
+                            }
+                            let cols = &mut col[..kdim * p];
+                            for s in 0..n {
+                                let t = PROF.then(Instant::now);
+                                let img = &cur[s * ci * hi * wi..(s + 1) * ci * hi * wi];
+                                im2col(img, ci, hi, wi, kh, kw, cols);
+                                if let Some(t) = t {
+                                    prof.im2col += t.elapsed();
+                                }
+                                // Lane side = the sample's column codes,
+                                // packed fresh per sample (the pack is
+                                // part of the matmul's cost).
+                                let t = PROF.then(Instant::now);
+                                pack_lane_cols(cols, kdim, p, prm, lanes, sums_l);
+                                let planes = &mut nxt[s * o * p..(s + 1) * o * p];
+                                swar_gemm(
+                                    wcodes,
+                                    wsums,
+                                    lanes,
+                                    sums_l,
+                                    planes,
+                                    o,
+                                    kdim,
+                                    p,
+                                    prm,
+                                    prm.w_off,
+                                    prm.a_off,
+                                    prm.combined_scale,
+                                );
+                                add_bias_rows(planes, &layer.bias, o, p);
+                                if let Some(t) = t {
+                                    prof.matmul += t.elapsed();
+                                }
+                            }
+                        }
+                    }
+                }
             }
             mem::swap(&mut cur, &mut nxt);
             if oi == last {

@@ -353,6 +353,32 @@ impl PackedLayer {
         }
         Ok(())
     }
+
+    /// Walk the packed integer code stream without leaving the code
+    /// domain: `f(index, width, code)` for every weight element, with
+    /// pruned (0-width) elements reported as code 0. This is the SWAR
+    /// repack's entry point — the integer kernels consume the codes
+    /// directly, so the stream must carry an integer grid; a layer with
+    /// any >= [`IDENTITY_BITS`] width (raw f32 payload) is a typed
+    /// error, and the [`KernelSelector`](super::plan::KernelSelector)
+    /// never routes such a layer here.
+    pub fn with_codes(&self, mut f: impl FnMut(usize, u32, i64)) -> Result<()> {
+        let n = self.w_len();
+        let mut br = BitReader::new(&self.codes);
+        for i in 0..n {
+            let width = self.w_bits.get(i);
+            let code = match width {
+                0 => 0,
+                w if w >= IDENTITY_BITS => bail!(
+                    "layer {}: {w}-bit elements carry raw f32 payloads, not integer codes",
+                    self.name
+                ),
+                w => sign_extend(br.read(w)?, w),
+            };
+            f(i, width, code);
+        }
+        Ok(())
+    }
 }
 
 /// A full packed model: what `.cgmqm` serializes.

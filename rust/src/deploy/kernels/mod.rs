@@ -17,19 +17,29 @@
 //! * [`elementwise`] — ReLU, per-unit activation fake quantization,
 //!   non-overlapping max-pool, argmax.
 //!
+//! * [`swar`] — the integer-native SWAR GEMM: dot products computed
+//!   directly on packed 2/4/8-bit code words (`u64` lanes, `i32`
+//!   accumulators, per-gate fixed-point rescale), chosen per op by the
+//!   [`KernelSelector`](super::plan::KernelSelector) when a layer's
+//!   widths and incoming activation grid qualify. The f32 kernels stay
+//!   both as the fallback for 16/32-bit and mixed-width layers and —
+//!   through the fake-quant reference's independent integer oracle —
+//!   as the bit-identity spec the SWAR path is held to.
+//!
 //! Everything is `panic-hygiene` scoped (`cgmq analyze`): no
 //! unwrap/expect/panic! outside `#[cfg(test)]` — a malformed shape must
 //! surface as a typed error at plan build, never as a dead serving
-//! thread mid-GEMM. Integer SWAR kernels (dot products directly on
-//! packed 2/4/8-bit code words) will live beside `gemm.rs` and be
-//! chosen per op by the
-//! [`KernelSelector`](super::plan::KernelSelector); the f32 kernels
-//! stay as the bit-identity oracle.
+//! thread mid-GEMM.
 
 pub mod elementwise;
 pub mod gemm;
 pub mod im2col;
+pub mod swar;
 
 pub use elementwise::{argmax, maxpool, maxpool_into, quantize_activations, relu_inplace};
 pub use gemm::{add_bias_cols, add_bias_rows, dense, gemm, gemm_naive, MR, NR};
 pub use im2col::{conv2d, im2col};
+pub use swar::{
+    code_of, decide, encode_scalar_rows, lanes_per_word, pack_conv_weights, pack_dense_weights,
+    pack_lane_cols, panel_words, swar_gemm, uniform_nonzero_width, ActGrid, SwarParams,
+};

@@ -1,0 +1,599 @@
+//! Integer-native SWAR GEMM on packed code words — the payoff of the
+//! trained 2/4/8-bit widths: the dot products run in the integer code
+//! domain, never decoding weights to f32.
+//!
+//! **Operands.** Every lowered matmul has a *scalar side* (read one code
+//! per step) and a *lane side* (read `64 / lane_bits` codes per step,
+//! packed in one `u64` word):
+//!
+//! * dense — scalar side = activation codes (batch rows), lane side =
+//!   weight codes (one lane per output feature, cached repack);
+//! * conv — scalar side = weight codes (one row per output channel,
+//!   cached repack), lane side = im2col column codes (one lane per
+//!   output position, packed per call).
+//!
+//! Both sides are **offset-encoded unsigned**: a signed code `q` is
+//! stored as `u = q + off` with `off` the grid magnitude bound, so every
+//! lane is non-negative and a whole-word multiply by a scalar multiplies
+//! all lanes at once with no sign corruption. The true dot product is
+//! recovered exactly from per-row / per-lane-column sums:
+//!
+//! ```text
+//! dot(r, j) = S(r, j) - l_off * Σᵢ s(r, i) - s_off * Σᵢ l(i, j)
+//!                     + k * s_off * l_off
+//! ```
+//!
+//! where `S` is the all-unsigned SWAR sum and `s`/`l` the stored offset
+//! codes. Σ s is computed while encoding the per-call side; Σ l ships
+//! with the cached repack. All integer arithmetic is exact, so the SWAR
+//! kernel agrees **bit-for-bit** with a naive `i64` triple loop over the
+//! raw codes — the oracle `tests/kernels.rs` holds it to — and with the
+//! integer path of the fake-quant reference ([`super::super::reference`]).
+//!
+//! **Lane discipline.** Lane width is 16 (4 lanes/word) when the worst
+//! per-step product `s_max * l_max` leaves at least [`MIN_FLUSH16`]
+//! accumulations of in-lane headroom, else 32 (2 lanes/word). Lanes are
+//! drained into `i32` accumulators every [`SwarParams::flush`] steps —
+//! the largest count for which `flush * s_max * l_max` still fits a
+//! lane, so cross-lane carries are impossible. The **accumulator bound**
+//! is checked once at plan build: a layer is only SWAR-eligible when
+//! `k * s_max * l_max <= i32::MAX`, so no `i32` accumulator can
+//! overflow at the plan's declared k ([`decide`] falls back to
+//! `F32Gemm` otherwise).
+//!
+//! **Rescale epilogue.** Activations enter as fake-quantized f32 values
+//! `a_scale * q`; [`code_of`] recovers `q` exactly (the value sits
+//! within a few ulp of the integer, far from any rounding boundary).
+//! The output is `(dot as f32) * combined_scale` with `combined_scale =
+//! step_size(w_bits, beta_w, true) * a_scale` — the same f32 arithmetic
+//! `quant::step_size` decoding performs, computed once at plan build —
+//! followed by the ordinary bias epilogue.
+
+use anyhow::Result;
+
+use crate::quant::step_size;
+
+use super::super::format::PackedLayer;
+
+/// Smallest acceptable 16-bit-lane flush cadence; below it the flush
+/// overhead eats the 4-lane win and the kernel drops to 32-bit lanes.
+pub const MIN_FLUSH16: u64 = 8;
+
+/// Widest lane count a word can carry (16-bit lanes).
+pub const MAX_LANES: usize = 4;
+
+/// The incoming activation grid of a lowered matmul: every value is
+/// `step_size(bits, beta, signed) * q` for an integer code `q`. `signed`
+/// only for the first op (input quantization); hidden activations are
+/// ReLU outputs on the unsigned grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActGrid {
+    pub bits: u32,
+    pub signed: bool,
+    pub beta: f32,
+}
+
+/// Everything the engine and the reference need to agree on for one
+/// SWAR-lowered op, resolved once by [`decide`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwarParams {
+    /// Uniform nonzero weight width (2, 4 or 8).
+    pub w_bits: u32,
+    /// Incoming activation code width.
+    pub a_bits: u32,
+    /// Whether the incoming codes are signed (first op only).
+    pub a_signed: bool,
+    /// Incoming activation grid step.
+    pub a_scale: f32,
+    /// `1.0 / a_scale`, precomputed for [`code_of`].
+    pub inv_a_scale: f32,
+    /// `step_size(w_bits, beta_w, true) * a_scale` — the fixed-point
+    /// rescale applied to every integer dot product.
+    pub combined_scale: f32,
+    /// Offset added to weight codes (`2^(w-1) - 1`).
+    pub w_off: i64,
+    /// Offset added to activation codes (0 on unsigned grids).
+    pub a_off: i64,
+    /// Largest stored (offset) weight code.
+    pub w_max: i64,
+    /// Largest stored (offset) activation code.
+    pub a_max: i64,
+    /// Lane width in bits: 16 (4 lanes/word) or 32 (2 lanes/word).
+    pub lane_bits: u32,
+    /// Accumulation steps between lane drains (cross-lane-carry bound).
+    pub flush: usize,
+}
+
+/// Lanes per `u64` word at `lane_bits`.
+#[inline]
+pub fn lanes_per_word(lane_bits: u32) -> usize {
+    (64 / lane_bits) as usize
+}
+
+/// Words one lane panel needs: `cols` lanes over a `k`-deep sweep.
+#[inline]
+pub fn panel_words(k: usize, cols: usize, lane_bits: u32) -> usize {
+    cols.div_ceil(lanes_per_word(lane_bits)) * k
+}
+
+/// `Some(w)` iff every nonzero width in the stream equals `w` (pruned
+/// zero-width elements ride along as code 0); `None` for genuinely mixed
+/// streams and for all-pruned ones (the latter is [`Kernel::Pruned`]
+/// territory, decided before this is consulted).
+///
+/// [`Kernel::Pruned`]: super::super::plan::Kernel::Pruned
+pub fn uniform_nonzero_width(widths: impl IntoIterator<Item = u32>) -> Option<u32> {
+    let mut found = None;
+    for w in widths {
+        if w == 0 {
+            continue;
+        }
+        match found {
+            None => found = Some(w),
+            Some(prev) if prev != w => return None,
+            Some(_) => {}
+        }
+    }
+    found
+}
+
+/// The SWAR eligibility + parameter decision, shared verbatim by
+/// [`KernelSelector`](super::super::plan::KernelSelector) and the
+/// fake-quant reference so both paths select identically. Returns `None`
+/// (→ `F32Gemm`) unless:
+///
+/// * the weight stream is uniformly one width `w ∈ {2, 4, 8}` (pruned
+///   elements allowed),
+/// * the incoming activations sit on one shared grid of width ≤ 8, and
+/// * the accumulator bound `k * w_max * a_max <= i32::MAX` holds.
+pub fn decide(
+    w_uniform: Option<u32>,
+    beta_w: f32,
+    incoming: Option<ActGrid>,
+    k: usize,
+) -> Option<SwarParams> {
+    let w_bits = w_uniform?;
+    if !matches!(w_bits, 2 | 4 | 8) {
+        return None;
+    }
+    let grid = incoming?;
+    if grid.bits == 0 || grid.bits > 8 {
+        return None;
+    }
+    let w_off = (1i64 << (w_bits - 1)) - 1;
+    let w_max = (1i64 << w_bits) - 2;
+    let (a_off, a_max) = if grid.signed {
+        let m = (1i64 << (grid.bits - 1)) - 1;
+        (m, 2 * m)
+    } else {
+        (0, (1i64 << grid.bits) - 1)
+    };
+    if w_max == 0 || a_max == 0 {
+        return None;
+    }
+    if (k as i64).checked_mul(w_max * a_max).map_or(true, |b| b > i32::MAX as i64) {
+        return None;
+    }
+    let prod = (w_max * a_max) as u64;
+    let (lane_bits, cap) = if u16::MAX as u64 / prod >= MIN_FLUSH16 {
+        (16, u16::MAX as u64)
+    } else {
+        (32, u32::MAX as u64)
+    };
+    let a_scale = step_size(grid.bits, grid.beta, grid.signed);
+    Some(SwarParams {
+        w_bits,
+        a_bits: grid.bits,
+        a_signed: grid.signed,
+        a_scale,
+        inv_a_scale: 1.0 / a_scale,
+        combined_scale: step_size(w_bits, beta_w, true) * a_scale,
+        w_off,
+        a_off,
+        w_max,
+        a_max,
+        lane_bits,
+        flush: (cap / prod) as usize,
+    })
+}
+
+/// Exact inverse of the fake quantizer's `scale * n` store: recover the
+/// integer grid code of an on-grid value. The value is within a few ulp
+/// of the integer (never near a rounding boundary), so the engine and
+/// the reference recover identical codes from their bit-identical
+/// activation tensors.
+#[inline]
+pub fn code_of(v: f32, inv_scale: f32) -> i64 {
+    (v * inv_scale).round_ties_even() as i64
+}
+
+// ---------------------------------------------------------------------------
+// Packing — cached weight repacks and per-call activation encodes
+// ---------------------------------------------------------------------------
+
+/// Repack a dense layer's packed weight codes (`d_in × d_out` stream
+/// order) into the lane panel: stripe `jb` holds lanes for output
+/// features `jb*L .. jb*L+L` over the full `d_in` sweep, so the kernel's
+/// inner loop reads one contiguous word stripe. `sums[j]` receives the
+/// offset-code column sums the correction term needs. Pruned (0-width)
+/// elements store the offset itself — the encoding of code 0.
+pub fn pack_dense_weights(
+    layer: &PackedLayer,
+    d_in: usize,
+    d_out: usize,
+    prm: &SwarParams,
+    words: &mut Vec<u64>,
+    sums: &mut Vec<i64>,
+) -> Result<()> {
+    let lpw = lanes_per_word(prm.lane_bits);
+    words.clear();
+    words.resize(panel_words(d_in, d_out, prm.lane_bits), 0);
+    sums.clear();
+    sums.resize(d_out, 0);
+    layer.with_codes(|i, _w, code| {
+        let (ki, j) = (i / d_out, i % d_out);
+        let u = code + prm.w_off;
+        words[(j / lpw) * d_in + ki] |= (u as u64) << ((j % lpw) as u32 * prm.lane_bits);
+        sums[j] += u;
+    })
+}
+
+/// Repack a conv layer's packed weight codes (`o × ci·kh·kw` stream
+/// order — already the scalar-side row-major layout) into offset `u16`
+/// codes plus per-output-channel row sums.
+pub fn pack_conv_weights(
+    layer: &PackedLayer,
+    o: usize,
+    kdim: usize,
+    prm: &SwarParams,
+    codes: &mut Vec<u16>,
+    sums: &mut Vec<i64>,
+) -> Result<()> {
+    codes.clear();
+    codes.resize(o * kdim, 0);
+    sums.clear();
+    sums.resize(o, 0);
+    layer.with_codes(|i, _w, code| {
+        let u = code + prm.w_off;
+        codes[i] = u as u16;
+        sums[i / kdim] += u;
+    })
+}
+
+/// Encode a row-major f32 activation block (`m × k`, every value on the
+/// incoming grid) into offset scalar codes plus per-row sums — the
+/// dense lowering's per-call scalar side. Resizes the buffers to exact
+/// fit (within their grown capacity: no allocation on a warm scratch).
+pub fn encode_scalar_rows(
+    h: &[f32],
+    m: usize,
+    k: usize,
+    prm: &SwarParams,
+    codes: &mut Vec<u16>,
+    sums: &mut Vec<i64>,
+) {
+    codes.resize(m * k, 0);
+    sums.resize(m, 0);
+    for r in 0..m {
+        let row = &h[r * k..(r + 1) * k];
+        let dst = &mut codes[r * k..(r + 1) * k];
+        let mut total = 0i64;
+        for (d, &v) in dst.iter_mut().zip(row) {
+            let u = code_of(v, prm.inv_a_scale) + prm.a_off;
+            *d = u as u16;
+            total += u;
+        }
+        sums[r] = total;
+    }
+}
+
+/// Encode a row-major f32 im2col matrix (`k × n`, every value on the
+/// incoming grid) into the lane panel plus per-position lane-column
+/// sums — the conv lowering's per-call lane side. Resizes the buffers
+/// to exact fit (within their grown capacity: no allocation on a warm
+/// scratch); every word in range is overwritten.
+pub fn pack_lane_cols(
+    col: &[f32],
+    k: usize,
+    n: usize,
+    prm: &SwarParams,
+    words: &mut Vec<u64>,
+    sums: &mut Vec<i64>,
+) {
+    let lpw = lanes_per_word(prm.lane_bits);
+    let nb = n.div_ceil(lpw);
+    words.resize(panel_words(k, n, prm.lane_bits), 0);
+    sums.resize(n, 0);
+    for s in sums[..n].iter_mut() {
+        *s = 0;
+    }
+    for jb in 0..nb {
+        let stripe = &mut words[jb * k..(jb + 1) * k];
+        for (i, w) in stripe.iter_mut().enumerate() {
+            let mut word = 0u64;
+            for l in 0..lpw {
+                let j = jb * lpw + l;
+                if j < n {
+                    let u = code_of(col[i * n + j], prm.inv_a_scale) + prm.a_off;
+                    word |= (u as u64) << (l as u32 * prm.lane_bits);
+                    sums[j] += u;
+                }
+            }
+            *w = word;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The SWAR GEMM
+// ---------------------------------------------------------------------------
+
+/// Integer-native GEMM: `out[r, j] = scale * Σᵢ (s(r,i) - s_off) *
+/// (l(i,j) - l_off)` over offset scalar codes `s` (`m × k` row-major)
+/// and an offset lane panel `l` (`k`-deep stripes of `lanes_per_word`
+/// columns each, `words.len() >= panel_words(k, n, lane_bits)`).
+///
+/// One whole-word multiply accumulates `lanes_per_word` products per
+/// step; lanes drain into `i32` accumulators every `flush` steps (the
+/// carry bound [`decide`] derived), and the main path keeps four
+/// independent word chains in flight so the multiplies pipeline. Every
+/// `out` element is overwritten; accumulation order is irrelevant —
+/// integer sums are exact, so blocked == naive bit-for-bit.
+#[allow(clippy::too_many_arguments)]
+pub fn swar_gemm(
+    scalar: &[u16],
+    scalar_sums: &[i64],
+    words: &[u64],
+    lane_sums: &[i64],
+    out: &mut [f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    prm: &SwarParams,
+    s_off: i64,
+    l_off: i64,
+    scale: f32,
+) {
+    let lpw = lanes_per_word(prm.lane_bits);
+    let mask = if prm.lane_bits == 64 { u64::MAX } else { (1u64 << prm.lane_bits) - 1 };
+    let nb = n.div_ceil(lpw);
+    let fl = prm.flush.max(1);
+    let base = (k as i64) * s_off * l_off;
+    let mut write = |r: usize, jb: usize, acc: &[i32; MAX_LANES]| {
+        for (l, &a) in acc.iter().enumerate().take(lpw) {
+            let j = jb * lpw + l;
+            if j < n {
+                let dot = a as i64 - l_off * scalar_sums[r] - s_off * lane_sums[j] + base;
+                out[r * n + j] = dot as f32 * scale;
+            }
+        }
+    };
+    let mut jb = 0;
+    // Quad-stripe main path: 4 independent u64 accumulation chains.
+    while jb + 4 <= nb {
+        let s0 = &words[jb * k..(jb + 1) * k];
+        let s1 = &words[(jb + 1) * k..(jb + 2) * k];
+        let s2 = &words[(jb + 2) * k..(jb + 3) * k];
+        let s3 = &words[(jb + 3) * k..(jb + 4) * k];
+        for r in 0..m {
+            let srow = &scalar[r * k..(r + 1) * k];
+            let mut acc = [[0i32; MAX_LANES]; 4];
+            let mut i = 0;
+            while i < k {
+                let end = (i + fl).min(k);
+                let (mut w0, mut w1, mut w2, mut w3) = (0u64, 0u64, 0u64, 0u64);
+                for p in i..end {
+                    let s = srow[p] as u64;
+                    w0 += s0[p] * s;
+                    w1 += s1[p] * s;
+                    w2 += s2[p] * s;
+                    w3 += s3[p] * s;
+                }
+                for (a, w) in acc.iter_mut().zip([w0, w1, w2, w3]) {
+                    for (l, slot) in a.iter_mut().enumerate().take(lpw) {
+                        *slot += ((w >> (l as u32 * prm.lane_bits)) & mask) as i32;
+                    }
+                }
+                i = end;
+            }
+            for (q, a) in acc.iter().enumerate() {
+                write(r, jb + q, a);
+            }
+        }
+        jb += 4;
+    }
+    // Remainder stripes, one at a time.
+    while jb < nb {
+        let stripe = &words[jb * k..(jb + 1) * k];
+        for r in 0..m {
+            let srow = &scalar[r * k..(r + 1) * k];
+            let mut acc = [0i32; MAX_LANES];
+            let mut i = 0;
+            while i < k {
+                let end = (i + fl).min(k);
+                let mut w = 0u64;
+                for p in i..end {
+                    w += stripe[p] * srow[p] as u64;
+                }
+                for (l, slot) in acc.iter_mut().enumerate().take(lpw) {
+                    *slot += ((w >> (l as u32 * prm.lane_bits)) & mask) as i32;
+                }
+                i = end;
+            }
+            write(r, jb, &acc);
+        }
+        jb += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive oracle over raw (un-offset) codes: plain i64 triple loop.
+    fn naive(
+        qa: &[i64],
+        qw: &[i64],
+        m: usize,
+        k: usize,
+        n: usize,
+        scale: f32,
+    ) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for r in 0..m {
+            for j in 0..n {
+                let mut dot = 0i64;
+                for i in 0..k {
+                    dot += qa[r * k + i] * qw[i * n + j];
+                }
+                out[r * n + j] = dot as f32 * scale;
+            }
+        }
+        out
+    }
+
+    /// Pack raw lane-side codes (`k × n` row-major) the way the dense
+    /// weight repack lays them out.
+    fn pack_lanes_raw(q: &[i64], k: usize, n: usize, off: i64, lane_bits: u32) -> (Vec<u64>, Vec<i64>) {
+        let lpw = lanes_per_word(lane_bits);
+        let mut words = vec![0u64; panel_words(k, n, lane_bits)];
+        let mut sums = vec![0i64; n];
+        for i in 0..k {
+            for j in 0..n {
+                let u = q[i * n + j] + off;
+                words[(j / lpw) * k + i] |= (u as u64) << ((j % lpw) as u32 * lane_bits);
+                sums[j] += u;
+            }
+        }
+        (words, sums)
+    }
+
+    fn xorshift(state: &mut u64) -> u64 {
+        let mut x = *state;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        *state = x;
+        x
+    }
+
+    #[test]
+    fn swar_matches_naive_over_widths_and_awkward_k() {
+        let mut seed = 0x5117_2024u64;
+        for &w_bits in &[2u32, 4, 8] {
+            for &(a_bits, a_signed) in &[(2u32, false), (4, false), (8, false), (8, true)] {
+                let prm = decide(
+                    Some(w_bits),
+                    1.5,
+                    Some(ActGrid { bits: a_bits, signed: a_signed, beta: 6.0 }),
+                    200,
+                )
+                .unwrap();
+                for &k in &[1usize, 3, 17, 63, 64, 65, 129] {
+                    let (m, n) = (3usize, 11usize);
+                    let wq_max = (1i64 << (w_bits - 1)) - 1;
+                    let qa_hi = if a_signed { (1i64 << (a_bits - 1)) - 1 } else { (1i64 << a_bits) - 1 };
+                    let qa_lo = if a_signed { -qa_hi } else { 0 };
+                    let qa: Vec<i64> = (0..m * k)
+                        .map(|_| qa_lo + (xorshift(&mut seed) % (qa_hi - qa_lo + 1) as u64) as i64)
+                        .collect();
+                    let qw: Vec<i64> = (0..k * n)
+                        .map(|_| -wq_max + (xorshift(&mut seed) % (2 * wq_max + 1) as u64) as i64)
+                        .collect();
+                    let (words, lane_sums) = pack_lanes_raw(&qw, k, n, prm.w_off, prm.lane_bits);
+                    let scalar: Vec<u16> = qa.iter().map(|&q| (q + prm.a_off) as u16).collect();
+                    let scalar_sums: Vec<i64> = (0..m)
+                        .map(|r| qa[r * k..(r + 1) * k].iter().map(|&q| q + prm.a_off).sum())
+                        .collect();
+                    let mut out = vec![f32::NAN; m * n];
+                    let scale = prm.combined_scale;
+                    swar_gemm(
+                        &scalar, &scalar_sums, &words, &lane_sums, &mut out, m, k, n, &prm,
+                        prm.a_off, prm.w_off, scale,
+                    );
+                    let want = naive(&qa, &qw, m, k, n, scale);
+                    assert_eq!(
+                        out.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "w={w_bits} a={a_bits}/{a_signed} k={k}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn accumulator_never_overflows_at_the_declared_bound() {
+        // Worst-case codes at the largest k decide() admits for 8x8.
+        let grid = ActGrid { bits: 8, signed: false, beta: 6.0 };
+        let prm = decide(Some(8), 1.0, Some(grid), 100).unwrap();
+        let k_max = (i32::MAX as i64 / (prm.w_max * prm.a_max)) as usize;
+        assert!(decide(Some(8), 1.0, Some(grid), k_max).is_some());
+        assert!(decide(Some(8), 1.0, Some(grid), k_max + 1).is_none());
+        // Run the kernel at a saturating-code slice of that k: every
+        // lane accumulates its maximum product each step.
+        let k = 4096usize;
+        let (m, n) = (1usize, 5usize);
+        let qa = vec![(1i64 << 8) - 1; m * k];
+        let qw = vec![(1i64 << 7) - 1; k * n];
+        let (words, lane_sums) = pack_lanes_raw(&qw, k, n, prm.w_off, prm.lane_bits);
+        let scalar: Vec<u16> = qa.iter().map(|&q| (q + prm.a_off) as u16).collect();
+        let scalar_sums: Vec<i64> =
+            (0..m).map(|r| qa[r * k..(r + 1) * k].iter().sum::<i64>()).collect();
+        let mut out = vec![0.0f32; m * n];
+        swar_gemm(
+            &scalar, &scalar_sums, &words, &lane_sums, &mut out, m, k, n, &prm, prm.a_off,
+            prm.w_off, 1.0,
+        );
+        let want = (k as i64 * 255 * 127) as f32;
+        assert!(out.iter().all(|&v| v == want));
+    }
+
+    #[test]
+    fn decide_rejects_mixed_wide_and_gridless() {
+        let grid = Some(ActGrid { bits: 8, signed: true, beta: 1.0 });
+        assert!(decide(None, 1.0, grid, 10).is_none(), "mixed widths");
+        assert!(decide(Some(16), 1.0, grid, 10).is_none(), "16-bit weights");
+        assert!(decide(Some(32), 1.0, grid, 10).is_none(), "identity weights");
+        assert!(decide(Some(4), 1.0, None, 10).is_none(), "no shared act grid");
+        assert!(
+            decide(Some(4), 1.0, Some(ActGrid { bits: 16, signed: false, beta: 6.0 }), 10)
+                .is_none(),
+            "16-bit activations"
+        );
+        assert!(decide(Some(4), 1.0, grid, 10).is_some());
+    }
+
+    #[test]
+    fn lane_width_tracks_product_headroom() {
+        let a8 = Some(ActGrid { bits: 8, signed: false, beta: 6.0 });
+        let a4 = Some(ActGrid { bits: 4, signed: false, beta: 6.0 });
+        assert_eq!(decide(Some(2), 1.0, a8, 10).unwrap().lane_bits, 16);
+        assert_eq!(decide(Some(4), 1.0, a8, 10).unwrap().lane_bits, 16);
+        assert_eq!(decide(Some(8), 1.0, a8, 10).unwrap().lane_bits, 32);
+        assert_eq!(decide(Some(8), 1.0, a4, 10).unwrap().lane_bits, 16);
+    }
+
+    #[test]
+    fn uniform_nonzero_width_ignores_pruned() {
+        assert_eq!(uniform_nonzero_width([4, 0, 4, 4]), Some(4));
+        assert_eq!(uniform_nonzero_width([0, 0]), None);
+        assert_eq!(uniform_nonzero_width([2, 4]), None);
+        assert_eq!(uniform_nonzero_width([8; 5]), Some(8));
+    }
+
+    #[test]
+    fn code_of_inverts_the_quantizer_store() {
+        use crate::quant::{quantize, step_size};
+        for &(bits, signed, beta) in &[(8u32, true, 1.0f32), (4, false, 6.0), (2, false, 6.0)] {
+            let s = step_size(bits, beta, signed);
+            let inv = 1.0 / s;
+            let hi = if signed { (1i64 << (bits - 1)) - 1 } else { (1i64 << bits) - 1 };
+            let lo = if signed { -hi } else { 0 };
+            for q in lo..=hi {
+                let v = quantize(s * q as f32, bits, beta, signed);
+                assert_eq!(code_of(v, inv), q, "bits={bits} signed={signed} q={q}");
+            }
+        }
+    }
+}

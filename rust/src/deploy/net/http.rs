@@ -399,6 +399,16 @@ pub const CLIENT_MAX_BODY: usize = 4 << 20;
 
 /// Read one response: status line, headers, `Content-Length` body.
 pub fn read_client_response<R: BufRead>(r: &mut R) -> Result<(u16, String), ReadError> {
+    let (status, _, body) = read_client_response_with_headers(r)?;
+    Ok((status, body))
+}
+
+/// Like [`read_client_response`], but also returns the response headers
+/// as `(lowercased-name, trimmed-value)` pairs in wire order — what a
+/// client needs to read policy headers such as `Retry-After` off a 429.
+pub fn read_client_response_with_headers<R: BufRead>(
+    r: &mut R,
+) -> Result<(u16, Vec<(String, String)>, String), ReadError> {
     let mut budget = MAX_HEAD_BYTES;
     let mut started = false;
     let line = match read_line(r, &mut budget, &mut started)? {
@@ -412,6 +422,7 @@ pub fn read_client_response<R: BufRead>(r: &mut R) -> Result<(u16, String), Read
             .map_err(|_| ReadError::Malformed(format!("bad status line '{line}'")))?,
         _ => return Err(ReadError::Malformed(format!("bad status line '{line}'"))),
     };
+    let mut headers = Vec::new();
     let mut body_len = 0usize;
     loop {
         let line = match read_line(r, &mut budget, &mut started)? {
@@ -422,12 +433,13 @@ pub fn read_client_response<R: BufRead>(r: &mut R) -> Result<(u16, String), Read
             break;
         }
         if let Some((name, value)) = line.split_once(':') {
-            if name.trim().eq_ignore_ascii_case("content-length") {
+            let (name, value) = (name.trim().to_ascii_lowercase(), value.trim().to_string());
+            if name == "content-length" {
                 body_len = value
-                    .trim()
                     .parse()
                     .map_err(|_| ReadError::Malformed(format!("bad Content-Length '{value}'")))?;
             }
+            headers.push((name, value));
         }
     }
     if body_len > CLIENT_MAX_BODY {
@@ -442,7 +454,7 @@ pub fn read_client_response<R: BufRead>(r: &mut R) -> Result<(u16, String), Read
         }
     })?;
     String::from_utf8(body)
-        .map(|b| (status, b))
+        .map(|b| (status, headers, b))
         .map_err(|_| ReadError::Malformed("response body is not UTF-8".into()))
 }
 
@@ -515,6 +527,19 @@ impl HttpClient {
         target: &str,
         body: Option<&str>,
     ) -> Result<(u16, String)> {
+        let (status, _, body) = self.request_with_headers(method, target, body)?;
+        Ok((status, body))
+    }
+
+    /// [`request`](Self::request), but also returning the response
+    /// headers (`(lowercased-name, value)` pairs) — how the load
+    /// generator and the tests observe `Retry-After` on shed responses.
+    pub fn request_with_headers(
+        &mut self,
+        method: &str,
+        target: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, Vec<(String, String)>, String)> {
         match self.roundtrip(method, target, body) {
             Ok(r) => Ok(r),
             Err((true, _)) => {
@@ -533,11 +558,11 @@ impl HttpClient {
         method: &str,
         target: &str,
         body: Option<&str>,
-    ) -> Result<(u16, String), (bool, anyhow::Error)> {
+    ) -> Result<(u16, Vec<(String, String)>, String), (bool, anyhow::Error)> {
         if let Err(e) = send_request(&mut self.stream, method, target, body) {
             return Err((true, anyhow::anyhow!("sending {method} {target}: {e}")));
         }
-        match read_client_response(&mut self.reader) {
+        match read_client_response_with_headers(&mut self.reader) {
             Ok(r) => Ok(r),
             // Clean close before any response byte: the keep-alive reap —
             // a request the server read is always answered before close.
@@ -692,13 +717,22 @@ mod tests {
         assert!(text.contains("content-type: text/plain; version=0.0.4\r\n"), "{text}");
         assert!(!text.contains("x-request-id:"), "{text}");
 
+        // A drain-rate-derived Retry-After must survive the wire both as
+        // the raw header line and through the header-returning client.
         let mut shed = Response::error(Status::TooManyRequests, "shed");
-        shed.retry_after = Some(1);
+        shed.retry_after = Some(17);
         let mut wire = Vec::new();
         shed.write_to(&mut wire, false).unwrap();
         let text = String::from_utf8(wire.clone()).unwrap();
-        assert!(text.contains("retry-after: 1\r\n"), "{text}");
+        assert!(text.contains("retry-after: 17\r\n"), "{text}");
         assert!(text.contains("connection: close\r\n"), "{text}");
+        let (status, headers, body) =
+            read_client_response_with_headers(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(status, 429);
+        assert!(body.contains("Too Many Requests"), "{body}");
+        let retry = headers.iter().find(|(n, _)| n == "retry-after").map(|(_, v)| v.as_str());
+        assert_eq!(retry, Some("17"));
+        // The plain reader stays oblivious to headers, same payload.
         let (status, body) = read_client_response(&mut Cursor::new(&wire)).unwrap();
         assert_eq!(status, 429);
         assert!(body.contains("Too Many Requests"), "{body}");

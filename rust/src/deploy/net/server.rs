@@ -113,7 +113,7 @@ struct Front {
 /// Admission outcome as the HTTP layer sees it.
 enum SubmitOutcome {
     Accepted { id: u64 },
-    Shed { queue_cap: usize },
+    Shed { queue_cap: usize, retry_after: u64 },
     UnknownKey,
     BadInput(String),
     /// Draining, or a pool whose workers are gone — a server-side 503
@@ -150,7 +150,13 @@ impl Front {
                 self.outstanding.fetch_add(1, Ordering::Relaxed);
                 SubmitOutcome::Accepted { id }
             }
-            Ok(Submission::Shed { queue_cap }) => SubmitOutcome::Shed { queue_cap },
+            Ok(Submission::Shed { queue_cap }) => {
+                // Still under the router lock: read the shedding pool's
+                // observed drain rate so the 429 advertises how long the
+                // backlog actually needs, not a constant.
+                let retry_after = router.retry_after_hint(key).unwrap_or(1);
+                SubmitOutcome::Shed { queue_cap, retry_after }
+            }
             Err(e) => SubmitOutcome::Unavailable(format!("{e:#}")),
         }
     }
@@ -405,17 +411,18 @@ impl NetHandler {
                 }
                 None => Response::error(Status::GatewayTimeout, "completion did not arrive"),
             },
-            SubmitOutcome::Shed { queue_cap } => {
+            SubmitOutcome::Shed { queue_cap, retry_after } => {
                 let mut resp = Response::json(
                     Status::TooManyRequests,
                     &Json::obj(vec![
                         ("error", Json::str("shed")),
                         ("queue_cap", Json::num(queue_cap as f64)),
+                        ("retry_after", Json::num(retry_after as f64)),
                     ]),
                 );
-                // Sub-second batching deadlines drain the queues quickly;
-                // 1s is the smallest honest Retry-After hint.
-                resp.retry_after = Some(1);
+                // Derived from the shedding pool's observed drain rate
+                // (clamped to [1, 30]s); 1s before any drain is observed.
+                resp.retry_after = Some(retry_after);
                 resp
             }
             SubmitOutcome::UnknownKey => Response::error(

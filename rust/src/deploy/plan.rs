@@ -14,43 +14,97 @@
 //!   already the NCHW result plane.
 //!
 //! Each op records the [`Kernel`] the [`KernelSelector`] chose for its
-//! packed bit-widths — today always [`Kernel::F32Gemm`] (decode codes
-//! to f32, run the blocked GEMM); this enum + selector pair is the seam
-//! where per-width SWAR integer kernels plug in without another engine
-//! rewrite. The plan also precomputes the [`Scratch`] layout: two
-//! ping-pong activation buffers plus one im2col buffer (and, in
-//! streaming mode, one decode buffer), each sized to the plan-wide
-//! maximum, so a warm `infer_batch_into` call performs **zero** heap
-//! allocations and `infer_batch` a fixed handful.
+//! packed bit-widths: fully pruned layers skip their matmul outright
+//! ([`Kernel::Pruned`]), layers whose uniform 2/4/8-bit weights meet an
+//! on-grid activation stream run integer-native SWAR
+//! ([`Kernel::Swar2`]/[`Swar4`](Kernel::Swar4)/[`Swar8`](Kernel::Swar8),
+//! parameters in [`PlannedOp::swar`]), and everything else decodes to
+//! f32 for the blocked GEMM ([`Kernel::F32Gemm`]). The plan also
+//! precomputes the [`Scratch`] layout: two ping-pong activation buffers
+//! plus one im2col buffer (and, in streaming mode, one decode buffer),
+//! plus the SWAR code/lane/sum buffers when any op needs them, each
+//! sized to the plan-wide maximum, so a warm `infer_batch_into` call
+//! performs **zero** heap allocations and `infer_batch` a fixed
+//! handful.
 
 use anyhow::{bail, Result};
 
 use crate::model::LayerKind;
+use crate::quant::IDENTITY_BITS;
 
 use super::format::{PackedModel, WidthStream};
+use super::kernels::swar::{self, ActGrid, SwarParams};
 
 /// Kernel implementations a lowered matmul can dispatch to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Kernel {
     /// Decode packed codes to f32, run the blocked f32 GEMM
-    /// ([`super::kernels::gemm`]). The only kernel today, and forever
-    /// the bit-identity reference the integer kernels are held to.
+    /// ([`super::kernels::gemm`]). The fallback for 16/32-bit and
+    /// mixed-width layers, and — through the fake-quant reference —
+    /// part of the bit-identity spec the integer kernels are held to.
     F32Gemm,
+    /// Fully pruned layer (`max_width == 0`): every weight decodes to
+    /// 0.0, so the matmul is skipped entirely — zero-fill the output
+    /// and run only the bias epilogue. Bit-identical to the f32 GEMM
+    /// over all-zero weights (every partial sum is `+0.0`).
+    Pruned,
+    /// Integer SWAR dot products on 2-bit code words
+    /// ([`super::kernels::swar`]). The three SWAR variants share one
+    /// parameterized kernel; they differ in the packed-lane geometry
+    /// and flush cadence [`PlannedOp::swar`] records.
+    Swar2,
+    /// SWAR on 4-bit code words.
+    Swar4,
+    /// SWAR on 8-bit code words.
+    Swar8,
 }
 
-/// Chooses the kernel for one lowered matmul, keyed on the widest
-/// packed weight code in the layer — the dispatch seam for
-/// bitwidth-specialized kernels. A 2/4/8-bit SWAR path will branch here
-/// on `max_width` (and fall back to [`Kernel::F32Gemm`] for 16/32-bit
-/// or mixed streams it cannot accelerate).
+/// Chooses the kernel for one lowered matmul — the dispatch seam for
+/// bitwidth-specialized kernels. Keyed on the layer's packed widths and
+/// the incoming activation grid: a uniform 2/4/8-bit layer fed by
+/// on-grid activations (and inside the `i32` accumulator bound) runs
+/// SWAR; a fully pruned layer skips its matmul; everything else —
+/// 16/32-bit, mixed widths beyond one nonzero value, gridless
+/// activations — falls back to [`Kernel::F32Gemm`].
 #[derive(Debug, Clone, Copy, Default)]
-pub struct KernelSelector;
+pub struct KernelSelector {
+    /// Pin every non-pruned op to [`Kernel::F32Gemm`] — the bench
+    /// harness's baseline switch for measuring SWAR speedups on
+    /// otherwise-identical plans.
+    pub force_f32: bool,
+}
 
 impl KernelSelector {
     /// Select the kernel for a layer whose widest weight code is
-    /// `max_width` bits (0 = fully pruned layer).
-    pub fn select(&self, _max_width: u32) -> Kernel {
-        Kernel::F32Gemm
+    /// `max_width` bits (0 = fully pruned layer), with the context the
+    /// SWAR decision needs: the uniform nonzero weight width (if any),
+    /// the weight range bound, the incoming activation grid, and the
+    /// reduction depth `k` of the lowered matmul.
+    pub fn select(
+        &self,
+        max_width: u32,
+        w_uniform: Option<u32>,
+        beta_w: f32,
+        incoming: Option<ActGrid>,
+        k: usize,
+    ) -> (Kernel, Option<SwarParams>) {
+        if max_width == 0 {
+            return (Kernel::Pruned, None);
+        }
+        if self.force_f32 {
+            return (Kernel::F32Gemm, None);
+        }
+        match swar::decide(w_uniform, beta_w, incoming, k) {
+            Some(prm) => {
+                let kernel = match prm.w_bits {
+                    2 => Kernel::Swar2,
+                    4 => Kernel::Swar4,
+                    _ => Kernel::Swar8,
+                };
+                (kernel, Some(prm))
+            }
+            None => (Kernel::F32Gemm, None),
+        }
     }
 }
 
@@ -97,6 +151,11 @@ pub struct PlannedOp {
     pub kernel: Kernel,
     /// Widest packed weight code in the layer (the selector's key).
     pub max_width: u32,
+    /// Integer-kernel parameters when `kernel` is a SWAR variant:
+    /// offsets, lane geometry, flush cadence, and the fixed-point
+    /// rescale — resolved once here so the engine and the fake-quant
+    /// reference run from the same numbers.
+    pub swar: Option<SwarParams>,
     /// Per-sample elements produced by the matmul (pre-pool).
     pub out_elems: usize,
     /// Max-pool step after activation quantization, if any.
@@ -126,6 +185,34 @@ pub struct ExecPlan {
     pub col_elems: usize,
     /// Largest decoded weight tensor (streaming-mode decode buffer).
     pub max_w_len: usize,
+    /// Scratch-sizing maxima for the SWAR buffers (all zero when no op
+    /// selected an integer kernel).
+    pub swar_sizing: SwarSizing,
+}
+
+/// Plan-wide maxima for the SWAR scratch buffers. Dense ops encode the
+/// batch's activation codes per call (and, streaming, repack the weight
+/// lane panel per call); conv ops pack the im2col columns per call
+/// (and, streaming, re-encode the weight scalar codes per call).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SwarSizing {
+    /// Per-sample scalar codes a dense SWAR op encodes (max `d_in`).
+    pub dense_codes: usize,
+    /// Flat weight code block a streaming conv SWAR op re-encodes
+    /// (max `o · ci·kh·kw`).
+    pub conv_codes: usize,
+    /// Lane words a conv SWAR op packs per call.
+    pub conv_lane_words: usize,
+    /// Lane words a streaming dense SWAR op repacks per call.
+    pub dense_lane_words: usize,
+    /// Whether any dense op runs SWAR (its scalar sums are batch-sized).
+    pub has_dense: bool,
+    /// Scalar-sum slots a streaming conv SWAR op needs (max `o`).
+    pub conv_rows: usize,
+    /// Lane-sum slots a conv SWAR op needs per call (max `ho·wo`).
+    pub conv_lane_cols: usize,
+    /// Lane-sum slots a streaming dense SWAR op needs (max `d_out`).
+    pub dense_lane_cols: usize,
 }
 
 impl ExecPlan {
@@ -133,15 +220,31 @@ impl ExecPlan {
     /// the shape `bail!`s of the old per-call loop live here now; an
     /// engine holding a built plan runs its hot path check-free.
     pub fn build(model: &PackedModel) -> Result<Self> {
+        Self::build_with(model, KernelSelector::default())
+    }
+
+    /// [`build`](Self::build) with an explicit [`KernelSelector`] —
+    /// how the bench harness pins an `F32Gemm` baseline plan.
+    pub fn build_with(model: &PackedModel, selector: KernelSelector) -> Result<Self> {
         if model.layers.is_empty() {
             bail!("packed model has no layers");
         }
-        let selector = KernelSelector;
         let input_len = model.input_len();
         let mut dims = model.input_shape.clone();
         let mut act_elems = input_len;
         let mut col_elems = 0usize;
         let mut max_w_len = 0usize;
+        let mut sizing = SwarSizing::default();
+        // The activation grid feeding the next matmul: the input grid
+        // at op 0 (`quantize(v, input_bits, 1.0, true)`), then each
+        // layer's uniform activation-quantization grid — `None` as soon
+        // as a layer emits raw/mixed-width activations, which pins every
+        // downstream op to f32.
+        let mut grid = if model.input_bits < IDENTITY_BITS {
+            Some(ActGrid { bits: model.input_bits, signed: true, beta: 1.0 })
+        } else {
+            None
+        };
         let mut ops = Vec::with_capacity(model.layers.len());
         for (li, layer) in model.layers.iter().enumerate() {
             let flat: usize = dims.iter().product();
@@ -216,11 +319,50 @@ impl ExecPlan {
             act_elems = act_elems.max(out_elems);
             max_w_len = max_w_len.max(layer.w_len());
             let max_width = max_stream_width(&layer.w_bits, layer.w_len());
+            let w_uniform = stream_uniform_width(&layer.w_bits);
+            let k = match lowering {
+                Lowering::Dense { d_in, .. } => d_in,
+                Lowering::Conv { ci, kh, kw, .. } => ci * kh * kw,
+            };
+            let (kernel, swar) = selector.select(max_width, w_uniform, layer.beta_w, grid, k);
+            if let Some(prm) = &swar {
+                match lowering {
+                    Lowering::Dense { d_in, d_out } => {
+                        sizing.has_dense = true;
+                        sizing.dense_codes = sizing.dense_codes.max(d_in);
+                        sizing.dense_lane_words = sizing
+                            .dense_lane_words
+                            .max(swar::panel_words(d_in, d_out, prm.lane_bits));
+                        sizing.dense_lane_cols = sizing.dense_lane_cols.max(d_out);
+                    }
+                    Lowering::Conv { ci, o, kh, kw, ho, wo, .. } => {
+                        let (kdim, p) = (ci * kh * kw, ho * wo);
+                        sizing.conv_codes = sizing.conv_codes.max(o * kdim);
+                        sizing.conv_lane_words = sizing
+                            .conv_lane_words
+                            .max(swar::panel_words(kdim, p, prm.lane_bits));
+                        sizing.conv_rows = sizing.conv_rows.max(o);
+                        sizing.conv_lane_cols = sizing.conv_lane_cols.max(p);
+                    }
+                }
+            }
+            // The grid handed to the next op: this layer's activation
+            // quantization output (unsigned — it follows ReLU), when
+            // every unit shares one sub-identity width. The final
+            // layer's logits have no act stage; its `None` is unread.
+            grid = layer.act.as_ref().and_then(|act| {
+                let wa = stream_uniform_width(&act.a_bits)?;
+                if wa >= IDENTITY_BITS {
+                    return None;
+                }
+                Some(ActGrid { bits: wa, signed: false, beta: act.beta_a })
+            });
             ops.push(PlannedOp {
                 layer: li,
                 lowering,
-                kernel: selector.select(max_width),
+                kernel,
                 max_width,
+                swar,
                 out_elems,
                 pool,
                 final_elems,
@@ -240,6 +382,7 @@ impl ExecPlan {
             act_elems,
             col_elems,
             max_w_len,
+            swar_sizing: sizing,
         })
     }
 }
@@ -252,10 +395,24 @@ fn max_stream_width(ws: &WidthStream, n: usize) -> u32 {
     }
 }
 
+/// The single nonzero width of a stream, if it has one — pruned
+/// elements ride along; genuinely mixed or all-pruned streams are
+/// `None` ([`swar::uniform_nonzero_width`] semantics).
+fn stream_uniform_width(ws: &WidthStream) -> Option<u32> {
+    match ws {
+        WidthStream::Uniform(0) => None,
+        WidthStream::Uniform(w) => Some(*w),
+        WidthStream::PerElement(v) => swar::uniform_nonzero_width(v.iter().copied()),
+    }
+}
+
 /// Reusable per-call working memory, laid out by the plan: two
 /// ping-pong activation buffers (`a`/`b`), one im2col buffer (`col`),
-/// and the streaming-mode weight decode buffer (`wdec`). Buffers grow
-/// to the plan-wide maxima on first use and never shrink, so repeated
+/// the streaming-mode weight decode buffer (`wdec`), and the four SWAR
+/// buffers — per-call scalar codes (`codes16`), per-call lane words
+/// (`lanes`), and the scalar/lane-side correction sums
+/// (`sums_s`/`sums_l`). Buffers grow to the plan-wide maxima on first
+/// use and never shrink, so repeated
 /// [`Engine::infer_batch_into`](super::Engine::infer_batch_into) calls
 /// at a seen batch size allocate nothing — the property the
 /// scratch-reuse tests pin via [`base_ptrs`](Self::base_ptrs) /
@@ -266,6 +423,10 @@ pub struct Scratch {
     pub(super) b: Vec<f32>,
     pub(super) col: Vec<f32>,
     pub(super) wdec: Vec<f32>,
+    pub(super) codes16: Vec<u16>,
+    pub(super) lanes: Vec<u64>,
+    pub(super) sums_s: Vec<i64>,
+    pub(super) sums_l: Vec<i64>,
 }
 
 impl Scratch {
@@ -282,29 +443,51 @@ impl Scratch {
         if streaming {
             grow(&mut self.wdec, plan.max_w_len);
         }
+        let sz = &plan.swar_sizing;
+        let stream_only = |v: usize| if streaming { v } else { 0 };
+        grow(&mut self.codes16, (n * sz.dense_codes).max(stream_only(sz.conv_codes)));
+        grow(&mut self.lanes, sz.conv_lane_words.max(stream_only(sz.dense_lane_words)));
+        let dense_rows = if sz.has_dense { n } else { 0 };
+        grow(&mut self.sums_s, dense_rows.max(stream_only(sz.conv_rows)));
+        grow(&mut self.sums_l, sz.conv_lane_cols.max(stream_only(sz.dense_lane_cols)));
     }
 
     /// Current capacities of (activation-a, activation-b, im2col,
-    /// decode) — with [`base_ptrs`](Self::base_ptrs), the observable
-    /// the O(1)-allocation tests assert stays fixed across calls.
-    pub fn capacities(&self) -> [usize; 4] {
-        [self.a.capacity(), self.b.capacity(), self.col.capacity(), self.wdec.capacity()]
+    /// decode, swar-codes, swar-lanes, swar-scalar-sums,
+    /// swar-lane-sums) — with [`base_ptrs`](Self::base_ptrs), the
+    /// observable the O(1)-allocation tests assert stays fixed across
+    /// calls.
+    pub fn capacities(&self) -> [usize; 8] {
+        [
+            self.a.capacity(),
+            self.b.capacity(),
+            self.col.capacity(),
+            self.wdec.capacity(),
+            self.codes16.capacity(),
+            self.lanes.capacity(),
+            self.sums_s.capacity(),
+            self.sums_l.capacity(),
+        ]
     }
 
-    /// Base addresses of the four buffers; unchanged addresses across
+    /// Base addresses of the eight buffers; unchanged addresses across
     /// calls prove no buffer was reallocated.
-    pub fn base_ptrs(&self) -> [usize; 4] {
+    pub fn base_ptrs(&self) -> [usize; 8] {
         [
             self.a.as_ptr() as usize,
             self.b.as_ptr() as usize,
             self.col.as_ptr() as usize,
             self.wdec.as_ptr() as usize,
+            self.codes16.as_ptr() as usize,
+            self.lanes.as_ptr() as usize,
+            self.sums_s.as_ptr() as usize,
+            self.sums_l.as_ptr() as usize,
         ]
     }
 }
 
-fn grow(v: &mut Vec<f32>, len: usize) {
+fn grow<T: Default + Clone>(v: &mut Vec<T>, len: usize) {
     if v.len() < len {
-        v.resize(len, 0.0);
+        v.resize(len, T::default());
     }
 }

@@ -47,7 +47,7 @@
 //! cannot under-report submissions whichever path fed the pool.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -154,6 +154,19 @@ struct Job {
     x: Vec<f32>,
 }
 
+/// Observed drain throughput of the whole pool: a monotone completion
+/// counter against the pool's start instant. Lives behind an `Arc`
+/// shared with every worker (each increments it as it forwards
+/// completions), so the front can turn "how fast is this pool actually
+/// draining" into an honest `Retry-After` hint for shed requests —
+/// live [`BatcherStats`] are worker-private until shutdown, so this
+/// counter is the only drain-rate signal observable while serving.
+struct DrainMeter {
+    started: Instant,
+    /// Completions forwarded pool-wide.
+    completed: AtomicU64,
+}
+
 /// N worker threads sharing one engine, fed round-robin through per-shard
 /// batching queues.
 pub struct WorkerPool {
@@ -166,6 +179,8 @@ pub struct WorkerPool {
     /// it forwards each completion). The admission-control signal.
     depth: Vec<Arc<AtomicUsize>>,
     queue_cap: usize,
+    /// Pool-wide drain-rate observation feeding [`Self::retry_after_hint`].
+    meter: Arc<DrainMeter>,
 }
 
 impl WorkerPool {
@@ -181,6 +196,7 @@ impl WorkerPool {
         }
         engine.preload()?;
         let (done_tx, completions) = mpsc::channel();
+        let meter = Arc::new(DrainMeter { started: Instant::now(), completed: AtomicU64::new(0) });
         let mut shards = Vec::with_capacity(cfg.workers);
         let mut workers = Vec::with_capacity(cfg.workers);
         let mut depth = Vec::with_capacity(cfg.workers);
@@ -191,9 +207,12 @@ impl WorkerPool {
             let batch = cfg.batch;
             let shard_depth = Arc::new(AtomicUsize::new(0));
             let worker_depth = Arc::clone(&shard_depth);
+            let worker_meter = Arc::clone(&meter);
             let handle = std::thread::Builder::new()
                 .name(format!("cgmq-serve-{shard}"))
-                .spawn(move || worker_loop(shard, engine, batch, job_rx, done, worker_depth))
+                .spawn(move || {
+                    worker_loop(shard, engine, batch, job_rx, done, worker_depth, worker_meter)
+                })
                 .with_context(|| format!("spawning serve worker {shard}"))?;
             shards.push(job_tx);
             workers.push(handle);
@@ -208,6 +227,7 @@ impl WorkerPool {
             stats: PoolStats::default(),
             depth,
             queue_cap,
+            meter,
         })
     }
 
@@ -312,6 +332,26 @@ impl WorkerPool {
         self.completions.try_iter().collect()
     }
 
+    /// `Retry-After` hint (whole seconds) for a shed request: the time
+    /// the current in-flight backlog needs to clear at the pool's
+    /// *observed* drain rate (completions per second since the pool
+    /// started), rounded up and clamped to `[1, 30]`. Before the first
+    /// completion lands there is no observed rate, and the sub-second
+    /// batching deadlines make 1s the smallest honest fallback.
+    pub fn retry_after_hint(&self) -> u64 {
+        // ordering: relaxed — monotone, hint-only reads; staleness only
+        // skews the advisory delay, never correctness.
+        let completed = self.meter.completed.load(Ordering::Relaxed);
+        let in_flight: u64 =
+            self.depth.iter().map(|d| d.load(Ordering::Relaxed) as u64).sum();
+        let elapsed = self.meter.started.elapsed().as_secs_f64();
+        if completed == 0 || elapsed <= 0.0 {
+            return 1;
+        }
+        let rate = completed as f64 / elapsed;
+        ((in_flight as f64 / rate).ceil() as u64).clamp(1, 30)
+    }
+
     /// Close the front, let every worker drain its shard, join them, and
     /// return the still-uncollected completions plus per-shard stats
     /// (indexed by shard). Every submitted request is accounted for:
@@ -343,6 +383,7 @@ fn worker_loop(
     jobs: Receiver<Job>,
     done: Sender<PoolCompletion>,
     depth: Arc<AtomicUsize>,
+    meter: Arc<DrainMeter>,
 ) -> Result<BatcherStats> {
     let mut batcher = RequestBatcher::new(engine, cfg)?;
     // The batcher's ids are shard-local; submission order is FIFO on both
@@ -370,6 +411,9 @@ fn worker_loop(
             // ordering: relaxed — the admission side tolerates staleness
             // (sheds early at worst); the completion rides the channel.
             depth.fetch_sub(1, Ordering::Relaxed);
+            // ordering: relaxed — drain-rate observation only; feeds the
+            // advisory Retry-After hint, nothing synchronizes on it.
+            meter.completed.fetch_add(1, Ordering::Relaxed);
         }
         Ok(())
     };

@@ -11,20 +11,35 @@
 //!
 //! The packed [`Engine`](super::Engine) must agree with this function
 //! *bit-for-bit* on every layer at every bit-width — that is the property
-//! `tests/deploy_roundtrip.rs` pins. The two paths share the kernel layer
-//! ([`super::kernels`]: the same blocked GEMM behind `dense` / `conv2d`,
-//! the same `maxpool`) so the comparison isolates exactly what deployment
-//! changes: fake-quantized f32 weights vs bit-packed integer codes decoded
-//! through per-gate scales — never summation order.
+//! `tests/deploy_roundtrip.rs` pins. The reference mirrors the engine's
+//! kernel selection exactly (the same [`swar::decide`] call the
+//! [`KernelSelector`](super::plan::KernelSelector) makes, from the same
+//! width/grid/depth inputs — gate-derived here, packed-stream-derived
+//! there, identical by construction of `WidthStream::from_gates`):
+//!
+//! * f32-selected layers share the kernel layer ([`super::kernels`]: the
+//!   same blocked GEMM behind `dense` / `conv2d`, the same `maxpool`), so
+//!   the comparison isolates quantization fidelity, never summation
+//!   order;
+//! * SWAR-selected layers run an **independent naive `i64` oracle**:
+//!   weight codes taken from the raw floats via `integer_code` (never
+//!   touching the packed bit stream the engine repacks from), activation
+//!   codes recovered from the reference's own on-grid f32s, a plain
+//!   triple-loop integer dot, and the identical `(dot as f32) *
+//!   combined_scale` epilogue. Integer sums are exact and
+//!   order-independent, so the engine's offset-encoded SWAR lanes must
+//!   equal this oracle bit-for-bit — that equality is what certifies the
+//!   whole packed-lane machinery.
 
 use anyhow::{bail, Result};
 
 use crate::gates::GateSet;
 use crate::model::{ArchSpec, LayerKind};
-use crate::quant::{gated_quantize, quantize};
+use crate::quant::{gated_quantize, integer_code, quantize, transform_t, IDENTITY_BITS};
 use crate::tensor::Tensor;
 
-use super::kernels::{conv2d, dense, maxpool, relu_inplace};
+use super::kernels::swar::{self, ActGrid};
+use super::kernels::{add_bias_cols, add_bias_rows, conv2d, dense, maxpool, relu_inplace};
 
 /// Fake-quant forward over `n` samples; returns flattened
 /// `n x num_classes` logits. This is the eval-graph semantics computed on
@@ -48,34 +63,114 @@ pub fn fake_quant_logits(
     let mut dims: Vec<usize> = arch.input_shape.clone();
     let n_layers = arch.layers.len();
     let mut ai = 0;
+    // The activation grid feeding the next matmul — the same chain the
+    // plan threads through `KernelSelector::select`.
+    let mut grid = if arch.input_bits < IDENTITY_BITS {
+        Some(ActGrid { bits: arch.input_bits, signed: true, beta: 1.0 })
+    } else {
+        None
+    };
     for (li, spec) in arch.layers.iter().enumerate() {
         let beta_w = betas_w.data()[li];
         let gw = gates.materialize_w(arch, li);
         let w = &params[2 * li];
-        let wq: Vec<f32> = w
-            .data()
-            .iter()
-            .zip(gw.data())
-            .map(|(&x, &g)| gated_quantize(x, g, beta_w, true))
-            .collect();
+        let widths: Vec<u32> = gw.data().iter().map(|&g| transform_t(g)).collect();
+        let w_uniform = swar::uniform_nonzero_width(widths.iter().copied());
+        let k = match spec.kind {
+            LayerKind::Dense => spec.w_shape[0],
+            LayerKind::Conv => dims[0] * spec.w_shape[2] * spec.w_shape[3],
+        };
         let bias = params[2 * li + 1].data();
-        match spec.kind {
-            LayerKind::Dense => {
-                let (d_in, d_out) = (spec.w_shape[0], spec.w_shape[1]);
-                h = dense(&h, &wq, bias, n, d_in, d_out);
-                dims = vec![d_out];
+        if let Some(prm) = swar::decide(w_uniform, beta_w, grid, k) {
+            // Integer oracle: raw-float weight codes, recovered
+            // activation codes, naive i64 dots, shared epilogue.
+            let qw: Vec<i64> = w
+                .data()
+                .iter()
+                .zip(&widths)
+                .map(|(&x, &wi)| if *wi == 0 { 0 } else { integer_code(x, *wi, beta_w, true).0 })
+                .collect();
+            let qa: Vec<i64> = h.iter().map(|&v| swar::code_of(v, prm.inv_a_scale)).collect();
+            match spec.kind {
+                LayerKind::Dense => {
+                    let (d_in, d_out) = (spec.w_shape[0], spec.w_shape[1]);
+                    let mut out = vec![0.0f32; n * d_out];
+                    for s in 0..n {
+                        for j in 0..d_out {
+                            let mut dot = 0i64;
+                            for i in 0..d_in {
+                                dot += qa[s * d_in + i] * qw[i * d_out + j];
+                            }
+                            out[s * d_out + j] = dot as f32 * prm.combined_scale;
+                        }
+                    }
+                    add_bias_cols(&mut out, bias, n, d_out);
+                    h = out;
+                    dims = vec![d_out];
+                }
+                LayerKind::Conv => {
+                    let (ci, hi, wi) = (dims[0], dims[1], dims[2]);
+                    let (o, kh, kw) = (spec.w_shape[0], spec.w_shape[2], spec.w_shape[3]);
+                    let (ho, wo) = (hi - kh + 1, wi - kw + 1);
+                    let p = ho * wo;
+                    let mut out = vec![0.0f32; n * o * p];
+                    for s in 0..n {
+                        let img = &qa[s * ci * hi * wi..(s + 1) * ci * hi * wi];
+                        let planes = &mut out[s * o * p..(s + 1) * o * p];
+                        for r in 0..o {
+                            for oy in 0..ho {
+                                for ox in 0..wo {
+                                    let mut dot = 0i64;
+                                    for ic in 0..ci {
+                                        for ky in 0..kh {
+                                            for kx in 0..kw {
+                                                let a = img
+                                                    [ic * hi * wi + (oy + ky) * wi + (ox + kx)];
+                                                let wv = qw[r * ci * kh * kw
+                                                    + ic * kh * kw
+                                                    + ky * kw
+                                                    + kx];
+                                                dot += a * wv;
+                                            }
+                                        }
+                                    }
+                                    planes[r * p + oy * wo + ox] =
+                                        dot as f32 * prm.combined_scale;
+                                }
+                            }
+                        }
+                        add_bias_rows(planes, bias, o, p);
+                    }
+                    h = out;
+                    dims = vec![o, ho, wo];
+                }
             }
-            LayerKind::Conv => {
-                let (ci, hi, wi) = (dims[0], dims[1], dims[2]);
-                let (o, kh, kw) = (spec.w_shape[0], spec.w_shape[2], spec.w_shape[3]);
-                h = conv2d(&h, &wq, bias, n, ci, hi, wi, o, kh, kw);
-                dims = vec![o, hi - kh + 1, wi - kw + 1];
+        } else {
+            let wq: Vec<f32> = w
+                .data()
+                .iter()
+                .zip(gw.data())
+                .map(|(&x, &g)| gated_quantize(x, g, beta_w, true))
+                .collect();
+            match spec.kind {
+                LayerKind::Dense => {
+                    let (d_in, d_out) = (spec.w_shape[0], spec.w_shape[1]);
+                    h = dense(&h, &wq, bias, n, d_in, d_out);
+                    dims = vec![d_out];
+                }
+                LayerKind::Conv => {
+                    let (ci, hi, wi) = (dims[0], dims[1], dims[2]);
+                    let (o, kh, kw) = (spec.w_shape[0], spec.w_shape[2], spec.w_shape[3]);
+                    h = conv2d(&h, &wq, bias, n, ci, hi, wi, o, kh, kw);
+                    dims = vec![o, hi - kh + 1, wi - kw + 1];
+                }
             }
         }
         if li == n_layers - 1 {
             return Ok(h);
         }
         relu_inplace(&mut h);
+        grid = None;
         if spec.quant_act {
             let beta_a = betas_a.data()[ai];
             let ga = gates.materialize_a(arch, ai);
@@ -86,6 +181,12 @@ pub fn fake_quant_logits(
                     *v = gated_quantize(*v, g, beta_a, false);
                 }
             }
+            let wa = swar::uniform_nonzero_width(ga.data().iter().map(|&g| transform_t(g)));
+            grid = wa.filter(|&w| w < IDENTITY_BITS).map(|w| ActGrid {
+                bits: w,
+                signed: false,
+                beta: beta_a,
+            });
             ai += 1;
         }
         if spec.pool > 1 {

@@ -278,6 +278,15 @@ impl Router {
         }
     }
 
+    /// The shed-policy `Retry-After` hint for `key`: seconds until the
+    /// model's current in-flight backlog clears at its pool's observed
+    /// drain rate ([`WorkerPool::retry_after_hint`]), clamped to
+    /// `[1, 30]`. Read at shed time so the 429 response advertises the
+    /// shedding pool's actual pace, not a constant.
+    pub fn retry_after_hint(&self, key: &str) -> Result<u64> {
+        Ok(self.entry(key)?.pool.retry_after_hint())
+    }
+
     /// Completions of `key` that have arrived so far (non-blocking):
     /// carryover from a hot swap first, then the live pool's.
     pub fn try_completions(&mut self, key: &str) -> Result<Vec<PoolCompletion>> {

@@ -13,7 +13,7 @@ use cgmq::config::Config;
 use cgmq::deploy::format::{sign_extend, BitReader, BitWriter, PackedAct, PackedLayer};
 use cgmq::deploy::reference::fake_quant_logits;
 use cgmq::deploy::{
-    BatchConfig, BatcherStats, DecodeMode, Engine, PackedModel, RequestBatcher, Scratch,
+    BatchConfig, BatcherStats, DecodeMode, Engine, Kernel, PackedModel, RequestBatcher, Scratch,
     WidthStream,
 };
 use cgmq::gates::{GateSet, Granularity};
@@ -329,6 +329,115 @@ fn version_mismatch_rejected() {
     std::fs::write(&path, &bytes).unwrap();
     let err = format!("{:#}", PackedModel::load(&path).unwrap_err());
     assert!(err.contains("version 99"), "{err}");
+}
+
+// ---------------------------------------------------------------------------
+// SWAR kernel selection and the pruned-layer fast path
+// ---------------------------------------------------------------------------
+
+/// Uniform-width state at `bits` everywhere, Layer granularity —
+/// deliberately re-derived here rather than shared with
+/// `bench_harness::uniform_deploy_state`, same as `mixed_state`.
+fn uniform_state(arch: &ArchSpec, bits: u32, seed: u64) -> (Vec<Tensor>, Tensor, Tensor, GateSet) {
+    let params = arch.init_params(seed);
+    let n_layers = arch.layers.len();
+    let mut betas_w = Tensor::zeros(&[n_layers]);
+    for li in 0..n_layers {
+        betas_w.data_mut()[li] = params[2 * li].abs_max().max(1e-3);
+    }
+    let betas_a = Tensor::full(&[arch.n_quant_act()], 4.0);
+    let mut gates = GateSet::new(arch, Granularity::Layer);
+    for t in gates.gates_w.iter_mut().chain(gates.gates_a.iter_mut()) {
+        t.data_mut()[0] = gate_for_bits(bits);
+    }
+    (params, betas_w, betas_a, gates)
+}
+
+/// Uniform 2/4/8-bit models must select the matching SWAR kernel on
+/// every layer (16-bit must not), and the cross-path golden — engine
+/// vs fake-quant reference, bit-for-bit — must hold on the SWAR paths
+/// in both decode modes, on both archs (dense and conv lowerings).
+#[test]
+fn uniform_low_width_models_select_swar_and_stay_golden() {
+    for arch in [mlp(), lenet5()] {
+        let n = if arch.name == "mlp" { 4 } else { 2 };
+        let mut rng = SplitMix64::new(41);
+        let in_len = arch.input_len();
+        let xs: Vec<f32> = (0..n * in_len).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+        for bits in [2u32, 4, 8, 16] {
+            let (params, betas_w, betas_a, gates) = uniform_state(&arch, bits, 13);
+            let reference =
+                fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &xs, n).unwrap();
+            let model =
+                PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+            let expect = match bits {
+                2 => Kernel::Swar2,
+                4 => Kernel::Swar4,
+                8 => Kernel::Swar8,
+                _ => Kernel::F32Gemm,
+            };
+            for mode in [DecodeMode::Streaming, DecodeMode::UnpackOnce] {
+                let engine = Engine::new(model.clone()).unwrap().with_mode(mode);
+                for op in &engine.plan().ops {
+                    assert_eq!(
+                        op.kernel, expect,
+                        "{} bits={bits} layer {} kernel",
+                        arch.name, op.layer
+                    );
+                    assert_eq!(op.swar.is_some(), expect != Kernel::F32Gemm);
+                }
+                let logits = engine.infer_batch(&xs, n).unwrap();
+                assert_eq!(logits.len(), reference.len());
+                for (i, (&a, &b)) in logits.iter().zip(&reference).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "{} bits={bits} {:?} logit {i}: {a} != {b}",
+                        arch.name,
+                        mode
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// A fully pruned layer must select [`Kernel::Pruned`] — no decode, no
+/// matmul, just zero-fill + bias — while downstream uniform layers keep
+/// their SWAR kernels, and the whole pipeline stays bit-identical to
+/// the reference (whose f32 path sums all-zero products into `+0.0`).
+#[test]
+fn pruned_layer_skips_its_matmul_and_stays_golden() {
+    let arch = mlp();
+    let (params, betas_w, betas_a, mut gates) = uniform_state(&arch, 8, 29);
+    gates.gates_w[0].data_mut()[0] = gate_for_bits(0); // prune fc1 entirely
+    let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+    let n = 3;
+    let mut rng = SplitMix64::new(43);
+    let in_len = arch.input_len();
+    let xs: Vec<f32> = (0..n * in_len).map(|_| rng.uniform(-1.0, 1.0) as f32).collect();
+    let want = fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &xs, n).unwrap();
+    for mode in [DecodeMode::Streaming, DecodeMode::UnpackOnce] {
+        let engine = Engine::new(model.clone()).unwrap().with_mode(mode);
+        assert_eq!(engine.plan().ops[0].kernel, Kernel::Pruned, "fc1 must skip its matmul");
+        assert_eq!(engine.plan().ops[1].kernel, Kernel::Swar8, "fc2 keeps SWAR after a prune");
+        assert_eq!(engine.plan().ops[2].kernel, Kernel::Swar8, "fc3 keeps SWAR after a prune");
+        let got = engine.infer_batch(&xs, n).unwrap();
+        for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} pruned-mlp logit {i}: {a} != {b}");
+        }
+        // The pruned op needs no weight material: preload must still
+        // account every layer (the cache invariant; no-op in Streaming),
+        // and inference must agree after it.
+        engine.preload().unwrap();
+        if mode == DecodeMode::UnpackOnce {
+            assert_eq!(engine.decoded_layers(), arch.layers.len());
+        }
+        let got = engine.infer_batch(&xs, n).unwrap();
+        for (i, (&a, &b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} preloaded pruned logit {i}");
+        }
+    }
 }
 
 #[test]

@@ -218,3 +218,416 @@ fn im2col_fills_only_the_declared_prefix() {
     assert!(col[..16].iter().all(|v| !v.is_nan()));
     assert!(col[16..].iter().all(|v| v.is_nan()));
 }
+
+// ------------------------------------------------------------- swar
+
+use cgmq::deploy::kernels::{
+    decide, encode_scalar_rows, pack_conv_weights, pack_dense_weights, pack_lane_cols, swar_gemm,
+    ActGrid,
+};
+use cgmq::deploy::plan::{Kernel, KernelSelector};
+use cgmq::deploy::reference::fake_quant_logits;
+use cgmq::deploy::PackedModel;
+use cgmq::gates::{GateSet, Granularity};
+use cgmq::model::{ArchSpec, LayerKind, LayerSpec};
+use cgmq::quant::{gate_for_bits, quantize};
+use cgmq::tensor::Tensor;
+
+/// Uniform random integer in `[lo, hi]` from the test rng.
+fn code_in(rng: &mut Rng, lo: i64, hi: i64) -> i64 {
+    lo + (rng.next() % (hi - lo + 1) as u64) as i64
+}
+
+/// One-layer arch around an arbitrary lowered matmul shape — `verify()`
+/// would reject it (unregistered), but `from_state` and the fake-quant
+/// reference take the spec directly, which is exactly what kernel-level
+/// property tests need to reach awkward reduction depths.
+fn one_layer_arch(spec: LayerSpec, input_shape: Vec<usize>, input_bits: u32) -> ArchSpec {
+    ArchSpec {
+        name: "swar-prop",
+        input_shape,
+        layers: vec![spec],
+        train_batch: 8,
+        eval_batch: 8,
+        input_bits,
+    }
+}
+
+/// Uniform-width state: every gate at `gate_for_bits(w_bits)`, weight
+/// ranges from the data, seeded non-zero biases so the epilogue is live.
+fn uniform_state(
+    arch: &ArchSpec,
+    granularity: Granularity,
+    w_bits: u32,
+    seed: u64,
+) -> (Vec<Tensor>, Tensor, Tensor, GateSet) {
+    let mut params = arch.init_params(seed);
+    let mut rng = Rng(seed | 1);
+    let n_layers = arch.layers.len();
+    let mut betas_w = Tensor::zeros(&[n_layers]);
+    for li in 0..n_layers {
+        betas_w.data_mut()[li] = params[2 * li].abs_max().max(1e-3);
+        for b in params[2 * li + 1].data_mut() {
+            *b = rng.f32();
+        }
+    }
+    let betas_a = Tensor::full(&[arch.n_quant_act()], 4.0);
+    let mut gates = GateSet::new(arch, granularity);
+    for t in gates.gates_w.iter_mut().chain(gates.gates_a.iter_mut()) {
+        for g in t.data_mut().iter_mut() {
+            *g = gate_for_bits(w_bits);
+        }
+    }
+    (params, betas_w, betas_a, gates)
+}
+
+/// The dense SWAR lowering — packed stream through `pack_dense_weights`
+/// + `encode_scalar_rows` + `swar_gemm` + bias, exactly as the engine
+/// dispatches it — must be bit-equal to `reference.rs` logits for every
+/// width at reduction depths straddling the u64-lane flush cadence and
+/// the quad-stripe remainder.
+#[test]
+fn swar_dense_path_is_bitwise_equal_to_the_reference_logits() {
+    let mut rng = Rng(0xC0DE_5EED);
+    for &w_bits in &[2u32, 4, 8] {
+        for &d_in in &[1usize, 63, 64, 65, 129] {
+            // d_out = 13: 16-bit lanes give nb=4 (pure quad-stripe with a
+            // j < n tail guard); 32-bit lanes give nb=7 (quad + 3 single).
+            let d_out = 13;
+            let arch = one_layer_arch(
+                LayerSpec {
+                    name: "out",
+                    kind: LayerKind::Dense,
+                    w_shape: vec![d_in, d_out],
+                    b_shape: vec![d_out],
+                    act_shape: vec![d_out],
+                    pool: 0,
+                    quant_act: false,
+                },
+                vec![d_in],
+                8,
+            );
+            let (params, betas_w, betas_a, gates) =
+                uniform_state(&arch, Granularity::Layer, w_bits, 0x11 + d_in as u64);
+            let model =
+                PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+            let n = 5;
+            let xs: Vec<f32> = (0..n * d_in).map(|_| rng.f32() * 2.2).collect();
+            let want =
+                fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &xs, n).unwrap();
+
+            let grid = ActGrid { bits: 8, signed: true, beta: 1.0 };
+            let beta_w = betas_w.data()[0];
+            let (kernel, prm) =
+                KernelSelector::default().select(w_bits, Some(w_bits), beta_w, Some(grid), d_in);
+            let expect = match w_bits {
+                2 => Kernel::Swar2,
+                4 => Kernel::Swar4,
+                _ => Kernel::Swar8,
+            };
+            assert_eq!(kernel, expect, "selector must pick the SWAR kernel for w={w_bits}");
+            let prm = prm.unwrap();
+
+            let h: Vec<f32> = xs.iter().map(|&v| quantize(v, 8, 1.0, true)).collect();
+            let (mut words, mut wsums) = (Vec::new(), Vec::new());
+            pack_dense_weights(&model.layers[0], d_in, d_out, &prm, &mut words, &mut wsums)
+                .unwrap();
+            let (mut codes, mut asums) = (Vec::new(), Vec::new());
+            encode_scalar_rows(&h, n, d_in, &prm, &mut codes, &mut asums);
+            let mut out = vec![f32::NAN; n * d_out];
+            swar_gemm(
+                &codes,
+                &asums,
+                &words,
+                &wsums,
+                &mut out,
+                n,
+                d_in,
+                d_out,
+                &prm,
+                prm.a_off,
+                prm.w_off,
+                prm.combined_scale,
+            );
+            add_bias_cols(&mut out, &model.layers[0].bias, n, d_out);
+            assert_bits_eq(&out, &want, &format!("swar dense w={w_bits} k={d_in}"));
+        }
+    }
+}
+
+/// The conv SWAR lowering — `pack_conv_weights` + per-sample im2col +
+/// `pack_lane_cols` + `swar_gemm` + row bias — against the reference's
+/// seven-loop integer oracle, at kdim values hitting every u64-lane
+/// remainder class.
+#[test]
+fn swar_conv_path_is_bitwise_equal_to_the_reference_logits() {
+    let mut rng = Rng(0xCAFE_F00D);
+    // (ci, kh, kw) with kdim = 63, 64, 65.
+    for &(ci, kh, kw) in &[(7usize, 3usize, 3usize), (1, 8, 8), (5, 13, 1)] {
+        for &w_bits in &[2u32, 4, 8] {
+            let (hi, wi, o) = (14, 9, 6);
+            let (ho, wo) = (hi - kh + 1, wi - kw + 1);
+            let kdim = ci * kh * kw;
+            let p = ho * wo;
+            let arch = one_layer_arch(
+                LayerSpec {
+                    name: "conv",
+                    kind: LayerKind::Conv,
+                    w_shape: vec![o, ci, kh, kw],
+                    b_shape: vec![o],
+                    act_shape: vec![o, ho, wo],
+                    pool: 0,
+                    quant_act: false,
+                },
+                vec![ci, hi, wi],
+                8,
+            );
+            let (params, betas_w, betas_a, gates) =
+                uniform_state(&arch, Granularity::Layer, w_bits, 0x31 + kdim as u64);
+            let model =
+                PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+            let n = 3;
+            let xs: Vec<f32> = (0..n * ci * hi * wi).map(|_| rng.f32() * 2.2).collect();
+            let want =
+                fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &xs, n).unwrap();
+
+            let grid = ActGrid { bits: 8, signed: true, beta: 1.0 };
+            let prm = decide(Some(w_bits), betas_w.data()[0], Some(grid), kdim).unwrap();
+            let h: Vec<f32> = xs.iter().map(|&v| quantize(v, 8, 1.0, true)).collect();
+            let (mut wcodes, mut wsums) = (Vec::new(), Vec::new());
+            pack_conv_weights(&model.layers[0], o, kdim, &prm, &mut wcodes, &mut wsums).unwrap();
+            let mut out = vec![f32::NAN; n * o * p];
+            let mut col = vec![0.0f32; kdim * p];
+            let (mut lanes, mut lsums) = (Vec::new(), Vec::new());
+            for s in 0..n {
+                im2col(&h[s * ci * hi * wi..(s + 1) * ci * hi * wi], ci, hi, wi, kh, kw, &mut col);
+                pack_lane_cols(&col, kdim, p, &prm, &mut lanes, &mut lsums);
+                let planes = &mut out[s * o * p..(s + 1) * o * p];
+                swar_gemm(
+                    &wcodes,
+                    &wsums,
+                    &lanes,
+                    &lsums,
+                    planes,
+                    o,
+                    kdim,
+                    p,
+                    &prm,
+                    prm.w_off,
+                    prm.a_off,
+                    prm.combined_scale,
+                );
+                add_bias_rows(planes, &model.layers[0].bias, o, p);
+            }
+            assert_bits_eq(&out, &want, &format!("swar conv w={w_bits} kdim={kdim}"));
+        }
+    }
+}
+
+/// Per-element (Individual) granularity with pruned weights sprinkled
+/// in: the stream is still uniform in its nonzero widths, so the layer
+/// stays SWAR-eligible and the pruned elements ride along as offset
+/// (zero) codes — bit-equal to the reference, which zeroes their codes.
+#[test]
+fn swar_tolerates_pruned_elements_under_individual_granularity() {
+    let mut rng = Rng(0x0DD5);
+    for &w_bits in &[2u32, 4, 8] {
+        let (d_in, d_out) = (65, 9);
+        let arch = one_layer_arch(
+            LayerSpec {
+                name: "out",
+                kind: LayerKind::Dense,
+                w_shape: vec![d_in, d_out],
+                b_shape: vec![d_out],
+                act_shape: vec![d_out],
+                pool: 0,
+                quant_act: false,
+            },
+            vec![d_in],
+            8,
+        );
+        let (params, betas_w, betas_a, mut gates) =
+            uniform_state(&arch, Granularity::Individual, w_bits, 0x51);
+        // Prune every fifth weight; the rest keep the uniform width.
+        for (i, g) in gates.gates_w[0].data_mut().iter_mut().enumerate() {
+            if i % 5 == 0 {
+                *g = gate_for_bits(0);
+            }
+        }
+        let model = PackedModel::from_state(&arch, &params, &betas_w, &betas_a, &gates).unwrap();
+        let n = 4;
+        let xs: Vec<f32> = (0..n * d_in).map(|_| rng.f32() * 2.2).collect();
+        let want = fake_quant_logits(&arch, &params, &betas_w, &betas_a, &gates, &xs, n).unwrap();
+
+        let grid = ActGrid { bits: 8, signed: true, beta: 1.0 };
+        let prm = decide(Some(w_bits), betas_w.data()[0], Some(grid), d_in)
+            .expect("pruned holes must not break SWAR eligibility");
+        let h: Vec<f32> = xs.iter().map(|&v| quantize(v, 8, 1.0, true)).collect();
+        let (mut words, mut wsums) = (Vec::new(), Vec::new());
+        pack_dense_weights(&model.layers[0], d_in, d_out, &prm, &mut words, &mut wsums).unwrap();
+        let (mut codes, mut asums) = (Vec::new(), Vec::new());
+        encode_scalar_rows(&h, n, d_in, &prm, &mut codes, &mut asums);
+        let mut out = vec![f32::NAN; n * d_out];
+        swar_gemm(
+            &codes,
+            &asums,
+            &words,
+            &wsums,
+            &mut out,
+            n,
+            d_in,
+            d_out,
+            &prm,
+            prm.a_off,
+            prm.w_off,
+            prm.combined_scale,
+        );
+        add_bias_cols(&mut out, &model.layers[0].bias, n, d_out);
+        assert_bits_eq(&out, &want, &format!("swar pruned-holes w={w_bits}"));
+    }
+}
+
+/// Unsigned activation grids (what hidden layers feed after activation
+/// quantization) across widths and lane-remainder depths: the packed
+/// lanes must reproduce a naive i64 dot exactly, through the same
+/// public packers the engine uses for the conv orientation.
+#[test]
+fn swar_gemm_matches_the_integer_oracle_on_every_grid() {
+    let mut rng = Rng(0xFEED_FACE);
+    for &(a_bits, signed) in &[(2u32, false), (4, false), (8, false), (8, true)] {
+        for &w_bits in &[2u32, 4, 8] {
+            for &k in &[1usize, 17, 63, 64, 65, 129] {
+                let (m, n) = (3, 11);
+                let grid = ActGrid { bits: a_bits, signed, beta: 3.7 };
+                let prm = decide(Some(w_bits), 1.9, Some(grid), k).unwrap();
+                let qw_hi = (1i64 << (w_bits - 1)) - 1;
+                let qa_hi = if signed { (1i64 << (a_bits - 1)) - 1 } else { (1i64 << a_bits) - 1 };
+                let qa_lo = if signed { -qa_hi } else { 0 };
+                let qw: Vec<i64> = (0..m * k).map(|_| code_in(&mut rng, -qw_hi, qw_hi)).collect();
+                let qa: Vec<i64> = (0..k * n).map(|_| code_in(&mut rng, qa_lo, qa_hi)).collect();
+
+                // Scalar side: offset weight codes (the conv orientation).
+                let mut scodes = vec![0u16; m * k];
+                let mut ssums = vec![0i64; m];
+                for r in 0..m {
+                    for i in 0..k {
+                        let u = qw[r * k + i] + prm.w_off;
+                        scodes[r * k + i] = u as u16;
+                        ssums[r] += u;
+                    }
+                }
+                // Lane side: on-grid f32 activations through the packer.
+                let col: Vec<f32> = qa.iter().map(|&q| prm.a_scale * q as f32).collect();
+                let (mut lanes, mut lsums) = (Vec::new(), Vec::new());
+                pack_lane_cols(&col, k, n, &prm, &mut lanes, &mut lsums);
+
+                let mut out = vec![f32::NAN; m * n];
+                swar_gemm(
+                    &scodes,
+                    &ssums,
+                    &lanes,
+                    &lsums,
+                    &mut out,
+                    m,
+                    k,
+                    n,
+                    &prm,
+                    prm.w_off,
+                    prm.a_off,
+                    prm.combined_scale,
+                );
+                let mut want = vec![0.0f32; m * n];
+                for r in 0..m {
+                    for j in 0..n {
+                        let mut dot = 0i64;
+                        for i in 0..k {
+                            dot += qw[r * k + i] * qa[i * n + j];
+                        }
+                        want[r * n + j] = dot as f32 * prm.combined_scale;
+                    }
+                }
+                assert_bits_eq(
+                    &out,
+                    &want,
+                    &format!("swar oracle w={w_bits} a={a_bits}{} k={k}", if signed { "s" } else { "u" }),
+                );
+            }
+        }
+    }
+}
+
+/// The plan's declared eligibility bound is exactly the i32 accumulator
+/// bound: `decide` accepts `k_max = floor(i32::MAX / (w_max * a_max))`
+/// and rejects `k_max + 1`; a fully saturated GEMM inside the bound
+/// (every accumulator at its ceiling) stays exact.
+#[test]
+fn swar_accumulators_never_overflow_inside_the_declared_bound() {
+    for &(w_bits, a_bits, signed) in &[(2u32, 8u32, true), (4, 8, false), (8, 8, true)] {
+        let grid = ActGrid { bits: a_bits, signed, beta: 1.0 };
+        let w_max = (1i64 << w_bits) - 2;
+        let a_max =
+            if signed { 2 * ((1i64 << (a_bits - 1)) - 1) } else { (1i64 << a_bits) - 1 };
+        let k_max = (i32::MAX as i64 / (w_max * a_max)) as usize;
+        assert!(decide(Some(w_bits), 1.0, Some(grid), k_max).is_some(), "k_max must be eligible");
+        assert!(decide(Some(w_bits), 1.0, Some(grid), k_max + 1).is_none(), "k_max+1 must not");
+        let sel = KernelSelector::default();
+        let (kernel, prm) = sel.select(w_bits, Some(w_bits), 1.0, Some(grid), k_max + 1);
+        assert_eq!(kernel, Kernel::F32Gemm, "over-bound layers fall back to f32");
+        assert!(prm.is_none());
+    }
+    // Worst-case magnitude run: 8-bit x 8-bit signed, k = 4096, every
+    // code saturated, so each i32 accumulator reaches k * 254 * 254
+    // (~264M) — inside i32, and the dot must still be exact.
+    let grid = ActGrid { bits: 8, signed: true, beta: 1.0 };
+    let k = 4096;
+    let prm = decide(Some(8), 1.0, Some(grid), k).unwrap();
+    let (m, n) = (1, 5);
+    let mut scodes = vec![0u16; m * k];
+    let mut ssums = vec![0i64; m];
+    for i in 0..k {
+        scodes[i] = (127 + prm.a_off) as u16;
+        ssums[0] += 127 + prm.a_off;
+    }
+    // Lane side: on-grid values that all decode to the saturated code.
+    let wcol: Vec<f32> = vec![prm.a_scale * 127.0; k * n];
+    let (mut lanes, mut lsums) = (Vec::new(), Vec::new());
+    pack_lane_cols(&wcol, k, n, &prm, &mut lanes, &mut lsums);
+    let mut out = vec![f32::NAN; m * n];
+    swar_gemm(
+        &scodes,
+        &ssums,
+        &lanes,
+        &lsums,
+        &mut out,
+        m,
+        k,
+        n,
+        &prm,
+        prm.a_off,
+        prm.a_off,
+        prm.combined_scale,
+    );
+    let want = (k as i64 * 127 * 127) as f32 * prm.combined_scale;
+    for (j, &v) in out.iter().enumerate() {
+        assert_eq!(v.to_bits(), want.to_bits(), "saturated dot {j}: {v} != {want}");
+    }
+}
+
+/// Selection precedence: pruned beats everything (including the forced
+/// f32 baseline switch), force_f32 beats SWAR, and ineligible shapes —
+/// mixed widths, gridless inputs, identity widths — fall back to f32.
+#[test]
+fn kernel_selector_precedence_and_fallbacks() {
+    let grid = Some(ActGrid { bits: 8, signed: true, beta: 1.0 });
+    let sel = KernelSelector::default();
+    let forced = KernelSelector { force_f32: true };
+    assert_eq!(sel.select(0, None, 1.0, grid, 64).0, Kernel::Pruned);
+    assert_eq!(forced.select(0, None, 1.0, grid, 64).0, Kernel::Pruned);
+    assert_eq!(forced.select(4, Some(4), 1.0, grid, 64).0, Kernel::F32Gemm);
+    assert_eq!(sel.select(2, Some(2), 1.0, grid, 64).0, Kernel::Swar2);
+    assert_eq!(sel.select(4, Some(4), 1.0, grid, 64).0, Kernel::Swar4);
+    assert_eq!(sel.select(8, Some(8), 1.0, grid, 64).0, Kernel::Swar8);
+    assert_eq!(sel.select(8, None, 1.0, grid, 64).0, Kernel::F32Gemm, "mixed widths");
+    assert_eq!(sel.select(4, Some(4), 1.0, None, 64).0, Kernel::F32Gemm, "gridless input");
+    assert_eq!(sel.select(32, Some(32), 1.0, grid, 64).0, Kernel::F32Gemm, "identity width");
+}

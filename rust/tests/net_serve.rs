@@ -212,15 +212,25 @@ fn negative_matrix_maps_to_documented_statuses_and_keeps_serving() {
 }
 
 /// POST `body` until it is accepted, counting 429s along the way; any
-/// other status panics.
+/// other status panics. Every 429 must carry a `Retry-After` header
+/// derived from the shedding pool's observed drain rate — a whole
+/// number of seconds inside the policy clamp `[1, 30]`.
 fn submit_until_accepted(client: &mut HttpClient, body: &str) -> (u64, String) {
     let mut sheds = 0u64;
     loop {
-        let (status, text) = client.request("POST", "/v1/models/m/infer", Some(body)).unwrap();
+        let (status, headers, text) =
+            client.request_with_headers("POST", "/v1/models/m/infer", Some(body)).unwrap();
         match status {
             200 => return (sheds, text),
             429 => {
                 assert!(text.contains("shed"), "{text}");
+                let retry = headers
+                    .iter()
+                    .find(|(n, _)| n == "retry-after")
+                    .map(|(_, v)| v.as_str())
+                    .expect("a 429 must carry Retry-After");
+                let secs: u64 = retry.parse().expect("Retry-After must be whole seconds");
+                assert!((1..=30).contains(&secs), "Retry-After {secs} outside [1, 30]");
                 sheds += 1;
                 std::thread::sleep(Duration::from_millis(2));
             }
