@@ -3,9 +3,9 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: ci build test fmt fmt-fix clippy analyze kernel-smoke bench-smoke serve-smoke route-smoke net-smoke metrics-smoke artifacts bench clean
+.PHONY: ci build test fmt fmt-fix clippy analyze kernel-smoke bench-smoke serve-smoke route-smoke net-smoke metrics-smoke watch-smoke artifacts bench clean
 
-ci: build test fmt clippy analyze kernel-smoke serve-smoke route-smoke net-smoke metrics-smoke
+ci: build test fmt clippy analyze kernel-smoke serve-smoke route-smoke net-smoke metrics-smoke watch-smoke
 
 build:
 	$(CARGO) build --release
@@ -113,6 +113,36 @@ metrics-smoke: build
 	if [ ! -s runs/metrics-smoke.addr ]; then echo "cgmq serve did not come up"; kill $$pid 2>/dev/null; exit 1; fi; \
 	if ! ./target/release/cgmq load-bench --addr $$(cat runs/metrics-smoke.addr) --key m \
 		--requests 96 --clients 4 --min-shed 1 --require-stages --shutdown; then \
+		kill $$pid 2>/dev/null; wait $$pid; exit 1; \
+	fi; \
+	wait $$pid
+
+# Windowed-signal-plane smoke: same loopback shape, but the point is the
+# live plane — a saturating burst puts traffic in the trailing window,
+# `cgmq watch --once` renders a frame off GET /stats (proving the watch
+# path parses a real server), and a second `cgmq load-bench` pass with
+# --require-window asserts the plane is live: positive windowed arrival
+# rate, recorded margin samples, and GET /livez answering 200 — then
+# drains the server via --shutdown.
+watch-smoke: build
+	mkdir -p runs
+	./target/release/cgmq export --synth --arch mlp --out runs/watch-smoke.cgmqm
+	rm -f runs/watch-smoke.addr; \
+	./target/release/cgmq serve --models m=runs/watch-smoke.cgmqm --addr 127.0.0.1:0 \
+		--workers 1 --queue-cap 1 --batch 64 --deadline-us 5000 \
+		--addr-file runs/watch-smoke.addr & \
+	pid=$$!; \
+	i=0; while [ ! -s runs/watch-smoke.addr ] && [ $$i -lt 100 ]; do sleep 0.1; i=$$((i+1)); done; \
+	if [ ! -s runs/watch-smoke.addr ]; then echo "cgmq serve did not come up"; kill $$pid 2>/dev/null; exit 1; fi; \
+	if ! ./target/release/cgmq load-bench --addr $$(cat runs/watch-smoke.addr) --key m \
+		--requests 96 --clients 4 --min-shed 1; then \
+		kill $$pid 2>/dev/null; wait $$pid; exit 1; \
+	fi; \
+	if ! ./target/release/cgmq watch --addr $$(cat runs/watch-smoke.addr) --once; then \
+		kill $$pid 2>/dev/null; wait $$pid; exit 1; \
+	fi; \
+	if ! ./target/release/cgmq load-bench --addr $$(cat runs/watch-smoke.addr) --key m \
+		--requests 32 --clients 2 --require-window --shutdown; then \
 		kill $$pid 2>/dev/null; wait $$pid; exit 1; \
 	fi; \
 	wait $$pid

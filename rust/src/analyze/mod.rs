@@ -154,12 +154,22 @@ pub fn analyze_crate(root: &Path) -> Result<Report> {
     }
     // Same contract for the metric names: the telemetry module and the
     // README table must agree, and a missing file is itself a finding.
+    // The windowed metric names live in telemetry/window.rs, so both
+    // sources are concatenated into one virtual file for the check —
+    // calling check_metrics per file would flag each one for the metric
+    // names only the other defines.
     let telemetry_path = root.join("rust/src/deploy/telemetry.rs");
-    match (std::fs::read_to_string(&telemetry_path), std::fs::read_to_string(&readme_path)) {
-        (Ok(telemetry_src), Ok(readme_src)) => {
+    let window_path = root.join("rust/src/deploy/telemetry/window.rs");
+    match (
+        std::fs::read_to_string(&telemetry_path),
+        std::fs::read_to_string(&window_path),
+        std::fs::read_to_string(&readme_path),
+    ) {
+        (Ok(telemetry_src), Ok(window_src), Ok(readme_src)) => {
+            let combined = format!("{telemetry_src}\n{window_src}");
             report.findings.extend(rules::check_metrics(
                 &rel_path(root, &telemetry_path),
-                &telemetry_src,
+                &combined,
                 &rel_path(root, &readme_path),
                 &readme_src,
             ));
@@ -168,7 +178,8 @@ pub fn analyze_crate(root: &Path) -> Result<Report> {
             rule: rules::RULE_METRICS,
             file: "README.md".to_string(),
             line: 1,
-            message: "cannot read telemetry.rs + README.md for the metrics cross-check"
+            message: "cannot read telemetry.rs + telemetry/window.rs + README.md for the \
+                      metrics cross-check"
                 .to_string(),
             hint: "run from the repo root or pass --root <repo>".to_string(),
         }),

@@ -34,10 +34,10 @@
 //!   emit must match the machine-checked taxonomy table in README.md
 //!   (between the `analyze:taxonomy` markers).
 //! * `metrics-name-sync` — the `cgmq_*` metric names
-//!   `deploy/telemetry.rs` emits on `/metrics` must match the
-//!   machine-checked table in README.md (between the `analyze:metrics`
-//!   markers); both drift directions are findings, same contract as
-//!   `taxonomy-sync`.
+//!   `deploy/telemetry.rs` (and its `telemetry/window.rs` submodule)
+//!   emits on `/metrics` must match the machine-checked table in
+//!   README.md (between the `analyze:metrics` markers); both drift
+//!   directions are findings, same contract as `taxonomy-sync`.
 //! * `bad-allow` — an `analyze-allow:` annotation naming an unknown rule
 //!   or missing a reason (typo guard: a misspelled allow must not silently
 //!   disable nothing).
@@ -110,8 +110,10 @@ const BLOCKING_TOKENS: [&str; 7] = [
 /// The stats counters and the only functions allowed to mutate them.
 /// The telemetry counters (`cells` through `req_seq`) are the spine of
 /// the `/metrics` accounting — same single-mutation-site contract as the
-/// routing counters above them.
-const COUNTER_CHOKES: [(&str, &[&str]); 9] = [
+/// routing counters above them. `hits` is the windowed ring's slot
+/// counter (`telemetry/window.rs`): the lazy-rotation protocol is only
+/// sound while every mutation goes through `record`.
+const COUNTER_CHOKES: [(&str, &[&str]); 10] = [
     ("depth", &["admit", "worker_loop"]),
     ("outstanding", &["submit", "await_completion"]),
     ("served", &["await_completion"]),
@@ -119,6 +121,7 @@ const COUNTER_CHOKES: [(&str, &[&str]); 9] = [
     ("recorded", &["record"]),
     ("sum_us", &["record"]),
     ("slots", &["observe"]),
+    ("hits", &["record"]),
     ("connections", &["count_connection"]),
     ("req_seq", &["next_request_id"]),
 ];

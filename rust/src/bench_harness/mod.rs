@@ -652,6 +652,11 @@ pub struct LoadBenchSpec {
     /// to have recorded samples during the run (the smoke test's "the
     /// telemetry spine is actually wired" assertion).
     pub require_stages: bool,
+    /// Additionally require the windowed signal plane to be live after
+    /// the run: `GET /livez` answers 200, the model's windowed
+    /// arrival-rate gauge is positive, and the windowed margin histogram
+    /// recorded samples (the `watch-smoke` assertions).
+    pub require_window: bool,
     /// `POST /admin/shutdown` after the run (graceful server drain).
     pub shutdown: bool,
 }
@@ -857,6 +862,38 @@ pub fn load_bench(spec: &LoadBenchSpec) -> Result<Json> {
             }
         }
     }
+    if spec.require_window {
+        // The scrape above happened right after the last 200, so the
+        // trailing window still covers the burst: the windowed series
+        // must be visibly live, and the readiness probe healthy.
+        let rate_series = format!(
+            "{}{{model=\"{key}\"}}",
+            crate::deploy::telemetry::M_ARRIVAL_RATE_WINDOW
+        );
+        let rate = after.get(&rate_series).copied().unwrap_or(0.0);
+        if rate <= 0.0 {
+            anyhow::bail!(
+                "windowed arrival rate is {rate} right after the run \
+                 (the windowed signal plane is not wired)"
+            );
+        }
+        let margin_series = format!(
+            "{}_count{{model=\"{key}\"}}",
+            crate::deploy::telemetry::M_MARGIN_WINDOW
+        );
+        let margins = after.get(&margin_series).copied().unwrap_or(0.0) as u64;
+        if margins == 0 {
+            anyhow::bail!(
+                "windowed margin histogram recorded no samples \
+                 (the reply path is not feeding the confidence signal)"
+            );
+        }
+        let mut client = HttpClient::connect(&spec.addr, Duration::from_secs(5))?;
+        let (status, text) = client.request("GET", "/livez", None)?;
+        if status != 200 {
+            anyhow::bail!("GET /livez: expected a healthy 200, got HTTP {status}: {text}");
+        }
+    }
     if spec.shutdown {
         let mut client = HttpClient::connect(&spec.addr, Duration::from_secs(5))?;
         let (status, text) = client.request("POST", "/admin/shutdown", Some("{}"))?;
@@ -885,6 +922,77 @@ pub fn load_bench(spec: &LoadBenchSpec) -> Result<Json> {
     ]))
 }
 
+/// Format one quantile-bound cell of the watch table. `null` is the
+/// documented empty-histogram sentinel — zero samples have no quantile,
+/// so the cell renders as `—` rather than a misleading 0. Numbers are
+/// divided by `scale` and printed with `prec` decimals.
+fn watch_cell(bound: Option<&Json>, scale: f64, prec: usize) -> String {
+    match bound {
+        Some(Json::Num(n)) => format!("{:.*}", prec, n / scale),
+        _ => "—".to_string(),
+    }
+}
+
+/// Render the windowed signal plane of one parsed `/stats` body as the
+/// `cgmq watch` frame: a summary line plus one row per model — arrival
+/// rate (req/s over the trailing window), windowed shed %, queue depth
+/// (summed across shards), in-flight, p50/p99 whole-request bounds (ms),
+/// and the margin p10 bound (logits, the cascade-routing confidence
+/// floor). Deterministic over a given `/stats` body, which is what the
+/// fixture test in `net_serve.rs` pins.
+pub fn render_watch_table(stats: &Json) -> Result<String> {
+    let models = stats.get("models")?.as_obj()?;
+    let served = stats.get("served")?.as_f64()?;
+    let window_s = models
+        .values()
+        .next()
+        .and_then(|m| m.opt("window"))
+        .and_then(|w| w.opt("window_us"))
+        .and_then(|n| n.as_f64().ok())
+        .map_or(0.0, |us| us / 1e6);
+    let mut out = String::new();
+    out.push_str(&format!("window {window_s:.0}s · served {served:.0}\n"));
+    out.push_str(
+        "| model | req/s | shed % | queue | in-flight | p50 ms | p99 ms | margin p10 |\n",
+    );
+    out.push_str(
+        "|-------|-------|--------|-------|-----------|--------|--------|------------|\n",
+    );
+    for (key, m) in models {
+        let w = m.get("window").context("model entry has no window section")?;
+        let rate = w.get("arrival_rate_per_sec")?.as_f64()?;
+        let shed = w.get("shed_rate")?.as_f64()? * 100.0;
+        let mut queue = 0.0;
+        for d in m.get("queue_depth")?.as_arr()? {
+            queue += d.as_f64()?;
+        }
+        let in_flight = m.get("in_flight")?.as_f64()?;
+        let total = w.get("total")?;
+        let p50 = watch_cell(total.opt("p50_le"), 1e3, 2); // µs → ms
+        let p99 = watch_cell(total.opt("p99_le"), 1e3, 2);
+        // milli-logits → logits
+        let p10 = watch_cell(w.get("margin")?.opt("p10_le"), 1e3, 3);
+        out.push_str(&format!(
+            "| {key} | {rate:.1} | {shed:.1} | {queue:.0} | {in_flight:.0} | {p50} | {p99} \
+             | {p10} |\n"
+        ));
+    }
+    Ok(out)
+}
+
+/// One `cgmq watch` frame: `GET /stats` from `addr`, rendered with
+/// [`render_watch_table`].
+pub fn watch_once(addr: &str) -> Result<String> {
+    use crate::deploy::net::HttpClient;
+    let mut client = HttpClient::connect(addr, std::time::Duration::from_secs(5))?;
+    let (status, text) = client.request("GET", "/stats", None)?;
+    if status != 200 {
+        anyhow::bail!("GET /stats: unexpected HTTP {status}: {text}");
+    }
+    let stats = crate::util::json::parse(&text)?;
+    render_watch_table(&stats)
+}
+
 /// Loopback HTTP serving row: stand a [`Server`](crate::deploy::net::Server)
 /// up on an ephemeral port over `models`, drive the first key with the
 /// [`load_bench`] client fleet, drain gracefully (bailing if any accepted
@@ -909,6 +1017,7 @@ pub fn net_bench(
         seed,
         verify_model: None,
         require_stages: false,
+        require_window: false,
         shutdown: false,
     };
     let bench = load_bench(&spec);

@@ -25,7 +25,11 @@
 //! latency percentiles and the telemetry spine's stage histograms.
 //! [`BatcherStats`] additionally accrues enqueue-to-flush wait (sum +
 //! max, per flush reason), the arrival-rate signal adaptive batching
-//! will tune against.
+//! will tune against. The per-completion queue-delay / batch-wait /
+//! compute split is what the windowed signal plane
+//! ([`telemetry::window`](super::telemetry::window)) consumes live: each
+//! served request lands those durations in both the cumulative and the
+//! trailing-window stage histograms.
 //!
 //! The batcher holds its engine behind an [`Arc`], so several batchers —
 //! the per-shard queues of [`super::pool::WorkerPool`] — can share one

@@ -577,9 +577,50 @@ impl Engine {
     }
 }
 
+/// Top-logit confidence margin of one sample's logit row: the gap
+/// between the largest and second-largest logit, clamped to `>= 0`
+/// (NaNs lose every comparison and so never win a slot). Rows with
+/// fewer than two classes have no runner-up and report `0.0` — the
+/// "no confidence signal" floor a cascade router treats as escalate.
+pub fn top_logit_margin(logits: &[f32]) -> f32 {
+    if logits.len() < 2 {
+        return 0.0;
+    }
+    let (mut top1, mut top2) = (f32::NEG_INFINITY, f32::NEG_INFINITY);
+    for &v in logits {
+        if v > top1 {
+            top2 = top1;
+            top1 = v;
+        } else if v > top2 {
+            top2 = v;
+        }
+    }
+    (top1 - top2).max(0.0)
+}
+
 // Compile-time proof the engine is shareable across threads; the serve
 // pool hands one `Arc<Engine>` to every worker.
 const _: fn() = || {
     fn assert_send_sync<T: Send + Sync>() {}
     assert_send_sync::<Engine>();
 };
+
+#[cfg(test)]
+mod tests {
+    use super::top_logit_margin;
+
+    #[test]
+    fn margin_is_gap_between_top_two() {
+        assert_eq!(top_logit_margin(&[1.0, 4.0, 2.5]), 1.5);
+        assert_eq!(top_logit_margin(&[3.0, 3.0]), 0.0);
+        assert_eq!(top_logit_margin(&[7.0]), 0.0);
+        assert_eq!(top_logit_margin(&[]), 0.0);
+        assert_eq!(top_logit_margin(&[-1.0, -4.0]), 3.0);
+    }
+
+    #[test]
+    fn margin_ignores_nans_when_finites_remain() {
+        let m = top_logit_margin(&[f32::NAN, 2.0, 5.0]);
+        assert_eq!(m, 3.0);
+    }
+}

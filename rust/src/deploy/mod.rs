@@ -78,13 +78,14 @@ pub mod router;
 pub mod telemetry;
 
 pub use batch::{BatchConfig, BatcherStats, Completion, RequestBatcher};
-pub use engine::{DecodeMode, Engine, OpProfile};
+pub use engine::{top_logit_margin, DecodeMode, Engine, OpProfile};
 pub use format::{PackedLayer, PackedModel, WidthStream};
 pub use plan::{ExecPlan, Kernel, KernelSelector, Lowering, PlannedOp, PoolGeom, Scratch};
 pub use net::{Server, ServerConfig, ServerReport};
 pub use pool::{default_workers, PoolCompletion, PoolConfig, PoolStats, Submission, WorkerPool};
 pub use router::{ModelReport, RouteStats, Router};
 pub use telemetry::{
-    Clock, Histogram, HistogramSnapshot, ManualClock, ModelSnapshot, RealClock, ServerTelemetry,
-    SpanRecorder, Stage, TelemetrySnapshot, Trace,
+    Clock, Histogram, HistogramSnapshot, ManualClock, ModelSnapshot, ModelWindow, RealClock,
+    ServerTelemetry, SpanRecorder, Stage, TelemetrySnapshot, Trace, WindowSnapshot,
+    WindowedCounter, WindowedHistogram, DEFAULT_WINDOW_EPOCH, WINDOW_SLOTS,
 };

@@ -15,6 +15,10 @@
 //! | declared body larger than the cap           | 413 (refused before reading) |
 //! | admission shed (server layer)               | 429 + `Retry-After` |
 //!
+//! The readiness probe `GET /livez` (server layer) reuses this taxonomy —
+//! 200 when live, 503 when the trailing-window shed rate or p99 bound is
+//! over threshold — rather than minting new codes.
+//!
 //! Unsupported-but-valid HTTP (chunked transfer encoding, non-1.x
 //! versions) is a 400 with a message naming the gap. A connection that
 //! goes quiet *between* requests (idle keep-alive) is closed silently; a

@@ -10,6 +10,12 @@
 //! status and close (after one framing error the byte stream is
 //! untrustworthy), idle keep-alive timeouts close silently, and a handler
 //! panic is caught and mapped to 500.
+//!
+//! Every response written here passes through one telemetry choke point
+//! ([`ServerTelemetry::observe_http_status`]), which feeds both the
+//! cumulative status counters and the trailing-window series behind
+//! `GET /livez` and `cgmq watch` — the listener is where the windowed
+//! signal plane sees every byte that leaves the process.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpListener, TcpStream};

@@ -43,14 +43,17 @@
 //!   point that keeps the `submitted == accepted + shed` accounting exact
 //!   across threads — while completions are pumped out by one background
 //!   thread and handed to the waiting connection workers. Endpoints:
-//!   `POST /v1/models/{key}/infer`, `GET /healthz`, `GET /stats`
-//!   (per-model [`RouteStats`](super::RouteStats) plus telemetry as
-//!   JSON), `GET /metrics` (the same counters as Prometheus text — see
-//!   [`telemetry`](super::telemetry)), `POST /admin/shutdown` (graceful
-//!   drain: stop accepting, finish every accepted request, then shut the
-//!   router down and verify nothing was lost). Every infer response
-//!   carries an `X-Request-Id` header joinable to the server-side trace
-//!   ring.
+//!   `POST /v1/models/{key}/infer`, `GET /healthz`, `GET /livez` (the
+//!   windowed readiness probe: 503 when the trailing-window shed rate or
+//!   p99 bound crosses the configured thresholds), `GET /stats`
+//!   (per-model [`RouteStats`](super::RouteStats) plus telemetry —
+//!   cumulative and windowed — as JSON), `GET /metrics` (the same
+//!   counters as Prometheus text — see [`telemetry`](super::telemetry)),
+//!   `POST /admin/shutdown` (graceful drain: stop accepting, finish
+//!   every accepted request, then shut the router down and verify
+//!   nothing was lost). Every infer response carries an `X-Request-Id`
+//!   header joinable to the server-side trace ring; `cgmq watch` polls
+//!   `/stats` and renders the windowed signal plane as a live table.
 //!
 //! `cgmq serve` binds a server from `.cgmqm` files; `cgmq load-bench` is
 //! the loopback load generator (open-loop client threads, 429-retry,

@@ -28,7 +28,15 @@
 //! /metrics` and as JSON on `GET /stats`. Both surfaces (and the final
 //! [`ServerReport`]) read the same counters, so they agree bit-exactly
 //! whenever the server is quiescent — which is what `cgmq load-bench`
-//! cross-checks against its client-side tallies.
+//! cross-checks against its client-side tallies. On top of the
+//! cumulative plane sits the *windowed* signal plane
+//! ([`telemetry::window`](crate::deploy::telemetry::window)): trailing-
+//! window arrival rates, per-status/stage windows, queue-depth and
+//! in-flight gauges, and the top-logit margin histogram — surfaced as
+//! `cgmq_*_window*` series on `/metrics`, a `window` section per model
+//! on `/stats`, and the `GET /livez` readiness probe, which reports
+//! degraded (503) when the windowed shed rate or whole-request p99
+//! bound crosses the configured thresholds.
 
 use std::collections::{BTreeMap, HashMap, HashSet};
 use std::net::SocketAddr;
@@ -39,7 +47,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::deploy::engine::Engine;
+use crate::deploy::engine::{top_logit_margin, Engine};
 use crate::deploy::pool::{PoolCompletion, PoolConfig, Submission};
 use crate::deploy::router::{ModelReport, Router};
 use crate::deploy::telemetry::{
@@ -67,6 +75,14 @@ pub struct ServerConfig {
     /// Completed [`Trace`](crate::deploy::telemetry::Trace)s kept in the
     /// telemetry ring for inspection (0 disables trace retention).
     pub trace_ring: usize,
+    /// `GET /livez` reports degraded (503) when the server-wide windowed
+    /// shed rate (429s over responses, trailing window) reaches this
+    /// fraction. `> 1.0` disables the check.
+    pub livez_shed_rate: f64,
+    /// `GET /livez` reports degraded (503) when any model's windowed
+    /// whole-request p99 upper bound (µs) exceeds this. `0` disables the
+    /// check.
+    pub livez_p99_us: u64,
 }
 
 impl Default for ServerConfig {
@@ -77,6 +93,8 @@ impl Default for ServerConfig {
             read_timeout: Duration::from_secs(5),
             reply_timeout: Duration::from_secs(30),
             trace_ring: 256,
+            livez_shed_rate: 0.5,
+            livez_p99_us: 0,
         }
     }
 }
@@ -106,6 +124,10 @@ struct Front {
     /// Tells the pump to exit once nothing is outstanding.
     pump_stop: AtomicBool,
     reply_timeout: Duration,
+    /// `/livez` degraded threshold on the windowed shed rate.
+    livez_shed_rate: f64,
+    /// `/livez` degraded threshold on the windowed p99 bound (µs, 0 off).
+    livez_p99_us: u64,
     /// Stage histograms, per-model/status counters, request ids, traces.
     telemetry: Arc<ServerTelemetry>,
 }
@@ -302,15 +324,31 @@ impl NetHandler {
             return Response::error(Status::ServiceUnavailable, "server is draining");
         };
         let stats = router.stats_all();
+        let decoded = router.decoded_layers_all();
+        let depths = router.queue_depths_all();
         drop(guard);
         let snap = self.front.telemetry.snapshot();
         let models: BTreeMap<String, Json> = stats
             .into_iter()
             .map(|(k, s)| {
+                let in_flight = s.accepted.saturating_sub(s.completed);
                 let mut j = s.to_json();
-                if let (Json::Obj(m), Some(ms)) = (&mut j, snap.models.get(&k)) {
-                    m.insert("statuses".into(), statuses_json(&ms.by_status));
-                    m.insert("stages".into(), stages_json(&ms.stages));
+                if let Json::Obj(m) = &mut j {
+                    if let Some(ms) = snap.models.get(&k) {
+                        m.insert("statuses".into(), statuses_json(&ms.by_status));
+                        m.insert("stages".into(), stages_json(&ms.stages));
+                        m.insert("window".into(), window_json(&ms.window));
+                    }
+                    if let Some(n) = decoded.get(&k) {
+                        m.insert("decoded_layers".into(), Json::num(*n as f64));
+                    }
+                    if let Some(d) = depths.get(&k) {
+                        m.insert(
+                            "queue_depth".into(),
+                            Json::Arr(d.iter().map(|&q| Json::num(q as f64)).collect()),
+                        );
+                    }
+                    m.insert("in_flight".into(), Json::num(in_flight as f64));
                 }
                 (k, j)
             })
@@ -322,6 +360,7 @@ impl NetHandler {
                 ("served", Json::num(self.front.served.load(Ordering::Relaxed) as f64)),
                 ("connections", Json::num(snap.connections as f64)),
                 ("http_responses", statuses_json(&snap.http_status)),
+                ("http_responses_window", statuses_json(&snap.http_window)),
                 ("models", Json::Obj(models)),
             ]),
         )
@@ -337,14 +376,64 @@ impl NetHandler {
         };
         let routes = router.stats_all();
         let decoded = router.decoded_layers_all();
+        let depths = router.queue_depths_all();
         drop(guard);
         let snap = self.front.telemetry.snapshot();
         // ordering: relaxed — display-only snapshot for /metrics.
         let served = self.front.served.load(Ordering::Relaxed);
         Response::text(
             Status::Ok,
-            telemetry::render_prometheus(&snap, served, &routes, &decoded),
+            telemetry::render_prometheus(&snap, served, &routes, &decoded, &depths),
         )
+    }
+
+    /// `GET /livez`: the windowed readiness probe. Healthy (200) while
+    /// the trailing-window shed rate stays under the configured fraction
+    /// and every model's windowed whole-request p99 bound stays under the
+    /// configured ceiling; degraded (503) otherwise, with the tripped
+    /// thresholds listed in `reasons`. An idle window is healthy by
+    /// definition — all windowed series decay to zero.
+    fn livez(&self) -> Response {
+        let snap = self.front.telemetry.snapshot();
+        let mut responses = 0u64;
+        let mut shed = 0u64;
+        let mut worst_p99 = 0u64;
+        let mut worst_p99_model = String::new();
+        for (key, m) in &snap.models {
+            responses += m.window.responses();
+            shed += m.window.status_count(429);
+            if let Some((_, hi)) = m.window.total.quantile_bounds(0.99) {
+                if hi > worst_p99 {
+                    worst_p99 = hi;
+                    worst_p99_model = key.clone();
+                }
+            }
+        }
+        let shed_rate = if responses == 0 { 0.0 } else { shed as f64 / responses as f64 };
+        let mut reasons: Vec<Json> = Vec::new();
+        if responses > 0 && shed_rate >= self.front.livez_shed_rate {
+            reasons.push(Json::str(format!(
+                "windowed shed rate {shed_rate:.3} >= {:.3}",
+                self.front.livez_shed_rate
+            )));
+        }
+        if self.front.livez_p99_us > 0 && worst_p99 > self.front.livez_p99_us {
+            reasons.push(Json::str(format!(
+                "windowed p99 bound {worst_p99}us > {}us (model '{worst_p99_model}')",
+                self.front.livez_p99_us
+            )));
+        }
+        let degraded = !reasons.is_empty();
+        let window_us = snap.models.values().next().map_or(0, |m| m.window.window_us);
+        let body = Json::obj(vec![
+            ("status", Json::str(if degraded { "degraded" } else { "live" })),
+            ("window_us", Json::num(window_us as f64)),
+            ("responses_window", Json::num(responses as f64)),
+            ("shed_rate_window", Json::num(shed_rate)),
+            ("p99_bound_us_window", Json::num(worst_p99 as f64)),
+            ("reasons", Json::Arr(reasons)),
+        ]);
+        Response::json(if degraded { Status::ServiceUnavailable } else { Status::Ok }, &body)
     }
 
     /// The infer route's telemetry shell: allocates the request id, seeds
@@ -383,6 +472,9 @@ impl NetHandler {
             }
         };
         rec.mark(Stage::Parse);
+        // Arrival = a keyed, parseable request reaching admission; counted
+        // before the submit outcome so the rate estimator sees shed load.
+        self.front.telemetry.count_arrival(key);
         let outcome = self.front.submit(key, x);
         rec.mark(Stage::Admit);
         match outcome {
@@ -394,6 +486,12 @@ impl NetHandler {
                     rec.set(Stage::QueueWait, c.queue_delay);
                     rec.set(Stage::BatchWait, c.batch_wait);
                     rec.set(Stage::Compute, c.compute);
+                    // The reply path is where the logits are in hand — feed
+                    // the windowed confidence-margin histogram the cascade
+                    // router reads.
+                    self.front
+                        .telemetry
+                        .record_margin(key, top_logit_margin(&c.logits));
                     let resp = Response::json(
                         Status::Ok,
                         &Json::obj(vec![
@@ -441,6 +539,7 @@ impl Handler for NetHandler {
         let segments: Vec<&str> = path.split('/').filter(|s| !s.is_empty()).collect();
         match (req.method.as_str(), segments.as_slice()) {
             ("GET", ["healthz"]) => self.healthz(),
+            ("GET", ["livez"]) => self.livez(),
             ("GET", ["stats"]) => self.stats(),
             ("GET", ["metrics"]) => self.metrics(),
             ("POST", ["v1", "models", key, "infer"]) => self.infer(key, &req),
@@ -450,7 +549,7 @@ impl Handler for NetHandler {
                 self.front.stop.store(true, Ordering::SeqCst);
                 Response::json(Status::Ok, &Json::obj(vec![("status", Json::str("draining"))]))
             }
-            (_, ["healthz"]) | (_, ["stats"]) | (_, ["metrics"]) => {
+            (_, ["healthz"]) | (_, ["livez"]) | (_, ["stats"]) | (_, ["metrics"]) => {
                 Response::error(Status::MethodNotAllowed, "route is GET-only")
             }
             (_, ["v1", "models", _, "infer"]) | (_, ["admin", "shutdown"]) => {
@@ -460,7 +559,7 @@ impl Handler for NetHandler {
                 Status::NotFound,
                 format!(
                     "no route '{path}' (routes: POST /v1/models/{{key}}/infer, GET /healthz, \
-                     GET /stats, GET /metrics, POST /admin/shutdown)"
+                     GET /livez, GET /stats, GET /metrics, POST /admin/shutdown)"
                 ),
             ),
         }
@@ -478,26 +577,62 @@ fn statuses_json(counts: &[u64; STATUS_CODES.len()]) -> Json {
     Json::Obj(m)
 }
 
+/// Quantile upper bound as JSON, honouring the empty-histogram sentinel:
+/// zero samples have no quantile, so this is `null` — never a misleading
+/// numeric `(0, 0)` bracket. `cgmq watch` renders the `null` as `—`.
+fn quantile_json(h: &HistogramSnapshot, q: f64) -> Json {
+    h.quantile_bounds(q).map_or(Json::Null, |(_, hi)| Json::num(hi as f64))
+}
+
 /// Per-stage histogram summary: count/sum/max plus p50/p99 upper bounds
-/// from the log₂ buckets.
+/// from the log₂ buckets (`null` when the stage has no samples).
 fn stages_json(stages: &[HistogramSnapshot; STAGES]) -> Json {
     let mut m = BTreeMap::new();
     for stage in Stage::ALL {
         let h = &stages[stage as usize];
-        let p50 = h.quantile_bounds(0.50).map_or(0, |(_, hi)| hi);
-        let p99 = h.quantile_bounds(0.99).map_or(0, |(_, hi)| hi);
         m.insert(
             stage.as_str().to_string(),
             Json::obj(vec![
                 ("count", Json::num(h.count as f64)),
                 ("sum_us", Json::num(h.sum_us as f64)),
                 ("max_us", Json::num(h.max_us as f64)),
-                ("p50_us_le", Json::num(p50 as f64)),
-                ("p99_us_le", Json::num(p99 as f64)),
+                ("p50_us_le", quantile_json(h, 0.50)),
+                ("p99_us_le", quantile_json(h, 0.99)),
             ]),
         );
     }
     Json::Obj(m)
+}
+
+/// One histogram's summary with unit-agnostic keys: the windowed
+/// whole-request histogram holds microseconds, the margin histogram
+/// milli-logits — callers know which. Quantile bounds follow the
+/// empty-histogram sentinel ([`quantile_json`]).
+fn histogram_json(h: &HistogramSnapshot) -> Json {
+    Json::obj(vec![
+        ("count", Json::num(h.count as f64)),
+        ("sum", Json::num(h.sum_us as f64)),
+        ("max", Json::num(h.max_us as f64)),
+        ("p10_le", quantile_json(h, 0.10)),
+        ("p50_le", quantile_json(h, 0.50)),
+        ("p99_le", quantile_json(h, 0.99)),
+    ])
+}
+
+/// One model's `window` section on `/stats` and in the [`ServerReport`]:
+/// the trailing-window twin of the cumulative counters, plus the derived
+/// arrival-rate and shed-rate estimates and the margin distribution.
+fn window_json(w: &telemetry::WindowSnapshot) -> Json {
+    Json::obj(vec![
+        ("window_us", Json::num(w.window_us as f64)),
+        ("arrivals", Json::num(w.arrivals as f64)),
+        ("arrival_rate_per_sec", Json::num(w.arrival_rate_per_sec())),
+        ("shed_rate", Json::num(w.shed_rate())),
+        ("statuses", statuses_json(&w.by_status)),
+        ("stages", stages_json(&w.stages)),
+        ("total", histogram_json(&w.total)),
+        ("margin", histogram_json(&w.margin)),
+    ])
 }
 
 /// What a drained server reports: per-model router reports plus the served
@@ -545,6 +680,7 @@ impl ServerReport {
                     if let Some(ms) = self.telemetry.models.get(k) {
                         m.insert("statuses".into(), statuses_json(&ms.by_status));
                         m.insert("stages".into(), stages_json(&ms.stages));
+                        m.insert("window".into(), window_json(&ms.window));
                     }
                 }
                 (k.clone(), j)
@@ -554,6 +690,7 @@ impl ServerReport {
             ("served", Json::num(self.served as f64)),
             ("connections", Json::num(self.telemetry.connections as f64)),
             ("http_responses", statuses_json(&self.telemetry.http_status)),
+            ("http_responses_window", statuses_json(&self.telemetry.http_window)),
             ("models", Json::Obj(models)),
         ])
     }
@@ -596,6 +733,19 @@ impl Server {
         models: Vec<(String, Arc<Engine>)>,
         cfg: ServerConfig,
     ) -> Result<Self> {
+        Self::bind_with_clock(addr, models, cfg, Arc::new(RealClock::default()))
+    }
+
+    /// [`bind`](Self::bind) with an injected telemetry clock — the seam
+    /// tests use to drive the windowed series with `ManualClock` (advance
+    /// past the window, watch every windowed series decay to zero while
+    /// the cumulative counters keep the traffic).
+    pub fn bind_with_clock(
+        addr: &str,
+        models: Vec<(String, Arc<Engine>)>,
+        cfg: ServerConfig,
+        clock: Arc<dyn telemetry::Clock>,
+    ) -> Result<Self> {
         if models.is_empty() {
             bail!("server needs at least one model");
         }
@@ -605,11 +755,7 @@ impl Server {
             router.add_model(key.clone(), engine)?;
             keys.push(key);
         }
-        let telemetry = Arc::new(ServerTelemetry::new(
-            &keys,
-            Arc::new(RealClock::default()),
-            cfg.trace_ring,
-        ));
+        let telemetry = Arc::new(ServerTelemetry::new(&keys, clock, cfg.trace_ring));
         let front = Arc::new(Front {
             router: Mutex::new(Some(router)),
             keys,
@@ -621,6 +767,8 @@ impl Server {
             stop: AtomicBool::new(false),
             pump_stop: AtomicBool::new(false),
             reply_timeout: cfg.reply_timeout,
+            livez_shed_rate: cfg.livez_shed_rate,
+            livez_p99_us: cfg.livez_p99_us,
             telemetry: Arc::clone(&telemetry),
         });
         let handler: Arc<dyn Handler> = Arc::new(NetHandler { front: Arc::clone(&front) });

@@ -332,6 +332,16 @@ impl WorkerPool {
         self.completions.try_iter().collect()
     }
 
+    /// Per-shard queue depths at this instant, sampled from the same
+    /// admission counters [`try_submit`](WorkerPool::try_submit) gates
+    /// on — the windowed signal plane's queue-depth gauge. Indexed by
+    /// shard.
+    pub fn queue_depths(&self) -> Vec<u64> {
+        // ordering: relaxed — gauge sample of monotonically adjusted
+        // counters; staleness only skews the display, never admission.
+        self.depth.iter().map(|d| d.load(Ordering::Relaxed) as u64).collect()
+    }
+
     /// `Retry-After` hint (whole seconds) for a shed request: the time
     /// the current in-flight backlog needs to clear at the pool's
     /// *observed* drain rate (completions per second since the pool
@@ -342,8 +352,8 @@ impl WorkerPool {
         // ordering: relaxed — monotone, hint-only reads; staleness only
         // skews the advisory delay, never correctness.
         let completed = self.meter.completed.load(Ordering::Relaxed);
-        let in_flight: u64 =
-            self.depth.iter().map(|d| d.load(Ordering::Relaxed) as u64).sum();
+        // ordering: relaxed — same hint-only read as the completed counter.
+        let in_flight: u64 = self.depth.iter().map(|d| d.load(Ordering::Relaxed) as u64).sum();
         let elapsed = self.meter.started.elapsed().as_secs_f64();
         if completed == 0 || elapsed <= 0.0 {
             return 1;

@@ -261,6 +261,16 @@ impl Router {
             .collect()
     }
 
+    /// Per-model per-shard queue depths at this instant
+    /// ([`WorkerPool::queue_depths`]) — the `cgmq_queue_depth` gauge on
+    /// `/metrics` and the `queue_depth` section of `/stats`.
+    pub fn queue_depths_all(&self) -> BTreeMap<String, Vec<u64>> {
+        self.models
+            .iter()
+            .map(|(k, e)| (k.clone(), e.pool.queue_depths()))
+            .collect()
+    }
+
     /// Route one request to the model behind `key`. Returns the admission
     /// outcome: [`Submission::Accepted`] with the per-key request id its
     /// completion will carry, or [`Submission::Shed`] when every shard of

@@ -27,11 +27,26 @@
 //! [`percentiles_ms`](crate::bench_harness::percentiles_ms) oracle
 //! (0-based index `ceil((count - 1) * q)` of the sorted samples), so the
 //! exact percentile provably lies inside the returned bracket.
+//!
+//! Beside every cumulative series, [`window`] keeps the same signal over
+//! a trailing sliding window (lazily rotated epoch-bucket rings — see the
+//! submodule docs): per-model arrival rates, in-window responses by
+//! status, windowed stage/whole-request latency distributions, and the
+//! top-logit confidence-margin distribution of 200 replies. Those are
+//! the live signals `GET /livez`, `cgmq watch`, and ROADMAP's adaptive
+//! batching / cascade routing policies read.
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
+
+pub mod window;
+
+pub use window::{
+    ModelWindow, WindowSnapshot, WindowedCounter, WindowedHistogram, DEFAULT_WINDOW_EPOCH,
+    WINDOW_SLOTS,
+};
 
 use super::router::RouteStats;
 
@@ -434,10 +449,12 @@ impl Trace {
 // Per-model and server-wide aggregation
 // ---------------------------------------------------------------------------
 
-/// Per-model counters: responses by status + one histogram per stage.
+/// Per-model counters: responses by status + one histogram per stage,
+/// plus the model's windowed signal plane ([`ModelWindow`]).
 pub struct ModelTelemetry {
     by_status: StatusCounters,
     stages: [Histogram; STAGES],
+    window: ModelWindow,
 }
 
 impl Default for ModelTelemetry {
@@ -445,16 +462,18 @@ impl Default for ModelTelemetry {
         ModelTelemetry {
             by_status: StatusCounters::default(),
             stages: std::array::from_fn(|_| Histogram::default()),
+            window: ModelWindow::new(DEFAULT_WINDOW_EPOCH),
         }
     }
 }
 
 impl ModelTelemetry {
-    /// Copy this model's counters out.
-    pub fn snapshot(&self) -> ModelSnapshot {
+    /// Copy this model's counters out; `now` anchors the window reads.
+    pub fn snapshot(&self, now: Duration) -> ModelSnapshot {
         ModelSnapshot {
             by_status: self.by_status.snapshot(),
             stages: std::array::from_fn(|i| self.stages[i].snapshot()),
+            window: self.window.snapshot(now),
         }
     }
 }
@@ -470,6 +489,9 @@ pub struct ServerTelemetry {
     clock: Arc<dyn Clock>,
     connections: AtomicU64,
     http_status: StatusCounters,
+    /// Windowed twin of `http_status`: responses written inside the
+    /// trailing window, index-aligned with [`STATUS_CODES`].
+    http_window: [WindowedCounter; STATUS_CODES.len()],
     req_seq: AtomicU64,
     models: BTreeMap<String, ModelTelemetry>,
     ring: Mutex<VecDeque<Trace>>,
@@ -484,6 +506,7 @@ impl ServerTelemetry {
             clock,
             connections: AtomicU64::new(0),
             http_status: StatusCounters::default(),
+            http_window: std::array::from_fn(|_| WindowedCounter::new(DEFAULT_WINDOW_EPOCH)),
             req_seq: AtomicU64::new(0),
             models: keys.iter().map(|k| (k.clone(), ModelTelemetry::default())).collect(),
             ring: Mutex::new(VecDeque::new()),
@@ -504,9 +527,30 @@ impl ServerTelemetry {
     }
 
     /// Count one written HTTP response (any route, including read-error
-    /// replies) — the server-wide responses-by-status series.
+    /// replies) — the server-wide responses-by-status series, cumulative
+    /// and windowed.
     pub fn observe_http_status(&self, code: u16) {
         self.http_status.observe(code);
+        if let Some(i) = STATUS_CODES.iter().position(|&c| c == code) {
+            self.http_window[i].record(self.clock.now(), 1);
+        }
+    }
+
+    /// Count one keyed infer request entering admission — the per-model
+    /// windowed arrival-rate estimator. Unknown keys are dropped (they
+    /// never reach admission).
+    pub fn count_arrival(&self, key: &str) {
+        if let Some(model) = self.models.get(key) {
+            model.window.arrivals.record(self.clock.now(), 1);
+        }
+    }
+
+    /// Record the top-logit confidence margin of a 200 reply into `key`'s
+    /// windowed margin histogram (scaled by [`margin_milli`]).
+    pub fn record_margin(&self, key: &str, margin: f32) {
+        if let Some(model) = self.models.get(key) {
+            model.window.margin.record(self.clock.now(), margin_milli(margin));
+        }
     }
 
     /// Allocate a fresh request id (1-based, unique per server). Sole
@@ -525,12 +569,18 @@ impl ServerTelemetry {
     pub fn record(&self, rec: SpanRecorder, key: &str, request_id: u64, status: u16) {
         let Some(model) = self.models.get(key) else { return };
         model.by_status.observe(status);
+        let now = self.clock.now();
+        if let Some(i) = STATUS_CODES.iter().position(|&c| c == status) {
+            model.window.by_status[i].record(now, 1);
+        }
         let trace = rec.finish(request_id, key, status);
         for (i, h) in model.stages.iter().enumerate() {
             if trace.touched[i] {
                 h.record(Duration::from_micros(trace.spans[i]));
+                model.window.stages[i].record(now, trace.spans[i]);
             }
         }
+        model.window.total.record(now, trace.total_us());
         self.push_trace(trace);
     }
 
@@ -550,15 +600,25 @@ impl ServerTelemetry {
         super::net::lock(&self.ring).iter().cloned().collect()
     }
 
-    /// Copy every counter out for exposition.
+    /// Copy every counter out for exposition. One clock read anchors all
+    /// window sections, so a snapshot is internally epoch-consistent.
     pub fn snapshot(&self) -> TelemetrySnapshot {
+        let now = self.clock.now();
         TelemetrySnapshot {
             // ordering: relaxed — display read of a monotonic counter.
             connections: self.connections.load(Ordering::Relaxed),
             http_status: self.http_status.snapshot(),
-            models: self.models.iter().map(|(k, m)| (k.clone(), m.snapshot())).collect(),
+            http_window: std::array::from_fn(|i| self.http_window[i].total(now)),
+            models: self.models.iter().map(|(k, m)| (k.clone(), m.snapshot(now))).collect(),
         }
     }
+}
+
+/// Scale a top-logit margin (a logit difference, `>= 0` by construction)
+/// to the milli-logit integers the windowed margin histogram buckets:
+/// `round(margin * 1000)`, negatives clamped to 0.
+pub fn margin_milli(margin: f32) -> u64 {
+    (margin.max(0.0) as f64 * 1000.0).round() as u64
 }
 
 /// Plain-value copy of a [`ServerTelemetry`] at one instant.
@@ -568,6 +628,9 @@ pub struct TelemetrySnapshot {
     pub connections: u64,
     /// Responses written by status, index-aligned with [`STATUS_CODES`].
     pub http_status: [u64; STATUS_CODES.len()],
+    /// Responses written inside the trailing window, index-aligned with
+    /// [`STATUS_CODES`].
+    pub http_window: [u64; STATUS_CODES.len()],
     /// Per-model counters, keyed by model key.
     pub models: BTreeMap<String, ModelSnapshot>,
 }
@@ -580,6 +643,8 @@ pub struct ModelSnapshot {
     pub by_status: [u64; STATUS_CODES.len()],
     /// One histogram per [`Stage`], indexed by `Stage as usize`.
     pub stages: [HistogramSnapshot; STAGES],
+    /// The model's windowed signal plane at snapshot time.
+    pub window: WindowSnapshot,
 }
 
 impl Default for ModelSnapshot {
@@ -587,6 +652,7 @@ impl Default for ModelSnapshot {
         ModelSnapshot {
             by_status: [0; STATUS_CODES.len()],
             stages: [HistogramSnapshot::default(); STAGES],
+            window: WindowSnapshot::default(),
         }
     }
 }
@@ -644,6 +710,30 @@ pub const M_DECODED_LAYERS: &str = "cgmq_engine_decoded_layers";
 /// `histogram` — per-stage request latency in seconds, labelled by model
 /// and stage.
 pub const M_STAGE_SECONDS: &str = "cgmq_stage_duration_seconds";
+/// `gauge` — HTTP responses written inside the trailing window, by
+/// status.
+pub const M_HTTP_RESPONSES_WINDOW: &str = "cgmq_http_responses_window";
+/// `gauge` — infer-route requests inside the trailing window, by model
+/// and status.
+pub const M_REQUESTS_WINDOW: &str = "cgmq_requests_window";
+/// `gauge` — request arrivals per second over the trailing window, by
+/// model.
+pub const M_ARRIVAL_RATE_WINDOW: &str = "cgmq_arrival_rate_window";
+/// `gauge` — queued requests per shard at scrape time, by model and
+/// shard.
+pub const M_QUEUE_DEPTH: &str = "cgmq_queue_depth";
+/// `gauge` — accepted-but-not-completed requests at scrape time, by
+/// model.
+pub const M_IN_FLIGHT: &str = "cgmq_in_flight";
+/// `histogram` — per-stage latency in seconds over the trailing window,
+/// by model and stage.
+pub const M_STAGE_WINDOW_SECONDS: &str = "cgmq_stage_window_seconds";
+/// `histogram` — whole-request latency in seconds over the trailing
+/// window, by model.
+pub const M_REQUEST_WINDOW_SECONDS: &str = "cgmq_request_window_seconds";
+/// `histogram` — top-logit confidence margin (logits) over the trailing
+/// window, by model.
+pub const M_MARGIN_WINDOW: &str = "cgmq_margin_window";
 
 fn esc_label(v: &str) -> String {
     let mut out = String::with_capacity(v.len());
@@ -671,18 +761,42 @@ fn header(out: &mut String, name: &str, kind: &str, help: &str) {
     out.push('\n');
 }
 
+/// Emit one Prometheus histogram series set (`_bucket`/`_sum`/`_count`)
+/// for `h` under `labels` (the label pairs without `le`). Bucket upper
+/// bounds and the sum are divided by `scale` — `1e6` converts the log₂
+/// microsecond buckets to seconds, `1e3` converts milli-logit margin
+/// buckets to logits.
+fn prom_histogram(out: &mut String, name: &str, labels: &str, h: &HistogramSnapshot, scale: f64) {
+    use std::fmt::Write as _;
+    let mut cum = 0u64;
+    for (b, &c) in h.counts.iter().enumerate() {
+        cum += c;
+        let le = bucket_upper_us(b) as f64 / scale;
+        let _ = writeln!(out, "{name}_bucket{{{labels},le=\"{le}\"}} {cum}");
+    }
+    let _ = writeln!(out, "{name}_bucket{{{labels},le=\"+Inf\"}} {}", h.count);
+    let _ = writeln!(out, "{name}_sum{{{labels}}} {}", h.sum_us as f64 / scale);
+    let _ = writeln!(out, "{name}_count{{{labels}}} {}", h.count);
+}
+
 /// Render the Prometheus text exposition (`GET /metrics`).
 ///
 /// Counter series are emitted for every taxonomy code and every model —
 /// zeros included — so scrapers and the `load-bench` cross-check always
-/// find a stable series set. Histogram buckets follow the Prometheus
-/// convention: cumulative counts with `le` upper bounds in *seconds*
-/// (the underlying buckets are log₂ microseconds).
+/// find a stable series set; the windowed `cgmq_*_window*` gauges and
+/// histograms follow the same contract and decay back to zero once the
+/// trailing window passes without traffic. Histogram buckets follow the
+/// Prometheus convention: cumulative counts with `le` upper bounds in
+/// *seconds* (the underlying buckets are log₂ microseconds), except the
+/// margin histogram whose bounds are logits (milli-logit buckets).
+/// `depths` carries per-model per-shard queue depths sampled at scrape
+/// time from the pool's admission counters.
 pub fn render_prometheus(
     snap: &TelemetrySnapshot,
     served: u64,
     routes: &BTreeMap<String, RouteStats>,
     decoded: &BTreeMap<String, u64>,
+    depths: &BTreeMap<String, Vec<u64>>,
 ) -> String {
     use std::fmt::Write as _;
     let mut out = String::with_capacity(4096);
@@ -742,33 +856,122 @@ pub fn render_prometheus(
     for (key, m) in &snap.models {
         let k = esc_label(key);
         for stage in Stage::ALL {
-            let h = &m.stages[stage as usize];
-            let s = stage.as_str();
-            let mut cum = 0u64;
-            for (b, &c) in h.counts.iter().enumerate() {
-                cum += c;
-                let le = bucket_upper_us(b) as f64 / 1e6;
-                let _ = writeln!(
-                    out,
-                    "{M_STAGE_SECONDS}_bucket{{model=\"{k}\",stage=\"{s}\",le=\"{le}\"}} {cum}"
-                );
-            }
+            let labels = format!("model=\"{k}\",stage=\"{}\"", stage.as_str());
+            prom_histogram(&mut out, M_STAGE_SECONDS, &labels, &m.stages[stage as usize], 1e6);
+        }
+    }
+
+    // -- windowed signal plane (gauges: values decay with the window) --
+
+    header(
+        &mut out,
+        M_HTTP_RESPONSES_WINDOW,
+        "gauge",
+        "HTTP responses written inside the trailing window, by status",
+    );
+    for (i, &code) in STATUS_CODES.iter().enumerate() {
+        let _ = writeln!(
+            out,
+            "{M_HTTP_RESPONSES_WINDOW}{{status=\"{code}\"}} {}",
+            snap.http_window[i]
+        );
+    }
+
+    header(
+        &mut out,
+        M_REQUESTS_WINDOW,
+        "gauge",
+        "infer-route requests inside the trailing window, by model and status",
+    );
+    for (key, m) in &snap.models {
+        let k = esc_label(key);
+        for (i, &code) in STATUS_CODES.iter().enumerate() {
             let _ = writeln!(
                 out,
-                "{M_STAGE_SECONDS}_bucket{{model=\"{k}\",stage=\"{s}\",le=\"+Inf\"}} {}",
-                h.count
-            );
-            let _ = writeln!(
-                out,
-                "{M_STAGE_SECONDS}_sum{{model=\"{k}\",stage=\"{s}\"}} {}",
-                h.sum_us as f64 / 1e6
-            );
-            let _ = writeln!(
-                out,
-                "{M_STAGE_SECONDS}_count{{model=\"{k}\",stage=\"{s}\"}} {}",
-                h.count
+                "{M_REQUESTS_WINDOW}{{model=\"{k}\",status=\"{code}\"}} {}",
+                m.window.by_status[i]
             );
         }
+    }
+
+    header(
+        &mut out,
+        M_ARRIVAL_RATE_WINDOW,
+        "gauge",
+        "request arrivals per second over the trailing window, by model",
+    );
+    for (key, m) in &snap.models {
+        let _ = writeln!(
+            out,
+            "{M_ARRIVAL_RATE_WINDOW}{{model=\"{}\"}} {}",
+            esc_label(key),
+            m.window.arrival_rate_per_sec()
+        );
+    }
+
+    header(
+        &mut out,
+        M_QUEUE_DEPTH,
+        "gauge",
+        "queued requests per shard at scrape time, by model and shard",
+    );
+    for (key, shards) in depths {
+        let k = esc_label(key);
+        for (shard, d) in shards.iter().enumerate() {
+            let _ = writeln!(out, "{M_QUEUE_DEPTH}{{model=\"{k}\",shard=\"{shard}\"}} {d}");
+        }
+    }
+
+    header(
+        &mut out,
+        M_IN_FLIGHT,
+        "gauge",
+        "accepted-but-not-completed requests at scrape time, by model",
+    );
+    for (key, r) in routes {
+        let _ = writeln!(
+            out,
+            "{M_IN_FLIGHT}{{model=\"{}\"}} {}",
+            esc_label(key),
+            r.accepted.saturating_sub(r.completed)
+        );
+    }
+
+    header(
+        &mut out,
+        M_STAGE_WINDOW_SECONDS,
+        "histogram",
+        "per-stage latency in seconds over the trailing window, by model and stage",
+    );
+    for (key, m) in &snap.models {
+        let k = esc_label(key);
+        for stage in Stage::ALL {
+            let labels = format!("model=\"{k}\",stage=\"{}\"", stage.as_str());
+            let h = &m.window.stages[stage as usize];
+            prom_histogram(&mut out, M_STAGE_WINDOW_SECONDS, &labels, h, 1e6);
+        }
+    }
+
+    header(
+        &mut out,
+        M_REQUEST_WINDOW_SECONDS,
+        "histogram",
+        "whole-request latency in seconds over the trailing window, by model",
+    );
+    for (key, m) in &snap.models {
+        let labels = format!("model=\"{}\"", esc_label(key));
+        prom_histogram(&mut out, M_REQUEST_WINDOW_SECONDS, &labels, &m.window.total, 1e6);
+    }
+
+    header(
+        &mut out,
+        M_MARGIN_WINDOW,
+        "histogram",
+        "top-logit confidence margin over the trailing window, by model",
+    );
+    for (key, m) in &snap.models {
+        let labels = format!("model=\"{}\"", esc_label(key));
+        prom_histogram(&mut out, M_MARGIN_WINDOW, &labels, &m.window.margin, 1e3);
     }
     out
 }

@@ -1,0 +1,424 @@
+//! Sliding-window telemetry: ring-of-epoch-buckets counters and
+//! histograms under the cumulative spine of [`super`].
+//!
+//! The cumulative counters answer "what happened since boot"; a scheduler
+//! or cascade router needs "what is happening *now*". Both
+//! [`WindowedCounter`] and [`WindowedHistogram`] keep a fixed ring of
+//! [`WINDOW_SLOTS`] epoch buckets and rotate **lazily**: there is no
+//! background thread — the recorder that first touches a slot whose epoch
+//! tag is stale claims it (one compare-exchange) and resets it in place.
+//! Rotation is therefore allocation-free and costs O(1) per record
+//! (O(`BUCKETS`) stores on the one record per epoch that wins a claim).
+//!
+//! Time comes exclusively from the caller as a [`Duration`] since the
+//! telemetry [`Clock`](super::Clock)'s epoch, so everything here is
+//! bit-deterministic under `ManualClock` — the rotation edge cases
+//! (jumps larger than the whole window, sub-epoch repeated reads,
+//! rotation racing `record`) are pinned by `tests/telemetry.rs`.
+//!
+//! **Consistency contract.** All cells are relaxed atomics; a reader
+//! racing recorders may tear by a few in-flight samples (same caveat as
+//! [`Histogram::snapshot`](super::Histogram::snapshot)). One additional
+//! documented race is inherent to lazy rotation: a recorder still writing
+//! into an epoch that just expired can have its sample either dropped
+//! with the dying slot or folded into the fresh one — bounded by the
+//! number of in-flight recorders, and impossible under test-sequenced
+//! `ManualClock` time, which is what the merge-consistency property test
+//! exploits.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::{bucket_index, HistogramSnapshot, BUCKETS, STAGES, STATUS_CODES};
+
+/// Epoch buckets per window ring. With [`DEFAULT_WINDOW_EPOCH`] this makes
+/// every windowed series cover the trailing
+/// `WINDOW_SLOTS × DEFAULT_WINDOW_EPOCH` = 10 s.
+pub const WINDOW_SLOTS: usize = 10;
+
+/// Production epoch length of every windowed series (1 s; the window is
+/// [`WINDOW_SLOTS`] of these).
+pub const DEFAULT_WINDOW_EPOCH: Duration = Duration::from_secs(1);
+
+/// Sliding-window event counter: a ring of [`WINDOW_SLOTS`] epoch
+/// buckets, each tagged with the epoch number it currently holds.
+///
+/// [`record`](Self::record) adds to the current epoch's bucket (claiming
+/// and resetting it first if its tag is stale); [`total`](Self::total)
+/// sums every bucket whose tag is still inside the window. A bucket
+/// whose epoch expired is simply *excluded* by readers until a future
+/// recorder reclaims it — reads never mutate, so an idle series decays
+/// to zero without any writer running.
+pub struct WindowedCounter {
+    epoch_us: u64,
+    /// Epoch tag of each slot (slot `i` legitimately holds only epochs
+    /// `≡ i (mod WINDOW_SLOTS)`, so a tag outside the trailing window
+    /// uniquely identifies a stale slot).
+    epochs: [AtomicU64; WINDOW_SLOTS],
+    /// Event count per slot (`cgmq analyze` counter-choke: mutated only
+    /// in [`record`](Self::record)).
+    hits: [AtomicU64; WINDOW_SLOTS],
+}
+
+impl WindowedCounter {
+    /// A counter over a `WINDOW_SLOTS × epoch` sliding window. A zero
+    /// epoch is clamped to 1 µs so epoch arithmetic never divides by 0.
+    pub fn new(epoch: Duration) -> Self {
+        WindowedCounter {
+            epoch_us: (epoch.as_micros() as u64).max(1),
+            epochs: std::array::from_fn(|_| AtomicU64::new(0)),
+            hits: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Full window span in microseconds.
+    pub fn window_us(&self) -> u64 {
+        self.epoch_us * WINDOW_SLOTS as u64
+    }
+
+    fn epoch_of(&self, now: Duration) -> u64 {
+        now.as_micros() as u64 / self.epoch_us
+    }
+
+    /// Count `n` events at time `now`. Sole mutation point of the ring
+    /// cells (counter-choke enforced).
+    pub fn record(&self, now: Duration, n: u64) {
+        let e = self.epoch_of(now);
+        let i = (e % WINDOW_SLOTS as u64) as usize;
+        // ordering: relaxed — epoch tags and cells are independent display
+        // counters; nothing is published under them (see module docs for
+        // the bounded lazy-rotation race).
+        let seen = self.epochs[i].load(Ordering::Relaxed);
+        if seen != e {
+            let tag = &self.epochs[i];
+            // ordering: relaxed — one CAS winner per epoch resets the
+            // slot; losers see the new tag and just add. A racing reader
+            // at worst sees the old value excluded or the fresh zero.
+            if tag.compare_exchange(seen, e, Ordering::Relaxed, Ordering::Relaxed).is_ok() {
+                // ordering: relaxed — reset of a slot this thread just
+                // claimed; readers key off the epoch tag, not this store.
+                self.hits[i].store(0, Ordering::Relaxed);
+            }
+        }
+        // ordering: relaxed — monotonic within-epoch counter, display only.
+        self.hits[i].fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Events inside the trailing window at time `now` (buckets whose
+    /// epoch tag expired are excluded without being touched).
+    pub fn total(&self, now: Duration) -> u64 {
+        let cur = self.epoch_of(now);
+        let mut sum = 0u64;
+        for i in 0..WINDOW_SLOTS {
+            // ordering: relaxed — display read; a torn tag/value pair only
+            // mis-places a handful of in-flight samples.
+            let tag = self.epochs[i].load(Ordering::Relaxed);
+            if tag <= cur && cur - tag < WINDOW_SLOTS as u64 {
+                // ordering: relaxed — display read of a slot counter.
+                sum += self.hits[i].load(Ordering::Relaxed);
+            }
+        }
+        sum
+    }
+
+    /// Events per second over the window at time `now` — the arrival-rate
+    /// estimator (`total / window`; the current epoch is partial, so the
+    /// estimate lags a ramp by at most one epoch).
+    pub fn rate_per_sec(&self, now: Duration) -> f64 {
+        self.total(now) as f64 * 1e6 / self.window_us() as f64
+    }
+}
+
+/// One epoch slot of a [`WindowedHistogram`] — the same cell layout as the
+/// cumulative [`Histogram`](super::Histogram), reset in place on claim.
+struct WindowSlot {
+    /// Log₂ buckets (counter-choke: mutated only in `record`).
+    cells: [AtomicU64; BUCKETS],
+    /// Samples in this slot (counter-choke: mutated only in `record`).
+    recorded: AtomicU64,
+    /// Sample sum in this slot (counter-choke: mutated only in `record`).
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for WindowSlot {
+    fn default() -> Self {
+        WindowSlot {
+            cells: std::array::from_fn(|_| AtomicU64::new(0)),
+            recorded: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+}
+
+impl WindowSlot {
+    /// In-place reset by the claim winner (stores only; readers key off
+    /// the ring's epoch tag).
+    fn reset(&self) {
+        for c in &self.cells {
+            // ordering: relaxed — reset of a slot the caller just claimed.
+            c.store(0, Ordering::Relaxed);
+        }
+        // ordering: relaxed — as above.
+        self.recorded.store(0, Ordering::Relaxed);
+        // ordering: relaxed — as above.
+        self.sum_us.store(0, Ordering::Relaxed);
+        // ordering: relaxed — as above.
+        self.max_us.store(0, Ordering::Relaxed);
+    }
+
+    /// Fold this slot into `acc` (display read).
+    fn merge_into(&self, acc: &mut HistogramSnapshot) {
+        for (i, c) in self.cells.iter().enumerate() {
+            // ordering: relaxed — display read of a monotonic counter.
+            acc.counts[i] += c.load(Ordering::Relaxed);
+        }
+        // ordering: relaxed — display read of a monotonic counter.
+        acc.count += self.recorded.load(Ordering::Relaxed);
+        // ordering: relaxed — display read of a monotonic counter.
+        acc.sum_us += self.sum_us.load(Ordering::Relaxed);
+        // ordering: relaxed — display read of a lossy running max.
+        acc.max_us = acc.max_us.max(self.max_us.load(Ordering::Relaxed));
+    }
+}
+
+/// Sliding-window log₂ histogram: the value distribution of the trailing
+/// window, with the same bucket geometry (and therefore the same
+/// [`quantile_bounds`](HistogramSnapshot::quantile_bounds) bracket
+/// guarantee) as the cumulative [`Histogram`](super::Histogram).
+///
+/// Values are plain `u64`s, not `Duration`s: the stage histograms record
+/// microseconds, the confidence-margin histogram records milli-logits —
+/// the window layer does not care.
+pub struct WindowedHistogram {
+    epoch_us: u64,
+    epochs: [AtomicU64; WINDOW_SLOTS],
+    ring: [WindowSlot; WINDOW_SLOTS],
+}
+
+impl WindowedHistogram {
+    /// A histogram over a `WINDOW_SLOTS × epoch` sliding window.
+    pub fn new(epoch: Duration) -> Self {
+        WindowedHistogram {
+            epoch_us: (epoch.as_micros() as u64).max(1),
+            epochs: std::array::from_fn(|_| AtomicU64::new(0)),
+            ring: std::array::from_fn(|_| WindowSlot::default()),
+        }
+    }
+
+    /// Full window span in microseconds.
+    pub fn window_us(&self) -> u64 {
+        self.epoch_us * WINDOW_SLOTS as u64
+    }
+
+    fn epoch_of(&self, now: Duration) -> u64 {
+        now.as_micros() as u64 / self.epoch_us
+    }
+
+    /// Record one sample with value `v` at time `now`. Sole mutation
+    /// point of the slot counters (counter-choke enforced).
+    pub fn record(&self, now: Duration, v: u64) {
+        let e = self.epoch_of(now);
+        let i = (e % WINDOW_SLOTS as u64) as usize;
+        // ordering: relaxed — same lazy-rotation protocol as
+        // WindowedCounter::record (see module docs for the bounded race).
+        let seen = self.epochs[i].load(Ordering::Relaxed);
+        if seen != e {
+            let tag = &self.epochs[i];
+            // ordering: relaxed — one CAS winner per epoch resets the slot.
+            if tag.compare_exchange(seen, e, Ordering::Relaxed, Ordering::Relaxed).is_ok() {
+                self.ring[i].reset();
+            }
+        }
+        let slot = &self.ring[i];
+        let b = bucket_index(v);
+        // ordering: relaxed — independent monotonic counters; readers only
+        // snapshot for display.
+        slot.cells[b].fetch_add(1, Ordering::Relaxed);
+        // ordering: relaxed — same monotonic-counter contract as cells.
+        slot.recorded.fetch_add(1, Ordering::Relaxed);
+        // ordering: relaxed — same monotonic-counter contract as cells.
+        slot.sum_us.fetch_add(v, Ordering::Relaxed);
+        // ordering: relaxed — lossy running max, display only.
+        slot.max_us.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Merge every in-window slot into one [`HistogramSnapshot`] at time
+    /// `now`. Expired slots are excluded untouched, so an idle window
+    /// snapshots as empty (`count == 0`,
+    /// [`quantile_bounds`](HistogramSnapshot::quantile_bounds) `None`).
+    pub fn snapshot(&self, now: Duration) -> HistogramSnapshot {
+        let cur = self.epoch_of(now);
+        let mut acc = HistogramSnapshot::default();
+        for i in 0..WINDOW_SLOTS {
+            // ordering: relaxed — display read of the slot's epoch tag.
+            let tag = self.epochs[i].load(Ordering::Relaxed);
+            if tag <= cur && cur - tag < WINDOW_SLOTS as u64 {
+                self.ring[i].merge_into(&mut acc);
+            }
+        }
+        acc
+    }
+}
+
+/// One model's windowed signal plane: arrivals, responses by status, the
+/// per-stage and whole-request latency distributions, and the top-logit
+/// confidence margin distribution (milli-logits) — everything ROADMAP's
+/// SLA-aware batching and cascade routing read live.
+pub struct ModelWindow {
+    /// Keyed infer requests entering admission (req/s estimator).
+    pub(super) arrivals: WindowedCounter,
+    /// Infer responses by status, index-aligned with
+    /// [`STATUS_CODES`](super::STATUS_CODES).
+    pub(super) by_status: [WindowedCounter; STATUS_CODES.len()],
+    /// Per-stage latency (µs), beside the cumulative stage histograms.
+    pub(super) stages: [WindowedHistogram; STAGES],
+    /// Whole-request latency (µs; sum of the touched stages) — what the
+    /// `/livez` p99 bound is checked against.
+    pub(super) total: WindowedHistogram,
+    /// Top-logit margin (milli-logits) of 200 replies — the cascade
+    /// routing confidence signal.
+    pub(super) margin: WindowedHistogram,
+}
+
+impl ModelWindow {
+    /// A windowed plane with `epoch`-sized buckets everywhere.
+    pub fn new(epoch: Duration) -> Self {
+        ModelWindow {
+            arrivals: WindowedCounter::new(epoch),
+            by_status: std::array::from_fn(|_| WindowedCounter::new(epoch)),
+            stages: std::array::from_fn(|_| WindowedHistogram::new(epoch)),
+            total: WindowedHistogram::new(epoch),
+            margin: WindowedHistogram::new(epoch),
+        }
+    }
+
+    /// Copy the in-window state out at time `now`.
+    pub fn snapshot(&self, now: Duration) -> WindowSnapshot {
+        WindowSnapshot {
+            window_us: self.arrivals.window_us(),
+            arrivals: self.arrivals.total(now),
+            by_status: std::array::from_fn(|i| self.by_status[i].total(now)),
+            stages: std::array::from_fn(|i| self.stages[i].snapshot(now)),
+            total: self.total.snapshot(now),
+            margin: self.margin.snapshot(now),
+        }
+    }
+}
+
+/// Plain-value copy of a [`ModelWindow`] at one instant. Integer-only so
+/// model snapshots stay `Eq`-comparable; rates are derived on demand.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WindowSnapshot {
+    /// Window span in microseconds (all series in one snapshot share it).
+    pub window_us: u64,
+    /// Keyed infer requests that entered admission inside the window.
+    pub arrivals: u64,
+    /// Infer responses by status inside the window, index-aligned with
+    /// [`STATUS_CODES`](super::STATUS_CODES).
+    pub by_status: [u64; STATUS_CODES.len()],
+    /// Per-stage latency distribution inside the window (µs).
+    pub stages: [HistogramSnapshot; STAGES],
+    /// Whole-request latency distribution inside the window (µs).
+    pub total: HistogramSnapshot,
+    /// Top-logit margin distribution inside the window (milli-logits).
+    pub margin: HistogramSnapshot,
+}
+
+impl Default for WindowSnapshot {
+    fn default() -> Self {
+        WindowSnapshot {
+            window_us: DEFAULT_WINDOW_EPOCH.as_micros() as u64 * WINDOW_SLOTS as u64,
+            arrivals: 0,
+            by_status: [0; STATUS_CODES.len()],
+            stages: [HistogramSnapshot::default(); STAGES],
+            total: HistogramSnapshot::default(),
+            margin: HistogramSnapshot::default(),
+        }
+    }
+}
+
+impl WindowSnapshot {
+    /// Arrival-rate estimate in requests/second over the window.
+    pub fn arrival_rate_per_sec(&self) -> f64 {
+        self.arrivals as f64 * 1e6 / self.window_us.max(1) as f64
+    }
+
+    /// Responses inside the window across every status.
+    pub fn responses(&self) -> u64 {
+        self.by_status.iter().sum()
+    }
+
+    /// In-window count for one status code (0 outside the taxonomy).
+    pub fn status_count(&self, code: u16) -> u64 {
+        STATUS_CODES
+            .iter()
+            .position(|&c| c == code)
+            .map_or(0, |i| self.by_status[i])
+    }
+
+    /// In-window shed fraction: 429s over all responses (0 when idle).
+    pub fn shed_rate(&self) -> f64 {
+        let total = self.responses();
+        if total == 0 {
+            0.0
+        } else {
+            self.status_count(429) as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const E: Duration = Duration::from_micros(1_000); // 1 ms epochs
+
+    #[test]
+    fn counter_sums_only_the_trailing_window() {
+        let c = WindowedCounter::new(E);
+        let mut now = Duration::ZERO;
+        c.record(now, 3);
+        now += E; // next epoch
+        c.record(now, 4);
+        assert_eq!(c.total(now), 7);
+        // Jump to the last epoch that still sees the first record.
+        now = E * (WINDOW_SLOTS as u32 - 1);
+        assert_eq!(c.total(now), 7);
+        now += E; // first record expires, second survives
+        assert_eq!(c.total(now), 4);
+    }
+
+    #[test]
+    fn slot_reuse_resets_the_stale_bucket() {
+        let c = WindowedCounter::new(E);
+        c.record(Duration::ZERO, 10);
+        // Same slot index, WINDOW_SLOTS epochs later: must not inherit 10.
+        let later = E * WINDOW_SLOTS as u32;
+        c.record(later, 1);
+        assert_eq!(c.total(later), 1);
+    }
+
+    #[test]
+    fn histogram_window_decays_to_empty() {
+        let h = WindowedHistogram::new(E);
+        h.record(Duration::ZERO, 500);
+        h.record(Duration::ZERO, 2_000);
+        let s = h.snapshot(Duration::ZERO);
+        assert_eq!(s.count, 2);
+        assert_eq!(s.sum_us, 2_500);
+        let gone = h.snapshot(E * WINDOW_SLOTS as u32);
+        assert_eq!(gone, HistogramSnapshot::default());
+        assert_eq!(gone.quantile_bounds(0.99), None);
+    }
+
+    #[test]
+    fn rate_is_total_over_window_span() {
+        let c = WindowedCounter::new(Duration::from_millis(100));
+        let now = Duration::from_millis(50);
+        c.record(now, 5);
+        // 5 events over a 1 s window (10 × 100 ms).
+        assert!((c.rate_per_sec(now) - 5.0).abs() < 1e-9);
+    }
+}

@@ -10,6 +10,7 @@
 //!   route-bench  multi-model router: routing, bounded queues + shed, hot swap
 //!   serve      HTTP/1.1 network front over the router (429 on overload)
 //!   load-bench loopback load generator against a running `serve`
+//!   watch      live per-model table polled from a running `serve`'s /stats
 //!   analyze    static-analysis gate over the crate's own source
 //!   table1/2/3 regenerate the paper's tables
 //!   table-deploy packed-model size + engine throughput table
@@ -74,16 +75,22 @@ COMMANDS
   serve      --models <key=m.cgmqm,...> [--addr <host:port>] [--workers <n>]
              [--batch <b>] [--deadline-us <d>] [--queue-cap <c>]
              [--max-body-kib <k>] [--addr-file <path>]
+             [--livez-shed-rate <r>] [--livez-p99-us <us>]
              (HTTP/1.1 front over the router: POST /v1/models/{key}/infer,
-             GET /healthz, GET /stats, GET /metrics (Prometheus text),
-             POST /admin/shutdown; overload is answered 429 + Retry-After;
-             every infer response carries X-Request-Id; --addr 127.0.0.1:0
-             picks an ephemeral port, written to --addr-file; on shutdown
-             the server drains, prints final stats JSON and exits non-zero
-             if any accepted request was lost)
+             GET /healthz, GET /livez, GET /stats, GET /metrics
+             (Prometheus text), POST /admin/shutdown; overload is answered
+             429 + Retry-After; every infer response carries X-Request-Id;
+             --addr 127.0.0.1:0 picks an ephemeral port, written to
+             --addr-file; /livez answers 503 when the trailing-window shed
+             rate reaches --livez-shed-rate (default 0.5; > 1.0 disables)
+             or the windowed p99 latency bound exceeds --livez-p99-us
+             (default 0 = disabled); on shutdown the server drains, prints
+             final stats JSON and exits non-zero if any accepted request
+             was lost)
   load-bench --addr <host:port> [--key <k>] [--requests <n>] [--clients <n>]
              [--rate <rps>] [--seed <s>] [--verify-model <m.cgmqm>]
-             [--min-shed <n>] [--require-stages] [--shutdown]
+             [--min-shed <n>] [--require-stages] [--require-window]
+             [--shutdown]
              (loopback load generator: open-loop client threads, 429s are
              counted and retried until accepted; --verify-model pins every
              HTTP response bit-identical to the direct engine output;
@@ -91,8 +98,17 @@ COMMANDS
              /metrics and exits non-zero unless the server-side accept/shed
              counters match the client tallies bit-exactly;
              --require-stages additionally asserts every stage histogram
-             recorded samples; --shutdown drains the server afterwards;
-             prints throughput/shed/latency percentiles as JSON)
+             recorded samples; --require-window additionally asserts the
+             windowed signal plane is live (positive arrival rate, margin
+             samples recorded, /livez answering 200); --shutdown drains
+             the server afterwards; prints throughput/shed/latency
+             percentiles as JSON)
+  watch      --addr <host:port> [--interval <s>] [--once]
+             (polls a running serve's GET /stats every --interval seconds
+             — default 2 — and renders the windowed signal plane as a
+             per-model table: arrival rate, shed %, queue depth, in-flight,
+             p50/p99 latency bounds, margin p10; empty windowed histograms
+             render as \"—\"; --once prints a single frame and exits)
   analyze    [--root <repo>] [--json]
              (static-analysis gate over the crate's own source: panic
              hygiene in deploy/ hot paths, atomic-ordering justifications,
@@ -148,6 +164,7 @@ fn run(argv: &[String]) -> Result<()> {
         "route-bench" => cmd_route_bench(&args),
         "serve" => cmd_serve(&args),
         "load-bench" => cmd_load_bench(&args),
+        "watch" => cmd_watch(&args),
         "analyze" => cmd_analyze(&args),
         "fixed-qat" => cmd_fixed_qat(&args),
         "myqasr" => cmd_myqasr(&args),
@@ -539,6 +556,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_cap = args.get_usize("queue-cap")?.unwrap_or(32);
     let max_body_kib = args.get_usize("max-body-kib")?.unwrap_or(1024).max(1);
     let addr_file = args.get("addr-file").map(str::to_string);
+    // /livez degradation thresholds over the trailing window; the shed-rate
+    // default (0.5) trips when half the windowed traffic is 429s, and the
+    // p99 bound is disabled (0) unless asked for.
+    let livez_shed_rate = args.get_f64("livez-shed-rate")?.unwrap_or(0.5);
+    let livez_p99_us = args.get_usize("livez-p99-us")?.unwrap_or(0) as u64;
     args.finish()?;
     let mut engines = Vec::with_capacity(models.len());
     for (key, path) in models {
@@ -554,6 +576,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_cap,
         },
         max_body: max_body_kib << 10,
+        livez_shed_rate,
+        livez_p99_us,
         ..ServerConfig::default()
     };
     let keys: Vec<String> = engines.iter().map(|(k, _)| k.clone()).collect();
@@ -589,6 +613,7 @@ fn cmd_load_bench(args: &Args) -> Result<()> {
     let verify_model = args.get("verify-model").map(std::path::PathBuf::from);
     let min_shed = args.get_usize("min-shed")?.unwrap_or(0) as u64;
     let require_stages = args.get_bool("require-stages");
+    let require_window = args.get_bool("require-window");
     let shutdown = args.get_bool("shutdown");
     args.finish()?;
     let spec = bench_harness::LoadBenchSpec {
@@ -600,6 +625,7 @@ fn cmd_load_bench(args: &Args) -> Result<()> {
         seed,
         verify_model,
         require_stages,
+        require_window,
         shutdown,
     };
     let report = bench_harness::load_bench(&spec)?;
@@ -611,6 +637,28 @@ fn cmd_load_bench(args: &Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn cmd_watch(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr").map(str::to_string) else {
+        bail!("watch needs --addr <host:port> (from `cgmq serve`)")
+    };
+    let interval_s = args.get_f64("interval")?.unwrap_or(2.0);
+    let once = args.get_bool("once");
+    args.finish()?;
+    if !once && !(interval_s > 0.0) {
+        bail!("--interval must be positive (got {interval_s})");
+    }
+    loop {
+        // Each frame is one /stats poll rendered as a per-model table;
+        // errors (server restarting, connection refused) end the watch
+        // rather than spinning on a dead endpoint.
+        println!("{}", bench_harness::watch_once(&addr)?);
+        if once {
+            return Ok(());
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval_s));
+    }
 }
 
 fn cmd_analyze(args: &Args) -> Result<()> {

@@ -269,6 +269,36 @@ fn metrics_missing_markers_is_flagged() {
     assert!(findings[0].message.contains("analyze:metrics"), "{}", findings[0].message);
 }
 
+#[test]
+fn metrics_scope_spans_the_window_submodule_when_sources_are_concatenated() {
+    // `analyze_crate` feeds `check_metrics` the concatenation of
+    // `telemetry.rs` and `telemetry/window.rs` (joined with '\n'), so a
+    // metric name defined only in the window submodule is in scope.
+    // Mirror that exact composition here.
+    let window_src = "//! Window submodule fixture.\n\
+                      pub const M_REQUESTS_WINDOW: &str = \"cgmq_requests_window\";\n";
+    let combined =
+        format!("{}\n{}", include_str!("fixtures/analyze/metrics_src.rs"), window_src);
+    let readme = "# Fixture README\n\n\
+                  <!-- analyze:metrics:begin -->\n\
+                  | metric | type |\n\
+                  |---|---|\n\
+                  | `cgmq_connections_total` | counter |\n\
+                  | `cgmq_requests_total` | counter |\n\
+                  | `cgmq_stage_duration_seconds` | histogram |\n\
+                  | `cgmq_requests_window` | windowed counter |\n\
+                  <!-- analyze:metrics:end -->\n";
+    assert!(rules::check_metrics("telemetry.rs", &combined, "README.md", readme).is_empty());
+
+    // Dropping the window row flags the window-defined name — proof that
+    // the concatenated scope is what the rule checks in both directions.
+    let stale = readme.replace("| `cgmq_requests_window` | windowed counter |\n", "");
+    let findings = rules::check_metrics("telemetry.rs", &combined, "README.md", &stale);
+    assert_eq!(rule_ids(&findings), vec![rules::RULE_METRICS], "{findings:#?}");
+    assert!(findings[0].message.contains("cgmq_requests_window"), "{}", findings[0].message);
+    assert_eq!(findings[0].file, "telemetry.rs");
+}
+
 // ----------------------------------------------------------- self-check
 
 #[test]

@@ -6,6 +6,16 @@
 //! layer, a graceful shutdown drains every accepted request, and the
 //! three telemetry surfaces (`/metrics`, `/stats`, the final
 //! `ServerReport`) expose one bit-exact truth.
+//!
+//! The windowed signal plane gets the same deterministic treatment via an
+//! injected `ManualClock` (`Server::bind_with_clock`): after traffic,
+//! advancing the clock past the trailing window must decay **every**
+//! windowed series to exactly zero while the cumulative counters keep the
+//! history; an idle model carries the full zeros-included shape on
+//! `/stats`, symmetric with `/metrics`; `GET /livez` flips 200 → 503 when
+//! the windowed shed-rate or p99 threshold trips; and the `cgmq watch`
+//! frame is pinned byte-exactly, including the `—` sentinel the
+//! empty-histogram contract mandates for quantiles with zero samples.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -488,4 +498,282 @@ fn metrics_stats_and_report_expose_one_bit_exact_truth() {
     assert_eq!(series[M_SERVED] as u64, requests as u64);
     assert_eq!(stats.get("served").unwrap().as_usize().unwrap(), requests);
     assert_eq!(report.served, requests as u64);
+}
+
+#[test]
+fn windowed_series_decay_to_zero_while_cumulative_counters_persist() {
+    use cgmq::bench_harness::parse_prometheus;
+    use cgmq::deploy::telemetry::{
+        M_ARRIVAL_RATE_WINDOW, M_MARGIN_WINDOW, M_REQUESTS, M_REQUESTS_WINDOW,
+        M_REQUEST_WINDOW_SECONDS, STATUS_CODES,
+    };
+    use cgmq::deploy::ManualClock;
+
+    let arch = mlp();
+    let in_len = arch.input_len();
+    let requests = 5;
+    let data = cgmq::data::Dataset::synth(31, requests);
+    let eng = engine(&arch, 7);
+
+    // Inject a manual telemetry clock: all traffic lands in window
+    // epoch 0, and "idle past the window" is an explicit `advance` —
+    // no wall-clock sleeps, fully deterministic decay.
+    let clock = Arc::new(ManualClock::default());
+    let server = Server::bind_with_clock(
+        "127.0.0.1:0",
+        vec![("m".to_string(), Arc::clone(&eng))],
+        server_cfg(2, 0, 4, Duration::from_millis(1)),
+        clock.clone(),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+    for i in 0..requests {
+        let body = infer_body(&data.images[i * in_len..(i + 1) * in_len]);
+        let (status, text) = client.request("POST", "/v1/models/m/infer", Some(&body)).unwrap();
+        assert_eq!(status, 200, "request {i}: {text}");
+    }
+
+    // While the window is live, the windowed series carry the traffic.
+    let n = requests as f64;
+    let (status, text) = client.request("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let live = parse_prometheus(&text);
+    assert_eq!(live[&format!("{M_REQUESTS}{{model=\"m\",status=\"200\"}}")], n);
+    assert_eq!(live[&format!("{M_REQUESTS_WINDOW}{{model=\"m\",status=\"200\"}}")], n);
+    assert!(live[&format!("{M_ARRIVAL_RATE_WINDOW}{{model=\"m\"}}")] > 0.0);
+    assert_eq!(live[&format!("{M_MARGIN_WINDOW}_count{{model=\"m\"}}")], n);
+    assert_eq!(live[&format!("{M_REQUEST_WINDOW_SECONDS}_count{{model=\"m\"}}")], n);
+
+    // Idle past the whole trailing window: every windowed series decays
+    // to exactly zero while the cumulative counters keep the history.
+    clock.advance(Duration::from_secs(60));
+    let (status, text) = client.request("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let after = parse_prometheus(&text);
+    for &code in STATUS_CODES.iter() {
+        assert_eq!(
+            after[&format!("{M_REQUESTS_WINDOW}{{model=\"m\",status=\"{code}\"}}")],
+            0.0,
+            "windowed status {code} must decay to zero"
+        );
+    }
+    assert_eq!(after[&format!("{M_ARRIVAL_RATE_WINDOW}{{model=\"m\"}}")], 0.0);
+    assert_eq!(after[&format!("{M_MARGIN_WINDOW}_count{{model=\"m\"}}")], 0.0);
+    assert_eq!(after[&format!("{M_REQUEST_WINDOW_SECONDS}_count{{model=\"m\"}}")], 0.0);
+    assert_eq!(
+        after[&format!("{M_REQUESTS}{{model=\"m\",status=\"200\"}}")],
+        n,
+        "cumulative counters must survive the window"
+    );
+
+    // /stats agrees: an empty window section (with the null quantile
+    // sentinel, not a fake zero bound) beside retained cumulative rows.
+    let (status, text) = client.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    let stats = json::parse(&text).unwrap();
+    let m = stats.get("models").unwrap().get("m").unwrap().clone();
+    assert_eq!(m.get("statuses").unwrap().get("200").unwrap().as_usize().unwrap(), requests);
+    let w = m.get("window").unwrap();
+    assert_eq!(w.get("arrivals").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(w.get("statuses").unwrap().get("200").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(w.get("total").unwrap().get("count").unwrap().as_usize().unwrap(), 0);
+    assert!(matches!(w.get("total").unwrap().opt("p99_le"), Some(Json::Null)));
+    assert_eq!(w.get("margin").unwrap().get("count").unwrap().as_usize().unwrap(), 0);
+    assert!(matches!(w.get("margin").unwrap().opt("p10_le"), Some(Json::Null)));
+
+    // An idle window is healthy by definition: /livez answers 200.
+    let (status, text) = client.request("GET", "/livez", None).unwrap();
+    assert_eq!(status, 200, "{text}");
+    assert!(text.contains("\"live\""), "{text}");
+
+    drop(client);
+    server.finish().unwrap().verify_drained().unwrap();
+}
+
+#[test]
+fn stats_and_metrics_include_zero_series_for_an_idle_model() {
+    use cgmq::bench_harness::parse_prometheus;
+    use cgmq::deploy::telemetry::{
+        M_ARRIVAL_RATE_WINDOW, M_REQUESTS, M_REQUESTS_WINDOW, STATUS_CODES,
+    };
+
+    let arch = mlp();
+    let in_len = arch.input_len();
+    let server = Server::bind(
+        "127.0.0.1:0",
+        vec![("m".to_string(), engine(&arch, 7)), ("z".to_string(), engine(&arch, 9))],
+        server_cfg(1, 0, 4, Duration::from_millis(1)),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    // Traffic only to "m"; "z" never sees a request.
+    let half = vec![0.5f32; in_len];
+    let (status, _) =
+        client.request("POST", "/v1/models/m/infer", Some(&infer_body(&half))).unwrap();
+    assert_eq!(status, 200);
+
+    // /stats: the idle model carries the full zeros-included shape —
+    // every status over the whole taxonomy, the window section, the
+    // gauges — symmetric with what /metrics emits for it.
+    let (status, text) = client.request("GET", "/stats", None).unwrap();
+    assert_eq!(status, 200);
+    let stats = json::parse(&text).unwrap();
+    let z = stats.get("models").unwrap().get("z").unwrap().clone();
+    let zw = z.get("window").unwrap();
+    for &code in STATUS_CODES.iter() {
+        let key = code.to_string();
+        assert_eq!(
+            z.get("statuses").unwrap().get(&key).unwrap().as_usize().unwrap(),
+            0,
+            "idle model cumulative status {code}"
+        );
+        assert_eq!(
+            zw.get("statuses").unwrap().get(&key).unwrap().as_usize().unwrap(),
+            0,
+            "idle model windowed status {code}"
+        );
+    }
+    assert_eq!(zw.get("arrivals").unwrap().as_usize().unwrap(), 0);
+    assert!(
+        matches!(zw.get("margin").unwrap().opt("p10_le"), Some(Json::Null)),
+        "an empty histogram must surface the null sentinel, never a (0, 0) bound"
+    );
+    assert_eq!(z.get("in_flight").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(z.get("queue_depth").unwrap().as_arr().unwrap().len(), 1, "one shard per worker");
+
+    // /metrics honors the same contract: the idle model's series exist
+    // at zero rather than being omitted.
+    let (status, text) = client.request("GET", "/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    let series = parse_prometheus(&text);
+    assert_eq!(series[&format!("{M_REQUESTS}{{model=\"z\",status=\"200\"}}")], 0.0);
+    assert_eq!(series[&format!("{M_REQUESTS_WINDOW}{{model=\"z\",status=\"200\"}}")], 0.0);
+    assert_eq!(series[&format!("{M_ARRIVAL_RATE_WINDOW}{{model=\"z\"}}")], 0.0);
+
+    drop(client);
+    server.finish().unwrap().verify_drained().unwrap();
+}
+
+#[test]
+fn livez_degrades_on_windowed_shed_rate_and_p99_threshold() {
+    let arch = mlp();
+    let in_len = arch.input_len();
+    let eng = engine(&arch, 7);
+    let data = cgmq::data::Dataset::synth(37, 4);
+
+    // Shed-rate trip: the single-slot shape from the saturating test
+    // plus a hair-trigger threshold, so one 429 in the trailing window
+    // is enough to degrade.
+    let mut cfg = server_cfg(1, 1, 64, Duration::from_millis(100));
+    cfg.livez_shed_rate = 0.01;
+    let server =
+        Server::bind("127.0.0.1:0", vec![("m".to_string(), Arc::clone(&eng))], cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+
+    // Idle: healthy.
+    let (status, text) = client.request("GET", "/livez", None).unwrap();
+    assert_eq!(status, 200, "{text}");
+    assert!(text.contains("\"live\""), "{text}");
+
+    // Two submissions overlapping the single in-flight slot force at
+    // least one shed into the live window.
+    let primer = std::thread::spawn({
+        let (addr, images) = (addr.clone(), data.images.clone());
+        move || {
+            let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+            submit_until_accepted(&mut client, &infer_body(&images[..in_len])).0
+        }
+    });
+    std::thread::sleep(Duration::from_millis(30));
+    let (sheds, _) =
+        submit_until_accepted(&mut client, &infer_body(&data.images[in_len..2 * in_len]));
+    let primer_sheds = primer.join().unwrap();
+    assert!(sheds + primer_sheds >= 1, "overlapping submissions must shed");
+
+    let (status, text) = client.request("GET", "/livez", None).unwrap();
+    assert_eq!(status, 503, "{text}");
+    assert!(text.contains("degraded") && text.contains("windowed shed rate"), "{text}");
+
+    drop(client);
+    server.finish().unwrap().verify_drained().unwrap();
+
+    // p99 trip: a 1µs ceiling no real request can meet, with the shed
+    // check disabled (threshold above any possible rate).
+    let mut cfg = server_cfg(1, 0, 4, Duration::from_millis(1));
+    cfg.livez_shed_rate = 2.0;
+    cfg.livez_p99_us = 1;
+    let server =
+        Server::bind("127.0.0.1:0", vec![("m".to_string(), Arc::clone(&eng))], cfg).unwrap();
+    let addr = server.local_addr().to_string();
+    let mut client = HttpClient::connect(&addr, Duration::from_secs(5)).unwrap();
+    let (status, _) = client
+        .request("POST", "/v1/models/m/infer", Some(&infer_body(&data.images[..in_len])))
+        .unwrap();
+    assert_eq!(status, 200);
+    let (status, text) = client.request("GET", "/livez", None).unwrap();
+    assert_eq!(status, 503, "{text}");
+    assert!(text.contains("degraded") && text.contains("windowed p99 bound"), "{text}");
+
+    drop(client);
+    server.finish().unwrap().verify_drained().unwrap();
+}
+
+#[test]
+fn watch_frame_renders_idle_sentinels_and_known_numbers_exactly() {
+    use cgmq::bench_harness::{render_watch_table, watch_once};
+
+    // End to end against an idle server: the frame is fully
+    // deterministic, with the em-dash sentinel for every quantile of an
+    // empty windowed histogram.
+    let arch = mlp();
+    let server = Server::bind(
+        "127.0.0.1:0",
+        vec![("m".to_string(), engine(&arch, 7))],
+        server_cfg(1, 0, 4, Duration::from_millis(1)),
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+    let frame = watch_once(&addr).unwrap();
+    assert_eq!(
+        frame,
+        "window 10s · served 0\n\
+         | model | req/s | shed % | queue | in-flight | p50 ms | p99 ms | margin p10 |\n\
+         |-------|-------|--------|-------|-----------|--------|--------|------------|\n\
+         | m | 0.0 | 0.0 | 0 | 0 | — | — | — |\n"
+    );
+    server.finish().unwrap().verify_drained().unwrap();
+
+    // A fixture body with known numbers pins the renderer's unit
+    // conversions (µs -> ms, milli-logits -> logits) and the shed %.
+    let fixture = r#"{
+        "served": 512,
+        "models": {
+            "m": {
+                "in_flight": 2,
+                "queue_depth": [1, 2],
+                "window": {
+                    "window_us": 10000000,
+                    "arrivals": 35,
+                    "arrival_rate_per_sec": 3.5,
+                    "shed_rate": 0.25,
+                    "total": {"count": 30, "sum": 60000, "max": 16000,
+                              "p50_le": 2048, "p99_le": 16384},
+                    "margin": {"count": 30, "sum": 30000, "max": 4096,
+                               "p10_le": 512}
+                }
+            }
+        }
+    }"#;
+    let table = render_watch_table(&json::parse(fixture).unwrap()).unwrap();
+    assert_eq!(
+        table,
+        "window 10s · served 512\n\
+         | model | req/s | shed % | queue | in-flight | p50 ms | p99 ms | margin p10 |\n\
+         |-------|-------|--------|-------|-----------|--------|--------|------------|\n\
+         | m | 3.5 | 25.0 | 3 | 2 | 2.05 | 16.38 | 0.512 |\n"
+    );
 }

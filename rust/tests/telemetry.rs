@@ -5,13 +5,25 @@
 //! percentile computed by the `percentiles_ms` oracle on the same
 //! samples. Trace span math is pinned with a [`ManualClock`] so every
 //! asserted number is deterministic.
+//!
+//! The windowed layer (`telemetry::window`) gets the same treatment
+//! under explicit caller-supplied time: a seeded stream of (time, value)
+//! samples spanning several windows must snapshot bit-identically to a
+//! cumulative histogram fed only the retained samples (the
+//! merge-consistency property), windowed `quantile_bounds` must bracket
+//! the exact oracle over those retained samples, and the rotation edge
+//! cases — jumps past the whole window, sub-epoch repeated reads — are
+//! pinned explicitly.
 
 use std::sync::Arc;
 use std::time::Duration;
 
 use cgmq::bench_harness::percentiles_ms;
 use cgmq::deploy::telemetry::{bucket_upper_us, BUCKETS};
-use cgmq::deploy::{Histogram, HistogramSnapshot, ManualClock, ServerTelemetry, SpanRecorder, Stage};
+use cgmq::deploy::{
+    Histogram, HistogramSnapshot, ManualClock, ServerTelemetry, SpanRecorder, Stage,
+    WindowedCounter, WindowedHistogram, WINDOW_SLOTS,
+};
 
 /// Deterministic xorshift64* so the sample sets are seeded, not random.
 struct Rng(u64);
@@ -198,4 +210,120 @@ fn manual_clock_traces_are_deterministic_end_to_end() {
     // started_us is the manual clock's reading when the span opened:
     // request 3 started after the first two requests' 360µs of advances.
     assert_eq!(traces[1].started_us, 360);
+}
+
+/// 1 ms epochs for the windowed tests, so the seeded times stay small
+/// and the window spans 10 ms.
+const EPOCH: Duration = Duration::from_micros(1_000);
+
+const EPOCH_US: u64 = 1_000;
+
+/// Seeded (time, value) stream spanning 2.5 windows of epochs, times
+/// sorted non-decreasing (wall clocks are monotonic, and lazy rotation
+/// assumes it). Values reuse the multi-order-of-magnitude shape of
+/// [`seeded_samples`].
+fn seeded_windowed_samples(seed: u64, n: usize) -> Vec<(Duration, u64)> {
+    let mut rng = Rng(seed | 1);
+    let span_epochs = WINDOW_SLOTS as u64 * 5 / 2;
+    let mut out: Vec<(u64, u64)> = (0..n)
+        .map(|i| {
+            let epoch = rng.next() % span_epochs;
+            let offset = rng.next() % EPOCH_US;
+            let r = rng.next();
+            let v = match i % 4 {
+                0 => r % 2,
+                1 => 2 + r % 1_000,
+                2 => 1_000 + r % 100_000,
+                _ => 100_000 + r % 5_000_000,
+            };
+            (epoch * EPOCH_US + offset, v)
+        })
+        .collect();
+    out.sort_by_key(|&(t, _)| t);
+    out.into_iter().map(|(t, v)| (Duration::from_micros(t), v)).collect()
+}
+
+#[test]
+fn windowed_snapshot_equals_recording_only_the_retained_samples() {
+    for seed in [5u64, 29, 463, 1021] {
+        for n in [1usize, 2, 16, 300] {
+            let samples = seeded_windowed_samples(seed, n);
+            let h = WindowedHistogram::new(EPOCH);
+            let c = WindowedCounter::new(EPOCH);
+            for &(t, v) in &samples {
+                h.record(t, v);
+                c.record(t, 1);
+            }
+            // Read at the last sample's time: the oracle retained set is
+            // every sample whose epoch is inside the trailing window.
+            // (A sample whose slot was reclaimed by a later epoch is
+            // always outside the window by then, so the filter and the
+            // ring agree exactly under sequenced time.)
+            let now = samples.last().expect("n >= 1").0;
+            let cur = now.as_micros() as u64 / EPOCH_US;
+            let retained: Vec<u64> = samples
+                .iter()
+                .filter(|(t, _)| cur - t.as_micros() as u64 / EPOCH_US < WINDOW_SLOTS as u64)
+                .map(|&(_, v)| v)
+                .collect();
+            assert!(!retained.is_empty(), "the sample at `now` is always retained");
+            assert_eq!(c.total(now), retained.len() as u64, "seed {seed} n {n}: counter");
+
+            // Merge-consistency: the in-window merge must be bit-identical
+            // to a cumulative histogram fed only the retained samples.
+            let snap = h.snapshot(now);
+            assert_eq!(snap, recorded(&retained), "seed {seed} n {n}: histogram");
+
+            // And the windowed quantile bounds bracket the exact
+            // nearest-rank oracle over those retained samples.
+            let mut durs: Vec<f64> = retained.iter().map(|&us| us as f64 * 1e-6).collect();
+            let (p50, p90, p99) = percentiles_ms(&mut durs);
+            for (q, p_ms) in [(0.50, p50), (0.90, p90), (0.99, p99)] {
+                let exact_us = (p_ms * 1e3).round() as u64;
+                let (lo, hi) = snap.quantile_bounds(q).expect("retained set is non-empty");
+                assert!(
+                    lo <= exact_us && exact_us <= hi,
+                    "seed {seed} n {n} q {q}: exact {exact_us}µs outside [{lo}, {hi}]"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sub_epoch_reads_never_rotate_and_full_window_jumps_expire_everything() {
+    let c = WindowedCounter::new(EPOCH);
+    let h = WindowedHistogram::new(EPOCH);
+    c.record(Duration::from_micros(250), 3);
+    h.record(Duration::from_micros(250), 40);
+
+    // Repeated reads anywhere inside the same epoch see the same state:
+    // reads never claim or reset a slot, no matter how often they run.
+    for t_us in [0u64, 250, 400, 999, 999, 999] {
+        let t = Duration::from_micros(t_us);
+        assert_eq!(c.total(t), 3);
+        assert_eq!(h.snapshot(t).count, 1);
+    }
+
+    // Further records in the same epoch accumulate — a slot resets only
+    // when a *new epoch* claims it, never from a same-epoch record.
+    c.record(Duration::from_micros(700), 2);
+    h.record(Duration::from_micros(700), 41);
+    assert_eq!(c.total(Duration::from_micros(999)), 5);
+    assert_eq!(h.snapshot(Duration::from_micros(999)).count, 2);
+
+    // A jump farther than the whole window expires every slot at once —
+    // purely on the reader side, without touching the ring.
+    let far = EPOCH * (3 * WINDOW_SLOTS as u32);
+    assert_eq!(c.total(far), 0);
+    assert_eq!(h.snapshot(far), HistogramSnapshot::default());
+    assert_eq!(h.snapshot(far).quantile_bounds(0.5), None, "empty window has no quantiles");
+
+    // The expired slots are still reclaimable: the next record at the
+    // far epoch starts from a clean slot, not the stale counts.
+    c.record(far, 1);
+    h.record(far, 7);
+    assert_eq!(c.total(far), 1);
+    let reborn = h.snapshot(far);
+    assert_eq!((reborn.count, reborn.sum_us, reborn.max_us), (1, 7, 7));
 }
